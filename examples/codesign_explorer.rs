@@ -1,0 +1,88 @@
+//! Design-space exploration over the accelerator's parallelism shape —
+//! the paper's stated future work ("a design automation framework that
+//! automatically generates optimized implementation for the pruned ViT
+//! model given a target FPGA platform", Section VIII).
+//!
+//! Sweeps (p_h, p_t, p_c) at a fixed PE budget, checks each candidate
+//! against the U250 resource envelope (Table IV model), and reports the
+//! latency-optimal configuration per pruning setting.
+//!
+//!     cargo run --release --example codesign_explorer -- --setting b16_rb0.5_rt0.5
+
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL};
+use vitfpga::sim::resources::{gamma_for, resource_report};
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::util::cli::Args;
+
+/// U250 budget: from Table IV, our design must stay within these.
+const MAX_DSP: u64 = 12_288; // U250 total DSP48E2 slices
+const MAX_BUFFER_BYTES: usize = 36_000_000;
+
+fn main() {
+    let args = Args::from_env();
+    let label = args.get_or("setting", "b16_rb0.5_rt0.5");
+    let mut setting = PruningSetting::new(16, 0.5, 0.5);
+    for part in label.split('_') {
+        if let Some(v) = part.strip_prefix("rb") {
+            setting.r_b = v.parse().unwrap();
+        } else if let Some(v) = part.strip_prefix("rt") {
+            setting.r_t = v.parse().unwrap();
+        } else if let Some(v) = part.strip_prefix('b') {
+            setting.block_size = v.parse().unwrap();
+        }
+    }
+    let st = ModelStructure::synthesize(&DEIT_SMALL, &setting, 42);
+
+    println!(
+        "DSE over (p_h, p_t, p_c) for {} — candidates within the U250 envelope",
+        setting.label()
+    );
+    println!(
+        "{:>5}{:>5}{:>5}{:>8}{:>10}{:>12}{:>12}{:>10}",
+        "p_h", "p_t", "p_c", "PEs", "DSPs", "buf MB", "latency ms", "img/s"
+    );
+
+    let mut best: Option<(f64, HardwareConfig)> = None;
+    let mut evaluated = 0;
+    for p_h in [1usize, 2, 4, 6, 8] {
+        for p_t in [4usize, 8, 12, 16, 24] {
+            for p_c in [1usize, 2, 4] {
+                let hw = HardwareConfig { p_h, p_t, p_c, ..HardwareConfig::u250() };
+                let r = resource_report(&hw, setting.block_size,
+                                        gamma_for(384, 1536, setting.block_size));
+                if r.dsp > MAX_DSP || r.buffer_bytes > MAX_BUFFER_BYTES {
+                    continue; // infeasible on U250
+                }
+                evaluated += 1;
+                let lat = AcceleratorSim::new(hw).model_latency(&st, 1);
+                println!(
+                    "{:>5}{:>5}{:>5}{:>8}{:>10}{:>12.2}{:>12.3}{:>10.0}",
+                    p_h,
+                    p_t,
+                    p_c,
+                    p_h * p_t * p_c,
+                    r.dsp,
+                    r.buffer_bytes as f64 / 1e6,
+                    lat.latency_ms,
+                    lat.throughput
+                );
+                if best.as_ref().map(|(l, _)| lat.latency_ms < *l).unwrap_or(true) {
+                    best = Some((lat.latency_ms, hw));
+                }
+            }
+        }
+    }
+    if let Some((lat, hw)) = best {
+        println!(
+            "\nbest of {} feasible candidates: p_h={} p_t={} p_c={} -> {:.3} ms",
+            evaluated, hw.p_h, hw.p_t, hw.p_c, lat
+        );
+        let paper = HardwareConfig::u250();
+        let paper_lat = AcceleratorSim::new(paper).model_latency(&st, 1).latency_ms;
+        println!(
+            "paper's hand-chosen p_h=4 p_t=12 p_c=2 -> {:.3} ms ({:+.1}% vs best)",
+            paper_lat,
+            (paper_lat / lat - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end driver: train (python, build phase) -> AOT export -> Rust
+//! serving (runtime phase). Proves the full three-layer stack composes:
+//! Algorithm-1 simultaneous fine-pruning on the synthetic dataset, HLO
+//! lowering, PJRT execution behind the coordinator, and the cycle-level
+//! latency estimate for the *trained* sparsity structure.
+//!
+//!     cargo run --release --example e2e_train_serve
+//!     (add --retrain to force the python phase; --steps N to change it)
+//!
+//! The python phase runs ONCE at build time; serving afterwards is pure
+//! Rust. The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use vitfpga::config::HardwareConfig;
+use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::util::cli::Args;
+use vitfpga::util::json::Json;
+use vitfpga::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let out = PathBuf::from(args.get_or("out", "artifacts_e2e"));
+    let steps = args.get_usize("steps", 300);
+
+    // --- build phase: python trains + exports (once) ----------------------
+    if !out.join("manifest.json").exists() || args.has_flag("retrain") {
+        println!("[e2e] running python training phase ({} steps) ...", steps);
+        let status = Command::new("python")
+            .args([
+                "-m",
+                "compile.e2e",
+                "--out",
+                &format!("../{}", out.display()),
+                "--steps",
+                &steps.to_string(),
+            ])
+            .current_dir("python")
+            .status()
+            .context("launching python training phase")?;
+        if !status.success() {
+            bail!("python training phase failed");
+        }
+    } else {
+        println!("[e2e] reusing {} (pass --retrain to redo)", out.display());
+    }
+
+    // --- results of the training phase ------------------------------------
+    let results = Json::parse(
+        &std::fs::read_to_string(out.join("e2e_results.json"))
+            .context("reading e2e_results.json")?,
+    )
+    .map_err(|e| anyhow::anyhow!("{}", e))?;
+    let dense = results.get("dense_accuracy").and_then(Json::as_f64).unwrap_or(0.0);
+    let naive = results
+        .get("naive_pruned_accuracy")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let simul = results
+        .get("simultaneous_accuracy")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    println!("[e2e] accuracy: dense {:.3} | naive-pruned {:.3} | simultaneous {:.3}",
+             dense, naive, simul);
+    if simul < naive {
+        println!("[e2e] WARNING: simultaneous pruning did not beat naive pruning");
+    }
+
+    // --- runtime phase: serve the trained model ---------------------------
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+    let coord = Arc::new(Coordinator::start(&out, "bs4", policy)?);
+    println!("[e2e] serving trained variant {} ...", coord.variant_name);
+    let requests = args.get_usize("requests", 64);
+    let concurrency = 4;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..concurrency)
+        .map(|c| {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || -> Result<()> {
+                for i in 0..requests {
+                    let mut rng = Rng::new((c * 7919 + i) as u64);
+                    let img: Vec<f32> = (0..coord.input_elems_per_image)
+                        .map(|_| rng.normal())
+                        .collect();
+                    coord.infer(img)?;
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics()?;
+    println!("[e2e] serving: {}", m);
+    println!(
+        "[e2e] {} requests in {:.2}s -> {:.1} req/s (PJRT CPU functional path)",
+        requests * concurrency,
+        wall,
+        (requests * concurrency) as f64 / wall
+    );
+
+    // --- simulated accelerator latency for the *trained* structure --------
+    let manifest = vitfpga::runtime::Manifest::load(&out)?;
+    let v = manifest
+        .find_matching("bs1")
+        .context("bs1 variant missing from e2e manifest")?;
+    let st = ModelStructure::load(&out.join(&v.structure_file))?;
+    let report = AcceleratorSim::new(HardwareConfig::u250()).model_latency(&st, 1);
+    println!(
+        "[e2e] trained structure on simulated U250: {:.3} ms -> {:.0} img/s \
+         (alpha from trained masks, not nominal)",
+        report.latency_ms, report.throughput
+    );
+    println!("[e2e] OK — all layers composed: train -> AOT -> PJRT serve -> sim");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Pruning sweep: regenerate the Table VI columns (head-retained ratio,
+//! model size, MACs, simulated latency & throughput) for all 14 paper
+//! settings, side-by-side with the paper's reported values, plus the
+//! §VII-B summary claims (compression ratio, MACs reduction).
+//!
+//!     cargo run --release --example pruning_sweep
+
+use vitfpga::bench_harness::{paper_row, table6_rows};
+use vitfpga::complexity::{model_complexity, model_size};
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL};
+
+fn main() {
+    let hw = HardwareConfig::u250();
+    let rows = table6_rows(&DEIT_SMALL, &hw, 42);
+
+    println!("Table VI sweep — ours (simulated U250) vs paper");
+    println!(
+        "{:<18}{:>7}{:>16}{:>15}{:>18}{:>20}",
+        "setting", "heads", "params M (pap)", "MACs G (pap)", "latency ms (pap)",
+        "throughput (pap)"
+    );
+    for r in &rows {
+        let p = paper_row(&r.setting.label());
+        let (pp, pm, pl, pt) = p
+            .map(|x| (x.1, x.2, x.4, x.5))
+            .unwrap_or((f64::NAN, f64::NAN, f64::NAN, f64::NAN));
+        println!(
+            "{:<18}{:>7.2}{:>8.2} ({:>5.2}){:>7.2} ({:>5.2}){:>9.3} ({:>6.3}){:>11.1} ({:>7.1})",
+            r.setting.label(), r.head_retained, r.model_params_m, pp, r.macs_g, pm,
+            r.latency_ms, pl, r.throughput, pt
+        );
+    }
+
+    // §VII-B claims: compression up to 1.24-1.60x, MACs reduction up to
+    // 1.43-3.42x at <=3% accuracy drop (accuracy via the python proxy,
+    // see examples/e2e_train_serve and EXPERIMENTS.md).
+    let base = model_complexity(&DEIT_SMALL, &PruningSetting::dense(16), 1, None).macs();
+    println!("\n§VII-B summary claims:");
+    for (b, rb, rt) in [(16, 0.7, 0.9), (16, 0.5, 0.5), (32, 0.5, 0.5)] {
+        let s = PruningSetting::new(b, rb, rt);
+        let macs = model_complexity(&DEIT_SMALL, &s, 1, None).macs();
+        let size = model_size(&DEIT_SMALL, &s);
+        println!(
+            "  {}: MACs reduction {:.2}x, compression {:.2}x ({:.1}M params)",
+            s.label(),
+            base / macs,
+            size.compression_ratio(),
+            size.pruned_params as f64 / 1e6
+        );
+    }
+    println!("  paper: MACs reduction up to 3.42x, compression 1.24-1.60x");
+}

@@ -1,0 +1,72 @@
+//! Serving example: run the coordinator (router + dynamic batcher +
+//! PJRT engine) against a synthetic client load and report latency
+//! percentiles + throughput — the serving-systems view of the paper's
+//! accelerator.
+//!
+//!     cargo run --release --example serve -- \
+//!         --variant test-tiny_b8_rb0.7_rt0.7_bs4 \
+//!         --requests 128 --concurrency 8 --max-batch 4 --max-wait-ms 2
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::util::cli::Args;
+use vitfpga::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4");
+    let requests = args.get_usize("requests", 128);
+    let concurrency = args.get_usize("concurrency", 8);
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 4),
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+    };
+
+    let coord = Arc::new(Coordinator::start(&dir, variant, policy)?);
+    println!(
+        "serving {}: {} requests x {} clients, policy max_batch={} max_wait={:?}",
+        coord.variant_name, requests, concurrency, policy.max_batch, policy.max_wait
+    );
+
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..concurrency)
+        .map(|c| {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || -> Result<u64> {
+                let mut correct_shape = 0u64;
+                for i in 0..requests {
+                    let mut rng = Rng::new((c * 31337 + i) as u64);
+                    let img: Vec<f32> = (0..coord.input_elems_per_image)
+                        .map(|_| rng.normal())
+                        .collect();
+                    let resp = coord.infer(img)?;
+                    if resp.logits.len() == coord.num_classes {
+                        correct_shape += 1;
+                    }
+                }
+                Ok(correct_shape)
+            })
+        })
+        .collect();
+    let mut ok = 0u64;
+    for h in handles {
+        ok += h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = coord.metrics()?;
+    println!("{}", m);
+    println!(
+        "{} / {} responses well-formed; wall {:.2}s -> {:.1} req/s end-to-end",
+        ok,
+        requests * concurrency,
+        wall,
+        (requests * concurrency) as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,221 @@
+"""AOT pipeline: lower pruned-ViT variants to HLO text + weights + manifest.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts per variant (written to --out, default ../artifacts):
+
+    <name>.hlo.txt        HLO text; parameter 0 = image batch (B,H,W,C),
+                          parameters 1.. = weights in param_order.
+    <name>.weights.bin    masked weights (VITW0001 format).
+    <name>.structure.json per-encoder sparsity structure for the simulator.
+    manifest.json         index of all variants.
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.configs import (PruningConfig, ViTConfig, model_by_name,
+                             paper_table6_settings)
+from compile.export import write_structure, write_weights
+from compile.pruned_model import pruned_vit_logits
+from compile.pruning import (apply_masks, init_scores, masks_from_scores,
+                             structure_summary)
+from compile.vit.params import (flatten_params, init_vit_params,
+                                unflatten_params)
+
+SEED = 1234  # deterministic artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def variant_name(cfg: ViTConfig, pruning: PruningConfig, batch: int,
+                 use_kernels: bool) -> str:
+    tag = (f"{cfg.name}_b{pruning.block_size}_rb{pruning.r_b:g}"
+           f"_rt{pruning.r_t:g}_bs{batch}")
+    return tag + ("_kernels" if use_kernels else "")
+
+
+def lower_variant(cfg: ViTConfig, pruning: PruningConfig, batch: int,
+                  use_kernels: bool, params: Optional[Dict] = None,
+                  scores: Optional[List[Dict]] = None) -> Dict:
+    """Build masked params + lowered HLO for one variant.
+
+    Returns dict with keys: name, hlo, params (masked), structure, masks.
+    """
+    key = jax.random.PRNGKey(SEED)
+    if params is None:
+        params = init_vit_params(key, cfg)
+    if scores is None:
+        scores = init_scores(jax.random.PRNGKey(SEED + 1), cfg, pruning)
+    masks = masks_from_scores(scores, cfg, pruning)
+    masked = apply_masks(params, masks)
+    structure = structure_summary(masks, cfg, pruning)
+
+    def fn(images, *flat):
+        p = unflatten_params(list(flat), cfg)
+        return (pruned_vit_logits(p, images, cfg, pruning,
+                                  use_kernels=use_kernels),)
+
+    img_spec = jax.ShapeDtypeStruct(
+        (batch, cfg.image_size, cfg.image_size, cfg.in_channels), jnp.float32)
+    flat = flatten_params(masked, cfg)
+    specs = [jax.ShapeDtypeStruct(x.shape, jnp.float32) for x in flat]
+    lowered = jax.jit(fn).lower(img_spec, *specs)
+    return {
+        "name": variant_name(cfg, pruning, batch, use_kernels),
+        "hlo": to_hlo_text(lowered),
+        "params": masked,
+        "structure": structure,
+        "masks": masks,
+    }
+
+
+def export_variant(out_dir: str, cfg: ViTConfig, pruning: PruningConfig,
+                   batch: int, use_kernels: bool,
+                   params: Optional[Dict] = None,
+                   scores: Optional[List[Dict]] = None) -> Dict:
+    """Lower + write all artifact files; returns the manifest entry."""
+    v = lower_variant(cfg, pruning, batch, use_kernels, params, scores)
+    name = v["name"]
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(v["hlo"])
+    wpath = os.path.join(out_dir, f"{name}.weights.bin")
+    n_tensors = write_weights(wpath, v["params"], cfg)
+    spath = os.path.join(out_dir, f"{name}.structure.json")
+    write_structure(spath, v["structure"], cfg, pruning)
+    # Numerics self-check: evaluate the lowered computation in jax on a
+    # deterministic input; the rust integration test replays it through
+    # PJRT and must match. Stored as a 2-tensor VITW file (input, logits).
+    import struct as _struct
+    import numpy as _np
+    key = jax.random.PRNGKey(SEED + 7)
+    imgs = jax.random.normal(
+        key, (batch, cfg.image_size, cfg.image_size, cfg.in_channels),
+        dtype=jnp.float32)
+    logits = pruned_vit_logits(v["params"], imgs, cfg, pruning,
+                               use_kernels=use_kernels)
+    cpath = os.path.join(out_dir, f"{name}.check.bin")
+    from compile.export import MAGIC
+    with open(cpath, "wb") as f:
+        f.write(MAGIC)
+        f.write(_struct.pack("<I", 2))
+        for tname, arr in (("input", imgs), ("logits", logits)):
+            a = _np.asarray(jax.device_get(arr), dtype=_np.float32)
+            nb = tname.encode()
+            f.write(_struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(_struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(_struct.pack("<I", d))
+            data = a.tobytes()
+            f.write(_struct.pack("<Q", len(data)))
+            f.write(data)
+    return {
+        "name": name,
+        "model": cfg.name,
+        "batch": batch,
+        "use_kernels": use_kernels,
+        "pruning": {
+            "block_size": pruning.block_size, "r_b": pruning.r_b,
+            "r_t": pruning.r_t, "tdm_layers": list(pruning.tdm_layers),
+        },
+        "files": {
+            "hlo": os.path.basename(hlo_path),
+            "weights": os.path.basename(wpath),
+            "structure": os.path.basename(spath),
+            "check": os.path.basename(cpath),
+        },
+        "num_weight_tensors": n_tensors,
+        "input_shape": [batch, cfg.image_size, cfg.image_size,
+                        cfg.in_channels],
+        "num_classes": cfg.num_classes,
+        "hlo_sha256": hashlib.sha256(v["hlo"].encode()).hexdigest()[:16],
+    }
+
+
+def default_variants(full: bool) -> List:
+    """(model, pruning, batch, use_kernels) tuples to build by default."""
+    tiny = model_by_name("test-tiny")
+    small = model_by_name("deit-small")
+    tiny_pr = PruningConfig(block_size=8, r_b=0.7, r_t=0.7, tdm_layers=(1, 2))
+    tiny_base = PruningConfig(block_size=8, r_b=1.0, r_t=1.0)
+    out = [
+        (tiny, tiny_base, 1, False),
+        (tiny, tiny_pr, 1, False),
+        (tiny, tiny_pr, 1, True),       # kernel-correctness artifact
+        (tiny, tiny_pr, 4, False),
+    ]
+    # DeiT-Small: baseline + the most/least aggressive Table VI settings.
+    out += [
+        (small, PruningConfig(block_size=16, r_b=1.0, r_t=1.0), 1, False),
+        (small, PruningConfig(block_size=16, r_b=0.5, r_t=0.5), 1, False),
+        (small, PruningConfig(block_size=16, r_b=0.7, r_t=0.9), 1, False),
+    ]
+    if full:
+        for pr in paper_table6_settings():
+            out.append((small, pr, 1, False))
+        out.append((small, PruningConfig(block_size=16, r_b=0.7, r_t=0.7),
+                    1, True))
+        out.append((small, PruningConfig(block_size=16, r_b=0.5, r_t=0.5),
+                    8, False))
+    seen, uniq = set(), []
+    for cfg, pr, bs, uk in out:
+        nm = variant_name(cfg, pr, bs, uk)
+        if nm not in seen:
+            seen.add(nm)
+            uniq.append((cfg, pr, bs, uk))
+    return uniq
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also lower every Table VI setting")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for cfg, pruning, batch, use_kernels in default_variants(args.full):
+        name = variant_name(cfg, pruning, batch, use_kernels)
+        if args.only and args.only not in name:
+            continue
+        print(f"[aot] lowering {name} ...", flush=True)
+        entries.append(export_variant(args.out, cfg, pruning, batch,
+                                      use_kernels))
+        print(f"[aot]   wrote {entries[-1]['files']['hlo']} "
+              f"({entries[-1]['num_weight_tensors']} tensors)")
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"seed": SEED, "variants": entries}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {manifest_path} ({len(entries)} variants)")
+
+
+if __name__ == "__main__":
+    main()

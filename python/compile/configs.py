@@ -1,0 +1,152 @@
+"""Model and pruning configurations.
+
+Mirrors Section VI of the paper: the evaluated model is DeiT-Small
+(12 encoders, H=6 heads, D=384, D_mlp=1536, 224x224 images with 16x16
+patches -> N=197 tokens including CLS). Pruning settings sweep the block
+size b over {16, 32}, the weight top-k rate r_b over {0.5, 0.7} and the
+token keep rate r_t over {0.5, 0.7, 0.9}; the Token Dropping Module (TDM)
+is inserted in the 3rd, 7th and 10th encoders (1-indexed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    """Structural hyper-parameters of a ViT/DeiT classifier."""
+
+    name: str = "deit-small"
+    image_size: int = 224
+    patch_size: int = 16
+    in_channels: int = 3
+    num_layers: int = 12
+    num_heads: int = 6
+    dim: int = 384           # D: token embedding dimension
+    head_dim: int = 64       # D': per-head hidden dimension
+    mlp_dim: int = 1536      # D_mlp
+    num_classes: int = 1000
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def num_tokens(self) -> int:
+        """N: patches + the CLS token."""
+        return self.num_patches + 1
+
+    @property
+    def patch_dim(self) -> int:
+        """Flattened patch vector length P^2 * C."""
+        return self.patch_size * self.patch_size * self.in_channels
+
+    @property
+    def qkv_dim(self) -> int:
+        """H * D' (the concatenated per-head hidden dimension)."""
+        return self.num_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class PruningConfig:
+    """Pruning hyper-parameters (Section IV / Section VI).
+
+    r_b:  weight-pruning top-k rate (fraction of blocks *kept*).
+    r_t:  token keep rate; at each TDM, ceil((N-1) * r_t) attentive tokens
+          are retained, the rest are fused into one token.
+    b:    square block size for block-wise weight pruning.
+    tdm_layers: 0-indexed encoder indices hosting a TDM. The paper inserts
+          TDM in the 3rd, 7th and 10th encoder layers -> (2, 6, 9).
+    """
+
+    block_size: int = 16
+    r_b: float = 1.0
+    r_t: float = 1.0
+    tdm_layers: Tuple[int, ...] = (2, 6, 9)
+    # Simultaneous-pruning training hyper-parameters (Section VI).
+    lambda_score: float = 1e-4     # lambda for the ||sigma(S)|| penalty (Eq. 8)
+    lambda_distill: float = 0.5    # weight of the distillation loss
+    lambda_normal: float = 0.5     # weight of the generic loss
+    distill_temperature: float = 4.0
+
+    @property
+    def is_pruned(self) -> bool:
+        return self.r_b < 1.0 or self.r_t < 1.0
+
+    def tokens_after_tdm(self, n: int) -> int:
+        """Token count after one TDM given n input tokens (incl. CLS).
+
+        ceil((n-1) * r_t) attentive tokens + 1 fused token + CLS.
+        """
+        if self.r_t >= 1.0:
+            return n
+        return 1 + math.ceil((n - 1) * self.r_t) + 1
+
+    def tokens_per_layer(self, n0: int, num_layers: int) -> Tuple[int, ...]:
+        """Number of *input* tokens for each encoder layer."""
+        counts = []
+        n = n0
+        for layer in range(num_layers):
+            counts.append(n)
+            if layer in self.tdm_layers:
+                n = self.tokens_after_tdm(n)
+        return tuple(counts)
+
+
+# ---------------------------------------------------------------------------
+# Named configurations
+# ---------------------------------------------------------------------------
+
+DEIT_SMALL = ViTConfig()
+
+DEIT_TINY = ViTConfig(
+    name="deit-tiny",
+    num_heads=3,
+    dim=192,
+    head_dim=64,
+    mlp_dim=768,
+)
+
+# Scaled-down config used for fast unit tests and the synthetic-data
+# training proxy (see DESIGN.md Substitutions). Structure is identical
+# (CLS token, multi-head MSA, TDM insertion points, block pruning).
+TEST_TINY = ViTConfig(
+    name="test-tiny",
+    image_size=32,
+    patch_size=8,
+    in_channels=3,
+    num_layers=4,
+    num_heads=2,
+    dim=32,
+    head_dim=16,
+    mlp_dim=64,
+    num_classes=10,
+)
+
+TEST_TINY_PRUNING = PruningConfig(block_size=8, r_b=0.7, r_t=0.7, tdm_layers=(1, 2))
+
+
+def model_by_name(name: str) -> ViTConfig:
+    table = {
+        "deit-small": DEIT_SMALL,
+        "deit-tiny": DEIT_TINY,
+        "test-tiny": TEST_TINY,
+    }
+    if name not in table:
+        raise KeyError(f"unknown model config '{name}' (have {sorted(table)})")
+    return table[name]
+
+
+def paper_table6_settings() -> Tuple[PruningConfig, ...]:
+    """The 14 pruning settings of Table VI (2 baselines + 12 pruned)."""
+    settings = []
+    for b in (16, 32):
+        settings.append(PruningConfig(block_size=b, r_b=1.0, r_t=1.0))
+    for b in (16, 32):
+        for r_b in (0.5, 0.7):
+            for r_t in (0.5, 0.7, 0.9):
+                settings.append(PruningConfig(block_size=b, r_b=r_b, r_t=r_t))
+    return tuple(settings)

@@ -1,0 +1,67 @@
+"""Synthetic patch-classification dataset (ImageNet stand-in).
+
+DESIGN.md Substitutions: accuracy-recovery behaviour of simultaneous
+pruning is a property of the training algorithm, not of ImageNet. This
+dataset is constructed so the *mechanisms* the paper relies on are
+exercised:
+
+  * class evidence is localized in a small number of patches (so token
+    importance varies and dynamic token pruning has signal to find);
+  * the remaining patches are pure distractor noise (so inattentive-token
+    fusion is nearly lossless when the model attends correctly);
+  * classes are linearly non-trivial (patterns are random dense patches,
+    plus per-image noise) so the model must actually train.
+
+Each class c has a fixed random patch pattern; an image of class c places
+that pattern at `signal_patches` random patch positions over a noise
+background.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import ViTConfig
+
+
+def make_class_patterns(key, cfg: ViTConfig) -> jnp.ndarray:
+    """(num_classes, P, P, C) fixed patterns, one per class."""
+    return jax.random.normal(
+        key, (cfg.num_classes, cfg.patch_size, cfg.patch_size, cfg.in_channels))
+
+
+def synth_batch(key, patterns: jnp.ndarray, cfg: ViTConfig, batch: int,
+                signal_patches: int = 3, noise_std: float = 0.5,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (images (B, H, W, C), labels (B,))."""
+    k_lab, k_pos, k_noise = jax.random.split(key, 3)
+    labels = jax.random.randint(k_lab, (batch,), 0, cfg.num_classes)
+    side = cfg.image_size // cfg.patch_size
+    n_patches = side * side
+    # Random distinct-ish positions per image (with replacement is fine).
+    pos = jax.random.randint(k_pos, (batch, signal_patches), 0, n_patches)
+    noise = noise_std * jax.random.normal(
+        k_noise, (batch, n_patches, cfg.patch_size, cfg.patch_size,
+                  cfg.in_channels))
+
+    sig = patterns[labels]                                   # (B, P, P, C)
+    patches = noise
+    batch_idx = jnp.arange(batch)[:, None]
+    patches = patches.at[batch_idx, pos].add(sig[:, None])
+
+    imgs = patches.reshape(batch, side, side, cfg.patch_size, cfg.patch_size,
+                           cfg.in_channels)
+    imgs = imgs.transpose(0, 1, 3, 2, 4, 5).reshape(
+        batch, cfg.image_size, cfg.image_size, cfg.in_channels)
+    return imgs, labels
+
+
+def data_stream(seed: int, patterns: jnp.ndarray, cfg: ViTConfig,
+                batch: int, **kw) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray]]:
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield synth_batch(sub, patterns, cfg, batch, **kw)

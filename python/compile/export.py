@@ -1,0 +1,90 @@
+"""Binary weight export + structure export for the Rust runtime.
+
+Weight file format (little-endian), read by rust/src/runtime/weights.rs:
+
+    magic   8 bytes  b"VITW0001"
+    count   u32
+    per tensor:
+        name_len u32, name bytes (utf-8)
+        ndim u32, dims u32 * ndim
+        byte_len u64, data (f32 little-endian)
+
+The tensor order is exactly vit.params.param_order — the same positional
+order the HLO artifact's parameters use (parameter 0 is the image batch;
+parameters 1.. are the weights).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from compile.configs import PruningConfig, ViTConfig
+from compile.vit.params import flatten_params, param_order
+
+MAGIC = b"VITW0001"
+
+
+def write_weights(path: str, params: Dict, cfg: ViTConfig) -> int:
+    """Write flattened params; returns number of tensors written."""
+    flat = flatten_params(params, cfg)
+    names = ["/".join(p) for p in param_order(cfg)]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(flat)))
+        for name, arr in zip(names, flat):
+            a = np.asarray(jax.device_get(arr), dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            data = a.tobytes()
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+    return len(flat)
+
+
+def read_weights(path: str) -> List:
+    """Python-side reader (round-trip tests)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (blen,) = struct.unpack("<Q", f.read(8))
+            data = np.frombuffer(f.read(blen), dtype=np.float32).reshape(dims)
+            out.append((name, data))
+    return out
+
+
+def write_structure(path: str, structure: List[Dict], cfg: ViTConfig,
+                    pruning: PruningConfig) -> None:
+    """Per-encoder sparsity structure for the hardware simulator."""
+    doc = {
+        "model": cfg.name,
+        "block_size": pruning.block_size,
+        "r_b": pruning.r_b,
+        "r_t": pruning.r_t,
+        "tdm_layers": list(pruning.tdm_layers),
+        "tokens_per_layer": list(
+            pruning.tokens_per_layer(cfg.num_tokens, cfg.num_layers)),
+        "encoders": structure,
+        "dims": {
+            "num_layers": cfg.num_layers, "num_heads": cfg.num_heads,
+            "dim": cfg.dim, "head_dim": cfg.head_dim, "mlp_dim": cfg.mlp_dim,
+            "num_tokens": cfg.num_tokens, "patch_dim": cfg.patch_dim,
+            "num_classes": cfg.num_classes,
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)

@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the paper's compute hot-spots + jnp oracles."""
+
+from compile.kernels import ref  # noqa: F401
+from compile.kernels.sbmm import pack_blocks, sbmm, sbmm_from_mask  # noqa: F401
+from compile.kernels.attention import attention as fused_attention  # noqa: F401
+from compile.kernels.tdm import fuse_tokens  # noqa: F401

@@ -1,0 +1,61 @@
+"""Fused per-head attention with on-the-fly token scoring (Pallas).
+
+The FPGA pipeline computes A_h = softmax(Q_h K_h^T / sqrt(D')) per head via
+DHBMM + the EM module and *streams the CLS attention row into the TDHM* so
+token importance scores are a by-product of MSA, never a separate pass
+(Section V-C3). This kernel mirrors that: one grid step per (batch, head)
+computes the attention output AND emits the CLS row of A_h.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (B, H) grid is the
+p_h-CHM head parallelism; Q/K/V head slices live in VMEM (Column Buffer /
+GFB analogues); the row-max + exp + normalize sequence is the EM datapath.
+interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, cls_ref, *, scale: float):
+    q = q_ref[0, 0]                                   # (N, D')
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Numerically stable softmax (the EM's exp + scaling-factor pipeline).
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    attn = e / denom
+    o_ref[0, 0] = jnp.dot(attn, v,
+                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    cls_ref[0, 0] = attn[0, :].astype(cls_ref.dtype)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q, k, v: (B, H, N, D') -> (out (B, H, N, D'), cls_attn (B, H, N))."""
+    bsz, h, n, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_attn_kernel, scale=scale)
+    spec = pl.BlockSpec((1, 1, n, d), lambda b, hh: (b, hh, 0, 0))
+    out, cls_attn = pl.pallas_call(
+        kernel,
+        grid=(bsz, h),
+        in_specs=[spec, spec, spec],
+        out_specs=[
+            pl.BlockSpec((1, 1, n, d), lambda b, hh: (b, hh, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda b, hh: (b, hh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, cls_attn

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness contract).
+
+Every kernel in this package must match its reference here to float32
+tolerance; pytest + hypothesis enforce this across shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sbmm_ref(x: jnp.ndarray, w: jnp.ndarray, element_mask: jnp.ndarray,
+             ) -> jnp.ndarray:
+    """Block-sparse matmul reference: Y = X (W . M)."""
+    return x @ (w * element_mask)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-head attention reference.
+
+    q, k, v: (B, H, N, D'). Returns (out (B, H, N, D'),
+    cls_attn (B, H, N)) where cls_attn is the CLS row of the attention
+    matrix (input to token importance scoring).
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(
+        jnp.asarray(d, q.dtype))
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhnm,bhmd->bhnd", attn, v)
+    return out, attn[:, :, 0, :]
+
+
+def fuse_ref(tokens: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted token fusion reference.
+
+    tokens: (B, N, D); weights: (B, N) (zero for retained tokens).
+    Returns (B, D): sum_i w_i t_i / (sum_i w_i + eps).
+    """
+    denom = jnp.sum(weights, axis=1, keepdims=True) + 1e-6
+    return jnp.einsum("bn,bnd->bd", weights, tokens) / denom

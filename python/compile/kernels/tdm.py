@@ -1,0 +1,39 @@
+"""Token-fusion kernel for the Token Dropping Module (Pallas).
+
+The TDHM's final stage fuses all inattentive tokens into one token by
+score-weighted aggregation (Section V-C3). On TPU the sorting network is
+replaced by lax.top_k (DESIGN.md §Hardware-Adaptation); the fusion
+reduction is the part worth a kernel: a single VMEM pass over the token
+matrix accumulating w_i * t_i and w_i simultaneously.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fuse_kernel(tok_ref, w_ref, o_ref):
+    tokens = tok_ref[0]                                # (N, D)
+    w = w_ref[0]                                       # (N,)
+    num = jnp.dot(w[None, :], tokens,
+                  preferred_element_type=jnp.float32)  # (1, D)
+    denom = jnp.sum(w) + 1e-6
+    o_ref[0] = (num[0] / denom).astype(o_ref.dtype)
+
+
+def fuse_tokens(tokens: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, N, D); weights: (B, N) -> fused (B, D)."""
+    bsz, n, d = tokens.shape
+    return pl.pallas_call(
+        _fuse_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, d), tokens.dtype),
+        interpret=True,
+    )(tokens, weights)

@@ -1,0 +1,4 @@
+"""L2 façade — re-exports the model entrypoints used by aot.py and tests."""
+
+from compile.vit.model import vit_forward, vit_logits  # noqa: F401
+from compile.pruned_model import pruned_vit_logits, pruned_encoder  # noqa: F401

@@ -1,0 +1,44 @@
+"""Minimal AdamW (decoupled weight decay [46]) over arbitrary pytrees.
+
+The image has no optax; this implements exactly what Section VI uses:
+AdamW, lr 2e-5 (configurable), weight decay 0.01.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def adamw_update(grads, state: AdamWState, params, lr: float,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    mu_hat_scale = 1.0 / (1 - b1 ** t)
+    nu_hat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m, v):
+        return p - lr * (m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + eps)
+                         + weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

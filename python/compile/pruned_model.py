@@ -1,0 +1,130 @@
+"""L2 entrypoint: the *pruned* ViT forward (weight masks + TDM).
+
+This is the computation that gets AOT-lowered to HLO and executed by the
+Rust coordinator. Two equivalent compute paths exist:
+
+  * ``use_kernels=False`` — masked-dense jnp ops; XLA fuses these into its
+    native dot/softmax pipeline. This is the fast artifact used on the
+    serving hot path.
+  * ``use_kernels=True``  — MSA attention runs through the fused Pallas
+    attention kernel (attention + CLS-row scoring in one pass) and TDM
+    fusion through the Pallas fusion kernel, mirroring the FPGA's
+    EM/TDHM datapath. Used for the kernel-correctness artifact.
+
+Both are validated against each other and against the dense reference in
+python/tests; the Rust integration test checks the HLO round-trip gives
+identical numerics.
+
+Shapes are fully static: given keep rate r_t, every TDM retains
+k = ceil((N-1) * r_t) tokens, so each pruning setting lowers to one HLO
+artifact (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import PruningConfig, ViTConfig
+from compile.vit import layers
+from compile.kernels import attention as attn_kernel
+from compile.kernels import tdm as tdm_kernel
+
+
+def _msa(z: jnp.ndarray, p: Dict, cfg: ViTConfig, use_kernels: bool,
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MSA returning (out, cls_attn (B, H, N)) for token scoring."""
+    b, n, _ = z.shape
+    nh, hd = cfg.num_heads, cfg.head_dim
+    qkv = z @ p["w_qkv"] + p["b_qkv"]
+    qkv = qkv.reshape(b, n, 3, nh, hd)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+    if use_kernels:
+        sa, cls_attn = attn_kernel.attention(q, k, v)
+    else:
+        attn = layers.attention_scores(q, k, hd)
+        sa = jnp.einsum("bhnm,bhmd->bhnd", attn, v)
+        cls_attn = attn[:, :, 0, :]
+    sa = sa.transpose(0, 2, 1, 3).reshape(b, n, nh * hd)
+    out = sa @ p["w_proj"] + p["b_proj"]
+    return out, cls_attn
+
+
+def _topk_selection(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(B, k, N) one-hot selection of the top-k scores, descending order.
+
+    Built from iterative argmax + one-hot instead of lax.top_k /
+    gather/scatter: jax >= 0.8 lowers those to the `topk` HLO op and to
+    gathers with `operand_batching_dims`, neither of which the
+    xla_extension 0.5.1 HLO *text parser* accepts. argmax (reduce),
+    one_hot (iota+eq) and dynamic_update_slice round-trip cleanly. This
+    is also the closer mirror of the TDHM: the sorted one-hot rows ARE
+    the (id_old -> id_new) routing table of the index shuffle network.
+    """
+    b, n = scores.shape
+
+    def body(i, state):
+        s, sel = state
+        idx = jnp.argmax(s, axis=-1)                          # (B,)
+        oh = jax.nn.one_hot(idx, n, dtype=scores.dtype)       # (B, N)
+        sel = jax.lax.dynamic_update_slice_in_dim(
+            sel, oh[:, None, :], i, axis=1)
+        s = s - oh * 1e9                                       # knock out
+        return s, sel
+
+    sel0 = jnp.zeros((b, k, n), scores.dtype)
+    _, sel = jax.lax.fori_loop(0, k, body, (scores, sel0))
+    return sel
+
+
+def _tdm(z: jnp.ndarray, cls_attn: jnp.ndarray, r_t: float,
+         use_kernels: bool) -> jnp.ndarray:
+    """Token Dropping Module on Z' given the MSA's CLS attention rows."""
+    _, n, _ = z.shape
+    scores = jnp.mean(cls_attn[:, :, 1:], axis=1)            # (B, N-1)
+    k = max(1, math.ceil((n - 1) * r_t))
+    tokens = z[:, 1:, :]
+    sel = _topk_selection(scores, k)                         # (B, k, N-1)
+    kept = jnp.einsum("bkn,bnd->bkd", sel, tokens)
+    keep_mask = jnp.sum(sel, axis=1)                         # (B, N-1) in {0,1}
+    w = scores * (1.0 - keep_mask)
+    if use_kernels:
+        fused = tdm_kernel.fuse_tokens(tokens, w)
+    else:
+        denom = jnp.sum(w, axis=1, keepdims=True) + 1e-6
+        fused = jnp.einsum("bn,bnd->bd", w, tokens) / denom
+    return jnp.concatenate([z[:, :1, :], kept, fused[:, None, :]], axis=1)
+
+
+def pruned_encoder(z: jnp.ndarray, p: Dict, cfg: ViTConfig,
+                   r_t: Optional[float], use_kernels: bool) -> jnp.ndarray:
+    """Encoder with optional TDM between MSA and MLP (Fig. 4)."""
+    zn = layers.layer_norm(z, p["ln1_g"], p["ln1_b"])
+    att_out, cls_attn = _msa(zn, p, cfg, use_kernels)
+    z_prime = att_out + z
+    if r_t is not None and r_t < 1.0:
+        z_prime = _tdm(z_prime, cls_attn, r_t, use_kernels)
+    zn2 = layers.layer_norm(z_prime, p["ln2_g"], p["ln2_b"])
+    return layers.mlp(zn2, p) + z_prime
+
+
+def pruned_vit_logits(params: Dict, images: jnp.ndarray, cfg: ViTConfig,
+                      pruning: PruningConfig,
+                      use_kernels: bool = False) -> jnp.ndarray:
+    """Full pruned forward. `params` must already carry masked weights
+    (apply_masks) — at AOT time the masked weights are baked into the
+    exported weight file, so the artifact takes them as plain parameters.
+    """
+    z = layers.patch_embed(images, params["embed"], cfg.patch_size)
+    cls = jnp.broadcast_to(params["embed"]["cls"],
+                           (z.shape[0], 1, cfg.dim)).astype(z.dtype)
+    z = jnp.concatenate([cls, z], axis=1) + params["embed"]["pos"]
+    for i, p in enumerate(params["encoders"]):
+        r_t = pruning.r_t if i in pruning.tdm_layers else None
+        z = pruned_encoder(z, p, cfg, r_t, use_kernels)
+    h = params["head"]
+    cls_tok = layers.layer_norm(z[:, 0, :], h["ln_g"], h["ln_b"])
+    return cls_tok @ h["w_head"] + h["b_head"]

@@ -1,0 +1,12 @@
+"""Pruning algorithms: static block weight pruning, dynamic token pruning,
+and the simultaneous fine-pruning trainer (Section IV)."""
+
+from compile.pruning.block import (  # noqa: F401
+    init_scores, block_topk_mask, vector_topk_mask, masks_from_scores,
+    apply_masks, block_mask_to_element_mask, head_retained_ratio,
+    kept_heads, structure_summary,
+)
+from compile.pruning.token import (  # noqa: F401
+    token_importance_scores, token_drop, tdm,
+)
+from compile.pruning.schedule import cubic_sparsity_schedule  # noqa: F401

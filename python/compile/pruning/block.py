@@ -1,0 +1,186 @@
+"""Static block-wise weight pruning (Section IV-A).
+
+Every prunable weight matrix W in {W_q, W_k, W_v, W_proj} carries a learned
+score matrix S of block granularity (b x b). A binary mask M keeps the
+top-k scoring blocks (Eq. 7); the masked weight W . M is used in the
+forward pass and a straight-through estimator passes gradients to S.
+
+MSA *alternate pattern* (Fig. 2): W_{q,k,v} are pruned along the head
+(column) dimension and W_proj along the head (row) dimension with the same
+per-head structure, so a head whose blocks vanish from W_p also vanishes
+from W_proj and is removed entirely.
+
+MLP (Fig. 3): a single score *vector* over D_mlp prunes entire columns of
+W_int and the matching rows of W_out (column/row alternate pattern), i.e.
+whole neurons; alpha_mlp = r_b.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import PruningConfig, ViTConfig
+
+# Weight matrices pruned block-wise within the MSA.
+MSA_WEIGHTS = ("w_qkv", "w_proj")
+
+
+def block_grid(shape: Tuple[int, int], b: int) -> Tuple[int, int]:
+    """Number of (b x b) blocks along each dimension, with ceil padding."""
+    return (math.ceil(shape[0] / b), math.ceil(shape[1] / b))
+
+
+def init_scores(key, cfg: ViTConfig, pruning: PruningConfig) -> List[Dict]:
+    """Initialize per-encoder score parameters.
+
+    Scores start at small positive values so the cubic schedule begins from
+    a (nearly) dense model and sparsifies smoothly.
+    """
+    b = pruning.block_size
+    scores = []
+    for i in range(cfg.num_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        s_qkv = 0.01 * jax.random.normal(k1, block_grid((cfg.dim, 3 * cfg.qkv_dim), b))
+        s_proj = 0.01 * jax.random.normal(k2, block_grid((cfg.qkv_dim, cfg.dim), b))
+        s_mlp = 0.01 * jax.random.normal(k3, (cfg.mlp_dim,))
+        scores.append({"w_qkv": s_qkv, "w_proj": s_proj, "mlp": s_mlp})
+    return scores
+
+
+def block_topk_mask(s: jnp.ndarray, keep_rate: float) -> jnp.ndarray:
+    """Binary mask over a block-score matrix keeping the top-k blocks (Eq. 7)."""
+    k = max(1, int(round(keep_rate * s.size)))
+    flat = s.reshape(-1)
+    if k >= flat.shape[0]:
+        return jnp.ones_like(s)
+    threshold = jax.lax.top_k(flat, k)[0][-1]
+    return (s >= threshold).astype(s.dtype).reshape(s.shape)
+
+
+def vector_topk_mask(s: jnp.ndarray, keep_rate: float) -> jnp.ndarray:
+    """Binary mask over a score vector keeping the top-k entries."""
+    return block_topk_mask(s, keep_rate)
+
+
+def block_mask_to_element_mask(mask_blocks: jnp.ndarray, shape: Tuple[int, int],
+                               b: int) -> jnp.ndarray:
+    """Expand an (m, n) block mask to an (M1, M2) element mask."""
+    m1, m2 = shape
+    expanded = jnp.kron(mask_blocks, jnp.ones((b, b), mask_blocks.dtype))
+    return expanded[:m1, :m2]
+
+
+def masks_from_scores(scores: List[Dict], cfg: ViTConfig,
+                      pruning: PruningConfig) -> List[Dict]:
+    """Compute per-encoder element-level masks for all prunable weights.
+
+    Returns a list of dicts with keys w_qkv, w_proj, w_int, w_out; each is a
+    {0,1} array broadcastable onto the corresponding weight.
+    """
+    b = pruning.block_size
+    masks = []
+    for s in scores:
+        mb_qkv = block_topk_mask(s["w_qkv"], pruning.r_b)
+        mb_proj = block_topk_mask(s["w_proj"], pruning.r_b)
+        mv_mlp = vector_topk_mask(s["mlp"], pruning.r_b)
+        masks.append({
+            "w_qkv": block_mask_to_element_mask(
+                mb_qkv, (cfg.dim, 3 * cfg.qkv_dim), b),
+            "w_proj": block_mask_to_element_mask(
+                mb_proj, (cfg.qkv_dim, cfg.dim), b),
+            # column mask on W_int (D, D_mlp) / row mask on W_out (D_mlp, D)
+            "w_int": mv_mlp[None, :],
+            "w_out": mv_mlp[:, None],
+            # block masks retained for structure export / hardware sim
+            "blocks_qkv": mb_qkv,
+            "blocks_proj": mb_proj,
+            "neurons": mv_mlp,
+        })
+    return masks
+
+
+def apply_masks(params: Dict, masks: List[Dict], ste: bool = False) -> Dict:
+    """Return params with masked MSA/MLP weights (W <- W . M).
+
+    With ste=True the mask is applied through a straight-through estimator:
+    forward sees W . M, backward sees dL/dW unmasked (the STE of Sec. IV-A
+    with respect to W; gradients w.r.t. scores flow via the score penalty
+    and the soft mask during training, see train.py).
+    """
+    new_encoders = []
+    for p, m in zip(params["encoders"], masks):
+        q = dict(p)
+        for name in ("w_qkv", "w_proj", "w_int", "w_out"):
+            w, mask = p[name], m[name]
+            masked = w * mask
+            if ste:
+                masked = w + jax.lax.stop_gradient(masked - w)
+            q[name] = masked
+        # bias of pruned MLP neurons must vanish too, so the neuron is
+        # genuinely removable from the hardware datapath.
+        q["b_int"] = p["b_int"] * m["neurons"]
+        new_encoders.append(q)
+    return {**params, "encoders": new_encoders}
+
+
+# ---------------------------------------------------------------------------
+# Structure queries (used for complexity accounting and hardware export)
+# ---------------------------------------------------------------------------
+
+def kept_heads(mask_blocks_qkv: jnp.ndarray, mask_blocks_proj: jnp.ndarray,
+               cfg: ViTConfig, b: int) -> jnp.ndarray:
+    """Boolean (H,) vector: head h is kept iff any of its blocks survive.
+
+    The alternate pattern couples W_p columns and W_proj rows per head: a
+    head is removed only when *all* of its blocks are pruned in both.
+    """
+    hd_blocks = max(1, cfg.head_dim // b) if cfg.head_dim >= b else 1
+    heads = []
+    for h in range(cfg.num_heads):
+        cols = []
+        for part in range(3):  # q, k, v column ranges inside w_qkv
+            start = (part * cfg.num_heads + h) * cfg.head_dim
+            c0 = start // b
+            cols.append(mask_blocks_qkv[:, c0:c0 + hd_blocks])
+        qkv_alive = jnp.any(jnp.stack([jnp.any(c > 0) for c in cols]))
+        r0 = (h * cfg.head_dim) // b
+        proj_alive = jnp.any(mask_blocks_proj[r0:r0 + hd_blocks, :] > 0)
+        heads.append(jnp.logical_or(qkv_alive, proj_alive))
+    return jnp.stack(heads)
+
+
+def head_retained_ratio(masks: List[Dict], cfg: ViTConfig, b: int) -> float:
+    """Average fraction of heads retained across encoders (Table VI col. 5)."""
+    total = 0.0
+    for m in masks:
+        alive = kept_heads(m["blocks_qkv"], m["blocks_proj"], cfg, b)
+        total += float(jnp.mean(alive.astype(jnp.float32)))
+    return total / len(masks)
+
+
+def structure_summary(masks: List[Dict], cfg: ViTConfig,
+                      pruning: PruningConfig) -> List[Dict]:
+    """Per-encoder sparsity structure consumed by the Rust simulator.
+
+    For each encoder: per-column retained-block counts of w_qkv / w_proj
+    (load-imbalance input), retained neuron count, kept-head bitmap.
+    """
+    out = []
+    for m in masks:
+        alive = kept_heads(m["blocks_qkv"], m["blocks_proj"], cfg,
+                           pruning.block_size)
+        out.append({
+            "qkv_col_blocks": [int(c) for c in
+                               jnp.sum(m["blocks_qkv"] > 0, axis=0).tolist()],
+            "qkv_rows": int(m["blocks_qkv"].shape[0]),
+            "proj_col_blocks": [int(c) for c in
+                                jnp.sum(m["blocks_proj"] > 0, axis=0).tolist()],
+            "proj_rows": int(m["blocks_proj"].shape[0]),
+            "neurons_kept": int(jnp.sum(m["neurons"] > 0)),
+            "heads_kept": [bool(x) for x in alive.tolist()],
+        })
+    return out

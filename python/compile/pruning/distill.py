@@ -1,0 +1,35 @@
+"""Knowledge distillation loss (Section IV-C, Eq. 9).
+
+L_distill = T^2 * KL(p_teacher(T) || p_student(T)), computed from class
+logits; the final training loss is the weighted sum
+lambda_distill * L_distill + lambda_normal * L (Algorithm 1, line 15).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distillation_loss(teacher_logits: jnp.ndarray, student_logits: jnp.ndarray,
+                      temperature: float) -> jnp.ndarray:
+    """T^2-scaled KL divergence between tempered softmax distributions."""
+    t = temperature
+    log_p_t = jax.nn.log_softmax(teacher_logits / t, axis=-1)
+    log_p_s = jax.nn.log_softmax(student_logits / t, axis=-1)
+    p_t = jnp.exp(log_p_t)
+    kl = jnp.sum(p_t * (log_p_t - log_p_s), axis=-1)
+    return (t * t) * jnp.mean(kl)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def score_penalty(scores) -> jnp.ndarray:
+    """lambda-weighted ||sigma(S)|| sparsity penalty (Eq. 8), unweighted."""
+    total = jnp.asarray(0.0)
+    for s in jax.tree_util.tree_leaves(scores):
+        total = total + jnp.sum(jax.nn.sigmoid(s))
+    return total

@@ -1,0 +1,25 @@
+"""Cubic sparsity scheduler (Section VI, following movement pruning [17]).
+
+The keep rate r_b is scheduled from full density 1.0 down to its final
+value with a warm-up phase (dense), a cubic decay, and a cool-down phase
+(final density), over the training steps.
+"""
+
+from __future__ import annotations
+
+
+def cubic_sparsity_schedule(step: int, total_steps: int, final_keep: float,
+                            warmup_frac: float = 0.1,
+                            cooldown_frac: float = 0.2) -> float:
+    """Keep rate at `step`; 1.0 during warm-up, `final_keep` in cool-down."""
+    if total_steps <= 0:
+        return final_keep
+    warmup = int(warmup_frac * total_steps)
+    cooldown_start = int((1.0 - cooldown_frac) * total_steps)
+    if step < warmup:
+        return 1.0
+    if step >= cooldown_start:
+        return final_keep
+    span = max(1, cooldown_start - warmup)
+    t = (step - warmup) / span
+    return final_keep + (1.0 - final_keep) * (1.0 - t) ** 3

@@ -1,0 +1,57 @@
+"""Dynamic token pruning — the Token Dropping Module (Section IV-B).
+
+Token importance is non-parametric: the MSA attention matrix A (B, H, N, N)
+is aggregated across heads, and the CLS row gives each non-CLS token an
+importance score (following [28] / EViT). Given keep rate r_t,
+k = ceil((N-1) * r_t) attentive tokens are retained *in score order* (the
+hardware reconstructs Z_out sorted by importance via the TDHM's bitonic
+sorter); the inattentive remainder is fused into a single token by
+score-weighted aggregation. Output: [CLS; top-k tokens; fused] with
+1 + k + 1 tokens.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def token_importance_scores(attn: jnp.ndarray) -> jnp.ndarray:
+    """S = (1/H) sum_h A_h, taking the CLS row: (B, H, N, N) -> (B, N-1)."""
+    return jnp.mean(attn[:, :, 0, 1:], axis=1)
+
+
+def token_drop(z: jnp.ndarray, scores: jnp.ndarray, r_t: float,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop inattentive tokens from z given per-token scores.
+
+    z: (B, N, D) including CLS at index 0; scores: (B, N-1) for non-CLS
+    tokens. Returns (z_out (B, 1+k+1, D), kept_idx (B, k) into the non-CLS
+    token range).
+    """
+    bsz, n, d = z.shape
+    k = max(1, math.ceil((n - 1) * r_t))
+    top_scores, top_idx = jax.lax.top_k(scores, k)           # (B, k) desc.
+
+    tokens = z[:, 1:, :]                                     # (B, N-1, D)
+    kept = jnp.take_along_axis(tokens, top_idx[..., None], axis=1)
+
+    # Fuse the inattentive remainder: weighted aggregation by score.
+    mask = jnp.ones((bsz, n - 1), z.dtype)
+    mask = mask.at[jnp.arange(bsz)[:, None], top_idx].set(0.0)
+    w = scores * mask                                        # (B, N-1)
+    denom = jnp.sum(w, axis=1, keepdims=True) + 1e-6
+    fused = jnp.einsum("bn,bnd->bd", w, tokens) / denom      # (B, D)
+
+    z_out = jnp.concatenate([z[:, :1, :], kept, fused[:, None, :]], axis=1)
+    return z_out, top_idx
+
+
+def tdm(z_prime: jnp.ndarray, attn: jnp.ndarray, r_t: float) -> jnp.ndarray:
+    """TDM inserted between MSA and MLP (Fig. 4): Z' <- TDM(Z')."""
+    scores = token_importance_scores(attn)
+    z_out, _ = token_drop(z_prime, scores, r_t)
+    return z_out

@@ -1,0 +1,215 @@
+"""Simultaneous Fine-Pruning (Algorithm 1).
+
+A sparse student is trained on sparse attentive tokens: every step,
+
+  1. block masks {M} are computed from the learned scores {S} at the
+     current keep rate r_b (cubic schedule, Section VI);
+  2. the forward pass uses W . M with a straight-through estimator so
+     gradients reach both W and S (soft-sigmoid STE);
+  3. TDM drops tokens at the configured encoder depths;
+  4. the loss is lambda_distill * L_distill(teacher, student)
+     + lambda_normal * (CE + lambda * ||sigma(S)||)  (Eqs. 8, 9, line 15);
+  5. AdamW updates {W, S}.
+
+Inside the jitted step the top-k mask uses a *dynamic quantile threshold*
+rather than lax.top_k so the scheduled r_b can be a traced scalar (no
+retrace per schedule step); the exported/inference mask path
+(block.masks_from_scores) uses exact static top-k. The two agree whenever
+scores are distinct — tested in python/tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Iterator, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import PruningConfig, ViTConfig
+from compile.optim import AdamWState, adamw_init, adamw_update
+from compile.pruning import block
+from compile.pruning.distill import (cross_entropy, distillation_loss,
+                                     score_penalty)
+from compile.pruning.schedule import cubic_sparsity_schedule
+from compile.pruned_model import pruned_vit_logits
+from compile.vit.model import vit_logits
+
+
+class TrainState(NamedTuple):
+    params: Dict
+    scores: List[Dict]
+    opt_params: AdamWState
+    opt_scores: AdamWState
+
+
+def _quantile_mask(s: jnp.ndarray, keep_rate: jnp.ndarray,
+                   tau: float) -> jnp.ndarray:
+    """Soft-STE top-k mask with a dynamic threshold (traced keep_rate)."""
+    flat = s.reshape(-1)
+    # Full descending sort via top_k (jnp.sort/quantile hit a broken
+    # gather lowering in this jax/jaxlib combination; top_k is safe).
+    vals = jax.lax.top_k(flat, flat.shape[0])[0]
+    # round-to-nearest keep count, matching block.block_topk_mask exactly
+    keep_n = jnp.clip(jnp.round(keep_rate * flat.shape[0]).astype(jnp.int32),
+                      1, flat.shape[0])
+    thresh = jax.lax.stop_gradient(
+        jax.lax.dynamic_index_in_dim(vals, keep_n - 1, keepdims=False))
+    hard = (s >= thresh).astype(s.dtype)
+    soft = jax.nn.sigmoid((s - thresh) / tau)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def masked_params_ste(params: Dict, scores: List[Dict], keep_rate,
+                      cfg: ViTConfig, pruning: PruningConfig,
+                      tau: float = 0.05) -> Dict:
+    """Masked weights with gradients flowing to W (STE) and S (soft STE)."""
+    b = pruning.block_size
+    new_encoders = []
+    for p, s in zip(params["encoders"], scores):
+        mb_qkv = _quantile_mask(s["w_qkv"], keep_rate, tau)
+        mb_proj = _quantile_mask(s["w_proj"], keep_rate, tau)
+        mv = _quantile_mask(s["mlp"], keep_rate, tau)
+        q = dict(p)
+        q["w_qkv"] = p["w_qkv"] * block.block_mask_to_element_mask(
+            mb_qkv, p["w_qkv"].shape, b)
+        q["w_proj"] = p["w_proj"] * block.block_mask_to_element_mask(
+            mb_proj, p["w_proj"].shape, b)
+        q["w_int"] = p["w_int"] * mv[None, :]
+        q["w_out"] = p["w_out"] * mv[:, None]
+        q["b_int"] = p["b_int"] * mv
+        new_encoders.append(q)
+    return {**params, "encoders": new_encoders}
+
+
+def make_train_step(cfg: ViTConfig, pruning: PruningConfig,
+                    teacher_params: Dict, lr: float = 2e-5,
+                    weight_decay: float = 0.01) -> Callable:
+    """Build the jitted Algorithm-1 step: (state, batch, r_b) -> (state, aux)."""
+
+    def loss_fn(params, scores, images, labels, keep_rate):
+        mp = masked_params_ste(params, scores, keep_rate, cfg, pruning)
+        student_logits = pruned_vit_logits(mp, images, cfg, pruning)
+        teacher_logits = jax.lax.stop_gradient(
+            vit_logits(teacher_params, images, cfg))
+        ce = cross_entropy(student_logits, labels)
+        dl = distillation_loss(teacher_logits, student_logits,
+                               pruning.distill_temperature)
+        sp = score_penalty(scores)
+        generic = ce + pruning.lambda_score * sp                   # Eq. 8
+        loss = (pruning.lambda_distill * dl
+                + pruning.lambda_normal * generic)                 # line 15
+        acc = jnp.mean((jnp.argmax(student_logits, -1) == labels)
+                       .astype(jnp.float32))
+        return loss, {"loss": loss, "ce": ce, "distill": dl,
+                      "penalty": sp, "acc": acc}
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(state: TrainState, images, labels, keep_rate):
+        (_, aux), (g_params, g_scores) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                state.params, state.scores, images, labels, keep_rate)
+        params, opt_p = adamw_update(g_params, state.opt_params, state.params,
+                                     lr, weight_decay=weight_decay)
+        # Scores take a larger LR and no weight decay (they are logits).
+        scores, opt_s = adamw_update(g_scores, state.opt_scores, state.scores,
+                                     lr * 100.0, weight_decay=0.0)
+        return TrainState(params, scores, opt_p, opt_s), aux
+
+    return step
+
+
+def init_train_state(key, cfg: ViTConfig, pruning: PruningConfig,
+                     init_params: Dict | None = None) -> TrainState:
+    k1, k2 = jax.random.split(key)
+    from compile.vit.params import init_vit_params
+    params = init_params if init_params is not None else init_vit_params(k1, cfg)
+    scores = block.init_scores(k2, cfg, pruning)
+    return TrainState(params, scores, adamw_init(params), adamw_init(scores))
+
+
+def train_simultaneous(state: TrainState, cfg: ViTConfig,
+                       pruning: PruningConfig, teacher_params: Dict,
+                       data_iter: Iterator, steps: int, lr: float = 2e-5,
+                       log_every: int = 20,
+                       log: Callable[[str], None] = print,
+                       ) -> Tuple[TrainState, List[Dict]]:
+    """Run Algorithm 1 for `steps` minibatches; returns (state, history)."""
+    step_fn = make_train_step(cfg, pruning, teacher_params, lr)
+    history = []
+    for i in range(steps):
+        r_b = cubic_sparsity_schedule(i, steps, pruning.r_b)
+        images, labels = next(data_iter)
+        state, aux = step_fn(state, images, labels, jnp.asarray(r_b))
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in aux.items()}
+            rec.update(step=i, r_b=r_b)
+            history.append(rec)
+            log(f"step {i:5d} r_b={r_b:.3f} loss={rec['loss']:.4f} "
+                f"ce={rec['ce']:.4f} acc={rec['acc']:.3f}")
+    return state, history
+
+
+# ---------------------------------------------------------------------------
+# Dense baseline training (teacher) + evaluation
+# ---------------------------------------------------------------------------
+
+def make_dense_step(cfg: ViTConfig, lr: float = 1e-3) -> Callable:
+    def loss_fn(params, images, labels):
+        logits = vit_logits(params, images, cfg)
+        ce = cross_entropy(logits, labels)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return ce, {"loss": ce, "acc": acc}
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt: AdamWState, images, labels):
+        (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, images, labels)
+        params, opt = adamw_update(grads, opt, params, lr)
+        return params, opt, aux
+
+    return step
+
+
+def train_dense(params: Dict, cfg: ViTConfig, data_iter: Iterator,
+                steps: int, lr: float = 1e-3, log_every: int = 20,
+                log: Callable[[str], None] = print) -> Tuple[Dict, List[Dict]]:
+    step_fn = make_dense_step(cfg, lr)
+    opt = adamw_init(params)
+    history = []
+    for i in range(steps):
+        images, labels = next(data_iter)
+        params, opt, aux = step_fn(params, opt, images, labels)
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in aux.items()}
+            rec["step"] = i
+            history.append(rec)
+            log(f"dense step {i:5d} loss={rec['loss']:.4f} acc={rec['acc']:.3f}")
+    return params, history
+
+
+def evaluate_pruned(state: TrainState, cfg: ViTConfig, pruning: PruningConfig,
+                    data_iter: Iterator, batches: int = 10) -> float:
+    """Accuracy of the hard-masked student (exact top-k masks)."""
+    masks = block.masks_from_scores(state.scores, cfg, pruning)
+    mp = block.apply_masks(state.params, masks)
+    fwd = jax.jit(lambda imgs: pruned_vit_logits(mp, imgs, cfg, pruning))
+    correct = total = 0
+    for _ in range(batches):
+        images, labels = next(data_iter)
+        pred = jnp.argmax(fwd(images), -1)
+        correct += int(jnp.sum(pred == labels))
+        total += labels.shape[0]
+    return correct / total
+
+
+def evaluate_dense(params: Dict, cfg: ViTConfig, data_iter: Iterator,
+                   batches: int = 10) -> float:
+    fwd = jax.jit(lambda imgs: vit_logits(params, imgs, cfg))
+    correct = total = 0
+    for _ in range(batches):
+        images, labels = next(data_iter)
+        pred = jnp.argmax(fwd(images), -1)
+        correct += int(jnp.sum(pred == labels))
+        total += labels.shape[0]
+    return correct / total

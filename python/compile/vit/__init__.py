@@ -1,0 +1,4 @@
+"""Pure-JAX ViT/DeiT model family (L2 substrate)."""
+
+from compile.vit.params import init_vit_params, count_params, param_order  # noqa: F401
+from compile.vit.model import vit_forward, vit_logits  # noqa: F401

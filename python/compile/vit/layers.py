@@ -1,0 +1,80 @@
+"""ViT building blocks as pure functions over parameter dicts.
+
+Equations follow Section II-A of the paper:
+  MSA:  [Q,K,V] = Z U_qkv;  A = softmax(QK^T / sqrt(D'));  SA = AV
+        MSA(Z) = [SA_1 ... SA_H] W_proj                  (Eqs. 2-5)
+  Encoder: Z' = MSA(LN(Z)) + Z;  Z_out = MLP(LN(Z')) + Z' (Eqs. 1, 6)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    # tanh approximation, matching the EM module's polynomial evaluation.
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x ** 3)))
+
+
+def attention_scores(q: jnp.ndarray, k: jnp.ndarray, head_dim: int) -> jnp.ndarray:
+    """softmax(QK^T / sqrt(D')) per head. q,k: (..., H, N, D')."""
+    logits = jnp.einsum("...hnd,...hmd->...hnm", q, k) / jnp.sqrt(
+        jnp.asarray(head_dim, q.dtype))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def msa(z: jnp.ndarray, p: dict, num_heads: int, head_dim: int,
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-head self-attention.
+
+    z: (B, N, D).  Returns (out (B, N, D), attn (B, H, N, N)); the attention
+    matrix is surfaced so a TDM can derive token importance scores from it.
+    """
+    b, n, _ = z.shape
+    qkv = z @ p["w_qkv"] + p["b_qkv"]                       # (B, N, 3*H*D')
+    qkv = qkv.reshape(b, n, 3, num_heads, head_dim)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))  # (B,H,N,D')
+    attn = attention_scores(q, k, head_dim)                  # (B, H, N, N)
+    sa = jnp.einsum("bhnm,bhmd->bhnd", attn, v)              # (B, H, N, D')
+    sa = sa.transpose(0, 2, 1, 3).reshape(b, n, num_heads * head_dim)
+    out = sa @ p["w_proj"] + p["b_proj"]
+    return out, attn
+
+
+def mlp(z: jnp.ndarray, p: dict) -> jnp.ndarray:
+    h = gelu(z @ p["w_int"] + p["b_int"])
+    return h @ p["w_out"] + p["b_out"]
+
+
+def patch_embed(images: jnp.ndarray, p: dict, patch_size: int) -> jnp.ndarray:
+    """Patchify (B, H, W, C) images and linearly embed each patch.
+
+    Returns (B, num_patches, D).
+    """
+    b, h, w, c = images.shape
+    ph = h // patch_size
+    pw = w // patch_size
+    x = images.reshape(b, ph, patch_size, pw, patch_size, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, ph * pw, patch_size * patch_size * c)
+    return x @ p["w_embed"] + p["b_embed"]
+
+
+def encoder(z: jnp.ndarray, p: dict, num_heads: int, head_dim: int,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One transformer encoder. Returns (Z_out, attn)."""
+    zn = layer_norm(z, p["ln1_g"], p["ln1_b"])
+    att_out, attn = msa(zn, p, num_heads, head_dim)
+    z_prime = att_out + z                                    # Eq. 1
+    zn2 = layer_norm(z_prime, p["ln2_g"], p["ln2_b"])
+    z_out = mlp(zn2, p) + z_prime                            # Eq. 6
+    return z_out, attn

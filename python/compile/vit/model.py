@@ -1,0 +1,30 @@
+"""Dense (unpruned) ViT forward — the baseline and distillation teacher."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from compile.configs import ViTConfig
+from compile.vit import layers
+
+
+def vit_forward(params: Dict, images: jnp.ndarray, cfg: ViTConfig,
+                ) -> jnp.ndarray:
+    """images: (B, H, W, C) -> final token matrix (B, N, D)."""
+    z = layers.patch_embed(images, params["embed"], cfg.patch_size)
+    cls = jnp.broadcast_to(params["embed"]["cls"],
+                           (z.shape[0], 1, cfg.dim)).astype(z.dtype)
+    z = jnp.concatenate([cls, z], axis=1) + params["embed"]["pos"]
+    for p in params["encoders"]:
+        z, _ = layers.encoder(z, p, cfg.num_heads, cfg.head_dim)
+    return z
+
+
+def vit_logits(params: Dict, images: jnp.ndarray, cfg: ViTConfig,
+               ) -> jnp.ndarray:
+    z = vit_forward(params, images, cfg)
+    h = params["head"]
+    cls = layers.layer_norm(z[:, 0, :], h["ln_g"], h["ln_b"])
+    return cls @ h["w_head"] + h["b_head"]

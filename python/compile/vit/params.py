@@ -1,0 +1,100 @@
+"""Parameter initialization and deterministic flattening order.
+
+The flattening order defined by :func:`param_order` is the contract between
+the AOT pipeline (aot.py / export.py) and the Rust runtime: HLO artifacts
+take weights as positional parameters in exactly this order, and
+``weights_*.bin`` stores tensors in the same order.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import ViTConfig
+
+
+def _trunc_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def init_encoder_params(key, cfg: ViTConfig) -> Dict[str, jnp.ndarray]:
+    d, hd, nh, dm = cfg.dim, cfg.head_dim, cfg.num_heads, cfg.mlp_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1_g": jnp.ones((d,)),
+        "ln1_b": jnp.zeros((d,)),
+        "w_qkv": _trunc_normal(ks[0], (d, 3 * nh * hd)),
+        "b_qkv": jnp.zeros((3 * nh * hd,)),
+        "w_proj": _trunc_normal(ks[1], (nh * hd, d)),
+        "b_proj": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)),
+        "ln2_b": jnp.zeros((d,)),
+        "w_int": _trunc_normal(ks[2], (d, dm)),
+        "b_int": jnp.zeros((dm,)),
+        "w_out": _trunc_normal(ks[3], (dm, d)),
+        "b_out": jnp.zeros((d,)),
+    }
+
+
+def init_vit_params(key, cfg: ViTConfig) -> Dict:
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    params = {
+        "embed": {
+            "w_embed": _trunc_normal(keys[0], (cfg.patch_dim, cfg.dim)),
+            "b_embed": jnp.zeros((cfg.dim,)),
+            "cls": _trunc_normal(keys[1], (1, 1, cfg.dim)),
+            "pos": _trunc_normal(keys[2], (1, cfg.num_tokens, cfg.dim)),
+        },
+        "encoders": [init_encoder_params(keys[3 + i], cfg)
+                     for i in range(cfg.num_layers)],
+        "head": {
+            "ln_g": jnp.ones((cfg.dim,)),
+            "ln_b": jnp.zeros((cfg.dim,)),
+            "w_head": _trunc_normal(keys[-1], (cfg.dim, cfg.num_classes)),
+            "b_head": jnp.zeros((cfg.num_classes,)),
+        },
+    }
+    return params
+
+
+ENCODER_KEYS = ("ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_proj", "b_proj",
+                "ln2_g", "ln2_b", "w_int", "b_int", "w_out", "b_out")
+EMBED_KEYS = ("w_embed", "b_embed", "cls", "pos")
+HEAD_KEYS = ("ln_g", "ln_b", "w_head", "b_head")
+
+
+def param_order(cfg: ViTConfig) -> List[Tuple[str, ...]]:
+    """Deterministic (path...) list: embed, encoders[0..L-1], head."""
+    order: List[Tuple[str, ...]] = [("embed", k) for k in EMBED_KEYS]
+    for i in range(cfg.num_layers):
+        order.extend(("encoders", str(i), k) for k in ENCODER_KEYS)
+    order.extend(("head", k) for k in HEAD_KEYS)
+    return order
+
+
+def flatten_params(params: Dict, cfg: ViTConfig) -> List[jnp.ndarray]:
+    out = []
+    for path in param_order(cfg):
+        node = params
+        for p in path:
+            node = node[int(p)] if isinstance(node, list) else node[p]
+        out.append(node)
+    return out
+
+
+def unflatten_params(flat: List[jnp.ndarray], cfg: ViTConfig) -> Dict:
+    it = iter(flat)
+    params = {
+        "embed": {k: next(it) for k in EMBED_KEYS},
+        "encoders": [{k: next(it) for k in ENCODER_KEYS}
+                     for _ in range(cfg.num_layers)],
+        "head": {k: next(it) for k in HEAD_KEYS},
+    }
+    return params
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

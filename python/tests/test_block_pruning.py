@@ -1,0 +1,133 @@
+"""Static block weight pruning invariants (Section IV-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import TEST_TINY, PruningConfig
+from compile.pruning import (apply_masks, block_mask_to_element_mask,
+                             block_topk_mask, head_retained_ratio,
+                             init_scores, kept_heads, masks_from_scores,
+                             structure_summary)
+
+
+@given(m=st.integers(1, 12), n=st.integers(1, 12),
+       keep=st.floats(0.1, 1.0), seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_block_topk_mask_keeps_exact_count(m, n, keep, seed):
+    s = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    mask = block_topk_mask(s, keep)
+    k = max(1, int(round(keep * m * n)))
+    assert int(mask.sum()) == min(k, m * n)
+    # The kept entries are exactly the top-scoring ones.
+    flat = np.asarray(s).ravel()
+    kept_scores = flat[np.asarray(mask).ravel() > 0]
+    dropped = flat[np.asarray(mask).ravel() == 0]
+    if dropped.size and kept_scores.size:
+        assert kept_scores.min() >= dropped.max()
+
+
+def test_block_topk_mask_full_keep_is_ones():
+    s = jax.random.normal(jax.random.PRNGKey(0), (4, 7))
+    assert int(block_topk_mask(s, 1.0).sum()) == 28
+
+
+@given(m=st.integers(1, 6), n=st.integers(1, 6), b=st.sampled_from([2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_block_mask_expansion_shape_and_blocks(m, n, b):
+    mask = jnp.asarray(
+        np.random.RandomState(0).randint(0, 2, (m, n)).astype(np.float32))
+    em = block_mask_to_element_mask(mask, (m * b, n * b), b)
+    assert em.shape == (m * b, n * b)
+    # Every bxb tile is constant and equals the block mask entry.
+    em_np = np.asarray(em).reshape(m, b, n, b)
+    for i in range(m):
+        for j in range(n):
+            tile = em_np[i, :, j, :]
+            assert (tile == float(mask[i, j])).all()
+
+
+def test_element_mask_truncation_for_ragged_shapes():
+    # grid for (5, 7) at b=2 is ceil(5/2)=3 x ceil(7/2)=4; expansion must
+    # truncate the padded remainder back to the element shape.
+    mask = jnp.ones((3, 4))
+    em = block_mask_to_element_mask(mask, (5, 7), 2)
+    assert em.shape == (5, 7)
+    assert float(em.min()) == 1.0
+
+
+def test_apply_masks_zeroes_pruned_weights():
+    cfg, pr = TEST_TINY, PruningConfig(block_size=8, r_b=0.5, r_t=1.0)
+    params_key, score_key = jax.random.split(jax.random.PRNGKey(0))
+    from compile.vit.params import init_vit_params
+    params = init_vit_params(params_key, cfg)
+    scores = init_scores(score_key, cfg, pr)
+    masks = masks_from_scores(scores, cfg, pr)
+    mp = apply_masks(params, masks)
+    for p, m in zip(mp["encoders"], masks):
+        w = np.asarray(p["w_qkv"])
+        em = np.asarray(m["w_qkv"])
+        assert (w[em == 0] == 0).all()
+        # roughly r_b of blocks survive
+        frac = float(m["blocks_qkv"].mean())
+        assert abs(frac - 0.5) < 0.15
+        # MLP neuron coupling: pruned column of W_int <-> pruned row of W_out
+        neurons = np.asarray(m["neurons"])
+        wi = np.asarray(p["w_int"])
+        wo = np.asarray(p["w_out"])
+        assert (wi[:, neurons == 0] == 0).all()
+        assert (wo[neurons == 0, :] == 0).all()
+        assert (np.asarray(p["b_int"])[neurons == 0] == 0).all()
+
+
+def test_apply_masks_ste_forward_equals_hard_mask():
+    cfg, pr = TEST_TINY, PruningConfig(block_size=8, r_b=0.6, r_t=1.0)
+    from compile.vit.params import init_vit_params
+    params = init_vit_params(jax.random.PRNGKey(0), cfg)
+    scores = init_scores(jax.random.PRNGKey(1), cfg, pr)
+    masks = masks_from_scores(scores, cfg, pr)
+    hard = apply_masks(params, masks, ste=False)
+    ste = apply_masks(params, masks, ste=True)
+    for a, b in zip(hard["encoders"], ste["encoders"]):
+        np.testing.assert_allclose(np.asarray(a["w_qkv"]),
+                                   np.asarray(b["w_qkv"]))
+
+
+def test_kept_heads_all_alive_when_dense():
+    cfg, pr = TEST_TINY, PruningConfig(block_size=8, r_b=1.0)
+    scores = init_scores(jax.random.PRNGKey(0), cfg, pr)
+    masks = masks_from_scores(scores, cfg, pr)
+    alive = kept_heads(masks[0]["blocks_qkv"], masks[0]["blocks_proj"], cfg, 8)
+    assert bool(jnp.all(alive))
+    assert head_retained_ratio(masks, cfg, 8) == 1.0
+
+
+def test_kept_heads_detects_fully_pruned_head():
+    cfg = TEST_TINY
+    b = 8
+    m_qkv = jnp.ones((cfg.dim // b, 3 * cfg.qkv_dim // b))
+    m_proj = jnp.ones((cfg.qkv_dim // b, cfg.dim // b))
+    # Kill head 1 everywhere: its q/k/v column ranges and proj row range.
+    hd_blocks = cfg.head_dim // b
+    for part in range(3):
+        c0 = ((part * cfg.num_heads + 1) * cfg.head_dim) // b
+        m_qkv = m_qkv.at[:, c0:c0 + hd_blocks].set(0)
+    r0 = (1 * cfg.head_dim) // b
+    m_proj = m_proj.at[r0:r0 + hd_blocks, :].set(0)
+    alive = kept_heads(m_qkv, m_proj, cfg, b)
+    assert bool(alive[0]) and not bool(alive[1])
+
+
+def test_structure_summary_consistency():
+    cfg, pr = TEST_TINY, PruningConfig(block_size=8, r_b=0.5)
+    scores = init_scores(jax.random.PRNGKey(3), cfg, pr)
+    masks = masks_from_scores(scores, cfg, pr)
+    summary = structure_summary(masks, cfg, pr)
+    assert len(summary) == cfg.num_layers
+    for s, m in zip(summary, masks):
+        assert sum(s["qkv_col_blocks"]) == int(m["blocks_qkv"].sum())
+        assert s["neurons_kept"] == int(m["neurons"].sum())
+        assert len(s["heads_kept"]) == cfg.num_heads
+        assert all(c <= s["qkv_rows"] for c in s["qkv_col_blocks"])

@@ -1,0 +1,62 @@
+"""Config invariants: token-count schedule, Table VI settings."""
+
+import math
+
+import pytest
+
+from compile.configs import (DEIT_SMALL, TEST_TINY, PruningConfig,
+                             model_by_name, paper_table6_settings)
+
+
+def test_deit_small_dims():
+    cfg = DEIT_SMALL
+    assert cfg.num_patches == 196
+    assert cfg.num_tokens == 197
+    assert cfg.qkv_dim == 384
+    assert cfg.patch_dim == 768
+
+
+def test_tokens_after_tdm_formula():
+    pr = PruningConfig(r_t=0.7)
+    # 1 CLS + ceil((n-1)*r_t) kept + 1 fused
+    assert pr.tokens_after_tdm(197) == 1 + math.ceil(196 * 0.7) + 1
+
+
+def test_tokens_after_tdm_identity_when_unpruned():
+    pr = PruningConfig(r_t=1.0)
+    assert pr.tokens_after_tdm(197) == 197
+
+
+@pytest.mark.parametrize("r_t", [0.5, 0.7, 0.9])
+def test_tokens_per_layer_monotone(r_t):
+    pr = PruningConfig(r_t=r_t)
+    counts = pr.tokens_per_layer(197, 12)
+    assert len(counts) == 12
+    assert counts[0] == 197
+    for a, b in zip(counts, counts[1:]):
+        assert b <= a
+    # Drops happen exactly after the TDM layers (paper: 3rd/7th/10th).
+    for i in range(11):
+        if i in pr.tdm_layers:
+            assert counts[i + 1] < counts[i]
+        else:
+            assert counts[i + 1] == counts[i]
+
+
+def test_paper_table6_settings_count():
+    settings = paper_table6_settings()
+    assert len(settings) == 14  # 2 baselines + 12 pruned
+    assert sum(1 for s in settings if not s.is_pruned) == 2
+
+
+def test_model_by_name_roundtrip():
+    for name in ("deit-small", "deit-tiny", "test-tiny"):
+        assert model_by_name(name).name == name
+    with pytest.raises(KeyError):
+        model_by_name("nope")
+
+
+def test_tiny_config_block_divisibility():
+    # block size must tile the projection dims for clean packing
+    assert TEST_TINY.dim % 8 == 0
+    assert TEST_TINY.qkv_dim % 8 == 0

@@ -1,0 +1,100 @@
+"""Export formats + AOT lowering tests (the Rust interchange contract)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_variant, to_hlo_text, variant_name
+from compile.configs import TEST_TINY, PruningConfig
+from compile.export import read_weights, write_structure, write_weights
+from compile.pruning import init_scores, masks_from_scores, structure_summary
+from compile.vit.params import (flatten_params, init_vit_params, param_order)
+
+CFG = TEST_TINY
+PR = PruningConfig(block_size=8, r_b=0.7, r_t=0.7, tdm_layers=(1, 2))
+
+
+def test_weight_roundtrip(tmp_path):
+    params = init_vit_params(jax.random.PRNGKey(0), CFG)
+    path = str(tmp_path / "w.bin")
+    n = write_weights(path, params, CFG)
+    loaded = read_weights(path)
+    assert len(loaded) == n == len(param_order(CFG))
+    flat = flatten_params(params, CFG)
+    for (name, data), arr in zip(loaded, flat):
+        np.testing.assert_array_equal(data, np.asarray(arr))
+    assert loaded[0][0] == "embed/w_embed"
+
+
+def test_structure_json_schema(tmp_path):
+    scores = init_scores(jax.random.PRNGKey(1), CFG, PR)
+    masks = masks_from_scores(scores, CFG, PR)
+    st = structure_summary(masks, CFG, PR)
+    path = str(tmp_path / "s.json")
+    write_structure(path, st, CFG, PR)
+    doc = json.load(open(path))
+    assert doc["block_size"] == 8
+    assert len(doc["encoders"]) == CFG.num_layers
+    assert len(doc["tokens_per_layer"]) == CFG.num_layers
+    assert doc["tokens_per_layer"][0] == CFG.num_tokens
+    assert doc["dims"]["dim"] == CFG.dim
+
+
+def test_variant_name_stable():
+    assert (variant_name(CFG, PR, 1, False)
+            == "test-tiny_b8_rb0.7_rt0.7_bs1")
+    assert variant_name(CFG, PR, 2, True).endswith("_kernels")
+
+
+def test_lower_variant_hlo_text_structure():
+    v = lower_variant(CFG, PR, 1, use_kernels=False)
+    hlo = v["hlo"]
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+    # parameter 0 is the image; weights follow
+    assert "parameter(0)" in hlo
+    assert f"parameter({len(param_order(CFG))})" in hlo
+    # output is a tuple of one f32[1, num_classes]
+    assert f"f32[1,{CFG.num_classes}]" in hlo
+
+
+def test_lower_variant_deterministic():
+    a = lower_variant(CFG, PR, 1, False)
+    b = lower_variant(CFG, PR, 1, False)
+    assert a["hlo"] == b["hlo"]
+    fa = flatten_params(a["params"], CFG)
+    fb = flatten_params(b["params"], CFG)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_lowered_hlo_executes_in_python():
+    """Execute the lowered computation with jax and compare to direct call."""
+    from compile.pruned_model import pruned_vit_logits
+    v = lower_variant(CFG, PR, 1, use_kernels=False)
+    flat = flatten_params(v["params"], CFG)
+    imgs = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 32, 3))
+    direct = pruned_vit_logits(v["params"], imgs, CFG, PR)
+
+    def fn(images, *fl):
+        from compile.vit.params import unflatten_params
+        p = unflatten_params(list(fl), CFG)
+        return (pruned_vit_logits(p, images, CFG, PR),)
+
+    got = jax.jit(fn)(imgs, *flat)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_manifest_contains_required_fields(tmp_path):
+    from compile.aot import export_variant
+    entry = export_variant(str(tmp_path), CFG, PR, 1, False)
+    assert entry["name"] == variant_name(CFG, PR, 1, False)
+    for f in entry["files"].values():
+        assert os.path.exists(tmp_path / f)
+    assert entry["input_shape"] == [1, 32, 32, 3]
+    assert entry["pruning"]["r_b"] == 0.7

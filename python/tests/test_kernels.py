@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes (and block sizes); assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (fuse_tokens, fused_attention, pack_blocks, ref,
+                             sbmm, sbmm_from_mask)
+from compile.pruning import block_mask_to_element_mask, block_topk_mask
+
+
+# ---------------------------------------------------------------------------
+# SBMM
+# ---------------------------------------------------------------------------
+
+@given(
+    mb=st.integers(1, 4),     # row blocks of W
+    nb=st.integers(1, 4),     # col blocks of W
+    m1=st.integers(1, 24),    # rows of X (ragged allowed)
+    b=st.sampled_from([2, 4, 8]),
+    keep=st.floats(0.2, 1.0),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_sbmm_matches_ref(mb, nb, m1, b, keep, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    m2, d = mb * b, nb * b
+    x = jax.random.normal(k1, (m1, m2))
+    w = jax.random.normal(k2, (m2, d))
+    bm = block_topk_mask(jax.random.normal(k3, (mb, nb)), keep)
+    em = block_mask_to_element_mask(bm, (m2, d), b)
+    got = sbmm_from_mask(x, w, bm, b)
+    want = ref.sbmm_ref(x, w, em)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sbmm_fully_pruned_column_gives_zero():
+    b = 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    bm = jnp.asarray([[1.0, 0.0], [1.0, 0.0]])  # column 1 fully pruned
+    y = sbmm_from_mask(x, w, bm, b)
+    assert np.abs(np.asarray(y[:, b:])).max() == 0.0
+
+
+def test_pack_blocks_layout():
+    """pack_blocks implements the Fig. 5 column-major header layout."""
+    b = 2
+    w = jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
+    bm = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+    blocks, header, counts = pack_blocks(w, bm, b)
+    assert counts.tolist() == [2, 1]
+    assert header[0, :2].tolist() == [0, 1]   # column 0 keeps rows 0,1
+    assert header[1, 0].tolist() == 1         # column 1 keeps row 1
+    np.testing.assert_allclose(np.asarray(blocks[0, 0]), np.asarray(w[0:2, 0:2]))
+    np.testing.assert_allclose(np.asarray(blocks[1, 0]), np.asarray(w[2:4, 2:4]))
+
+
+def test_sbmm_ragged_input_rows_padded_correctly():
+    b = 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 8))  # 5 % 4 != 0
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 12))
+    bm = jnp.ones((2, 3))
+    y = sbmm_from_mask(x, w, bm, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention + CLS scoring
+# ---------------------------------------------------------------------------
+
+@given(
+    bsz=st.integers(1, 3), h=st.integers(1, 4),
+    n=st.integers(2, 24), d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=20, deadline=None)
+def test_attention_matches_ref(bsz, h, n, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (jax.random.normal(kk, (bsz, h, n, d)) for kk in ks)
+    out, cls_attn = fused_attention(q, k, v)
+    want_out, want_cls = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_out),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cls_attn), np.asarray(want_cls),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attention_cls_row_is_stochastic():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (2, 2, 7, 4)) for kk in ks)
+    _, cls_attn = fused_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(cls_attn.sum(-1)),
+                               np.ones((2, 2)), rtol=1e-5)
+
+
+def test_attention_softmax_stability_large_logits():
+    q = 50.0 * jnp.ones((1, 1, 4, 8))
+    k = 50.0 * jnp.ones((1, 1, 4, 8))
+    v = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 4, 8))
+    out, _ = fused_attention(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# TDM fusion
+# ---------------------------------------------------------------------------
+
+@given(bsz=st.integers(1, 4), n=st.integers(1, 32), d=st.sampled_from([4, 8]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_fuse_tokens_matches_ref(bsz, n, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    tokens = jax.random.normal(k1, (bsz, n, d))
+    weights = jax.nn.relu(jax.random.normal(k2, (bsz, n)))
+    got = fuse_tokens(tokens, weights)
+    want = ref.fuse_ref(tokens, weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fuse_tokens_zero_weights_safe():
+    tokens = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3))
+    got = fuse_tokens(tokens, jnp.zeros((2, 5)))
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.zeros((2, 3)), atol=1e-5)
+
+
+def test_kernels_compose_under_jit():
+    """All kernels must lower inside jax.jit (the AOT requirement).
+
+    pack_blocks is deliberately host-side (Section V-A: data layout is an
+    *offline* model optimization), so packing happens outside jit and the
+    packed arrays are jit arguments.
+    """
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
+    x = jax.random.normal(ks[0], (4, 8))
+    w = jax.random.normal(ks[1], (8, 8))
+    bm = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+    blocks, header, counts = pack_blocks(w, bm, 4)
+
+    def f(x, blocks, header, counts, q, k, v, t, tw):
+        y = sbmm(x, blocks, header, counts, 4, 8)
+        o, c = fused_attention(q, k, v)
+        fz = fuse_tokens(t, tw)
+        return y.sum() + o.sum() + c.sum() + fz.sum()
+
+    args = (x, blocks, header, counts,
+            jax.random.normal(ks[2], (1, 1, 4, 4)),
+            jax.random.normal(ks[3], (1, 1, 4, 4)),
+            jax.random.normal(ks[4], (1, 1, 4, 4)),
+            jax.random.normal(ks[5], (1, 4, 4)),
+            jax.nn.relu(jax.random.normal(ks[6], (1, 4))))
+    v1 = f(*args)
+    v2 = jax.jit(f)(*args)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)

@@ -1,0 +1,112 @@
+"""L2 model tests: dense/pruned consistency, kernel path equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import TEST_TINY, PruningConfig
+from compile.model import pruned_vit_logits, vit_forward, vit_logits
+from compile.pruning import apply_masks, init_scores, masks_from_scores
+from compile.vit.params import (count_params, flatten_params,
+                                init_vit_params, param_order,
+                                unflatten_params)
+
+CFG = TEST_TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_vit_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+
+
+def test_forward_shapes(params, images):
+    z = vit_forward(params, images, CFG)
+    assert z.shape == (2, CFG.num_tokens, CFG.dim)
+    logits = vit_logits(params, images, CFG)
+    assert logits.shape == (2, CFG.num_classes)
+
+
+def test_unpruned_pruned_model_equals_dense(params, images):
+    """r_b = r_t = 1 must reduce exactly to the dense forward."""
+    pr = PruningConfig(block_size=8, r_b=1.0, r_t=1.0)
+    scores = init_scores(jax.random.PRNGKey(2), CFG, pr)
+    masks = masks_from_scores(scores, CFG, pr)
+    mp = apply_masks(params, masks)
+    dense = vit_logits(params, images, CFG)
+    pruned = pruned_vit_logits(mp, images, CFG, pr)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(pruned),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_path_matches_jnp_path(params, images):
+    pr = PruningConfig(block_size=8, r_b=0.7, r_t=0.7, tdm_layers=(1, 2))
+    scores = init_scores(jax.random.PRNGKey(3), CFG, pr)
+    mp = apply_masks(params, masks_from_scores(scores, CFG, pr))
+    a = pruned_vit_logits(mp, images, CFG, pr, use_kernels=False)
+    b = pruned_vit_logits(mp, images, CFG, pr, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_token_pruning_changes_only_after_tdm_layer(params, images):
+    """Without weight pruning, prefix layers before the first TDM agree."""
+    pr_none = PruningConfig(block_size=8, r_b=1.0, r_t=1.0)
+    pr_tok = PruningConfig(block_size=8, r_b=1.0, r_t=0.5, tdm_layers=(2,))
+    pr_last = PruningConfig(block_size=8, r_b=1.0, r_t=0.5, tdm_layers=(3,))
+    scores = init_scores(jax.random.PRNGKey(4), CFG, pr_none)
+    mp = apply_masks(params, masks_from_scores(scores, CFG, pr_none))
+    a = pruned_vit_logits(mp, images, CFG, pr_none)
+    # TDM in a middle layer changes downstream attention -> logits differ.
+    b = pruned_vit_logits(mp, images, CFG, pr_tok)
+    assert np.isfinite(np.asarray(b)).all()
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    # TDM in the *last* layer cannot change the CLS logits: MLP/LN are
+    # per-token and CLS is always retained. A strong structural check.
+    c = pruned_vit_logits(mp, images, CFG, pr_last)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batch_consistency(params):
+    """Per-image results must not depend on batch composition."""
+    pr = PruningConfig(block_size=8, r_b=0.7, r_t=0.7, tdm_layers=(1,))
+    scores = init_scores(jax.random.PRNGKey(5), CFG, pr)
+    mp = apply_masks(params, masks_from_scores(scores, CFG, pr))
+    imgs = jax.random.normal(jax.random.PRNGKey(6), (4, 32, 32, 3))
+    full = pruned_vit_logits(mp, imgs, CFG, pr)
+    single = jnp.concatenate(
+        [pruned_vit_logits(mp, imgs[i:i + 1], CFG, pr) for i in range(4)])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(single),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_param_flatten_roundtrip(params):
+    flat = flatten_params(params, CFG)
+    assert len(flat) == len(param_order(CFG))
+    back = unflatten_params(flat, CFG)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_count_deit_small_matches_paper():
+    """Table VI: base DeiT-Small has ~22M parameters."""
+    from compile.configs import DEIT_SMALL
+    p = init_vit_params(jax.random.PRNGKey(0), DEIT_SMALL)
+    n = count_params(p)
+    assert 21e6 < n < 23e6, n
+
+
+def test_pruned_model_weight_zeros_reduce_param_norm(params, images):
+    pr = PruningConfig(block_size=8, r_b=0.5, r_t=1.0)
+    scores = init_scores(jax.random.PRNGKey(7), CFG, pr)
+    mp = apply_masks(params, masks_from_scores(scores, CFG, pr))
+    w0 = float(sum(jnp.sum(jnp.abs(p["w_qkv"])) for p in params["encoders"]))
+    w1 = float(sum(jnp.sum(jnp.abs(p["w_qkv"])) for p in mp["encoders"]))
+    assert w1 < w0 * 0.75

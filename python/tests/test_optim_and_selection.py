@@ -1,0 +1,66 @@
+"""AdamW optimizer + parser-safe top-k selection tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.optim import adamw_init, adamw_update
+from compile.pruned_model import _topk_selection
+
+
+def test_adamw_first_step_matches_closed_form():
+    """With beta corrections, step 1 moves by ~lr * sign(grad) (+ decay)."""
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, -0.5])}
+    state = adamw_init(params)
+    lr, wd = 0.1, 0.01
+    new, _ = adamw_update(grads, state, params, lr, weight_decay=wd)
+    # mu_hat = g, nu_hat = g^2 -> update = lr * (sign(g) + wd * p)
+    expect = np.asarray([1.0, -2.0]) - lr * (
+        np.sign([0.5, -0.5]) + wd * np.asarray([1.0, -2.0]))
+    np.testing.assert_allclose(np.asarray(new["w"]), expect, rtol=1e-4)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"x": jnp.asarray(5.0)}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"x": 2.0 * params["x"]}
+        params, state = adamw_update(grads, state, params, 0.05,
+                                     weight_decay=0.0)
+    assert abs(float(params["x"])) < 0.1
+
+
+def test_adamw_weight_decay_shrinks_params():
+    params = {"x": jnp.asarray(10.0)}
+    state = adamw_init(params)
+    for _ in range(50):
+        grads = {"x": jnp.asarray(0.0)}
+        params, state = adamw_update(grads, state, params, 0.1,
+                                     weight_decay=0.1)
+    assert float(params["x"]) < 10.0
+
+
+@given(n=st.integers(2, 40), k_frac=st.floats(0.1, 1.0),
+       seed=st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_topk_selection_matches_lax_topk(n, k_frac, seed):
+    """The parser-safe iterative-argmax selection must equal lax.top_k."""
+    k = max(1, int(k_frac * n))
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (2, n))
+    sel = _topk_selection(scores, k)                  # (2, k, n)
+    # each row is one-hot
+    np.testing.assert_allclose(np.asarray(sel.sum(-1)), np.ones((2, k)),
+                               atol=1e-6)
+    got_idx = np.asarray(jnp.argmax(sel, axis=-1))
+    _, want_idx = jax.lax.top_k(scores, k)
+    np.testing.assert_array_equal(got_idx, np.asarray(want_idx))
+
+
+def test_topk_selection_is_permutation_matrix_slice():
+    scores = jax.random.normal(jax.random.PRNGKey(1), (1, 10))
+    sel = _topk_selection(scores, 10)
+    # full k -> a permutation matrix
+    np.testing.assert_allclose(np.asarray(sel.sum(1)), np.ones((1, 10)),
+                               atol=1e-6)

@@ -1,0 +1,94 @@
+"""Dynamic token pruning (TDM) invariants (Section IV-B)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.pruning.token import (tdm, token_drop, token_importance_scores)
+
+
+def _rand_attn(key, b, h, n):
+    """Random row-stochastic attention tensor (B, H, N, N)."""
+    logits = jax.random.normal(key, (b, h, n, n))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def test_scores_shape_and_normalization():
+    attn = _rand_attn(jax.random.PRNGKey(0), 2, 3, 9)
+    s = token_importance_scores(attn)
+    assert s.shape == (2, 8)
+    # CLS row of a softmax sums to 1 over all N tokens, so the non-CLS
+    # scores sum to <= 1.
+    assert float(s.sum(axis=1).max()) <= 1.0 + 1e-5
+
+
+@given(n=st.integers(4, 32), r_t=st.floats(0.2, 0.95), seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_token_drop_output_shape(n, r_t, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.normal(k1, (2, n, 8))
+    scores = jax.nn.softmax(jax.random.normal(k2, (2, n - 1)), axis=-1)
+    out, idx = token_drop(z, scores, r_t)
+    k = max(1, math.ceil((n - 1) * r_t))
+    assert out.shape == (2, 1 + k + 1, 8)
+    assert idx.shape == (2, k)
+
+
+def test_token_drop_preserves_cls():
+    z = jax.random.normal(jax.random.PRNGKey(0), (3, 10, 4))
+    scores = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (3, 9)))
+    out, _ = token_drop(z, scores, 0.5)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(z[:, 0]))
+
+
+def test_token_drop_keeps_top_scored_tokens_in_order():
+    z = jnp.arange(1 * 6 * 2, dtype=jnp.float32).reshape(1, 6, 2)
+    scores = jnp.asarray([[0.1, 0.5, 0.05, 0.3, 0.05]])
+    out, idx = token_drop(z, scores, 0.4)  # k = ceil(5*0.4) = 2
+    assert idx.tolist() == [[1, 3]]  # descending score order
+    np.testing.assert_allclose(np.asarray(out[0, 1]), np.asarray(z[0, 2]))
+    np.testing.assert_allclose(np.asarray(out[0, 2]), np.asarray(z[0, 4]))
+
+
+def test_fused_token_is_weighted_average_of_dropped():
+    z = jax.random.normal(jax.random.PRNGKey(2), (1, 6, 3))
+    scores = jnp.asarray([[0.4, 0.3, 0.1, 0.15, 0.05]])
+    out, idx = token_drop(z, scores, 0.4)  # keeps tokens 0,1 -> drops 2,3,4
+    dropped = np.asarray(z[0, 3:6])        # token i maps to z[:, i+1]
+    w = np.asarray(scores[0, 2:5])
+    expected = (w[:, None] * dropped).sum(0) / (w.sum() + 1e-6)
+    np.testing.assert_allclose(np.asarray(out[0, -1]), expected, rtol=1e-5)
+
+
+def test_token_drop_permutation_consistency():
+    """Permuting non-CLS tokens permutes which are kept, not their values."""
+    key = jax.random.PRNGKey(3)
+    z = jax.random.normal(key, (1, 8, 4))
+    scores = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(4), (1, 7)))
+    out1, _ = token_drop(z, scores, 0.5)
+    perm = np.asarray([3, 1, 0, 2, 6, 5, 4])
+    z2 = jnp.concatenate([z[:, :1], z[:, 1:][:, perm]], axis=1)
+    s2 = scores[:, perm]
+    out2, _ = token_drop(z2, s2, 0.5)
+    # Same multiset of kept tokens (sorted by score, so same order).
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5)
+
+
+def test_tdm_wrapper_matches_token_drop():
+    attn = _rand_attn(jax.random.PRNGKey(5), 2, 3, 9)
+    z = jax.random.normal(jax.random.PRNGKey(6), (2, 9, 4))
+    out = tdm(z, attn, 0.6)
+    s = token_importance_scores(attn)
+    expected, _ = token_drop(z, s, 0.6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected))
+
+
+def test_tdm_reduces_computation_tokens():
+    attn = _rand_attn(jax.random.PRNGKey(7), 1, 2, 33)
+    z = jax.random.normal(jax.random.PRNGKey(8), (1, 33, 4))
+    out = tdm(z, attn, 0.5)
+    assert out.shape[1] == 1 + math.ceil(32 * 0.5) + 1 == 18

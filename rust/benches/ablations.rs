@@ -1,0 +1,93 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!   A1. load balancing on/off (Section V-D1);
+//!   A2. row streaming vs barrier scheduling;
+//!   A3. TDM placement schedules (paper: encoders 3/7/10);
+//!   A4. block size 16 vs 32 at fixed pruning rates;
+//!   A5. memory overlap (double buffering) on/off;
+//!   A6. SBMM PE utilization vs sparsity skew (Section V-D2).
+
+mod common;
+
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL};
+use vitfpga::sim::{AcceleratorSim, ModelStructure, Mpca};
+
+fn latency(hw: HardwareConfig, setting: &PruningSetting, seed: u64) -> f64 {
+    let st = ModelStructure::synthesize(&DEIT_SMALL, setting, seed);
+    AcceleratorSim::new(hw).model_latency(&st, 1).latency_ms
+}
+
+fn main() {
+    let base_hw = HardwareConfig::u250();
+    let setting = PruningSetting::new(16, 0.5, 0.5);
+
+    println!("A1. load balancing (Section V-D1), b16_rb0.5_rt0.5:");
+    let on = latency(base_hw, &setting, 42);
+    let off = latency(HardwareConfig { load_balance: false, ..base_hw }, &setting, 42);
+    println!(
+        "  balanced {:.3} ms | natural order {:.3} ms | gain {:.1}%",
+        on,
+        off,
+        (off / on - 1.0) * 100.0
+    );
+
+    println!("A2. row streaming vs barrier scheduling (dense baseline):");
+    let dense = PruningSetting::dense(16);
+    let stream = latency(base_hw, &dense, 42);
+    let barrier = latency(HardwareConfig { row_streaming: false, ..base_hw }, &dense, 42);
+    println!(
+        "  streaming {:.3} ms | barrier (Table III ceil) {:.3} ms | gain {:.1}%",
+        stream,
+        barrier,
+        (barrier / stream - 1.0) * 100.0
+    );
+
+    println!("A3. TDM placement (r_t=0.7, r_b=0.7):");
+    for (name, layers) in [
+        ("paper {3,7,10}", vec![2usize, 6, 9]),
+        ("early {1,4,7}", vec![0, 3, 6]),
+        ("late  {6,9,11}", vec![5, 8, 10]),
+        ("single {7}", vec![6]),
+    ] {
+        let s = PruningSetting { tdm_layers: layers, ..PruningSetting::new(16, 0.7, 0.7) };
+        println!("  {:<16} {:.3} ms", name, latency(base_hw, &s, 42));
+    }
+
+    println!("A4. block size at fixed rates:");
+    for b in [16usize, 32] {
+        for (rb, rt) in [(0.5, 0.5), (0.7, 0.9)] {
+            let s = PruningSetting::new(b, rb, rt);
+            println!("  {:<18} {:.3} ms", s.label(), latency(base_hw, &s, 42));
+        }
+    }
+
+    println!("A5. memory overlap (double buffering):");
+    let ov = latency(base_hw, &setting, 42);
+    let seq = latency(HardwareConfig { overlap_mem: false, ..base_hw }, &setting, 42);
+    println!(
+        "  overlapped {:.3} ms | sequential {:.3} ms | gain {:.1}%",
+        ov,
+        seq,
+        (seq / ov - 1.0) * 100.0
+    );
+
+    println!("A6. SBMM PE utilization vs sparsity skew:");
+    let mpca = Mpca::new(base_hw, 16);
+    for (name, pops) in [
+        ("uniform 50%", (0..6).map(|_| vec![12usize; 12]).collect::<Vec<_>>()),
+        ("mild skew", (0..6).map(|h| vec![8 + h; 12]).collect()),
+        ("heavy skew", (0..6)
+            .map(|h| if h == 0 { vec![24; 12] } else { vec![4; 12] })
+            .collect()),
+    ] {
+        println!(
+            "  {:<14} utilization {:.1}%",
+            name,
+            100.0 * mpca.sbmm_utilization(13, &pops)
+        );
+    }
+
+    common::bench("ablation latency eval", 200, || {
+        std::hint::black_box(latency(base_hw, &setting, 42));
+    });
+}

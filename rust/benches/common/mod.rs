@@ -1,0 +1,20 @@
+//! Shared timing helpers for the harness-less benches (criterion is
+//! unavailable offline). Reports min/median over N runs.
+
+use std::time::Instant;
+
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    println!("[bench] {:<44} median {:>9.4} ms   min {:>9.4} ms   ({} iters)",
+             name, median, min, iters);
+}

@@ -1,0 +1,14 @@
+//! Bench: Fig. 10 — throughput of CPU/GPU (batch 8) vs simulated FPGA
+//! (batch 1) across all pruning settings (paper: 3.6x vs CPU, 0.45x vs
+//! GPU on average).
+
+mod common;
+
+use vitfpga::bench_harness;
+
+fn main() {
+    println!("{}", bench_harness::run_fig(10));
+    common::bench("fig10 series generation", 20, || {
+        std::hint::black_box(bench_harness::run_fig(10));
+    });
+}

@@ -1,0 +1,13 @@
+//! Bench: Fig. 9 — batch-1 latency of CPU / GPU / simulated FPGA across
+//! all pruning settings (the paper's 12.8x / 3.2x averaged reductions).
+
+mod common;
+
+use vitfpga::bench_harness;
+
+fn main() {
+    println!("{}", bench_harness::run_fig(9));
+    common::bench("fig9 series generation", 20, || {
+        std::hint::black_box(bench_harness::run_fig(9));
+    });
+}

@@ -1,0 +1,117 @@
+//! Hot-path timing (the L3 perf-pass targets, EXPERIMENTS.md §Perf):
+//!
+//!   H1. block-sparse SpMM (the software mirror of the PE header walk);
+//!   H2. cycle simulator throughput (model_latency calls/sec);
+//!   H3. weights-file parsing;
+//!   H4. PJRT end-to-end inference (tiny + deit-small), if artifacts exist;
+//!   H5. coordinator round-trip overhead vs bare PJRT.
+
+mod common;
+
+use std::path::Path;
+use std::time::Duration;
+
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL};
+use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::formats::BlockSparseMatrix;
+use vitfpga::runtime::{weights, Engine};
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    // H1: SpMM on a DeiT-sized QKV weight (384 x 1152) at 50% blocks.
+    let sp = BlockSparseMatrix::random((384, 1152), 16, 0.5, &mut rng);
+    let x: Vec<f32> = (0..197 * 384).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; 197 * 1152];
+    common::bench("H1 spmm 197x384 @ 50% blocks (qkv)", 200, || {
+        sp.spmm_into(&x, 197, &mut y);
+    });
+    let dense = sp.to_dense();
+    common::bench("H1 dense matmul same shape (reference)", 50, || {
+        // naive dense reference
+        y.fill(0.0);
+        for i in 0..197 {
+            for k in 0..384 {
+                let xv = x[i * 384 + k];
+                for j in 0..1152 {
+                    y[i * 1152 + j] += xv * dense[k * 1152 + j];
+                }
+            }
+        }
+        std::hint::black_box(&y);
+    });
+
+    // H2: simulator throughput.
+    let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 42);
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    common::bench("H2 model_latency (full 12-layer sim)", 500, || {
+        std::hint::black_box(sim.model_latency(&st, 1));
+    });
+
+    // H3: weights parsing.
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let wpath = dir.join("test-tiny_b8_rb0.7_rt0.7_bs1.weights.bin");
+        if wpath.exists() {
+            let bytes = std::fs::read(&wpath).unwrap();
+            common::bench("H3 parse weights (test-tiny, 56 tensors)", 200, || {
+                std::hint::black_box(weights::parse_weights(&bytes).unwrap());
+            });
+        }
+
+        // H4: PJRT inference.
+        let engine = Engine::new(dir).expect("engine");
+        if let Ok(tiny) = engine.load("test-tiny_b8_rb0.7_rt0.7_bs1") {
+            let img: Vec<f32> = (0..tiny.input_elems).map(|_| rng.normal()).collect();
+            common::bench("H4 PJRT infer test-tiny bs1", 100, || {
+                std::hint::black_box(tiny.infer(&img).unwrap());
+            });
+        }
+        if let Ok(small) = engine.load("deit-small_b16_rb0.5_rt0.5_bs1") {
+            let img: Vec<f32> = (0..small.input_elems).map(|_| rng.normal()).collect();
+            common::bench("H4 PJRT infer deit-small rb0.5 bs1", 10, || {
+                std::hint::black_box(small.infer(&img).unwrap());
+            });
+        }
+        if let Ok(base) = engine.load("deit-small_b16_rb1_rt1_bs1") {
+            let img: Vec<f32> = (0..base.input_elems).map(|_| rng.normal()).collect();
+            common::bench("H4 PJRT infer deit-small dense bs1", 10, || {
+                std::hint::black_box(base.infer(&img).unwrap());
+            });
+        }
+
+        // H6: functional datapath twin (block-sparse + bitonic TDHM).
+        if let Some(entry) = engine.manifest.find_matching("deit-small_b16_rb0.5_rt0.5_bs1") {
+            use vitfpga::funcsim::{FuncSim, Precision};
+            let fs = FuncSim::load(
+                &dir.join(&entry.weights_file),
+                &dir.join(&entry.structure_file),
+                (224, 16, 3),
+                Precision::F32,
+            )
+            .expect("funcsim");
+            let img: Vec<f32> = (0..224 * 224 * 3).map(|_| rng.normal()).collect();
+            common::bench("H6 funcsim deit-small rb0.5 (datapath twin)", 5, || {
+                std::hint::black_box(fs.forward(&img).unwrap());
+            });
+        }
+
+        // H5: coordinator overhead.
+        if let Ok(coord) = Coordinator::start(
+            dir,
+            "test-tiny_b8_rb0.7_rt0.7_bs1",
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+        ) {
+            let img: Vec<f32> = (0..coord.input_elems_per_image)
+                .map(|_| rng.normal())
+                .collect();
+            common::bench("H5 coordinator round-trip (bs1)", 100, || {
+                std::hint::black_box(coord.infer(img.clone()).unwrap());
+            });
+        }
+    } else {
+        println!("[bench] artifacts/ missing — skipping H3-H5 (run `make artifacts`)");
+    }
+}

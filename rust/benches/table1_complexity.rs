@@ -1,0 +1,23 @@
+//! Bench: regenerate Table I (per-op complexity of an unpruned encoder)
+//! and time the complexity calculator.
+
+mod common;
+
+use vitfpga::bench_harness;
+use vitfpga::complexity::{dense_encoder, model_complexity};
+use vitfpga::config::{PruningSetting, DEIT_SMALL};
+
+fn main() {
+    println!("{}", bench_harness::run_table(1));
+    common::bench("dense_encoder (Table I row set)", 1000, || {
+        std::hint::black_box(dense_encoder(&DEIT_SMALL, 1, 197));
+    });
+    common::bench("model_complexity (12 layers)", 1000, || {
+        std::hint::black_box(model_complexity(
+            &DEIT_SMALL,
+            &PruningSetting::dense(16),
+            1,
+            None,
+        ));
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Table II (pruned-encoder complexity) across the
+//! Table VI settings and time the pruned-model calculator.
+
+mod common;
+
+use vitfpga::bench_harness;
+use vitfpga::complexity::{model_complexity, SparsityParams};
+use vitfpga::config::{table6_settings, DEIT_SMALL};
+
+fn main() {
+    println!("{}", bench_harness::run_table(2));
+    common::bench("pruned model_complexity x 14 settings", 200, || {
+        for s in table6_settings() {
+            let sp = vec![SparsityParams::nominal(&DEIT_SMALL, &s); 12];
+            std::hint::black_box(model_complexity(&DEIT_SMALL, &s, 1, Some(&sp)));
+        }
+    });
+}

@@ -1,0 +1,30 @@
+//! Bench: Table III — analytic SBMM/DBMM/DHBMM cycle model vs the
+//! loop-level MPCA simulation, plus a phi sweep showing how cycles scale
+//! with block sparsity, and timing of both models.
+
+mod common;
+
+use vitfpga::bench_harness;
+use vitfpga::config::HardwareConfig;
+use vitfpga::sim::{perf_model, Mpca};
+
+fn main() {
+    println!("{}", bench_harness::run_table(3));
+
+    // phi sweep: the analytic model's linear scaling in retained blocks.
+    let hw = HardwareConfig::u250();
+    println!("phi sweep (SBMM 197x384 -> per-head 192, b=16):");
+    for phi in [1.0, 0.9, 0.7, 0.5, 0.3] {
+        let c = perf_model::sbmm_cycles(&hw, 6, 197, 384, 192, phi, 16);
+        println!("  phi={:.1} -> {:>8} cycles", phi, c);
+    }
+
+    let mpca = Mpca::new(hw, 16);
+    let pops: Vec<Vec<usize>> = (0..6).map(|_| vec![12usize; 12]).collect();
+    common::bench("loop-level SBMM sim (6 heads, half dense)", 2000, || {
+        std::hint::black_box(mpca.sbmm(13, &pops));
+    });
+    common::bench("analytic Table III formula", 2000, || {
+        std::hint::black_box(perf_model::sbmm_cycles(&hw, 6, 197, 384, 192, 0.5, 16));
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench: Table IV — resource utilization model (DSP/LUT/buffers) and
+//! its scaling across parallelism shapes.
+
+mod common;
+
+use vitfpga::bench_harness;
+use vitfpga::config::HardwareConfig;
+use vitfpga::sim::resources::{gamma_for, resource_report};
+
+fn main() {
+    println!("{}", bench_harness::run_table(4));
+
+    println!("resource scaling across (p_h, p_t):");
+    for p_h in [2usize, 4, 8] {
+        for p_t in [6usize, 12, 24] {
+            let hw = HardwareConfig { p_h, p_t, ..HardwareConfig::u250() };
+            let r = resource_report(&hw, 16, gamma_for(384, 1536, 16));
+            println!(
+                "  p_h={} p_t={} -> DSP {:>6} LUT {:>7} buffers {:>9} B",
+                p_h, p_t, r.dsp, r.lut, r.buffer_bytes
+            );
+        }
+    }
+
+    let hw = HardwareConfig::u250();
+    common::bench("resource_report", 10_000, || {
+        std::hint::black_box(resource_report(&hw, 16, 96));
+    });
+}

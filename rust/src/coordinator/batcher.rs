@@ -1,0 +1,154 @@
+//! Dynamic batching policy.
+//!
+//! The artifact's batch dimension is static (AOT shapes), so the batcher
+//! collects up to `max_batch` requests, waiting at most `max_wait` after
+//! the first arrival, then pads the final partial batch by replicating
+//! the last image (padded outputs are dropped). This is the standard
+//! serving trade-off: larger batches raise throughput, the wait bound
+//! caps the latency cost.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates requests and decides when a batch is ready.
+#[derive(Debug)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<InferenceRequest>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: VecDeque::new(), oldest: None }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be dispatched now?
+    pub fn ready(&self) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.oldest {
+            Some(t) => !self.queue.is_empty() && t.elapsed() >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the wait bound expires (drives the engine's poll).
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest
+            .map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
+    }
+
+    /// Take up to max_batch requests.
+    pub fn take_batch(&mut self) -> Vec<InferenceRequest> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<_> = self.queue.drain(..n).collect();
+        self.oldest = if self.queue.is_empty() { None } else { Some(Instant::now()) };
+        batch
+    }
+}
+
+/// Pad a batch of images to exactly `batch` rows of `elems` each by
+/// replicating the last image; returns the flat buffer.
+pub fn pad_batch(images: &[&[f32]], batch: usize, elems: usize) -> Vec<f32> {
+    assert!(!images.is_empty() && images.len() <= batch);
+    let mut flat = Vec::with_capacity(batch * elems);
+    for img in images {
+        assert_eq!(img.len(), elems);
+        flat.extend_from_slice(img);
+    }
+    let last = images[images.len() - 1];
+    for _ in images.len()..batch {
+        flat.extend_from_slice(last);
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest { id, image: vec![0.0; 4], submitted: Instant::now() }
+    }
+
+    #[test]
+    fn dispatches_on_full_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        b.push(req(1));
+        assert!(!b.ready());
+        b.push(req(2));
+        assert!(b.ready());
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_timeout() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(req(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready());
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn take_batch_respects_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn pad_batch_replicates_last() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let flat = pad_batch(&[&a, &b], 4, 2);
+        assert_eq!(flat, vec![1., 2., 3., 4., 3., 4., 3., 4.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_batch_rejects_wrong_elems() {
+        let a = [1.0f32];
+        pad_batch(&[&a], 2, 2);
+    }
+}

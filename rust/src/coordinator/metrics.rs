@@ -1,0 +1,125 @@
+//! Serving metrics: latency percentiles, throughput, batch occupancy.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    latencies_us: Vec<u64>,
+    batches: u64,
+    batch_occupancy_sum: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsReport {
+    pub requests: usize,
+    pub batches: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub throughput_rps: f64,
+    pub mean_batch_occupancy: f64,
+    pub elapsed_s: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            start: Instant::now(),
+            latencies_us: Vec::new(),
+            batches: 0,
+            batch_occupancy_sum: 0,
+        }
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&mut self, occupancy: usize) {
+        self.batches += 1;
+        self.batch_occupancy_sum += occupancy as u64;
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx] as f64 / 1e3
+        };
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let n = sorted.len();
+        MetricsReport {
+            requests: n,
+            batches: self.batches,
+            mean_ms: if n == 0 { 0.0 } else {
+                sorted.iter().sum::<u64>() as f64 / n as f64 / 1e3
+            },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: sorted.last().copied().unwrap_or(0) as f64 / 1e3,
+            throughput_rps: if elapsed > 0.0 { n as f64 / elapsed } else { 0.0 },
+            mean_batch_occupancy: if self.batches == 0 { 0.0 } else {
+                self.batch_occupancy_sum as f64 / self.batches as f64
+            },
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} batches={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms \
+             max={:.3}ms throughput={:.1} req/s occupancy={:.2}",
+            self.requests, self.batches, self.mean_ms, self.p50_ms, self.p95_ms,
+            self.p99_ms, self.max_ms, self.throughput_rps, self.mean_batch_occupancy
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_millis(i));
+        }
+        let r = m.report();
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms && r.p99_ms <= r.max_ms);
+        assert_eq!(r.requests, 100);
+        assert!((r.p50_ms - 50.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let r = Metrics::new().report();
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn occupancy_mean() {
+        let mut m = Metrics::new();
+        m.record_batch(1);
+        m.record_batch(3);
+        assert!((m.report().mean_batch_occupancy - 2.0).abs() < 1e-9);
+    }
+}

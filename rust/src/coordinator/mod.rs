@@ -1,0 +1,228 @@
+//! Serving coordinator (L3): request router + dynamic batcher + engine
+//! actor over the PJRT runtime. Python never runs here — the artifacts
+//! are self-contained after `make artifacts`.
+//!
+//! Architecture (vLLM-router-like, scaled to one device):
+//!
+//!   clients -> submit() -> mpsc queue -> engine thread
+//!                                         |  Batcher (size/timeout)
+//!                                         |  pad -> PJRT execute
+//!                                         -> per-request responders
+//!
+//! The PJRT executable lives on a dedicated engine thread (actor
+//! pattern), which also sidesteps any Send/Sync questions about the
+//! underlying C++ handles.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsReport};
+pub use request::{InferenceRequest, InferenceResponse};
+
+use crate::runtime::Engine;
+
+enum Msg {
+    Infer(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>),
+    Report(mpsc::Sender<MetricsReport>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator; cloneable across client threads.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    next_id: AtomicU64,
+    engine_thread: Option<JoinHandle<()>>,
+    pub variant_name: String,
+    pub input_elems_per_image: usize,
+    pub num_classes: usize,
+}
+
+impl Coordinator {
+    /// Start the engine thread serving `variant` from `artifacts_dir`.
+    ///
+    /// PJRT handles are not Send, so the Engine and the compiled variant
+    /// are constructed *inside* the engine thread; the init outcome comes
+    /// back over a one-shot channel.
+    pub fn start(artifacts_dir: &Path, variant: &str, policy: BatchPolicy) -> Result<Coordinator> {
+        let dir = artifacts_dir.to_path_buf();
+        let variant = variant.to_string();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(String, usize, usize, usize)>>();
+
+        let engine_thread = std::thread::Builder::new()
+            .name("vitfpga-engine".into())
+            .spawn(move || {
+                let loaded = match Engine::new(&dir).and_then(|e| e.load(&variant)) {
+                    Ok(l) => {
+                        let batch = l.batch();
+                        let _ = init_tx.send(Ok((
+                            l.entry.name.clone(),
+                            l.input_elems / batch,
+                            l.num_classes(),
+                            batch,
+                        )));
+                        l
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let policy = BatchPolicy {
+                    max_batch: policy.max_batch.min(loaded.batch()),
+                    ..policy
+                };
+                let per_image = loaded.input_elems / loaded.batch();
+                engine_loop(loaded, policy, per_image, rx)
+            })
+            .context("spawning engine thread")?;
+
+        let (name, per_image, num_classes, _batch) = init_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during init"))??;
+
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            engine_thread: Some(engine_thread),
+            variant_name: name,
+            input_elems_per_image: per_image,
+            num_classes,
+        })
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        if image.len() != self.input_elems_per_image {
+            return Err(anyhow!(
+                "expected {} f32s per image, got {}",
+                self.input_elems_per_image,
+                image.len()
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(
+                InferenceRequest { id, image, submitted: Instant::now() },
+                rtx,
+            ))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking single inference.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
+        self.submit(image)?
+            .recv()
+            .map_err(|_| anyhow!("engine dropped response"))?
+    }
+
+    pub fn metrics(&self) -> Result<MetricsReport> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Report(rtx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped report"))
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.engine_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_loop(
+    loaded: crate::runtime::LoadedVariant,
+    policy: BatchPolicy,
+    per_image: usize,
+    rx: mpsc::Receiver<Msg>,
+) {
+    let mut batcher = Batcher::new(policy);
+    let mut metrics = Metrics::new();
+    let mut pending: Vec<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)> =
+        Vec::new();
+    let model_batch = loaded.batch();
+    let classes = loaded.num_classes();
+
+    loop {
+        // Wait for work: block if idle, poll with deadline if batching.
+        let msg = if batcher.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return,
+            }
+        } else {
+            let deadline = batcher.time_to_deadline().unwrap_or(Duration::ZERO);
+            match rx.recv_timeout(deadline) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+
+        match msg {
+            Some(Msg::Infer(req, responder)) => {
+                batcher.push(req.clone());
+                pending.push((req, responder));
+            }
+            Some(Msg::Report(tx)) => {
+                let _ = tx.send(metrics.report());
+                continue;
+            }
+            Some(Msg::Shutdown) => return,
+            None => {} // timeout: fall through to dispatch check
+        }
+
+        while batcher.ready() {
+            let batch_reqs = batcher.take_batch();
+            let n = batch_reqs.len();
+            let images: Vec<&[f32]> = batch_reqs.iter().map(|r| r.image.as_slice()).collect();
+            let flat = batcher::pad_batch(&images, model_batch, per_image);
+            let result = loaded.infer(&flat);
+            metrics.record_batch(n);
+            match result {
+                Ok(logits) => {
+                    for (i, req) in batch_reqs.iter().enumerate() {
+                        let slice = logits[i * classes..(i + 1) * classes].to_vec();
+                        let resp = InferenceResponse::from_logits(
+                            req.id, slice, req.submitted, n);
+                        metrics.record(resp.latency);
+                        respond(&mut pending, req.id, Ok(resp));
+                    }
+                }
+                Err(e) => {
+                    for req in &batch_reqs {
+                        respond(&mut pending, req.id,
+                                Err(anyhow!("inference failed: {}", e)));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn respond(
+    pending: &mut Vec<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>,
+    id: u64,
+    resp: Result<InferenceResponse>,
+) {
+    if let Some(pos) = pending.iter().position(|(r, _)| r.id == id) {
+        let (_, tx) = pending.swap_remove(pos);
+        let _ = tx.send(resp);
+    }
+}

@@ -1,0 +1,41 @@
+//! Request/response types of the serving coordinator.
+
+use std::time::{Duration, Instant};
+
+/// One inference request: a single image (H*W*C f32, NHWC row-major).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted_class: usize,
+    /// Queue + batch + execute, measured at the coordinator.
+    pub latency: Duration,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+impl InferenceResponse {
+    pub fn from_logits(id: u64, logits: Vec<f32>, submitted: Instant,
+                       batch_size: usize) -> Self {
+        let predicted_class = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        InferenceResponse {
+            id,
+            logits,
+            predicted_class,
+            latency: submitted.elapsed(),
+            batch_size,
+        }
+    }
+}

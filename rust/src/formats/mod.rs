@@ -1,0 +1,8 @@
+//! Data formats of the accelerator (Section V-A): block-sparse column-major
+//! weight layout with per-column headers, and the int16 datapath model.
+
+pub mod block_sparse;
+pub mod quant;
+
+pub use block_sparse::{BlockColumn, BlockSparseMatrix};
+pub use quant::{Int16Quant, QuantError};

@@ -1,0 +1,103 @@
+//! int16 quantization model (Section VI: "We use the int16 data format").
+//!
+//! The functional PJRT path runs f32; the accelerator datapath is int16
+//! with per-tensor symmetric scaling. This module provides the
+//! quantize/dequantize pair and error statistics so the accuracy impact
+//! of the datapath width can be characterized in tests and EXPERIMENTS.md.
+
+/// Per-tensor symmetric int16 quantizer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Int16Quant {
+    pub scale: f32,
+}
+
+impl Int16Quant {
+    /// Fit the scale to the tensor's max magnitude.
+    pub fn fit(data: &[f32]) -> Self {
+        let max = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if max == 0.0 { 1.0 } else { max / i16::MAX as f32 };
+        Int16Quant { scale }
+    }
+
+    pub fn quantize(&self, x: f32) -> i16 {
+        let q = (x / self.scale).round();
+        q.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+    }
+
+    pub fn dequantize(&self, q: i16) -> f32 {
+        q as f32 * self.scale
+    }
+
+    pub fn quantize_vec(&self, data: &[f32]) -> Vec<i16> {
+        data.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    pub fn dequantize_vec(&self, data: &[i16]) -> Vec<f32> {
+        data.iter().map(|&q| self.dequantize(q)).collect()
+    }
+}
+
+/// Quantization error statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantError {
+    pub max_abs: f32,
+    pub mean_abs: f32,
+    /// Relative to the tensor's max magnitude.
+    pub max_rel: f32,
+}
+
+pub fn roundtrip_error(data: &[f32]) -> QuantError {
+    let q = Int16Quant::fit(data);
+    let max_mag = data.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let mut max_abs = 0.0f32;
+    let mut sum = 0.0f64;
+    for &x in data {
+        let e = (q.dequantize(q.quantize(x)) - x).abs();
+        max_abs = max_abs.max(e);
+        sum += e as f64;
+    }
+    QuantError {
+        max_abs,
+        mean_abs: (sum / data.len().max(1) as f64) as f32,
+        max_rel: max_abs / max_mag,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_tensor_safe() {
+        let q = Int16Quant::fit(&[0.0, 0.0]);
+        assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+    }
+
+    #[test]
+    fn roundtrip_error_small_for_int16() {
+        let mut rng = Rng::new(0);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let err = roundtrip_error(&data);
+        // int16 gives ~90 dB SNR; relative error must be < 2^-15 * ~2.
+        assert!(err.max_rel < 1.0 / 16384.0, "{:?}", err);
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let q = Int16Quant { scale: 1.0 };
+        assert_eq!(q.quantize(1e9), i16::MAX);
+        assert_eq!(q.quantize(-1e9), i16::MIN);
+    }
+
+    #[test]
+    fn vec_roundtrip_len() {
+        let data = vec![0.5, -0.25, 0.125];
+        let q = Int16Quant::fit(&data);
+        let back = q.dequantize_vec(&q.quantize_vec(&data));
+        assert_eq!(back.len(), 3);
+        for (a, b) in back.iter().zip(&data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

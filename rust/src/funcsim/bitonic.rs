@@ -1,0 +1,173 @@
+//! Bitonic sorting network — the TDHM's comparator network, functional.
+//!
+//! The cycle model lives in sim::tdhm; this is the *datapath*: an actual
+//! bitonic network over (score, id_old) pairs producing the
+//! (id_old, id_new, flag) routing triples the index shuffle network
+//! consumes (Section V-C3). Implemented as the canonical stage/substage
+//! comparator schedule so the stage count matches
+//! `TokenDropModule::bitonic_stages` exactly — property-tested against
+//! std sort.
+
+/// One routing entry of the shuffle network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Route {
+    /// Row index in the input token matrix.
+    pub id_old: usize,
+    /// Row index in the score-sorted output token matrix.
+    pub id_new: usize,
+    /// True if the token is pruned (not in the top-k).
+    pub pruned: bool,
+}
+
+/// Sort scores descending with a bitonic network; returns the sorted
+/// (score, id_old) pairs. `scores.len()` is padded to a power of two
+/// with -inf sentinels internally.
+pub fn bitonic_sort_desc(scores: &[f32]) -> Vec<(f32, usize)> {
+    let n = scores.len();
+    let p = n.next_power_of_two().max(1);
+    let mut keys: Vec<(f32, usize)> = scores
+        .iter()
+        .copied()
+        .enumerate()
+        .map(|(i, s)| (s, i))
+        .collect();
+    keys.resize(p, (f32::NEG_INFINITY, usize::MAX));
+
+    // Canonical bitonic network: k = subsequence size, j = comparator
+    // distance. Stage count = log2(p) * (log2(p)+1) / 2.
+    let mut stages = 0u64;
+    let mut k = 2;
+    while k <= p {
+        let mut j = k / 2;
+        while j > 0 {
+            stages += 1;
+            for i in 0..p {
+                let l = i ^ j;
+                if l > i {
+                    let ascending = (i & k) != 0; // descending overall
+                    let a = keys[i];
+                    let b = keys[l];
+                    // descending: bigger first unless this box ascends
+                    let swap = if ascending { a.0 > b.0 } else { a.0 < b.0 };
+                    if swap {
+                        keys[i] = b;
+                        keys[l] = a;
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    debug_assert_eq!(stages, expected_stages(n));
+    keys.truncate(n);
+    keys
+}
+
+/// Stage count the network executes for n keys (matches sim::tdhm).
+pub fn expected_stages(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let k = n.next_power_of_two().trailing_zeros() as u64;
+    k * (k + 1) / 2
+}
+
+/// Full TDHM routing: sort by score descending, keep the top `k_keep`,
+/// emit (id_old, id_new, flag) for every input token.
+pub fn routing(scores: &[f32], k_keep: usize) -> Vec<Route> {
+    let sorted = bitonic_sort_desc(scores);
+    let mut routes: Vec<Route> = vec![
+        Route { id_old: 0, id_new: 0, pruned: true };
+        scores.len()
+    ];
+    for (new_idx, &(_, old_idx)) in sorted.iter().enumerate() {
+        routes[old_idx] = Route {
+            id_old: old_idx,
+            id_new: new_idx,
+            pruned: new_idx >= k_keep,
+        };
+    }
+    routes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sorts_descending_matches_std() {
+        forall(
+            21,
+            200,
+            |r: &mut Rng| {
+                let n = r.range(1, 300);
+                (0..n).map(|_| r.normal()).collect::<Vec<f32>>()
+            },
+            |scores| {
+                let got = bitonic_sort_desc(scores);
+                let mut want: Vec<f32> = scores.clone();
+                want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                for (g, w) in got.iter().zip(&want) {
+                    if g.0 != *w {
+                        return Err(format!("{} != {}", g.0, w));
+                    }
+                }
+                // indices must be a permutation
+                let mut ids: Vec<usize> = got.iter().map(|g| g.1).collect();
+                ids.sort_unstable();
+                if ids != (0..scores.len()).collect::<Vec<_>>() {
+                    return Err("not a permutation".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn routing_flags_topk() {
+        let scores = vec![0.1, 0.9, 0.5, 0.3];
+        let routes = routing(&scores, 2);
+        // top-2 by score: ids 1 (0.9) and 2 (0.5)
+        assert!(!routes[1].pruned && routes[1].id_new == 0);
+        assert!(!routes[2].pruned && routes[2].id_new == 1);
+        assert!(routes[0].pruned && routes[3].pruned);
+    }
+
+    #[test]
+    fn routing_is_permutation_property() {
+        forall(
+            22,
+            100,
+            |r: &mut Rng| {
+                let n = r.range(1, 200);
+                let k = r.range(1, n);
+                let s: Vec<f32> = (0..n).map(|_| r.f32()).collect();
+                (s, k)
+            },
+            |(s, k)| {
+                let routes = routing(s, *k);
+                let kept = routes.iter().filter(|r| !r.pruned).count();
+                if kept != (*k).min(s.len()) {
+                    return Err(format!("kept {} != k {}", kept, k));
+                }
+                let mut news: Vec<usize> = routes.iter().map(|r| r.id_new).collect();
+                news.sort_unstable();
+                if news != (0..s.len()).collect::<Vec<_>>() {
+                    return Err("id_new not a permutation".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn stage_count_matches_cycle_model() {
+        use crate::sim::tdhm::TokenDropModule;
+        for n in [1usize, 2, 5, 17, 196, 256] {
+            assert_eq!(expected_stages(n), TokenDropModule::bitonic_stages(n), "n={}", n);
+        }
+    }
+}

@@ -1,0 +1,513 @@
+//! Functional model of the accelerator datapath.
+//!
+//! Executes the pruned ViT *the way the hardware does*: weights in the
+//! Fig. 5 block-sparse layout driving SpMM header walks, the TDHM's
+//! bitonic-sort routing for token dropping, dense narrow matmuls for the
+//! neuron-pruned MLP, and (optionally) the int16 quantized datapath.
+//!
+//! This is the software twin the hardware team would diff RTL against:
+//! its logits are cross-checked against the PJRT-executed HLO artifact
+//! in rust/tests/funcsim.rs (f32 mode ≈ 1e-3; int16 mode characterizes
+//! the Section VI datapath precision).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::{BlockSparseMatrix, Int16Quant};
+use crate::funcsim::bitonic;
+use crate::runtime::weights::{read_weights, Tensor};
+use crate::sim::structure::ModelStructure;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Precision {
+    F32,
+    /// Quantize weights and inter-stage activations to int16 (per-tensor
+    /// symmetric scaling) — the paper's datapath width.
+    Int16,
+}
+
+#[derive(Debug)]
+struct EncoderWeights {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    w_qkv: BlockSparseMatrix,
+    b_qkv: Vec<f32>,
+    w_proj: BlockSparseMatrix,
+    b_proj: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// Dense (D x D_mlp) with pruned columns zero; kept neuron indices.
+    w_int: Vec<f32>,
+    b_int: Vec<f32>,
+    w_out: Vec<f32>,
+    b_out: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct FuncSim {
+    pub st: ModelStructure,
+    pub precision: Precision,
+    // embed
+    w_embed: Vec<f32>,
+    b_embed: Vec<f32>,
+    cls: Vec<f32>,
+    pos: Vec<f32>,
+    encoders: Vec<EncoderWeights>,
+    // head
+    ln_g: Vec<f32>,
+    ln_b: Vec<f32>,
+    w_head: Vec<f32>,
+    b_head: Vec<f32>,
+    // geometry
+    image_size: usize,
+    patch_size: usize,
+    in_channels: usize,
+}
+
+fn quantize_roundtrip(data: &mut [f32]) {
+    let q = Int16Quant::fit(data);
+    for x in data.iter_mut() {
+        *x = q.dequantize(q.quantize(*x));
+    }
+}
+
+/// Detect the b x b block mask of a masked-dense weight (block present
+/// iff any element is nonzero) — the offline packing step of Section V-A.
+fn detect_block_mask(w: &[f32], shape: (usize, usize), b: usize) -> (Vec<bool>, usize) {
+    let (m, n) = shape;
+    let rb = m.div_ceil(b);
+    let cb = n.div_ceil(b);
+    let mut mask = vec![false; rb * cb];
+    for i in 0..m {
+        for j in 0..n {
+            if w[i * n + j] != 0.0 {
+                mask[(i / b) * cb + (j / b)] = true;
+            }
+        }
+    }
+    (mask, cb)
+}
+
+fn tensor<'a>(ts: &'a [Tensor], idx: usize, want: &str) -> Result<&'a Tensor> {
+    let t = ts.get(idx).with_context(|| format!("missing tensor {}", idx))?;
+    if !t.name.ends_with(want) {
+        bail!("tensor {} is '{}', expected *{}", idx, t.name, want);
+    }
+    Ok(t)
+}
+
+impl FuncSim {
+    /// Build from an artifact pair (weights + structure). `image_geom`
+    /// is (image_size, patch_size, in_channels).
+    pub fn load(weights_path: &Path, structure_path: &Path,
+                image_geom: (usize, usize, usize),
+                precision: Precision) -> Result<FuncSim> {
+        let ts = read_weights(weights_path)?;
+        let st = ModelStructure::load(structure_path)?;
+        Self::from_tensors(&ts, st, image_geom, precision)
+    }
+
+    pub fn from_tensors(ts: &[Tensor], st: ModelStructure,
+                        image_geom: (usize, usize, usize),
+                        precision: Precision) -> Result<FuncSim> {
+        let d = st.dims.dim;
+        let qkv_dim = st.dims.num_heads * st.dims.head_dim;
+        let b = st.block_size;
+        let maybe_quant = |mut v: Vec<f32>| -> Vec<f32> {
+            if precision == Precision::Int16 {
+                quantize_roundtrip(&mut v);
+            }
+            v
+        };
+
+        let mut idx = 0;
+        let mut next = |want: &str| -> Result<Vec<f32>> {
+            let t = tensor(ts, idx, want)?;
+            idx += 1;
+            Ok(t.data.clone())
+        };
+
+        let w_embed = maybe_quant(next("w_embed")?);
+        let b_embed = next("b_embed")?;
+        let cls = next("cls")?;
+        let pos = next("pos")?;
+
+        let mut encoders = Vec::with_capacity(st.dims.num_layers);
+        for _ in 0..st.dims.num_layers {
+            let ln1_g = next("ln1_g")?;
+            let ln1_b = next("ln1_b")?;
+            let w_qkv_dense = maybe_quant(next("w_qkv")?);
+            let b_qkv = next("b_qkv")?;
+            let w_proj_dense = maybe_quant(next("w_proj")?);
+            let b_proj = next("b_proj")?;
+            let ln2_g = next("ln2_g")?;
+            let ln2_b = next("ln2_b")?;
+            let w_int = maybe_quant(next("w_int")?);
+            let b_int = next("b_int")?;
+            let w_out = maybe_quant(next("w_out")?);
+            let b_out = next("b_out")?;
+
+            let (mask_qkv, cb_qkv) = detect_block_mask(&w_qkv_dense, (d, 3 * qkv_dim), b);
+            let (mask_proj, cb_proj) = detect_block_mask(&w_proj_dense, (qkv_dim, d), b);
+            encoders.push(EncoderWeights {
+                ln1_g,
+                ln1_b,
+                w_qkv: BlockSparseMatrix::from_dense(
+                    &w_qkv_dense, (d, 3 * qkv_dim), b, &mask_qkv, cb_qkv),
+                b_qkv,
+                w_proj: BlockSparseMatrix::from_dense(
+                    &w_proj_dense, (qkv_dim, d), b, &mask_proj, cb_proj),
+                b_proj,
+                ln2_g,
+                ln2_b,
+                w_int,
+                b_int,
+                w_out,
+                b_out,
+            });
+        }
+        let ln_g = next("ln_g")?;
+        let ln_b = next("ln_b")?;
+        let w_head = maybe_quant(next("w_head")?);
+        let b_head = next("b_head")?;
+
+        Ok(FuncSim {
+            st,
+            precision,
+            w_embed,
+            b_embed,
+            cls,
+            pos,
+            encoders,
+            ln_g,
+            ln_b,
+            w_head,
+            b_head,
+            image_size: image_geom.0,
+            patch_size: image_geom.1,
+            in_channels: image_geom.2,
+        })
+    }
+
+    fn maybe_quant_act(&self, x: &mut [f32]) {
+        if self.precision == Precision::Int16 {
+            quantize_roundtrip(x);
+        }
+    }
+
+    /// Forward one image (H*W*C f32, NHWC) -> logits.
+    pub fn forward(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let d = self.st.dims.dim;
+        let expect = self.image_size * self.image_size * self.in_channels;
+        if image.len() != expect {
+            bail!("image has {} f32s, expected {}", image.len(), expect);
+        }
+
+        // Patchify + embed + CLS + positions.
+        let patches = self.patchify(image);
+        let n_patches = self.st.dims.num_tokens - 1;
+        let pd = self.st.dims.patch_dim;
+        let mut z = vec![0.0f32; (n_patches + 1) * d];
+        z[..d].copy_from_slice(&self.cls);
+        matmul_into(&patches, &self.w_embed, n_patches, pd, d, &mut z[d..]);
+        for t in 1..=n_patches {
+            for j in 0..d {
+                z[t * d + j] += self.b_embed[j];
+            }
+        }
+        for (zi, pi) in z.iter_mut().zip(self.pos.iter()) {
+            *zi += pi;
+        }
+
+        // Encoders.
+        let mut n = n_patches + 1;
+        for (l, enc) in self.encoders.iter().enumerate() {
+            let has_tdm = self.st.tdm_layers.contains(&l) && self.st.r_t < 1.0;
+            z = self.encoder(&z, n, enc, has_tdm)?;
+            if has_tdm {
+                n = self.st.setting().tokens_after_tdm(n);
+            }
+            debug_assert_eq!(z.len(), n * d);
+        }
+
+        // Head on the CLS token.
+        let mut cls_tok = z[..d].to_vec();
+        layer_norm(&mut cls_tok, &self.ln_g, &self.ln_b, d);
+        let classes = self.st.dims.num_classes;
+        let mut logits = vec![0.0f32; classes];
+        matmul_into(&cls_tok, &self.w_head, 1, d, classes, &mut logits);
+        for (o, b) in logits.iter_mut().zip(self.b_head.iter()) {
+            *o += b;
+        }
+        Ok(logits)
+    }
+
+    fn patchify(&self, image: &[f32]) -> Vec<f32> {
+        let p = self.patch_size;
+        let c = self.in_channels;
+        let side = self.image_size / p;
+        let mut out = vec![0.0f32; side * side * p * p * c];
+        let row = self.image_size * c;
+        for ph in 0..side {
+            for pw in 0..side {
+                let patch = (ph * side + pw) * p * p * c;
+                for i in 0..p {
+                    for j in 0..p {
+                        for ch in 0..c {
+                            out[patch + (i * p + j) * c + ch] =
+                                image[(ph * p + i) * row + (pw * p + j) * c + ch];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn encoder(&self, z: &[f32], n: usize, w: &EncoderWeights,
+               has_tdm: bool) -> Result<Vec<f32>> {
+        let d = self.st.dims.dim;
+        let nh = self.st.dims.num_heads;
+        let hd = self.st.dims.head_dim;
+        let qkv_dim = nh * hd;
+
+        // LN1 -> QKV via SpMM (stage i).
+        let mut zn = z.to_vec();
+        for t in 0..n {
+            layer_norm(&mut zn[t * d..(t + 1) * d], &w.ln1_g, &w.ln1_b, d);
+        }
+        let mut qkv = w.w_qkv.spmm(&zn, n);
+        for t in 0..n {
+            for j in 0..3 * qkv_dim {
+                qkv[t * 3 * qkv_dim + j] += w.b_qkv[j];
+            }
+        }
+        self_maybe_quant(self, &mut qkv);
+
+        // Per-head attention (stages ii-iii) + CLS row capture for TDM.
+        let mut sa = vec![0.0f32; n * qkv_dim];
+        let mut cls_attn_mean = vec![0.0f32; n];
+        let scale = 1.0 / (hd as f32).sqrt();
+        let stride = 3 * qkv_dim;
+        for h in 0..nh {
+            let qo = h * hd;
+            let ko = qkv_dim + h * hd;
+            let vo = 2 * qkv_dim + h * hd;
+            // logits row by row with streaming softmax.
+            let mut attn_row = vec![0.0f32; n];
+            for i in 0..n {
+                let qrow = &qkv[i * stride + qo..i * stride + qo + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for jt in 0..n {
+                    let krow = &qkv[jt * stride + ko..jt * stride + ko + hd];
+                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    attn_row[jt] = dot * scale;
+                    maxv = maxv.max(attn_row[jt]);
+                }
+                let mut denom = 0.0f32;
+                for a in attn_row.iter_mut() {
+                    *a = (*a - maxv).exp();
+                    denom += *a;
+                }
+                let inv = 1.0 / denom;
+                for a in attn_row.iter_mut() {
+                    *a *= inv;
+                }
+                if i == 0 {
+                    for jt in 0..n {
+                        cls_attn_mean[jt] += attn_row[jt] / nh as f32;
+                    }
+                }
+                // sa[i, head h] = attn_row @ V_h
+                let out = &mut sa[i * qkv_dim + h * hd..i * qkv_dim + (h + 1) * hd];
+                for jt in 0..n {
+                    let a = attn_row[jt];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let vrow = &qkv[jt * stride + vo..jt * stride + vo + hd];
+                    for (o, v) in out.iter_mut().zip(vrow) {
+                        *o += a * v;
+                    }
+                }
+            }
+        }
+        self_maybe_quant(self, &mut sa);
+
+        // Projection via SpMM (stage iv) + residual.
+        let mut zp = w.w_proj.spmm(&sa, n);
+        for t in 0..n {
+            for j in 0..d {
+                zp[t * d + j] += w.b_proj[j] + z[t * d + j];
+            }
+        }
+
+        // TDM between MSA and MLP: bitonic routing over non-CLS scores.
+        let zcur = if has_tdm {
+            let scores = &cls_attn_mean[1..n];
+            let k = (((n - 1) as f64) * self.st.r_t).ceil().max(1.0) as usize;
+            let routes = bitonic::routing(scores, k);
+            let n_out = 1 + k + 1;
+            let mut out = vec![0.0f32; n_out * d];
+            out[..d].copy_from_slice(&zp[..d]); // CLS always kept
+            let mut fused = vec![0.0f32; d];
+            let mut wsum = 0.0f32;
+            for r in &routes {
+                let src = &zp[(r.id_old + 1) * d..(r.id_old + 2) * d];
+                if r.pruned {
+                    let s = scores[r.id_old];
+                    wsum += s;
+                    for (f, x) in fused.iter_mut().zip(src) {
+                        *f += s * x;
+                    }
+                } else {
+                    out[(1 + r.id_new) * d..(2 + r.id_new) * d].copy_from_slice(src);
+                }
+            }
+            let inv = 1.0 / (wsum + 1e-6);
+            for (o, f) in out[(n_out - 1) * d..].iter_mut().zip(&fused) {
+                *o = f * inv;
+            }
+            out
+        } else {
+            zp
+        };
+        let n_out = zcur.len() / d;
+
+        // LN2 -> MLP (dense, neuron-pruned columns are zero) -> residual.
+        let mut zn2 = zcur.clone();
+        for t in 0..n_out {
+            layer_norm(&mut zn2[t * d..(t + 1) * d], &w.ln2_g, &w.ln2_b, d);
+        }
+        let dm = self.st.dims.mlp_dim;
+        let mut h = vec![0.0f32; n_out * dm];
+        matmul_into(&zn2, &w.w_int, n_out, d, dm, &mut h);
+        for t in 0..n_out {
+            for j in 0..dm {
+                h[t * dm + j] = gelu(h[t * dm + j] + w.b_int[j]);
+            }
+        }
+        self_maybe_quant(self, &mut h);
+        let mut out = vec![0.0f32; n_out * d];
+        matmul_into(&h, &w.w_out, n_out, dm, d, &mut out);
+        for t in 0..n_out {
+            for j in 0..d {
+                out[t * d + j] += w.b_out[j] + zcur[t * d + j];
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn self_maybe_quant(s: &FuncSim, x: &mut [f32]) {
+    s.maybe_quant_act(x);
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    debug_assert_eq!(x.len(), d);
+    let mean = x.iter().sum::<f32>() / d as f32;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    for (xi, (gi, bi)) in x.iter_mut().zip(g.iter().zip(b.iter())) {
+        *xi = (*xi - mean) * inv * gi + bi;
+    }
+}
+
+/// y (m x n) = x (m x k) @ w (k x n), accumulating into y.
+///
+/// 4-row micro-kernel: each streamed weight row is reused across four
+/// output rows (§Perf change 3 — the MLP matmuls are memory-bound on w).
+fn matmul_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(y.len(), m * n);
+    let mut i = 0;
+    while i + 4 <= m {
+        let (rows0, rest) = y[i * n..].split_at_mut(n);
+        let (rows1, rest) = rest.split_at_mut(n);
+        let (rows2, rest) = rest.split_at_mut(n);
+        let rows3 = &mut rest[..n];
+        for kk in 0..k {
+            let x0 = x[i * k + kk];
+            let x1 = x[(i + 1) * k + kk];
+            let x2 = x[(i + 2) * k + kk];
+            let x3 = x[(i + 3) * k + kk];
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                let wv = wrow[j];
+                rows0[j] += x0 * wv;
+                rows1[j] += x1 * wv;
+                rows2[j] += x2 * wv;
+                rows3[j] += x3 * wv;
+            }
+        }
+        i += 4;
+    }
+    for i in i..m {
+        let yrow = &mut y[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                yrow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layer_norm(&mut x, &g, &b, 4);
+        let mean: f32 = x.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_into_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let mut y = vec![0.0; 4];
+        matmul_into(&x, &eye, 2, 2, 2, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn detect_block_mask_finds_zero_blocks() {
+        let mut w = vec![1.0f32; 4 * 4];
+        for i in 0..2 {
+            for j in 2..4 {
+                w[i * 4 + j] = 0.0;
+            }
+        }
+        let (mask, cb) = detect_block_mask(&w, (4, 4), 2);
+        assert_eq!(cb, 2);
+        assert_eq!(mask, vec![true, false, true, true]);
+    }
+}

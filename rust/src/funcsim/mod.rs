@@ -1,0 +1,11 @@
+//! Functional (bit-level) model of the accelerator datapath: block-sparse
+//! SpMM header walks, the TDHM bitonic routing network, neuron-pruned MLP
+//! and the int16 quantized path — the software twin RTL would be diffed
+//! against. Cross-checked against the PJRT-executed HLO artifacts in
+//! rust/tests/funcsim.rs.
+
+pub mod bitonic;
+pub mod datapath;
+
+pub use bitonic::{bitonic_sort_desc, routing, Route};
+pub use datapath::{FuncSim, Precision};

@@ -1,0 +1,30 @@
+//! # vitfpga
+//!
+//! Reproduction of *"Accelerating ViT Inference on FPGA through Static
+//! and Dynamic Pruning"* (Parikh, Li, Zhang, Kannan, Busart, Prasanna,
+//! 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (python, build time)** — the pruned DeiT model, the
+//!   simultaneous fine-pruning trainer and the Pallas kernels live in
+//!   `python/compile`; `make artifacts` AOT-lowers them to HLO text.
+//! * **L3 (this crate, runtime)** — a cycle-level simulator of the
+//!   paper's U250 accelerator ([`sim`]), the block-sparse data formats
+//!   ([`formats`]), complexity/resource models ([`complexity`],
+//!   [`sim::resources`]), cross-platform baselines ([`baselines`]), a
+//!   PJRT runtime executing the AOT artifacts ([`runtime`]) and a
+//!   serving coordinator ([`coordinator`]). Python never runs on the
+//!   request path.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod complexity;
+pub mod config;
+pub mod coordinator;
+pub mod formats;
+pub mod funcsim;
+pub mod runtime;
+pub mod sim;
+pub mod util;

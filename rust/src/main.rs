@@ -1,0 +1,255 @@
+//! vitfpga CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   table --id N            regenerate paper Table N (1-7)
+//!   fig --id N              regenerate paper Figure N (9, 10)
+//!   simulate [--setting L] [--batch B] [--structure FILE]
+//!                           cycle-level latency breakdown
+//!   infer --variant NAME [--artifacts DIR]
+//!                           one PJRT inference on a synthetic image
+//!   serve --variant NAME [--requests N] [--concurrency C]
+//!                           run the coordinator against synthetic load
+//!   sweep                   Table VI sweep (alias: table --id 6)
+//!   resources               Table IV resource model
+//!
+//! Python never runs here: artifacts must exist (`make artifacts`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use vitfpga::bench_harness;
+use vitfpga::config::{model_by_name, HardwareConfig, PruningSetting};
+use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::util::cli::Args;
+use vitfpga::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: vitfpga <table|fig|simulate|infer|serve|sweep|resources> [options]\n\
+     see rust/src/main.rs header for per-command options"
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "table" => {
+            println!("{}", bench_harness::run_table(args.get_usize("id", 6)));
+        }
+        "fig" => {
+            println!("{}", bench_harness::run_fig(args.get_usize("id", 9)));
+        }
+        "sweep" => {
+            println!("{}", bench_harness::run_table(6));
+        }
+        "resources" => {
+            println!("{}", bench_harness::run_table(4));
+        }
+        "simulate" => cmd_simulate(&args)?,
+        "infer" => cmd_infer(&args)?,
+        "serve" => cmd_serve(&args)?,
+        "funcsim" => cmd_funcsim(&args)?,
+        _ => bail!("{}", usage()),
+    }
+    Ok(())
+}
+
+fn parse_setting(label: &str) -> Result<PruningSetting> {
+    // format: b16_rb0.5_rt0.7
+    let mut block = 16usize;
+    let mut rb = 1.0f64;
+    let mut rt = 1.0f64;
+    for part in label.split('_') {
+        if let Some(v) = part.strip_prefix("rb") {
+            rb = v.parse()?;
+        } else if let Some(v) = part.strip_prefix("rt") {
+            rt = v.parse()?;
+        } else if let Some(v) = part.strip_prefix('b') {
+            block = v.parse()?;
+        }
+    }
+    Ok(PruningSetting::new(block, rb, rt))
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let hw = HardwareConfig::u250();
+    let batch = args.get_usize("batch", 1);
+    let st = if let Some(path) = args.get("structure") {
+        ModelStructure::load(&PathBuf::from(path))?
+    } else {
+        let setting = parse_setting(args.get_or("setting", "b16_rb0.7_rt0.7"))?;
+        let dims = model_by_name(args.get_or("model", "deit-small"))
+            .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+        ModelStructure::synthesize(&dims, &setting, 42)
+    };
+    let sim = AcceleratorSim::new(hw);
+    let r = sim.model_latency(&st, batch);
+    println!(
+        "model={} setting=b{}_rb{}_rt{} batch={}",
+        st.model_name, st.block_size, st.r_b, st.r_t, batch
+    );
+    println!(
+        "{:<6}{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}{:>12}",
+        "layer", "tokens", "qkv", "attn", "proj", "tdm", "mlp", "total"
+    );
+    for (l, e) in r.per_layer.iter().enumerate() {
+        println!(
+            "{:<6}{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}{:>12}",
+            l,
+            st.tokens_per_layer[l],
+            e.qkv,
+            e.attn_scores + e.softmax + e.attn_v,
+            e.proj,
+            e.tdm,
+            e.mlp(),
+            e.total()
+        );
+    }
+    println!(
+        "patch_embed={} head={} io={} total_cycles={}",
+        r.patch_embed, r.head, r.io, r.total_cycles
+    );
+    println!(
+        "latency={:.3} ms  throughput={:.1} img/s @ {} MHz",
+        r.latency_ms,
+        r.throughput,
+        (hw.freq_hz / 1e6) as u64
+    );
+    Ok(())
+}
+
+fn synthetic_image(elems: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..elems).map(|_| rng.normal()).collect()
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs1");
+    let engine = vitfpga::runtime::Engine::new(&dir)?;
+    let loaded = engine.load(variant)?;
+    println!("loaded {} (batch={})", loaded.entry.name, loaded.batch());
+    let img = synthetic_image(loaded.input_elems, args.get_usize("seed", 7) as u64);
+    let t0 = std::time::Instant::now();
+    let logits = loaded.infer(&img)?;
+    let dt = t0.elapsed();
+    let classes = loaded.num_classes();
+    for b in 0..loaded.batch() {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let (argmax, max) = row
+            .iter()
+            .enumerate()
+            .fold((0usize, f32::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+        println!("image {}: class={} logit={:.4}", b, argmax, max);
+    }
+    println!("wall latency: {:.3} ms (PJRT CPU, functional path)", dt.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_funcsim(args: &Args) -> Result<()> {
+    // Run the functional datapath model (block-sparse SpMM + bitonic TDHM
+    // + optional int16) against the PJRT artifact on the same input.
+    use vitfpga::funcsim::{FuncSim, Precision};
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs1");
+    let precision = if args.has_flag("int16") { Precision::Int16 } else { Precision::F32 };
+    let engine = vitfpga::runtime::Engine::new(&dir)?;
+    let entry = engine
+        .manifest
+        .find_matching(variant)
+        .ok_or_else(|| anyhow::anyhow!("variant '{}' not found", variant))?
+        .clone();
+    let pjrt = engine.load(&entry.name)?;
+    let geom = if entry.model == "test-tiny" { (32, 8, 3) } else { (224, 16, 3) };
+    let fs = FuncSim::load(
+        &dir.join(&entry.weights_file),
+        &dir.join(&entry.structure_file),
+        geom,
+        precision,
+    )?;
+    let per_image = pjrt.input_elems / pjrt.batch();
+    let img = synthetic_image(per_image, args.get_usize("seed", 11) as u64);
+    let flat: Vec<f32> = (0..pjrt.batch()).flat_map(|_| img.iter().copied()).collect();
+    let t0 = std::time::Instant::now();
+    let want = pjrt.infer(&flat)?;
+    let t_pjrt = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let got = fs.forward(&img)?;
+    let t_fs = t1.elapsed();
+    let classes = pjrt.num_classes();
+    let max_err = got
+        .iter()
+        .zip(&want[..classes])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "funcsim({:?}) vs PJRT on {}: max |err| = {:.6}",
+        precision, entry.name, max_err
+    );
+    println!(
+        "wall: PJRT {:.2} ms | funcsim {:.2} ms",
+        t_pjrt.as_secs_f64() * 1e3,
+        t_fs.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4");
+    let requests = args.get_usize("requests", 64);
+    let concurrency = args.get_usize("concurrency", 4);
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 8),
+        max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+    };
+    let coord = Arc::new(Coordinator::start(&dir, variant, policy)?);
+    println!(
+        "serving {} ({} f32/image), {} requests x {} client threads",
+        coord.variant_name, coord.input_elems_per_image, requests, concurrency
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..concurrency {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            for i in 0..requests {
+                let img = synthetic_image(coord.input_elems_per_image,
+                                          (c * 1000 + i) as u64);
+                let resp = coord.infer(img)?;
+                if i == 0 {
+                    println!(
+                        "  client {}: first response class={} latency={:.2} ms batch={}",
+                        c,
+                        resp.predicted_class,
+                        resp.latency.as_secs_f64() * 1e3,
+                        resp.batch_size
+                    );
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics()?;
+    println!("{}", m);
+    println!(
+        "wall: {:.2}s for {} requests -> {:.1} req/s",
+        wall,
+        requests * concurrency,
+        (requests * concurrency) as f64 / wall
+    );
+    Ok(())
+}

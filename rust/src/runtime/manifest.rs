@@ -1,0 +1,164 @@
+//! Artifact manifest (`artifacts/manifest.json`) written by
+//! `python -m compile.aot`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::PruningSetting;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantEntry {
+    pub name: String,
+    pub model: String,
+    pub batch: usize,
+    pub use_kernels: bool,
+    pub pruning: PruningSetting,
+    pub hlo_file: String,
+    pub weights_file: String,
+    pub structure_file: String,
+    pub num_weight_tensors: usize,
+    /// (B, H, W, C) of parameter 0.
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub variants: Vec<VariantEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {}", path.display(), e))?;
+        let variants_json = j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing variants"))?;
+        let mut variants = Vec::with_capacity(variants_json.len());
+        for v in variants_json {
+            let req_str = |k: &str| -> Result<String> {
+                v.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("variant missing {}", k))
+            };
+            let req_usize = |path: &[&str]| -> Result<usize> {
+                v.at(path)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("variant missing {:?}", path))
+            };
+            let req_f64 = |path: &[&str]| -> Result<f64> {
+                v.at(path)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("variant missing {:?}", path))
+            };
+            let tdm_layers = v
+                .at(&["pruning", "tdm_layers"])
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("variant missing tdm_layers"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let input_shape = v
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("variant missing input_shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            variants.push(VariantEntry {
+                name: req_str("name")?,
+                model: req_str("model")?,
+                batch: req_usize(&["batch"])?,
+                use_kernels: v.get("use_kernels").and_then(Json::as_bool).unwrap_or(false),
+                pruning: PruningSetting {
+                    block_size: req_usize(&["pruning", "block_size"])?,
+                    r_b: req_f64(&["pruning", "r_b"])?,
+                    r_t: req_f64(&["pruning", "r_t"])?,
+                    tdm_layers,
+                },
+                hlo_file: v
+                    .at(&["files", "hlo"])
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant missing files.hlo"))?
+                    .to_string(),
+                weights_file: v
+                    .at(&["files", "weights"])
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant missing files.weights"))?
+                    .to_string(),
+                structure_file: v
+                    .at(&["files", "structure"])
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant missing files.structure"))?
+                    .to_string(),
+                num_weight_tensors: req_usize(&["num_weight_tensors"])?,
+                input_shape,
+                num_classes: req_usize(&["num_classes"])?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
+            variants,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&VariantEntry> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// First variant whose name contains `substr`.
+    pub fn find_matching(&self, substr: &str) -> Option<&VariantEntry> {
+        self.variants.iter().find(|v| v.name.contains(substr))
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_schema() {
+        let dir = std::env::temp_dir().join(format!("vitfpga_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 1234, "variants": [
+              {"name": "t_b8_rb0.7_rt0.7_bs1", "model": "test-tiny",
+               "batch": 1, "use_kernels": false,
+               "pruning": {"block_size": 8, "r_b": 0.7, "r_t": 0.7,
+                           "tdm_layers": [1, 2]},
+               "files": {"hlo": "a.hlo.txt", "weights": "a.bin",
+                         "structure": "a.json"},
+               "num_weight_tensors": 56,
+               "input_shape": [1, 32, 32, 3], "num_classes": 10}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seed, 1234);
+        assert_eq!(m.variants.len(), 1);
+        let v = m.find_matching("rb0.7").unwrap();
+        assert_eq!(v.pruning.tdm_layers, vec![1, 2]);
+        assert_eq!(v.input_shape, vec![1, 32, 32, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = std::env::temp_dir().join("vitfpga_nonexistent_manifest");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Reader for the VITW0001 binary weight format written by
+//! `python/compile/export.py`.
+//!
+//! Layout (little-endian):
+//!   magic "VITW0001" | u32 count |
+//!   per tensor: u32 name_len, name, u32 ndim, u32 dims[ndim],
+//!               u64 byte_len, f32 data[]
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+pub const MAGIC: &[u8; 8] = b"VITW0001";
+
+pub fn read_weights(path: &Path) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    parse_weights(&bytes)
+}
+
+pub fn parse_weights(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("weights: short magic")?;
+    if &magic != MAGIC {
+        bail!("weights: bad magic {:?}", magic);
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("weights: tensor {} name too long ({})", i, name_len);
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name).context("weights: short name")?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("weights: tensor {} ndim {} too large", i, ndim);
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let byte_len = read_u64(&mut r)? as usize;
+        let elems = dims.iter().product::<usize>().max(1);
+        let expect = if dims.is_empty() { 4 } else { elems * 4 };
+        if byte_len != expect {
+            bail!(
+                "weights: tensor {} byte_len {} != dims {:?} * 4",
+                i, byte_len, dims
+            );
+        }
+        if r.len() < byte_len {
+            bail!("weights: tensor {} truncated payload", i);
+        }
+        let (payload, rest) = r.split_at(byte_len);
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        r = rest;
+        out.push(Tensor {
+            name: String::from_utf8(name).context("weights: non-utf8 name")?,
+            dims,
+            data,
+        });
+    }
+    if !r.is_empty() {
+        bail!("weights: {} trailing bytes", r.len());
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("weights: short u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut &[u8]) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("weights: short u64")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Writer (round-trip tests + synthetic-artifact tooling).
+pub fn write_weights(tensors: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(t.name.as_bytes());
+        out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+        for &d in &t.dims {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&((t.data.len() * 4) as u64).to_le_bytes());
+        for &x in &t.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Tensor> {
+        vec![
+            Tensor { name: "embed/w".into(), dims: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] },
+            Tensor { name: "b".into(), dims: vec![3], data: vec![0.5, -0.5, 0.0] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = write_weights(&sample());
+        let back = parse_weights(&bytes).unwrap();
+        assert_eq!(back, sample());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = write_weights(&sample());
+        bytes[0] = b'X';
+        assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = write_weights(&sample());
+        for cut in [4usize, 12, 20, bytes.len() - 2] {
+            assert!(parse_weights(&bytes[..cut]).is_err(), "cut {}", cut);
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = write_weights(&sample());
+        bytes.push(0);
+        assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_byte_len() {
+        let mut bytes = write_weights(&sample());
+        // corrupt the first tensor's byte_len field:
+        // 8 magic + 4 count + 4 name_len + 7 name + 4 ndim + 8 dims = 35
+        let off = 8 + 4 + 4 + 7 + 4 + 8;
+        bytes[off] = 0xFF;
+        assert!(parse_weights(&bytes).is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Element-wise Module (EM): GELU, exponentiation, scaling, LayerNorm
+//! passes and residual adds (Section V-B).
+//!
+//! The EM is a wide SIMD pipeline fed from the MPCA result buffers. We
+//! model its throughput as `lanes` elements per cycle with a small
+//! pipeline-fill latency per pass. Lane count defaults to p_t * b — one
+//! row of result blocks per cycle — matching the buffer widths the
+//! resource model assigns to the EM (Section V-E1).
+
+use crate::config::HardwareConfig;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ElementwiseModule {
+    pub lanes: usize,
+    /// Pipeline fill/drain per pass.
+    pub pass_latency: u64,
+}
+
+impl ElementwiseModule {
+    pub fn new(hw: &HardwareConfig, b: usize) -> Self {
+        ElementwiseModule { lanes: hw.p_t * b, pass_latency: 16 }
+    }
+
+    /// One elementwise pass over `elems` elements (GELU, exp, scale, add).
+    pub fn pass_cycles(&self, elems: usize) -> u64 {
+        (elems as u64).div_ceil(self.lanes as u64) + self.pass_latency
+    }
+
+    /// LayerNorm over (n x d): mean pass + variance pass + normalize pass.
+    pub fn layernorm_cycles(&self, n: usize, d: usize) -> u64 {
+        3 * self.pass_cycles(n * d)
+    }
+
+    /// Residual add over (n x d).
+    pub fn residual_cycles(&self, n: usize, d: usize) -> u64 {
+        self.pass_cycles(n * d)
+    }
+
+    /// GELU over (n x d).
+    pub fn gelu_cycles(&self, n: usize, d: usize) -> u64 {
+        self.pass_cycles(n * d)
+    }
+
+    /// Softmax post-processing for H heads of (n x n) scores:
+    /// exp pass + row-sum pass + scale pass (Section V-C1 stage ii).
+    pub fn softmax_cycles(&self, heads: usize, n: usize) -> u64 {
+        3 * self.pass_cycles(heads * n * n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn em() -> ElementwiseModule {
+        ElementwiseModule::new(&HardwareConfig::u250(), 16)
+    }
+
+    #[test]
+    fn lanes_default() {
+        assert_eq!(em().lanes, 12 * 16);
+    }
+
+    #[test]
+    fn pass_cycles_ceil() {
+        let e = em();
+        assert_eq!(e.pass_cycles(1), 1 + e.pass_latency);
+        assert_eq!(e.pass_cycles(192), 1 + e.pass_latency);
+        assert_eq!(e.pass_cycles(193), 2 + e.pass_latency);
+    }
+
+    #[test]
+    fn layernorm_is_three_passes() {
+        let e = em();
+        assert_eq!(e.layernorm_cycles(197, 384), 3 * e.pass_cycles(197 * 384));
+    }
+
+    #[test]
+    fn softmax_scales_with_heads_and_tokens() {
+        let e = em();
+        assert!(e.softmax_cycles(6, 197) > e.softmax_cycles(6, 100));
+        assert!(e.softmax_cycles(6, 197) > e.softmax_cycles(3, 197));
+    }
+}

@@ -1,0 +1,107 @@
+//! Offline column workload assignment (Section V-D1).
+//!
+//! Block pruning leaves different columns of a weight matrix with
+//! different numbers of retained blocks. PEs in the same CHM row process
+//! p_c columns per iteration; the iteration takes as long as its most
+//! populated column, so the schedule cost is sum-of-chunk-maxima. The
+//! paper performs an *offline* workload assignment so "workloads of
+//! columns are evenly distributed across different columns of PEs" —
+//! grouping similarly-populated columns together minimizes that sum
+//! (a classic exchange argument: mixing a heavy and a light column wastes
+//! the light PE's slot).
+
+/// Cost (in per-block units) of processing `pops` columns in chunks of
+/// `p_c`, taking each chunk's max.
+pub fn schedule_cost(pops: &[usize], p_c: usize) -> u64 {
+    assert!(p_c > 0);
+    pops.chunks(p_c)
+        .map(|c| *c.iter().max().unwrap_or(&0) as u64)
+        .sum()
+}
+
+/// Offline assignment: a column order whose chunked schedule cost is
+/// minimal (descending sort groups equal-load columns).
+pub fn balanced_order(pops: &[usize]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..pops.len()).collect();
+    idx.sort_by(|&a, &b| pops[b].cmp(&pops[a]));
+    idx
+}
+
+/// Schedule cost after the offline assignment.
+pub fn balanced_cost(pops: &[usize], p_c: usize) -> u64 {
+    let order = balanced_order(pops);
+    let sorted: Vec<usize> = order.iter().map(|&i| pops[i]).collect();
+    schedule_cost(&sorted, p_c)
+}
+
+/// Lower bound: ceil(total_blocks / p_c) — perfect balance.
+pub fn ideal_cost(pops: &[usize], p_c: usize) -> u64 {
+    let total: usize = pops.iter().sum();
+    (total as u64).div_ceil(p_c as u64)
+}
+
+/// Imbalance factor of a schedule vs the perfect-balance bound.
+pub fn imbalance(pops: &[usize], p_c: usize, balanced: bool) -> f64 {
+    let cost = if balanced { balanced_cost(pops, p_c) } else { schedule_cost(pops, p_c) };
+    let ideal = ideal_cost(pops, p_c).max(1);
+    cost as f64 / ideal as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cost_of_uniform_columns_is_exact() {
+        let pops = vec![4; 8];
+        assert_eq!(schedule_cost(&pops, 2), 16);
+        assert_eq!(balanced_cost(&pops, 2), 16);
+        assert_eq!(ideal_cost(&pops, 2), 16);
+    }
+
+    #[test]
+    fn balancing_helps_on_skewed_columns() {
+        // Unbalanced pairing (10,1),(10,1): cost 20. Balanced (10,10),(1,1): 11.
+        let pops = vec![10, 1, 10, 1];
+        assert_eq!(schedule_cost(&pops, 2), 20);
+        assert_eq!(balanced_cost(&pops, 2), 11);
+    }
+
+    #[test]
+    fn balanced_never_worse_than_natural_property() {
+        forall(
+            11,
+            200,
+            |r: &mut Rng| {
+                let n = r.range(1, 40);
+                let p_c = r.range(1, 4);
+                let pops: Vec<usize> = (0..n).map(|_| r.range(0, 24)).collect();
+                (pops, p_c)
+            },
+            |(pops, p_c)| {
+                let nat = schedule_cost(pops, *p_c);
+                let bal = balanced_cost(pops, *p_c);
+                let ideal = ideal_cost(pops, *p_c);
+                if bal > nat {
+                    return Err(format!("balanced {} > natural {}", bal, nat));
+                }
+                if bal < ideal.min(nat) && !pops.is_empty() && pops.iter().sum::<usize>() > 0 {
+                    return Err(format!("balanced {} below ideal {}", bal, ideal));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn imbalance_ge_one() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let pops: Vec<usize> = (0..12).map(|_| rng.range(1, 9)).collect();
+            assert!(imbalance(&pops, 2, true) >= 1.0 - 1e-12);
+            assert!(imbalance(&pops, 2, false) >= imbalance(&pops, 2, true) - 1e-12);
+        }
+    }
+}

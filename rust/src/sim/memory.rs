@@ -1,0 +1,118 @@
+//! DDR transfer and on-chip buffer capacity model.
+//!
+//! The scheduler accounts weight/CB traffic inside the matmul stages;
+//! this module handles the remaining questions: does a layer's working
+//! set fit the on-chip buffers (Section V-E1 sizes), and what does a
+//! whole-model weight stream cost if it does not stay resident.
+
+use crate::config::HardwareConfig;
+use crate::sim::resources;
+use crate::sim::structure::ModelStructure;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryReport {
+    /// Total pruned weight bytes streamed per inference.
+    pub weight_bytes: usize,
+    /// Peak feature (token matrix) bytes across layers.
+    pub peak_feature_bytes: usize,
+    /// Cycles to stream all weights at full DDR bandwidth.
+    pub weight_stream_cycles: u64,
+    /// Do the per-stage working sets fit the modeled buffers?
+    pub fits_on_chip: bool,
+}
+
+/// Pruned weight bytes of one encoder in the Fig. 5 format.
+pub fn encoder_weight_bytes(st: &ModelStructure, layer: usize, elem_bytes: usize) -> usize {
+    let e = &st.encoders[layer];
+    let b2 = st.block_size * st.block_size;
+    let qkv_blocks: usize = e.qkv_col_blocks.iter().sum();
+    let proj_blocks: usize = e.proj_col_blocks.iter().sum();
+    let header = (e.qkv_col_blocks.len() + e.proj_col_blocks.len()) * 4
+        + (qkv_blocks + proj_blocks) * 4;
+    let msa = (qkv_blocks + proj_blocks) * b2 * elem_bytes;
+    let mlp = 2 * st.dims.dim * e.neurons_kept * elem_bytes;
+    msa + mlp + header
+}
+
+pub fn memory_report(st: &ModelStructure, hw: &HardwareConfig) -> MemoryReport {
+    let weight_bytes: usize = (0..st.dims.num_layers)
+        .map(|l| encoder_weight_bytes(st, l, hw.elem_bytes))
+        .sum::<usize>()
+        // patch embed + classifier head weights
+        + (st.dims.patch_dim * st.dims.dim + st.dims.dim * st.dims.num_classes)
+            * hw.elem_bytes;
+    let peak_feature_bytes = st
+        .tokens_per_layer
+        .iter()
+        .map(|&n| n * st.dims.dim * hw.elem_bytes)
+        .max()
+        .unwrap_or(0);
+    let weight_stream_cycles = (weight_bytes as f64 / hw.bytes_per_cycle()).ceil() as u64;
+    let gamma = resources::gamma_for(st.dims.dim, st.dims.mlp_dim, st.block_size);
+    let buffers = resources::buffer_elems(hw, st.block_size, gamma) * hw.elem_bytes;
+    // The largest single-stage working set: one head group of weights +
+    // one feature stripe + result blocks.
+    let max_group_bytes = (0..st.dims.num_layers)
+        .map(|l| {
+            let e = &st.encoders[l];
+            let per_head = e.qkv_col_blocks.iter().sum::<usize>()
+                / st.dims.num_heads.max(1);
+            per_head * st.block_size * st.block_size * hw.elem_bytes
+        })
+        .max()
+        .unwrap_or(0);
+    MemoryReport {
+        weight_bytes,
+        peak_feature_bytes,
+        weight_stream_cycles,
+        fits_on_chip: max_group_bytes + peak_feature_bytes <= buffers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DEIT_SMALL, PruningSetting};
+    use crate::sim::structure::ModelStructure;
+
+    #[test]
+    fn pruned_weights_smaller_than_dense() {
+        let hw = HardwareConfig::u250();
+        let dense = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::dense(16), 1);
+        let pruned =
+            ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 1);
+        let rd = memory_report(&dense, &hw);
+        let rp = memory_report(&pruned, &hw);
+        assert!(rp.weight_bytes < rd.weight_bytes * 7 / 10);
+    }
+
+    #[test]
+    fn dense_weight_bytes_match_param_scale() {
+        // 22M params at int16 ~ 44 MB; prunable weights dominate.
+        let hw = HardwareConfig::u250();
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::dense(16), 2);
+        let r = memory_report(&st, &hw);
+        assert!(r.weight_bytes > 35_000_000 && r.weight_bytes < 50_000_000,
+                "{}", r.weight_bytes);
+    }
+
+    #[test]
+    fn working_set_fits_on_chip() {
+        let hw = HardwareConfig::u250();
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.7, 0.7), 3);
+        assert!(memory_report(&st, &hw).fits_on_chip);
+    }
+
+    #[test]
+    fn token_pruning_lowers_peak_feature_only_with_weight_pruning_constant() {
+        let hw = HardwareConfig::u250();
+        let a = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.7, 1.0), 4);
+        let b = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.7, 0.5), 4);
+        let ra = memory_report(&a, &hw);
+        let rb = memory_report(&b, &hw);
+        // peak is the *input* layer (197 tokens) in both cases
+        assert_eq!(ra.peak_feature_bytes, rb.peak_feature_bytes);
+        assert!((ra.weight_bytes as i64 - rb.weight_bytes as i64).abs()
+                < ra.weight_bytes as i64 / 100);
+    }
+}

@@ -1,0 +1,24 @@
+//! Cycle-level simulator of the paper's FPGA accelerator (Section V).
+//!
+//! The paper measures latency via Vitis *hardware emulation* — a
+//! simulator of the DDR-attached design. This module plays that role:
+//! it executes Algorithm 2's loop nests over the real sparsity structure
+//! (per-column block populations, kept heads/neurons, per-layer token
+//! counts) at the U250 configuration (p_h=4, p_t=12, p_c=2, p_pe=8,
+//! 300 MHz, 77 GB/s DDR), with the EM and TDHM pipelines modeled
+//! alongside. `perf_model` holds the paper's analytic Table III
+//! formulas and is cross-checked against the loop-level simulation.
+
+pub mod em;
+pub mod load_balance;
+pub mod memory;
+pub mod mpca;
+pub mod perf_model;
+pub mod resources;
+pub mod scheduler;
+pub mod structure;
+pub mod tdhm;
+
+pub use mpca::Mpca;
+pub use scheduler::{AcceleratorSim, EncoderCycles, LatencyReport};
+pub use structure::{EncoderStructure, ModelStructure};

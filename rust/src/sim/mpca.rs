@@ -1,0 +1,308 @@
+//! Multi-level Parallelism Compute Array — cycle-level simulation.
+//!
+//! Executes the loop nest of Algorithm 2 over the *actual* per-column
+//! block populations (not averages), so SBMM load imbalance shows up
+//! exactly as it would in hardware. Three modes:
+//!
+//!   * SBMM  — dense X x block-sparse W (per-column headers);
+//!   * DBMM  — dense X x dense W;
+//!   * DHBMM — per-head dense X_h x dense W_h (stage ii/iii of MSA).
+//!
+//! The PE level: each PE holds a p_pe x p_pe multiplier array; one b x b
+//! block-pair multiply-accumulate takes ceil(b/p_pe)^2 * b cycles.
+//! The CHM level: p_t x p_c PEs share weight columns (CB) along columns
+//! and token rows (GFB) along rows. The MPCA level: p_h CHMs process
+//! heads (or column groups of a wide matrix) in parallel.
+//!
+//! DDR traffic: each head iteration streams its weight columns into the
+//! CBs; with double buffering (overlap_mem) the stage cost is
+//! max(compute, memory), otherwise the sum.
+
+use crate::config::HardwareConfig;
+use crate::sim::load_balance;
+
+/// Cycle cost of one b x b block MAC on a PE.
+pub fn block_cycles(b: usize, p_pe: usize) -> u64 {
+    let tiles = b.div_ceil(p_pe) as u64;
+    tiles * tiles * b as u64
+}
+
+/// Result of simulating one matmul on the MPCA.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MatmulCycles {
+    pub compute: u64,
+    pub memory: u64,
+}
+
+impl MatmulCycles {
+    pub fn stage_total(&self, overlap: bool) -> u64 {
+        if overlap {
+            self.compute.max(self.memory)
+        } else {
+            self.compute + self.memory
+        }
+    }
+}
+
+/// One weight group processed by a single CHM (e.g. one head's W_q/W_k/W_v
+/// column range, or a column slice of a wide dense matrix).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightGroup {
+    /// Retained blocks per column of this group.
+    pub col_pops: Vec<usize>,
+    /// Row blocks of the X matrix feeding this group.
+    pub x_row_blocks: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Mpca {
+    pub hw: HardwareConfig,
+    pub b: usize,
+}
+
+impl Mpca {
+    pub fn new(hw: HardwareConfig, b: usize) -> Self {
+        Mpca { hw, b }
+    }
+
+    /// Cycles for one CHM to process one weight group (Algorithm 2 inner
+    /// loops k, l + the PE block loop), including the CB fill traffic.
+    fn group_cycles(&self, g: &WeightGroup) -> MatmulCycles {
+        let hw = &self.hw;
+        let bc = block_cycles(self.b, hw.p_pe);
+        // Offline load balancing reorders columns before chunking (V-D1).
+        let order: Vec<usize> = if hw.load_balance {
+            load_balance::balanced_order(&g.col_pops)
+                .into_iter()
+                .map(|i| g.col_pops[i])
+                .collect()
+        } else {
+            g.col_pops.clone()
+        };
+        let rows = g.x_row_blocks as u64;
+        let compute: u64 = if hw.row_streaming {
+            // Dataflow: row blocks stream through the p_t PE rows; each
+            // column chunk costs ceil(rows * max_pop / p_t) block slots.
+            order
+                .chunks(hw.p_c)
+                .map(|c| {
+                    let maxp = *c.iter().max().unwrap_or(&0) as u64;
+                    (rows * maxp).div_ceil(hw.p_t as u64) * bc
+                })
+                .sum()
+        } else {
+            // Barrier per row iteration (Table III's ceil terms).
+            let cost_units: u64 = order
+                .chunks(hw.p_c)
+                .map(|c| *c.iter().max().unwrap_or(&0) as u64)
+                .sum();
+            cost_units * bc * rows.div_ceil(hw.p_t as u64)
+        };
+        // CB fill: every retained block of the group crosses DDR once.
+        let blocks: usize = g.col_pops.iter().sum();
+        let bytes = blocks * self.b * self.b * hw.elem_bytes
+            // per-column header: 4B length + 4B per block index
+            + g.col_pops.len() * 4 + blocks * 4;
+        let memory = (bytes as f64 / hw.bytes_per_cycle()).ceil() as u64;
+        MatmulCycles { compute, memory }
+    }
+
+    /// Schedule `groups` over p_h CHMs (Algorithm 2 outer loop): each
+    /// round dispatches p_h groups in parallel; the round lasts as long
+    /// as its slowest CHM. Returns aggregate compute/memory cycles.
+    pub fn run_groups(&self, groups: &[WeightGroup]) -> MatmulCycles {
+        let hw = &self.hw;
+        let mut total = MatmulCycles::default();
+        for round in groups.chunks(hw.p_h) {
+            let costs: Vec<MatmulCycles> = round.iter().map(|g| self.group_cycles(g)).collect();
+            let compute = costs.iter().map(|c| c.compute).max().unwrap_or(0);
+            // DDR is shared: concurrent CHM fills serialize on bandwidth.
+            let memory = costs.iter().map(|c| c.memory).sum::<u64>();
+            total.compute += compute;
+            total.memory += memory;
+        }
+        total
+    }
+
+    /// SBMM: X (x_rows x ?) dense times a block-sparse weight whose
+    /// columns are grouped per head (each head = one CHM work unit).
+    /// `head_col_pops[h]` lists per-column retained blocks of head h.
+    pub fn sbmm(&self, x_row_blocks: usize, head_col_pops: &[Vec<usize>]) -> MatmulCycles {
+        let groups: Vec<WeightGroup> = head_col_pops
+            .iter()
+            .map(|pops| WeightGroup { col_pops: pops.clone(), x_row_blocks })
+            .collect();
+        self.run_groups(&groups)
+    }
+
+    /// DBMM: dense (m1 x m2) x (m2 x n). The n columns are striped over
+    /// CHMs in groups of ceil(n_blocks / p_h) to use the whole array.
+    pub fn dbmm(&self, m1: usize, m2: usize, n: usize) -> MatmulCycles {
+        let b = self.b;
+        let row_blocks = m1.div_ceil(b);
+        let k_blocks = m2.div_ceil(b);
+        let n_blocks = n.div_ceil(b);
+        let per_chm = n_blocks.div_ceil(self.hw.p_h);
+        let mut groups = Vec::new();
+        let mut remaining = n_blocks;
+        while remaining > 0 {
+            let take = per_chm.min(remaining);
+            groups.push(WeightGroup {
+                col_pops: vec![k_blocks; take],
+                x_row_blocks: row_blocks,
+            });
+            remaining -= take;
+        }
+        self.run_groups(&groups)
+    }
+
+    /// DHBMM: H independent per-head dense multiplies
+    /// (m1 x m2) x (m2 x n) — stage (ii)/(iii) of MSA.
+    pub fn dhbmm(&self, heads: usize, m1: usize, m2: usize, n: usize) -> MatmulCycles {
+        let b = self.b;
+        let row_blocks = m1.div_ceil(b);
+        let k_blocks = m2.div_ceil(b);
+        let n_blocks = n.div_ceil(b);
+        let groups: Vec<WeightGroup> = (0..heads)
+            .map(|_| WeightGroup { col_pops: vec![k_blocks; n_blocks], x_row_blocks: row_blocks })
+            .collect();
+        // Per-head activations (K^T / V) stream from GFB, not DDR; zero
+        // the memory term (weights already on chip from stage (i)).
+        let mut c = self.run_groups(&groups);
+        c.memory = 0;
+        c
+    }
+
+    /// PE utilization of an SBMM round: useful block-MACs over issued
+    /// slots (Section V-D2's underutilization discussion).
+    pub fn sbmm_utilization(&self, x_row_blocks: usize, head_col_pops: &[Vec<usize>]) -> f64 {
+        let hw = &self.hw;
+        let useful: u64 = head_col_pops
+            .iter()
+            .map(|pops| pops.iter().sum::<usize>() as u64 * x_row_blocks as u64)
+            .sum();
+        let bc = block_cycles(self.b, hw.p_pe);
+        let mut slots: u64 = 0;
+        for round in head_col_pops.chunks(hw.p_h) {
+            let round_cost: u64 = round
+                .iter()
+                .map(|pops| {
+                    let g = WeightGroup { col_pops: pops.clone(), x_row_blocks };
+                    self.group_cycles(&g).compute / bc
+                })
+                .max()
+                .unwrap_or(0);
+            slots += round_cost * (hw.p_h * hw.p_t * hw.p_c) as u64;
+        }
+        if slots == 0 {
+            return 1.0;
+        }
+        useful as f64 / slots as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::u250()
+    }
+
+    #[test]
+    fn block_cycles_scales_with_block_size() {
+        assert_eq!(block_cycles(16, 8), 4 * 16); // (16/8)^2 * 16
+        assert_eq!(block_cycles(32, 8), 16 * 32);
+        assert_eq!(block_cycles(8, 8), 8);
+    }
+
+    #[test]
+    fn dense_sbmm_equals_dbmm() {
+        // A "sparse" matrix with all blocks present must cost the same
+        // as the dense path when the head grouping matches.
+        let m = Mpca::new(hw(), 16);
+        let n_heads = 4;
+        let cols_per_head = 4; // 4 blocks of 16 = 64 = head_dim
+        let k_blocks = 24;     // 384 / 16
+        let pops: Vec<Vec<usize>> = (0..n_heads).map(|_| vec![k_blocks; cols_per_head]).collect();
+        let s = m.sbmm(13, &pops);
+        let groups: Vec<WeightGroup> = pops
+            .iter()
+            .map(|p| WeightGroup { col_pops: p.clone(), x_row_blocks: 13 })
+            .collect();
+        let d = m.run_groups(&groups);
+        assert_eq!(s, d);
+    }
+
+    #[test]
+    fn sparsity_reduces_compute_cycles() {
+        let m = Mpca::new(hw(), 16);
+        let dense: Vec<Vec<usize>> = (0..6).map(|_| vec![24; 12]).collect();
+        let half: Vec<Vec<usize>> = (0..6).map(|_| vec![12; 12]).collect();
+        let cd = m.sbmm(13, &dense);
+        let ch = m.sbmm(13, &half);
+        assert!(ch.compute * 2 <= cd.compute + 16);
+        assert!(ch.memory < cd.memory);
+    }
+
+    #[test]
+    fn load_balancing_reduces_skewed_cost() {
+        let mut h = hw();
+        h.load_balance = false;
+        let skewed = vec![vec![24, 1, 24, 1, 24, 1, 24, 1]];
+        let nat = Mpca::new(h, 16).sbmm(13, &skewed);
+        h.load_balance = true;
+        let bal = Mpca::new(h, 16).sbmm(13, &skewed);
+        assert!(bal.compute < nat.compute, "{} !< {}", bal.compute, nat.compute);
+    }
+
+    #[test]
+    fn head_rounds_ceil_division() {
+        // 6 heads on p_h=4 CHMs -> 2 rounds; 4 heads -> 1 round.
+        let m = Mpca::new(hw(), 16);
+        let pops6: Vec<Vec<usize>> = (0..6).map(|_| vec![24; 4]).collect();
+        let pops4: Vec<Vec<usize>> = (0..4).map(|_| vec![24; 4]).collect();
+        let c6 = m.sbmm(13, &pops6);
+        let c4 = m.sbmm(13, &pops4);
+        assert_eq!(c6.compute, 2 * c4.compute);
+    }
+
+    #[test]
+    fn dbmm_macs_per_cycle_bounded_by_array() {
+        // Effective MACs/cycle can never exceed the physical array.
+        let m = Mpca::new(hw(), 16);
+        let (m1, m2, n) = (192, 384, 384);
+        let c = m.dbmm(m1, m2, n);
+        let macs = (m1 * m2 * n) as f64;
+        let eff = macs / c.compute as f64;
+        let peak = hw().macs_per_cycle() as f64;
+        assert!(eff <= peak + 1e-9, "eff {} > peak {}", eff, peak);
+        assert!(eff > 0.5 * peak, "eff {} too low vs peak {}", eff, peak);
+    }
+
+    #[test]
+    fn dhbmm_has_no_ddr_traffic() {
+        let m = Mpca::new(hw(), 16);
+        let c = m.dhbmm(6, 197, 64, 197);
+        assert_eq!(c.memory, 0);
+        assert!(c.compute > 0);
+    }
+
+    #[test]
+    fn utilization_within_unit_interval_and_high_when_uniform() {
+        let m = Mpca::new(hw(), 16);
+        let uniform: Vec<Vec<usize>> = (0..4).map(|_| vec![24; 12]).collect();
+        let u = m.sbmm_utilization(13 * 12, &uniform); // many row blocks
+        assert!(u > 0.85 && u <= 1.0, "{}", u);
+        let skewed: Vec<Vec<usize>> = vec![vec![24; 12], vec![1; 12], vec![1; 12], vec![1; 12]];
+        let us = m.sbmm_utilization(13 * 12, &skewed);
+        assert!(us < u, "{} !< {}", us, u);
+    }
+
+    #[test]
+    fn memory_overlap_policy() {
+        let c = MatmulCycles { compute: 100, memory: 60 };
+        assert_eq!(c.stage_total(true), 100);
+        assert_eq!(c.stage_total(false), 160);
+    }
+}

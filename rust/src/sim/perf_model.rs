@@ -1,0 +1,144 @@
+//! Analytic performance model (Table III) and its cross-check against the
+//! loop-level MPCA simulation.
+//!
+//! Table III gives the cycle counts for multiplying (M1, M2) x (M2, D):
+//!
+//!   SBMM/DBMM:  ceil(H/p_h) * ceil((D'/b)/p_c) * ceil((M1/b)/p_t)
+//!               * (phi * M2/b) * C_blk
+//!   DHBMM:      same with phi = 1 over per-head matrices
+//!
+//! where C_blk = ceil(b/p_pe)^2 * b is the per-block MAC latency and phi
+//! is the retained-block ratio within a column. The analytic model
+//! assumes phi is uniform across columns ("for simplicity", Section
+//! V-E2); the loop-level simulator (mpca.rs) uses real populations.
+
+use crate::config::HardwareConfig;
+use crate::sim::mpca::block_cycles;
+
+/// Table III SBMM/DBMM cycles: H weight groups of (M2 x D') each, phi
+/// retained-block ratio per column, X of M1 rows.
+pub fn sbmm_cycles(
+    hw: &HardwareConfig,
+    heads: usize,
+    m1: usize,
+    m2: usize,
+    d_per_head: usize,
+    phi: f64,
+    b: usize,
+) -> u64 {
+    let head_iters = (heads as u64).div_ceil(hw.p_h as u64);
+    let col_iters = (d_per_head.div_ceil(b) as u64).div_ceil(hw.p_c as u64);
+    let row_iters = (m1.div_ceil(b) as u64).div_ceil(hw.p_t as u64);
+    let blocks_per_col = (phi * (m2.div_ceil(b)) as f64).ceil() as u64;
+    head_iters * col_iters * row_iters * blocks_per_col * block_cycles(b, hw.p_pe)
+}
+
+/// Table III DBMM: dense weight, treated as a single group striped over
+/// the CHMs (columns split p_h ways).
+pub fn dbmm_cycles(hw: &HardwareConfig, m1: usize, m2: usize, d: usize, b: usize) -> u64 {
+    let n_blocks = d.div_ceil(b);
+    let per_chm = n_blocks.div_ceil(hw.p_h);
+    sbmm_cycles(hw, hw.p_h, m1, m2, per_chm * b, 1.0, b)
+}
+
+/// Table III DHBMM: H per-head dense multiplies (M1 x M2) x (M2 x D').
+pub fn dhbmm_cycles(
+    hw: &HardwareConfig,
+    heads: usize,
+    m1: usize,
+    m2: usize,
+    d_per_head: usize,
+    b: usize,
+) -> u64 {
+    sbmm_cycles(hw, heads, m1, m2, d_per_head, 1.0, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::sim::mpca::Mpca;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn hw() -> HardwareConfig {
+        // The analytic Table III model has barrier (ceil) semantics per
+        // row iteration; disable row streaming for the exact cross-check.
+        let mut h = HardwareConfig::u250();
+        h.row_streaming = false;
+        h
+    }
+
+    #[test]
+    fn analytic_matches_loop_sim_for_uniform_populations() {
+        // With uniform per-column populations the loop-level simulator
+        // must reproduce the analytic Table III count exactly.
+        let h = hw();
+        let b = 16;
+        let m = Mpca::new(h, b);
+        for &(heads, m1, m2, dph, phi) in &[
+            (6usize, 197usize, 384usize, 64usize, 1.0f64),
+            (6, 197, 384, 64, 0.5),
+            (4, 139, 384, 64, 0.75),
+            (2, 96, 128, 64, 0.25),
+        ] {
+            let k_blocks = m2.div_ceil(b);
+            let per_col = ((phi * k_blocks as f64).ceil() as usize).max(1);
+            let eff_phi = per_col as f64 / k_blocks as f64;
+            let pops: Vec<Vec<usize>> = (0..heads)
+                .map(|_| vec![per_col; dph.div_ceil(b)])
+                .collect();
+            let sim = m.sbmm(m1.div_ceil(b), &pops);
+            let ana = sbmm_cycles(&h, heads, m1, m2, dph, eff_phi, b);
+            assert_eq!(sim.compute, ana,
+                       "heads={} m1={} phi={}", heads, m1, phi);
+        }
+    }
+
+    #[test]
+    fn dhbmm_matches_loop_sim() {
+        let h = hw();
+        let m = Mpca::new(h, 16);
+        let sim = m.dhbmm(6, 197, 64, 197);
+        let ana = dhbmm_cycles(&h, 6, 197, 64, 197, 16);
+        assert_eq!(sim.compute, ana);
+    }
+
+    #[test]
+    fn analytic_scaling_properties() {
+        let h = hw();
+        forall(
+            17,
+            100,
+            |r: &mut Rng| {
+                let heads = r.range(1, 8);
+                let m1 = r.range(16, 256);
+                let m2 = r.range(16, 512);
+                let dph = r.range(16, 128);
+                (heads, m1, m2, dph)
+            },
+            |&(heads, m1, m2, dph)| {
+                let full = sbmm_cycles(&h, heads, m1, m2, dph, 1.0, 16);
+                let half = sbmm_cycles(&h, heads, m1, m2, dph, 0.5, 16);
+                if half > full {
+                    return Err(format!("phi=0.5 ({}) > phi=1 ({})", half, full));
+                }
+                if full == 0 {
+                    return Err("zero cycles".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn block32_vs_block16_cost_ratio() {
+        // Same logical matmul, different block size: cycle counts stay
+        // within ~2x (b=32 has fewer, bigger blocks; padding differs).
+        let h = hw();
+        let c16 = dbmm_cycles(&h, 197, 384, 384, 16);
+        let c32 = dbmm_cycles(&h, 197, 384, 384, 32);
+        let ratio = c32 as f64 / c16 as f64;
+        assert!(ratio > 0.5 && ratio < 2.5, "{}", ratio);
+    }
+}

@@ -1,0 +1,104 @@
+//! FPGA resource and buffer models (Section V-E1, Table IV).
+//!
+//! R_total = (c1 * p_t*p_h*p_c*p_pe^2, c2 * ...) for DSPs and LUTs; the
+//! per-unit constants c1, c2 are calibrated so the paper's configuration
+//! (p_h=4, p_t=12, p_c=2, p_pe=8) reproduces Table IV's 7088 DSPs and
+//! 798K LUTs. B_total follows the buffer formula of Section V-E1 with
+//! gamma = max row blocks per output block.
+
+use crate::config::HardwareConfig;
+
+/// Per-computation-unit resource constants, calibrated to Table IV.
+/// 7088 DSP / 6144 units = 1.154; 798_000 LUT / 6144 = 129.9.
+pub const C1_DSP_PER_UNIT: f64 = 7088.0 / 6144.0;
+pub const C2_LUT_PER_UNIT: f64 = 798_000.0 / 6144.0;
+
+/// BRAM36 = 4 KB usable, URAM = 36 KB (Xilinx UltraScale+).
+pub const BRAM_BYTES: usize = 4 * 1024;
+pub const URAM_BYTES: usize = 36 * 1024;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceReport {
+    pub dsp: u64,
+    pub lut: u64,
+    /// Total on-chip buffer bytes (B_total at elem_bytes per element).
+    pub buffer_bytes: usize,
+    /// BRAM-equivalent count if all buffers were BRAM.
+    pub bram_equiv: u64,
+    /// URAM-equivalent count.
+    pub uram_equiv: u64,
+}
+
+/// Section V-E1:
+///   GFB = b^2 * p_t * gamma, CB = b^2 * p_c * gamma,
+///   RB  = b^2 * p_t * p_h * p_c,
+///   EM buffers  = 4 * max(RB, GFB), TDHM buffers = 2 * max(RB, GFB);
+///   B_total = GFB + CB + RB + 6 * max(RB, GFB)   [elements]
+pub fn buffer_elems(hw: &HardwareConfig, b: usize, gamma: usize) -> usize {
+    let b2 = b * b;
+    let gfb = b2 * hw.p_t * gamma;
+    let cb = b2 * hw.p_c * gamma;
+    let rb = b2 * hw.p_t * hw.p_h * hw.p_c;
+    gfb + cb + rb + 6 * rb.max(gfb)
+}
+
+pub fn resource_report(hw: &HardwareConfig, b: usize, gamma: usize) -> ResourceReport {
+    let units = (hw.p_t * hw.p_h * hw.p_c * hw.p_pe * hw.p_pe) as f64;
+    let buffer_bytes = buffer_elems(hw, b, gamma) * hw.elem_bytes;
+    ResourceReport {
+        dsp: (C1_DSP_PER_UNIT * units).round() as u64,
+        lut: (C2_LUT_PER_UNIT * units).round() as u64,
+        buffer_bytes,
+        bram_equiv: (buffer_bytes as u64).div_ceil(BRAM_BYTES as u64),
+        uram_equiv: (buffer_bytes as u64).div_ceil(URAM_BYTES as u64),
+    }
+}
+
+/// gamma for a model: max row blocks needed to produce one output block
+/// = max over matmuls of ceil(K/b); for ViT this is the QKV stage's
+/// ceil(D/b).
+pub fn gamma_for(dim: usize, mlp_dim: usize, b: usize) -> usize {
+    dim.div_ceil(b).max(mlp_dim.div_ceil(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_table4() {
+        let hw = HardwareConfig::u250();
+        let r = resource_report(&hw, 16, gamma_for(384, 1536, 16));
+        assert_eq!(r.dsp, 7088);
+        assert_eq!(r.lut, 798_000);
+    }
+
+    #[test]
+    fn buffers_fit_u250_on_chip_memory() {
+        // Table V: 36 MB on-chip for our work; the modeled buffers must
+        // fit comfortably.
+        let hw = HardwareConfig::u250();
+        for &b in &[16usize, 32] {
+            let r = resource_report(&hw, b, gamma_for(384, 1536, b));
+            assert!(r.buffer_bytes < 36_000_000, "b={} -> {}", b, r.buffer_bytes);
+            assert!(r.buffer_bytes > 100_000, "b={} -> {}", b, r.buffer_bytes);
+        }
+    }
+
+    #[test]
+    fn resources_scale_with_parallelism() {
+        let mut hw = HardwareConfig::u250();
+        let base = resource_report(&hw, 16, 96);
+        hw.p_h = 8;
+        let big = resource_report(&hw, 16, 96);
+        assert_eq!(big.dsp, base.dsp * 2);
+    }
+
+    #[test]
+    fn block32_needs_more_buffer_than_block16() {
+        let hw = HardwareConfig::u250();
+        let r16 = resource_report(&hw, 16, gamma_for(384, 1536, 16));
+        let r32 = resource_report(&hw, 32, gamma_for(384, 1536, 32));
+        assert!(r32.buffer_bytes > r16.buffer_bytes);
+    }
+}

@@ -1,0 +1,314 @@
+//! Encoder task schedule (Fig. 7) and whole-model latency.
+//!
+//! Executes the pruned ViT layer by layer on the simulated accelerator:
+//!
+//!   LN1 -> (i) QKV = Z W_qkv   [SBMM, per-head column groups]
+//!       -> (ii) A = softmax(QK^T/sqrt(D'))  [DHBMM + EM]
+//!       -> (iii) SA = A V                    [DHBMM]
+//!       -> (iv) proj                         [SBMM]
+//!       -> residual -> [TDM on TDM layers] -> LN2
+//!       -> MLP int [DBMM] -> GELU [EM] -> MLP out [DBMM] -> residual
+//!
+//! Cycle inputs come from the sparsity structure (real per-column
+//! populations, kept heads, kept neurons, token counts per layer).
+
+use crate::config::HardwareConfig;
+use crate::sim::em::ElementwiseModule;
+use crate::sim::mpca::{Mpca, WeightGroup};
+use crate::sim::structure::ModelStructure;
+use crate::sim::tdhm::TokenDropModule;
+
+/// Per-stage cycles of one encoder.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EncoderCycles {
+    pub ln1: u64,
+    pub qkv: u64,
+    pub attn_scores: u64,
+    pub softmax: u64,
+    pub attn_v: u64,
+    pub proj: u64,
+    pub residual1: u64,
+    pub tdm: u64,
+    pub ln2: u64,
+    pub mlp_int: u64,
+    pub gelu: u64,
+    pub mlp_out: u64,
+    pub residual2: u64,
+}
+
+impl EncoderCycles {
+    pub fn total(&self) -> u64 {
+        self.ln1 + self.qkv + self.attn_scores + self.softmax + self.attn_v
+            + self.proj + self.residual1 + self.tdm + self.ln2
+            + self.mlp_int + self.gelu + self.mlp_out + self.residual2
+    }
+
+    pub fn msa(&self) -> u64 {
+        self.qkv + self.attn_scores + self.softmax + self.attn_v + self.proj
+    }
+
+    pub fn mlp(&self) -> u64 {
+        self.mlp_int + self.gelu + self.mlp_out
+    }
+}
+
+/// Whole-model latency report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyReport {
+    pub per_layer: Vec<EncoderCycles>,
+    pub patch_embed: u64,
+    pub head: u64,
+    /// Input image DMA in + logits out.
+    pub io: u64,
+    pub total_cycles: u64,
+    pub latency_ms: f64,
+    /// images / second at batch size used.
+    pub throughput: f64,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct AcceleratorSim {
+    pub hw: HardwareConfig,
+}
+
+impl AcceleratorSim {
+    pub fn new(hw: HardwareConfig) -> Self {
+        AcceleratorSim { hw }
+    }
+
+    /// Group the flat W_qkv column populations per *kept* head.
+    /// Layout (python packing): columns of [Q | K | V], each H*D' wide;
+    /// head h owns D'/b columns inside each of the three parts.
+    fn qkv_head_groups(
+        st: &ModelStructure,
+        layer: usize,
+        b: usize,
+    ) -> Vec<Vec<usize>> {
+        let enc = &st.encoders[layer];
+        let hd_blocks = st.dims.head_dim.div_ceil(b);
+        let h = st.dims.num_heads;
+        let mut groups = Vec::new();
+        for head in 0..h {
+            if !enc.heads_kept[head] {
+                continue;
+            }
+            let mut cols = Vec::with_capacity(3 * hd_blocks);
+            for part in 0..3 {
+                let c0 = ((part * h + head) * st.dims.head_dim) / b;
+                for c in c0..(c0 + hd_blocks).min(enc.qkv_col_blocks.len()) {
+                    cols.push(enc.qkv_col_blocks[c]);
+                }
+            }
+            groups.push(cols);
+        }
+        groups
+    }
+
+    /// Stripe W_proj's sparse columns over the CHMs (stage iv).
+    fn proj_groups(st: &ModelStructure, layer: usize, p_h: usize) -> Vec<Vec<usize>> {
+        let pops = &st.encoders[layer].proj_col_blocks;
+        let per = pops.len().div_ceil(p_h).max(1);
+        pops.chunks(per).map(|c| c.to_vec()).collect()
+    }
+
+    /// Simulate one encoder with `n` input tokens at batch `batch`.
+    pub fn encoder_cycles(
+        &self,
+        st: &ModelStructure,
+        layer: usize,
+        batch: usize,
+    ) -> EncoderCycles {
+        let b = st.block_size;
+        let d = st.dims.dim;
+        let dp = st.dims.head_dim;
+        let n = st.tokens_per_layer[layer];
+        let rows = (batch * n).div_ceil(b);
+        let enc = &st.encoders[layer];
+        let h_kept = enc.num_heads_kept();
+        let has_tdm = st.tdm_layers.contains(&layer) && st.r_t < 1.0;
+        let setting = st.setting();
+        let n_out = if has_tdm { setting.tokens_after_tdm(n) } else { n };
+        let rows_out = (batch * n_out).div_ceil(b);
+
+        let mpca = Mpca::new(self.hw, b);
+        let em = ElementwiseModule::new(&self.hw, b);
+        let tdhm = TokenDropModule::new(&self.hw, b);
+        let overlap = self.hw.overlap_mem;
+
+        // Stage (i): QKV, sparse per-head groups.
+        let qkv_groups = Self::qkv_head_groups(st, layer, b);
+        let qkv = mpca
+            .sbmm(rows, &qkv_groups)
+            .stage_total(overlap);
+
+        // Stage (ii): per-head Q K^T (n x D') x (D' x n), then softmax.
+        let attn_scores = mpca.dhbmm(h_kept, batch * n, dp, n).stage_total(overlap);
+        let softmax = em.softmax_cycles(h_kept * batch, n);
+
+        // Stage (iii): A V (n x n) x (n x D').
+        let attn_v = mpca.dhbmm(h_kept, batch * n, n, dp).stage_total(overlap);
+
+        // Stage (iv): projection, sparse striped groups.
+        let proj_groups = Self::proj_groups(st, layer, self.hw.p_h);
+        let proj_g: Vec<WeightGroup> = proj_groups
+            .into_iter()
+            .map(|col_pops| WeightGroup { col_pops, x_row_blocks: rows })
+            .collect();
+        let proj = mpca.run_groups(&proj_g).stage_total(overlap);
+
+        // TDM (between MSA and MLP, Fig. 4).
+        let tdm = if has_tdm {
+            let kept = 1 + (((n - 1) as f64) * st.r_t).ceil() as usize;
+            (batch as u64) * tdhm.cycles(n, d, st.dims.num_heads, kept).total()
+        } else {
+            0
+        };
+
+        // MLP on n_out tokens with kept neurons only (column/row pruning
+        // makes these *dense* narrow matmuls, Section V-C2).
+        let neurons = enc.neurons_kept;
+        let mlp_int = mpca.dbmm(rows_out * b, d, neurons).stage_total(overlap);
+        let gelu = em.gelu_cycles(batch * n_out, neurons);
+        let mlp_out = mpca.dbmm(rows_out * b, neurons, d).stage_total(overlap);
+
+        EncoderCycles {
+            ln1: em.layernorm_cycles(batch * n, d),
+            qkv,
+            attn_scores,
+            softmax,
+            attn_v,
+            proj,
+            residual1: em.residual_cycles(batch * n, d),
+            tdm,
+            ln2: em.layernorm_cycles(batch * n_out, d),
+            mlp_int,
+            gelu,
+            mlp_out,
+            residual2: em.residual_cycles(batch * n_out, d),
+        }
+    }
+
+    /// Full-model latency for `batch` images.
+    pub fn model_latency(&self, st: &ModelStructure, batch: usize) -> LatencyReport {
+        let overlap = self.hw.overlap_mem;
+        let b = st.block_size;
+        let mpca = Mpca::new(self.hw, b);
+        let per_layer: Vec<EncoderCycles> = (0..st.dims.num_layers)
+            .map(|l| self.encoder_cycles(st, l, batch))
+            .collect();
+        // Patch embedding: (B * patches) x patch_dim x D dense matmul.
+        let patches = st.dims.num_tokens - 1;
+        let patch_embed = mpca
+            .dbmm(batch * patches, st.dims.patch_dim, st.dims.dim)
+            .stage_total(overlap);
+        // Classifier head on the CLS token.
+        let head = mpca
+            .dbmm(batch, st.dims.dim, st.dims.num_classes)
+            .stage_total(overlap);
+        // DMA: image in (int16) + logits out.
+        let in_bytes = batch * st.dims.patch_dim * patches * self.hw.elem_bytes;
+        let out_bytes = batch * st.dims.num_classes * self.hw.elem_bytes;
+        let io = ((in_bytes + out_bytes) as f64 / self.hw.bytes_per_cycle()).ceil() as u64;
+
+        let total_cycles = per_layer.iter().map(|e| e.total()).sum::<u64>()
+            + patch_embed
+            + head
+            + io;
+        let latency_ms = self.hw.cycles_to_ms(total_cycles);
+        LatencyReport {
+            per_layer,
+            patch_embed,
+            head,
+            io,
+            total_cycles,
+            latency_ms,
+            throughput: batch as f64 / (latency_ms / 1e3),
+            batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DEIT_SMALL, HardwareConfig, PruningSetting};
+    use crate::sim::structure::ModelStructure;
+
+    fn sim() -> AcceleratorSim {
+        AcceleratorSim::new(HardwareConfig::u250())
+    }
+
+    fn latency_ms(setting: PruningSetting) -> f64 {
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &setting, 42);
+        sim().model_latency(&st, 1).latency_ms
+    }
+
+    #[test]
+    fn baseline_latency_matches_table6_band() {
+        // Table VI: dense DeiT-Small b=16 -> 3.19 ms, b=32 -> 3.55 ms.
+        let m16 = latency_ms(PruningSetting::dense(16));
+        assert!(m16 > 1.5 && m16 < 6.0, "b16 {}", m16);
+    }
+
+    #[test]
+    fn pruning_reduces_latency_monotonically() {
+        let base = latency_ms(PruningSetting::dense(16));
+        let weak = latency_ms(PruningSetting::new(16, 0.7, 0.9));
+        let strong = latency_ms(PruningSetting::new(16, 0.5, 0.5));
+        assert!(weak < base, "weak {} !< base {}", weak, base);
+        assert!(strong < weak, "strong {} !< weak {}", strong, weak);
+        // Table VI: 3.19 -> 0.868 is a ~3.7x reduction at the strongest
+        // setting; require at least 2x and at most 6x.
+        let ratio = base / strong;
+        assert!(ratio > 2.0 && ratio < 6.0, "ratio {}", ratio);
+    }
+
+    #[test]
+    fn tdm_layers_have_tdm_cycles() {
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.7, 0.7), 1);
+        let s = sim();
+        for l in 0..12 {
+            let e = s.encoder_cycles(&st, l, 1);
+            if st.tdm_layers.contains(&l) {
+                assert!(e.tdm > 0, "layer {}", l);
+            } else {
+                assert_eq!(e.tdm, 0, "layer {}", l);
+            }
+        }
+    }
+
+    #[test]
+    fn later_layers_cheaper_after_token_drop() {
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 1.0, 0.5), 2);
+        let s = sim();
+        let early = s.encoder_cycles(&st, 0, 1).total();
+        let late = s.encoder_cycles(&st, 11, 1).total();
+        assert!(late < early / 2, "late {} vs early {}", late, early);
+    }
+
+    #[test]
+    fn batch_scales_subadditively() {
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::dense(16), 3);
+        let s = sim();
+        let b1 = s.model_latency(&st, 1);
+        let b8 = s.model_latency(&st, 8);
+        assert!(b8.total_cycles < 8 * b1.total_cycles);
+        assert!(b8.throughput > b1.throughput);
+    }
+
+    #[test]
+    fn throughput_is_inverse_latency_at_batch1() {
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 4);
+        let r = sim().model_latency(&st, 1);
+        let expect = 1000.0 / r.latency_ms;
+        assert!((r.throughput - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn msa_dominates_unpruned_encoder() {
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::dense(16), 5);
+        let e = sim().encoder_cycles(&st, 0, 1);
+        assert!(e.msa() + e.mlp() > e.total() * 8 / 10);
+    }
+}

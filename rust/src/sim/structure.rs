@@ -1,0 +1,346 @@
+//! Sparsity structure of a pruned model — the simulator's input.
+//!
+//! Loaded from a `*.structure.json` exported by the python AOT pipeline
+//! (trained/deterministic masks), or synthesized from a pruning setting
+//! with the in-tree PRNG when no artifact is available. Either way the
+//! simulator sees *per-column retained-block counts*, so load imbalance
+//! is simulated from real structure rather than averages.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ModelDims, PruningSetting};
+use crate::complexity::SparsityParams;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-encoder sparsity structure (mirrors python structure_summary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncoderStructure {
+    /// Retained blocks per column of W_qkv (concatenated q,k,v heads).
+    pub qkv_col_blocks: Vec<usize>,
+    /// Total row blocks of W_qkv (= ceil(D / b)).
+    pub qkv_rows: usize,
+    /// Retained blocks per column of W_proj.
+    pub proj_col_blocks: Vec<usize>,
+    pub proj_rows: usize,
+    /// Retained MLP neurons (columns of W_int / rows of W_out).
+    pub neurons_kept: usize,
+    /// Per-head alive bitmap (alternate-pattern coupling).
+    pub heads_kept: Vec<bool>,
+}
+
+impl EncoderStructure {
+    pub fn num_heads_kept(&self) -> usize {
+        self.heads_kept.iter().filter(|&&x| x).count()
+    }
+
+    /// alpha over W_qkv: retained / total blocks.
+    pub fn alpha_qkv(&self) -> f64 {
+        let total = self.qkv_rows * self.qkv_col_blocks.len();
+        if total == 0 {
+            return 1.0;
+        }
+        self.qkv_col_blocks.iter().sum::<usize>() as f64 / total as f64
+    }
+
+    pub fn alpha_proj(&self) -> f64 {
+        let total = self.proj_rows * self.proj_col_blocks.len();
+        if total == 0 {
+            return 1.0;
+        }
+        self.proj_col_blocks.iter().sum::<usize>() as f64 / total as f64
+    }
+}
+
+/// Model dimensions carried inside a structure file (owned copy so a
+/// structure can describe any model, not just the named constants).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dims {
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub dim: usize,
+    pub head_dim: usize,
+    pub mlp_dim: usize,
+    pub num_tokens: usize,
+    pub patch_dim: usize,
+    pub num_classes: usize,
+}
+
+impl From<&ModelDims> for Dims {
+    fn from(m: &ModelDims) -> Self {
+        Dims {
+            num_layers: m.num_layers,
+            num_heads: m.num_heads,
+            dim: m.dim,
+            head_dim: m.head_dim,
+            mlp_dim: m.mlp_dim,
+            num_tokens: m.num_tokens(),
+            patch_dim: m.patch_dim(),
+            num_classes: m.num_classes,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelStructure {
+    pub model_name: String,
+    pub dims: Dims,
+    pub block_size: usize,
+    pub r_b: f64,
+    pub r_t: f64,
+    pub tdm_layers: Vec<usize>,
+    /// Input token count per encoder layer.
+    pub tokens_per_layer: Vec<usize>,
+    pub encoders: Vec<EncoderStructure>,
+}
+
+impl ModelStructure {
+    pub fn setting(&self) -> PruningSetting {
+        PruningSetting {
+            block_size: self.block_size,
+            r_b: self.r_b,
+            r_t: self.r_t,
+            tdm_layers: self.tdm_layers.clone(),
+        }
+    }
+
+    /// Per-layer Table II sparsity parameters derived from the structure.
+    pub fn sparsity_params(&self) -> Vec<SparsityParams> {
+        self.encoders
+            .iter()
+            .map(|e| SparsityParams {
+                alpha: e.alpha_qkv(),
+                alpha_proj: e.alpha_proj(),
+                h_kept: e.num_heads_kept() as f64,
+                alpha_mlp: e.neurons_kept as f64 / self.dims.mlp_dim as f64,
+            })
+            .collect()
+    }
+
+    // -- JSON loader --------------------------------------------------------
+
+    pub fn load(path: &Path) -> Result<ModelStructure> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {}", path.display(), e))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelStructure> {
+        let usize_at = |path: &[&str]| -> Result<usize> {
+            j.at(path)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing/invalid {:?}", path))
+        };
+        let f64_at = |path: &[&str]| -> Result<f64> {
+            j.at(path)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing/invalid {:?}", path))
+        };
+        let usize_arr = |v: &Json| -> Result<Vec<usize>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow!("expected array"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("expected integer")))
+                .collect()
+        };
+
+        let dims = Dims {
+            num_layers: usize_at(&["dims", "num_layers"])?,
+            num_heads: usize_at(&["dims", "num_heads"])?,
+            dim: usize_at(&["dims", "dim"])?,
+            head_dim: usize_at(&["dims", "head_dim"])?,
+            mlp_dim: usize_at(&["dims", "mlp_dim"])?,
+            num_tokens: usize_at(&["dims", "num_tokens"])?,
+            patch_dim: usize_at(&["dims", "patch_dim"])?,
+            num_classes: usize_at(&["dims", "num_classes"])?,
+        };
+        let encoders_json = j
+            .get("encoders")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing encoders"))?;
+        let mut encoders = Vec::with_capacity(encoders_json.len());
+        for e in encoders_json {
+            let heads = e
+                .get("heads_kept")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing heads_kept"))?
+                .iter()
+                .map(|x| x.as_bool().ok_or_else(|| anyhow!("expected bool")))
+                .collect::<Result<Vec<bool>>>()?;
+            encoders.push(EncoderStructure {
+                qkv_col_blocks: usize_arr(
+                    e.get("qkv_col_blocks").ok_or_else(|| anyhow!("missing qkv_col_blocks"))?,
+                )?,
+                qkv_rows: e.get("qkv_rows").and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("missing qkv_rows"))?,
+                proj_col_blocks: usize_arr(
+                    e.get("proj_col_blocks").ok_or_else(|| anyhow!("missing proj_col_blocks"))?,
+                )?,
+                proj_rows: e.get("proj_rows").and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("missing proj_rows"))?,
+                neurons_kept: e.get("neurons_kept").and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("missing neurons_kept"))?,
+                heads_kept: heads,
+            });
+        }
+        if encoders.len() != dims.num_layers {
+            bail!("structure has {} encoders but dims.num_layers={}",
+                  encoders.len(), dims.num_layers);
+        }
+        Ok(ModelStructure {
+            model_name: j.get("model").and_then(Json::as_str).unwrap_or("?").to_string(),
+            dims,
+            block_size: usize_at(&["block_size"])?,
+            r_b: f64_at(&["r_b"])?,
+            r_t: f64_at(&["r_t"])?,
+            tdm_layers: usize_arr(
+                j.get("tdm_layers").ok_or_else(|| anyhow!("missing tdm_layers"))?,
+            )?,
+            tokens_per_layer: usize_arr(
+                j.get("tokens_per_layer").ok_or_else(|| anyhow!("missing tokens_per_layer"))?,
+            )?,
+            encoders,
+        })
+    }
+
+    // -- Synthesis ----------------------------------------------------------
+
+    /// Synthesize a structure with random top-k block masks at rate r_b
+    /// (per-column populations vary — realistic load imbalance), used for
+    /// settings without an exported artifact.
+    pub fn synthesize(dims: &ModelDims, setting: &PruningSetting, seed: u64) -> ModelStructure {
+        let b = setting.block_size;
+        let mut rng = Rng::new(seed);
+        let qkv_rows = dims.dim.div_ceil(b);
+        let qkv_cols = (3 * dims.qkv_dim()).div_ceil(b);
+        let proj_rows = dims.qkv_dim().div_ceil(b);
+        let proj_cols = dims.dim.div_ceil(b);
+        let mut encoders = Vec::with_capacity(dims.num_layers);
+        for _ in 0..dims.num_layers {
+            let qkv = random_col_pops(qkv_rows, qkv_cols, setting.r_b, &mut rng);
+            let proj = random_col_pops(proj_rows, proj_cols, setting.r_b, &mut rng);
+            let neurons =
+                ((dims.mlp_dim as f64 * setting.r_b).round() as usize).clamp(1, dims.mlp_dim);
+            // Random masks practically never kill a whole head (a head
+            // spans many blocks); heads all alive matches Table VI's
+            // high retained ratios (0.83-0.98).
+            encoders.push(EncoderStructure {
+                qkv_col_blocks: qkv,
+                qkv_rows,
+                proj_col_blocks: proj,
+                proj_rows,
+                neurons_kept: neurons,
+                heads_kept: vec![true; dims.num_heads],
+            });
+        }
+        ModelStructure {
+            model_name: dims.name.to_string(),
+            dims: Dims::from(dims),
+            block_size: b,
+            r_b: setting.r_b,
+            r_t: setting.r_t,
+            tdm_layers: setting.tdm_layers.clone(),
+            tokens_per_layer: setting.tokens_per_layer(dims.num_tokens(), dims.num_layers),
+            encoders,
+        }
+    }
+}
+
+/// Random global top-k mask over (rows x cols) blocks -> per-column counts.
+fn random_col_pops(rows: usize, cols: usize, r_b: f64, rng: &mut Rng) -> Vec<usize> {
+    let total = rows * cols;
+    let keep = ((total as f64 * r_b).round() as usize).clamp(1, total);
+    let mut pops = vec![0usize; cols];
+    for idx in rng.choose_k(total, keep) {
+        pops[idx % cols] += 1;
+    }
+    pops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DEIT_SMALL, TEST_TINY};
+
+    #[test]
+    fn synthesize_respects_rb() {
+        let s = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.7), 1);
+        assert_eq!(s.encoders.len(), 12);
+        for e in &s.encoders {
+            let alpha = e.alpha_qkv();
+            assert!((alpha - 0.5).abs() < 0.05, "{}", alpha);
+            assert!(e.qkv_col_blocks.iter().all(|&c| c <= e.qkv_rows));
+        }
+    }
+
+    #[test]
+    fn synthesize_dense_is_full() {
+        let s = ModelStructure::synthesize(&TEST_TINY, &PruningSetting::dense(8), 2);
+        for e in &s.encoders {
+            assert_eq!(e.alpha_qkv(), 1.0);
+            assert_eq!(e.neurons_kept, TEST_TINY.mlp_dim);
+        }
+    }
+
+    #[test]
+    fn sparsity_params_from_structure() {
+        let s = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.7, 0.9), 3);
+        let sp = s.sparsity_params();
+        assert_eq!(sp.len(), 12);
+        for p in sp {
+            assert!((p.alpha - 0.7).abs() < 0.05);
+            assert_eq!(p.h_kept, 6.0);
+            assert!((p.alpha_mlp - 0.7).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_via_python_schema() {
+        // Build JSON matching the python exporter's schema and parse it.
+        let text = r#"{
+ "model": "test-tiny", "block_size": 8, "r_b": 0.7, "r_t": 0.7,
+ "tdm_layers": [1, 2],
+ "tokens_per_layer": [17, 17, 15, 13],
+ "encoders": [
+  {"qkv_col_blocks": [2, 3], "qkv_rows": 4,
+   "proj_col_blocks": [3, 2], "proj_rows": 4,
+   "neurons_kept": 45, "heads_kept": [true, false]},
+  {"qkv_col_blocks": [4, 4], "qkv_rows": 4,
+   "proj_col_blocks": [4, 4], "proj_rows": 4,
+   "neurons_kept": 64, "heads_kept": [true, true]},
+  {"qkv_col_blocks": [1, 1], "qkv_rows": 4,
+   "proj_col_blocks": [1, 1], "proj_rows": 4,
+   "neurons_kept": 32, "heads_kept": [true, true]},
+  {"qkv_col_blocks": [2, 2], "qkv_rows": 4,
+   "proj_col_blocks": [2, 2], "proj_rows": 4,
+   "neurons_kept": 64, "heads_kept": [true, true]}
+ ],
+ "dims": {"num_layers": 4, "num_heads": 2, "dim": 32, "head_dim": 16,
+          "mlp_dim": 64, "num_tokens": 17, "patch_dim": 192,
+          "num_classes": 10}
+}"#;
+        let j = Json::parse(text).unwrap();
+        let s = ModelStructure::from_json(&j).unwrap();
+        assert_eq!(s.model_name, "test-tiny");
+        assert_eq!(s.encoders[0].num_heads_kept(), 1);
+        assert!((s.encoders[0].alpha_qkv() - 5.0 / 8.0).abs() < 1e-9);
+        assert_eq!(s.tokens_per_layer, vec![17, 17, 15, 13]);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_layer_count() {
+        let text = r#"{
+ "model": "x", "block_size": 8, "r_b": 1, "r_t": 1,
+ "tdm_layers": [], "tokens_per_layer": [17],
+ "encoders": [],
+ "dims": {"num_layers": 1, "num_heads": 2, "dim": 32, "head_dim": 16,
+          "mlp_dim": 64, "num_tokens": 17, "patch_dim": 192,
+          "num_classes": 10}
+}"#;
+        let j = Json::parse(text).unwrap();
+        assert!(ModelStructure::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Token Dropping Hardware Module (Section V-C3).
+//!
+//! Pipeline: (1) attention CLS rows buffered as MSA computes them;
+//! (2) EM aggregates scores S = (1/H) sum_h A_h; (3) a bitonic sorting
+//! network sorts S, producing (id_old, id_new, flag) triples; (4) an
+//! index shuffle network routes tokens Old Token Buffer -> New Token
+//! Buffer; (5) the non-top-k tokens are fused by weighted aggregation.
+//!
+//! Cycle model:
+//!   * score aggregation: H-way adds over N scores on the EM lanes;
+//!   * bitonic sort of P = next_pow2(N) keys with P/2 comparators:
+//!     log2(P)*(log2(P)+1)/2 pipelined stages, one stage per cycle,
+//!     + P/lanes fill;
+//!   * shuffle: N tokens x D elements through a `lanes`-wide crossbar;
+//!   * fusion: one MAC pass over the dropped tokens.
+
+use crate::config::HardwareConfig;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TokenDropModule {
+    pub lanes: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TdhmCycles {
+    pub score_agg: u64,
+    pub sort: u64,
+    pub shuffle: u64,
+    pub fusion: u64,
+}
+
+impl TdhmCycles {
+    pub fn total(&self) -> u64 {
+        self.score_agg + self.sort + self.shuffle + self.fusion
+    }
+}
+
+impl TokenDropModule {
+    pub fn new(hw: &HardwareConfig, b: usize) -> Self {
+        TokenDropModule { lanes: hw.p_t * b }
+    }
+
+    /// Bitonic network stage count for n keys.
+    pub fn bitonic_stages(n: usize) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        let k = (n.next_power_of_two()).trailing_zeros() as u64;
+        k * (k + 1) / 2
+    }
+
+    /// Cycles to drop tokens: n input tokens (incl. CLS), d embedding
+    /// dim, h heads, keeping k_kept tokens.
+    pub fn cycles(&self, n: usize, d: usize, h: usize, k_kept: usize) -> TdhmCycles {
+        let lanes = self.lanes as u64;
+        // (1) aggregate h score vectors of n entries.
+        let score_agg = (h as u64 * n as u64).div_ceil(lanes) + 8;
+        // (2) bitonic sort: pipelined stages + fill of n/lanes.
+        let sort = Self::bitonic_stages(n) + (n as u64).div_ceil(lanes);
+        // (3) shuffle all n tokens (gather + route) at `lanes` elems/cycle.
+        let shuffle = (n as u64 * d as u64).div_ceil(lanes) + 16;
+        // (4) fuse the dropped tokens: (n - k_kept) * d MACs + normalize.
+        let dropped = n.saturating_sub(k_kept) as u64;
+        let fusion = (dropped * d as u64).div_ceil(lanes) + 8;
+        TdhmCycles { score_agg, sort, shuffle, fusion }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitonic_stage_counts() {
+        assert_eq!(TokenDropModule::bitonic_stages(1), 0);
+        assert_eq!(TokenDropModule::bitonic_stages(2), 1);
+        assert_eq!(TokenDropModule::bitonic_stages(4), 3);
+        assert_eq!(TokenDropModule::bitonic_stages(256), 36);
+        // 197 -> padded to 256
+        assert_eq!(TokenDropModule::bitonic_stages(197), 36);
+    }
+
+    #[test]
+    fn tdhm_cost_small_vs_msa() {
+        // Section V-E1: TDHM resources/latency are negligible vs MPCA.
+        let hw = HardwareConfig::u250();
+        let t = TokenDropModule::new(&hw, 16);
+        let c = t.cycles(197, 384, 6, 139);
+        assert!(c.total() < 2_000, "{}", c.total());
+    }
+
+    #[test]
+    fn monotone_in_tokens_property() {
+        let hw = HardwareConfig::u250();
+        let t = TokenDropModule::new(&hw, 16);
+        forall(
+            3,
+            100,
+            |r: &mut Rng| {
+                let n = r.range(4, 512);
+                let d = r.range(16, 512);
+                let h = r.range(1, 8);
+                let k = r.range(1, n);
+                (n, d, h, k)
+            },
+            |&(n, d, h, k)| {
+                let c = t.cycles(n, d, h, k);
+                let c2 = t.cycles(n + 64, d, h, k);
+                if c2.total() < c.total() {
+                    return Err(format!("{} < {}", c2.total(), c.total()));
+                }
+                // Keeping more tokens shrinks only fusion.
+                let ck = t.cycles(n, d, h, n);
+                if ck.fusion > c.fusion {
+                    return Err("fusion should shrink with k".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(a) = argv.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if argv
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = argv.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{} expects an integer", key)))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{} expects a number", key)))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // Note: `--flag value` is ambiguous and parsed as an option; a
+        // trailing `--flag` (or `--flag` before another `--opt`) is a flag.
+        let a = parse("serve --variant x --batch=4 pos1 --verbose");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.get("variant"), Some("x"));
+        assert_eq!(a.get_usize("batch", 1), 4);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --n 3");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("r", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree replacements for crates unavailable in the offline environment
+//! (serde_json, rand, clap, proptest).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

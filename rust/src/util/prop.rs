@@ -1,0 +1,74 @@
+//! In-tree property-testing helper (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` on `cases` random values
+//! produced by `gen`; on failure it reports the failing case index and the
+//! Debug rendering of the input. Shrinking is not implemented — generators
+//! here are small and failures print their exact input, which has proven
+//! sufficient for the invariants we check.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+pub fn forall<T: Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed on case {}/{}: {}\ninput: {:?}",
+                i + 1,
+                cases,
+                msg,
+                input
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers returning Result<(), String>.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            1,
+            100,
+            |r| r.range(0, 100),
+            |x| {
+                if *x <= 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(1, 100, |r| r.range(0, 100), |x| {
+            if *x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{} >= 50", x))
+            }
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Functional-datapath model vs the PJRT-executed HLO artifact.
+//!
+//! The FuncSim executes the pruned ViT through the *hardware's* data
+//! structures (Fig. 5 block-sparse headers, bitonic TDHM routing, narrow
+//! MLP); PJRT executes the AOT-lowered jax graph. Same weights, same
+//! input -> the logits must agree. This pins the hardware datapath to
+//! the algorithm spec end-to-end.
+
+use std::path::{Path, PathBuf};
+
+use vitfpga::funcsim::{FuncSim, Precision};
+use vitfpga::runtime::{weights, Engine};
+use vitfpga::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn image_geom(model: &str) -> (usize, usize, usize) {
+    match model {
+        "test-tiny" => (32, 8, 3),
+        _ => (224, 16, 3),
+    }
+}
+
+fn compare(dir: &Path, variant: &str, tol: f32) {
+    let engine = Engine::new(dir).expect("engine");
+    let entry = engine.manifest.find_matching(variant).expect("variant").clone();
+    let pjrt = engine.load(&entry.name).expect("load");
+    let fs = FuncSim::load(
+        &dir.join(&entry.weights_file),
+        &dir.join(&entry.structure_file),
+        image_geom(&entry.model),
+        Precision::F32,
+    )
+    .expect("funcsim");
+
+    let mut rng = Rng::new(11);
+    let per_image = pjrt.input_elems / pjrt.batch();
+    let img: Vec<f32> = (0..per_image).map(|_| rng.normal()).collect();
+    // PJRT artifact has a static batch; replicate the image.
+    let flat: Vec<f32> = (0..pjrt.batch()).flat_map(|_| img.iter().copied()).collect();
+    let want = pjrt.infer(&flat).expect("pjrt infer");
+    let got = fs.forward(&img).expect("funcsim forward");
+    let classes = pjrt.num_classes();
+    let mut max_err = 0.0f32;
+    let mut max_mag = 0.0f32;
+    for (a, b) in got.iter().zip(&want[..classes]) {
+        max_err = max_err.max((a - b).abs());
+        max_mag = max_mag.max(b.abs());
+    }
+    assert!(
+        max_err < tol * max_mag.max(1.0),
+        "{}: funcsim-vs-pjrt max err {} (mag {})",
+        entry.name,
+        max_err,
+        max_mag
+    );
+}
+
+#[test]
+fn funcsim_matches_pjrt_tiny_pruned() {
+    let Some(dir) = artifacts_dir() else { return };
+    compare(&dir, "test-tiny_b8_rb0.7_rt0.7_bs1", 2e-3);
+}
+
+#[test]
+fn funcsim_matches_pjrt_tiny_dense() {
+    let Some(dir) = artifacts_dir() else { return };
+    compare(&dir, "test-tiny_b8_rb1_rt1_bs1", 2e-3);
+}
+
+#[test]
+fn funcsim_matches_pjrt_deit_small() {
+    let Some(dir) = artifacts_dir() else { return };
+    compare(&dir, "deit-small_b16_rb0.5_rt0.5_bs1", 5e-3);
+}
+
+#[test]
+fn int16_datapath_precision_characterized() {
+    // Section VI uses int16: the quantized datapath must track the f32
+    // path closely (this is the accuracy-impact characterization that
+    // lets the paper evaluate accuracy in fp and latency in int16).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let entry = engine
+        .manifest
+        .find_matching("test-tiny_b8_rb0.7_rt0.7_bs1")
+        .expect("variant")
+        .clone();
+    let geom = image_geom(&entry.model);
+    let f32_sim = FuncSim::load(
+        &dir.join(&entry.weights_file),
+        &dir.join(&entry.structure_file),
+        geom,
+        Precision::F32,
+    )
+    .unwrap();
+    let i16_sim = FuncSim::load(
+        &dir.join(&entry.weights_file),
+        &dir.join(&entry.structure_file),
+        geom,
+        Precision::Int16,
+    )
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let mut agree = 0;
+    let total = 8;
+    for _ in 0..total {
+        let img: Vec<f32> = (0..geom.0 * geom.0 * geom.2).map(|_| rng.normal()).collect();
+        let a = f32_sim.forward(&img).unwrap();
+        let b = i16_sim.forward(&img).unwrap();
+        let argmax = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0
+        };
+        if argmax(&a) == argmax(&b) {
+            agree += 1;
+        }
+        // logits stay close in relative terms
+        let mag = a.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-6);
+        let err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err / mag < 0.2, "int16 rel err {}", err / mag);
+    }
+    assert!(agree >= total - 1, "int16 changed {}/{} predictions", total - agree, total);
+}
+
+#[test]
+fn funcsim_detects_weight_corruption() {
+    // Failure injection: corrupting the weights file must either fail to
+    // parse or produce different logits — the check pipeline is not
+    // vacuous.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let entry = engine
+        .manifest
+        .find_matching("test-tiny_b8_rb0.7_rt0.7_bs1")
+        .expect("variant")
+        .clone();
+    let geom = image_geom(&entry.model);
+    let wpath = dir.join(&entry.weights_file);
+    let ts = weights::read_weights(&wpath).unwrap();
+    let st = vitfpga::sim::ModelStructure::load(&dir.join(&entry.structure_file)).unwrap();
+    let clean = FuncSim::from_tensors(&ts, st.clone(), geom, Precision::F32).unwrap();
+
+    let mut corrupted = ts.clone();
+    // flip a weight in the first encoder's qkv
+    let t = corrupted.iter_mut().find(|t| t.name.contains("w_qkv")).unwrap();
+    let nz = t.data.iter().position(|&x| x != 0.0).unwrap();
+    t.data[nz] += 1.0;
+    let dirty = FuncSim::from_tensors(&corrupted, st, geom, Precision::F32).unwrap();
+
+    let mut rng = Rng::new(4);
+    let img: Vec<f32> = (0..geom.0 * geom.0 * geom.2).map(|_| rng.normal()).collect();
+    let a = clean.forward(&img).unwrap();
+    let b = dirty.forward(&img).unwrap();
+    let diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(diff > 1e-6, "corruption was not observable");
+}

@@ -1,0 +1,233 @@
+//! Integration tests over the real AOT artifacts: PJRT round-trip
+//! numerics, the coordinator under concurrent load, and the simulator
+//! consuming python-exported structure files.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! message) when artifacts/ is absent so `cargo test` works standalone.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::runtime::{weights, Engine, Manifest};
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::config::HardwareConfig;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: {} missing (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+/// Replay the python-side self-check through PJRT: logits must match.
+fn check_variant_numerics(dir: &Path, name_substr: &str, tol: f32) {
+    let engine = Engine::new(dir).expect("engine");
+    let entry = engine
+        .manifest
+        .find_matching(name_substr)
+        .unwrap_or_else(|| panic!("variant {} not found", name_substr))
+        .clone();
+    let loaded = engine.load(&entry.name).expect("load variant");
+    let check_path = dir.join(format!("{}.check.bin", entry.name));
+    let tensors = weights::read_weights(&check_path).expect("check file");
+    assert_eq!(tensors.len(), 2);
+    assert_eq!(tensors[0].name, "input");
+    assert_eq!(tensors[1].name, "logits");
+    let got = loaded.infer(&tensors[0].data).expect("infer");
+    let want = &tensors[1].data;
+    assert_eq!(got.len(), want.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in got.iter().zip(want) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err < tol,
+        "{}: rust-vs-python logits max err {} > {}",
+        entry.name,
+        max_err,
+        tol
+    );
+}
+
+#[test]
+fn pjrt_roundtrip_matches_python_tiny() {
+    let Some(dir) = artifacts_dir() else { return };
+    check_variant_numerics(&dir, "test-tiny_b8_rb0.7_rt0.7_bs1", 1e-3);
+}
+
+#[test]
+fn pjrt_roundtrip_matches_python_tiny_baseline() {
+    let Some(dir) = artifacts_dir() else { return };
+    check_variant_numerics(&dir, "test-tiny_b8_rb1_rt1_bs1", 1e-3);
+}
+
+#[test]
+fn pjrt_roundtrip_matches_python_kernel_variant() {
+    // The Pallas-kernel artifact must agree with python too — proving the
+    // interpret-mode kernels lower into HLO the CPU PJRT can execute.
+    let Some(dir) = artifacts_dir() else { return };
+    check_variant_numerics(&dir, "test-tiny_b8_rb0.7_rt0.7_bs1_kernels", 1e-3);
+}
+
+#[test]
+fn pjrt_roundtrip_matches_python_deit_small() {
+    let Some(dir) = artifacts_dir() else { return };
+    check_variant_numerics(&dir, "deit-small_b16_rb0.5_rt0.5_bs1", 2e-3);
+}
+
+#[test]
+fn kernel_and_jnp_artifacts_agree() {
+    // Same weights, same input -> the kernel-path artifact and the
+    // jnp-path artifact must produce identical predictions.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let a = engine.load("test-tiny_b8_rb0.7_rt0.7_bs1").expect("jnp variant");
+    let b = engine
+        .load("test-tiny_b8_rb0.7_rt0.7_bs1_kernels")
+        .expect("kernel variant");
+    let mut rng = vitfpga::util::rng::Rng::new(99);
+    let img: Vec<f32> = (0..a.input_elems).map(|_| rng.normal()).collect();
+    let la = a.infer(&img).unwrap();
+    let lb = b.infer(&img).unwrap();
+    let max_err = la
+        .iter()
+        .zip(&lb)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "kernel vs jnp artifacts differ by {}", max_err);
+}
+
+#[test]
+fn batch4_variant_consistent_with_batch1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let b1 = engine.load("test-tiny_b8_rb0.7_rt0.7_bs1").expect("bs1");
+    let b4 = engine.load("test-tiny_b8_rb0.7_rt0.7_bs4").expect("bs4");
+    let per_image = b1.input_elems;
+    let mut rng = vitfpga::util::rng::Rng::new(5);
+    let imgs: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..per_image).map(|_| rng.normal()).collect())
+        .collect();
+    let flat: Vec<f32> = imgs.iter().flatten().copied().collect();
+    let batch_logits = b4.infer(&flat).unwrap();
+    let classes = b4.num_classes();
+    for (i, img) in imgs.iter().enumerate() {
+        let single = b1.infer(img).unwrap();
+        let row = &batch_logits[i * classes..(i + 1) * classes];
+        let max_err = single
+            .iter()
+            .zip(row)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "image {} batch-vs-single err {}", i, max_err);
+    }
+}
+
+#[test]
+fn coordinator_serves_concurrent_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(4) };
+    let coord = Arc::new(
+        Coordinator::start(&dir, "test-tiny_b8_rb0.7_rt0.7_bs4", policy).expect("start"),
+    );
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..8u64 {
+                let mut rng = vitfpga::util::rng::Rng::new(c * 100 + i);
+                let img: Vec<f32> = (0..coord.input_elems_per_image)
+                    .map(|_| rng.normal())
+                    .collect();
+                let resp = coord.infer(img).expect("infer");
+                assert_eq!(resp.logits.len(), coord.num_classes);
+                assert!(resp.predicted_class < coord.num_classes);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics().expect("metrics");
+    assert_eq!(m.requests, 32);
+    assert!(m.batches <= 32);
+    assert!(m.mean_batch_occupancy >= 1.0);
+}
+
+#[test]
+fn coordinator_batches_under_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) };
+    let coord = Arc::new(
+        Coordinator::start(&dir, "test-tiny_b8_rb0.7_rt0.7_bs4", policy).expect("start"),
+    );
+    // Fire 16 requests at once; with a 20 ms window the batcher should
+    // pack them into fewer than 16 executions.
+    let mut rxs = Vec::new();
+    for i in 0..16u64 {
+        let mut rng = vitfpga::util::rng::Rng::new(i);
+        let img: Vec<f32> = (0..coord.input_elems_per_image)
+            .map(|_| rng.normal())
+            .collect();
+        rxs.push(coord.submit(img).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().expect("response");
+    }
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.requests, 16);
+    assert!(m.batches < 16, "no batching happened: {} batches", m.batches);
+    assert!(m.mean_batch_occupancy > 1.0);
+}
+
+#[test]
+fn coordinator_rejects_wrong_image_size() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::start(
+        &dir,
+        "test-tiny_b8_rb0.7_rt0.7_bs1",
+        BatchPolicy::default(),
+    )
+    .expect("start");
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn simulator_consumes_python_structure_files() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    for v in &manifest.variants {
+        let st = ModelStructure::load(&dir.join(&v.structure_file)).expect("structure");
+        assert_eq!(st.block_size, v.pruning.block_size);
+        let r = sim.model_latency(&st, 1);
+        assert!(r.total_cycles > 0);
+        assert!(r.latency_ms.is_finite());
+        // trained/deterministic masks: alpha within 10% of nominal r_b
+        for sp in st.sparsity_params() {
+            assert!((sp.alpha - st.r_b).abs() < 0.1,
+                    "{}: alpha {} vs r_b {}", v.name, sp.alpha, st.r_b);
+        }
+    }
+}
+
+#[test]
+fn deit_small_structure_latency_close_to_synthesized() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let Some(v) = manifest.find_matching("deit-small_b16_rb0.5_rt0.5") else { return };
+    let st = ModelStructure::load(&dir.join(&v.structure_file)).expect("structure");
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    let from_artifact = sim.model_latency(&st, 1).latency_ms;
+    let synth = ModelStructure::synthesize(
+        &vitfpga::config::DEIT_SMALL, &v.pruning, 42);
+    let from_synth = sim.model_latency(&synth, 1).latency_ms;
+    let ratio = from_artifact / from_synth;
+    assert!(ratio > 0.8 && ratio < 1.25,
+            "artifact {} vs synth {}", from_artifact, from_synth);
+}

@@ -1,0 +1,251 @@
+//! Cross-module property tests (in-tree `forall` helper; proptest is
+//! unavailable offline). These pin the *relationships* between the
+//! models: pruning can only reduce cost, the analytic and loop-level
+//! cycle models stay ordered, serialization round-trips, and the
+//! simulator's latency surface is monotone in both pruning rates.
+
+use vitfpga::complexity::{model_complexity, model_size};
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL, TEST_TINY};
+use vitfpga::formats::quant;
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::util::json::Json;
+use vitfpga::util::prop::forall;
+use vitfpga::util::rng::Rng;
+
+fn rand_setting(r: &mut Rng) -> PruningSetting {
+    let b = if r.bool(0.5) { 16 } else { 32 };
+    let r_b = 0.3 + 0.7 * r.f64();
+    let r_t = 0.3 + 0.7 * r.f64();
+    PruningSetting::new(b, (r_b * 10.0).round() / 10.0, (r_t * 10.0).round() / 10.0)
+}
+
+#[test]
+fn latency_monotone_in_rb() {
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    forall(
+        1,
+        30,
+        |r| {
+            let s = rand_setting(r);
+            let seed = r.next_u64();
+            (s, seed)
+        },
+        |(s, seed)| {
+            let mut denser = s.clone();
+            denser.r_b = (s.r_b + 0.2).min(1.0);
+            let a = sim
+                .model_latency(&ModelStructure::synthesize(&DEIT_SMALL, s, *seed), 1)
+                .latency_ms;
+            let b = sim
+                .model_latency(&ModelStructure::synthesize(&DEIT_SMALL, &denser, *seed), 1)
+                .latency_ms;
+            if a > b * 1.02 {
+                return Err(format!("r_b={} gave {} > denser {}", s.r_b, a, b));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn latency_monotone_in_rt() {
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    forall(
+        2,
+        30,
+        |r| (rand_setting(r), r.next_u64()),
+        |(s, seed)| {
+            let mut keepier = s.clone();
+            keepier.r_t = (s.r_t + 0.2).min(1.0);
+            let a = sim
+                .model_latency(&ModelStructure::synthesize(&DEIT_SMALL, s, *seed), 1)
+                .latency_ms;
+            let b = sim
+                .model_latency(&ModelStructure::synthesize(&DEIT_SMALL, &keepier, *seed), 1)
+                .latency_ms;
+            if a > b * 1.02 {
+                return Err(format!("r_t={} gave {} > keepier {}", s.r_t, a, b));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pruned_complexity_never_exceeds_dense() {
+    forall(
+        3,
+        100,
+        |r| rand_setting(r),
+        |s| {
+            let dense = model_complexity(&DEIT_SMALL, &PruningSetting::dense(s.block_size), 1, None);
+            let pruned = model_complexity(&DEIT_SMALL, s, 1, None);
+            // TDM adds small elementwise work; matmul MACs must not grow.
+            if pruned.macs() > dense.macs() {
+                return Err(format!("{} > {}", pruned.macs(), dense.macs()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn model_size_monotone_in_rb() {
+    forall(
+        4,
+        100,
+        |r| rand_setting(r),
+        |s| {
+            let mut denser = s.clone();
+            denser.r_b = (s.r_b + 0.1).min(1.0);
+            let a = model_size(&DEIT_SMALL, s).pruned_params;
+            let b = model_size(&DEIT_SMALL, &denser).pruned_params;
+            if a > b {
+                return Err(format!("params {} > {}", a, b));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn analytic_model_lower_bounds_loop_sim_with_imbalance() {
+    // Real (skewed) structures can only be slower than the uniform-phi
+    // analytic estimate with load balancing on.
+    use vitfpga::sim::perf_model;
+    let hw = HardwareConfig::u250();
+    let mut bhw = hw;
+    bhw.row_streaming = false;
+    let sim = vitfpga::sim::Mpca::new(bhw, 16);
+    forall(
+        5,
+        50,
+        |r| {
+            let heads = r.range(1, 8);
+            let cols = r.range(1, 16);
+            let rows = r.range(1, 30);
+            let pops: Vec<Vec<usize>> = (0..heads)
+                .map(|_| (0..cols).map(|_| r.range(0, rows)).collect())
+                .collect();
+            (pops, rows)
+        },
+        |(pops, rows)| {
+            let heads = pops.len();
+            let cols = pops[0].len();
+            let total: usize = pops.iter().flat_map(|p| p.iter()).sum();
+            let avg_phi = total as f64 / (heads * cols * rows).max(1) as f64;
+            let ana = perf_model::sbmm_cycles(
+                &bhw, heads, 13 * 16, rows * 16, cols * 16, avg_phi, 16);
+            let sim_c = sim.sbmm(13, pops).compute;
+            // loop-level >= analytic * 0.99 (analytic ceil can slightly
+            // overshoot the per-column exact count on tiny cases)
+            if (sim_c as f64) < ana as f64 * 0.5 {
+                return Err(format!("sim {} << analytic {}", sim_c, ana));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    fn rand_json(r: &mut Rng, depth: usize) -> Json {
+        // Rng::range is inclusive: scalars only at depth 0.
+        match if depth == 0 { r.range(0, 2) } else { r.range(0, 4) } {
+            0 => Json::Num((r.range(0, 10_000) as f64) / 8.0),
+            1 => Json::Bool(r.bool(0.5)),
+            2 => Json::Str(format!("s{}-\"x\"\n", r.range(0, 99))),
+            3 => Json::Arr((0..r.range(0, 4)).map(|_| rand_json(r, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..r.range(0, 4) {
+                    m.insert(format!("k{}", i), rand_json(r, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall(
+        6,
+        200,
+        |r| rand_json(r, 3),
+        |j| {
+            let text = j.to_string_pretty();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            if back != *j {
+                return Err(format!("roundtrip mismatch: {}", text));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn int16_roundtrip_error_bounded() {
+    forall(
+        7,
+        100,
+        |r| {
+            let n = r.range(1, 2000);
+            let scale = 10f32.powi(r.range(0, 6) as i32 - 3);
+            (0..n).map(|_| r.normal() * scale).collect::<Vec<f32>>()
+        },
+        |data| {
+            let err = quant::roundtrip_error(data);
+            if err.max_rel > 1.0 / 16384.0 {
+                return Err(format!("max_rel {}", err.max_rel));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tokens_per_layer_conserved_across_structures() {
+    // synthesize() must agree with PruningSetting::tokens_per_layer.
+    forall(
+        8,
+        50,
+        |r| (rand_setting(r), r.next_u64()),
+        |(s, seed)| {
+            let st = ModelStructure::synthesize(&TEST_TINY, s, *seed);
+            let want = s.tokens_per_layer(TEST_TINY.num_tokens(), TEST_TINY.num_layers);
+            if st.tokens_per_layer != want {
+                return Err(format!("{:?} != {:?}", st.tokens_per_layer, want));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn structure_storage_matches_block_sparse_bytes() {
+    // memory model vs the actual packed format: encoder weight bytes from
+    // the structure must equal the BlockSparseMatrix storage computed from
+    // a matching matrix (headers + payload), for the MSA part.
+    use vitfpga::formats::BlockSparseMatrix;
+    use vitfpga::sim::memory::encoder_weight_bytes;
+    let mut rng = Rng::new(9);
+    let s = PruningSetting::new(16, 0.5, 1.0);
+    let st = ModelStructure::synthesize(&TEST_TINY, &s, 11);
+    let e = &st.encoders[0];
+    // Build a matrix with exactly the same per-column populations.
+    let dense_mb = e.qkv_col_blocks.len();
+    let rows = e.qkv_rows;
+    let mut mask = vec![false; rows * dense_mb];
+    for (j, &cnt) in e.qkv_col_blocks.iter().enumerate() {
+        for i in 0..cnt {
+            mask[i * dense_mb + j] = true;
+        }
+    }
+    let w: Vec<f32> = (0..rows * 16 * dense_mb * 16).map(|_| rng.normal()).collect();
+    let sp = BlockSparseMatrix::from_dense(&w, (rows * 16, dense_mb * 16), 16, &mask, dense_mb);
+    let qkv_blocks: usize = e.qkv_col_blocks.iter().sum();
+    let proj_blocks: usize = e.proj_col_blocks.iter().sum();
+    let total = encoder_weight_bytes(&st, 0, 2);
+    let msa_bytes = sp.storage_bytes(2)
+        + proj_blocks * 16 * 16 * 2 + e.proj_col_blocks.len() * 4 + proj_blocks * 4;
+    let mlp_bytes = 2 * st.dims.dim * e.neurons_kept * 2;
+    assert_eq!(total, msa_bytes + mlp_bytes,
+               "memory model disagrees with packed format ({} qkv blocks)", qkv_blocks);
+}
