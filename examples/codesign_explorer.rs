@@ -20,17 +20,13 @@ const MAX_BUFFER_BYTES: usize = 36_000_000;
 
 fn main() {
     let args = Args::from_env();
+    // NOTE: parse_label's missing-part defaults are dense (rb1/rt1); pass
+    // the full label to explore a pruned design point.
     let label = args.get_or("setting", "b16_rb0.5_rt0.5");
-    let mut setting = PruningSetting::new(16, 0.5, 0.5);
-    for part in label.split('_') {
-        if let Some(v) = part.strip_prefix("rb") {
-            setting.r_b = v.parse().unwrap();
-        } else if let Some(v) = part.strip_prefix("rt") {
-            setting.r_t = v.parse().unwrap();
-        } else if let Some(v) = part.strip_prefix('b') {
-            setting.block_size = v.parse().unwrap();
-        }
-    }
+    let setting = PruningSetting::parse_label(label).unwrap_or_else(|e| {
+        eprintln!("error: --setting: {}", e);
+        std::process::exit(1);
+    });
     let st = ModelStructure::synthesize(&DEIT_SMALL, &setting, 42);
 
     println!(

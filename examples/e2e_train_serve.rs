@@ -4,7 +4,7 @@
 //! lowering, PJRT execution behind the coordinator, and the cycle-level
 //! latency estimate for the *trained* sparsity structure.
 //!
-//!     cargo run --release --example e2e_train_serve
+//!     cargo run --release --features pjrt --example e2e_train_serve
 //!     (add --retrain to force the python phase; --steps N to change it)
 //!
 //! The python phase runs ONCE at build time; serving afterwards is pure
@@ -73,8 +73,8 @@ fn main() -> Result<()> {
 
     // --- runtime phase: serve the trained model ---------------------------
     let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
-    let coord = Arc::new(Coordinator::start(&out, "bs4", policy)?);
-    println!("[e2e] serving trained variant {} ...", coord.variant_name);
+    let coord = Arc::new(Coordinator::start_pjrt(&out, "bs4", policy)?);
+    println!("[e2e] serving trained variant {} ...", coord.backend_name);
     let requests = args.get_usize("requests", 64);
     let concurrency = 4;
     let t0 = std::time::Instant::now();

@@ -1,51 +1,51 @@
-//! Quickstart: load a pruned-ViT artifact, run one inference through the
-//! PJRT runtime, and estimate its latency on the simulated U250
-//! accelerator.
+//! Quickstart: build a pruned ViT, run one inference through the native
+//! datapath twin (block-sparse SpMM + bitonic TDHM), and estimate its
+//! latency on the simulated U250 accelerator. Runs from a clean checkout
+//! — no python phase, no artifacts, no XLA toolchain.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Optional: --artifacts DIR --variant NAME
-
-use std::path::PathBuf;
+//! Optional: --model deit-small --setting b16_rb0.5_rt0.5 --seed N
+//! With trained artifacts (`make artifacts`): --artifacts DIR --variant NAME
+//! loads the exported VITW0001 weights instead of synthesizing.
 
 use anyhow::Result;
+use vitfpga::backend::{Backend, NativeBackend};
 use vitfpga::config::HardwareConfig;
-use vitfpga::runtime::Engine;
-use vitfpga::sim::{AcceleratorSim, ModelStructure};
+use vitfpga::sim::AcceleratorSim;
 use vitfpga::util::cli::Args;
 use vitfpga::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let variant = args.get_or("variant", "deit-small_b16_rb0.5_rt0.5_bs1");
 
-    // 1. Functional path: PJRT executes the AOT-lowered pruned model.
-    let engine = Engine::new(&dir)?;
-    let model = engine.load(variant)?;
-    println!("loaded variant: {}", model.entry.name);
+    // 1. Functional path: the native backend executes the pruned model
+    //    through the hardware's data structures (shared
+    //    --variant/--artifacts/--model/--setting/--seed/--int16 handling).
+    let mut backend = NativeBackend::from_cli(&args)?;
+    let st = backend.funcsim().st.clone();
+    println!("loaded backend: {}", backend.name());
     println!(
         "  pruning: b={} r_b={} r_t={} tdm_layers={:?}",
-        model.entry.pruning.block_size,
-        model.entry.pruning.r_b,
-        model.entry.pruning.r_t,
-        model.entry.pruning.tdm_layers
+        st.block_size, st.r_b, st.r_t, st.tdm_layers
     );
 
     let mut rng = Rng::new(7);
-    let image: Vec<f32> = (0..model.input_elems).map(|_| rng.normal()).collect();
+    let image: Vec<f32> = (0..backend.input_elems_per_image())
+        .map(|_| rng.normal())
+        .collect();
     let t0 = std::time::Instant::now();
-    let logits = model.infer(&image)?;
+    let logits = backend.infer_batch(&image, 1)?;
     let wall = t0.elapsed();
     let (class, logit) = logits
         .iter()
         .enumerate()
         .fold((0, f32::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
     println!("  predicted class {} (logit {:.4})", class, logit);
-    println!("  PJRT wall latency: {:.2} ms (functional path, CPU)", wall.as_secs_f64() * 1e3);
+    println!("  native wall latency: {:.2} ms (datapath twin, CPU)",
+             wall.as_secs_f64() * 1e3);
 
     // 2. Performance path: cycle-level latency on the simulated U250.
-    let st = ModelStructure::load(&dir.join(&model.entry.structure_file))?;
     let sim = AcceleratorSim::new(HardwareConfig::u250());
     let report = sim.model_latency(&st, 1);
     println!(

@@ -1,36 +1,57 @@
 //! Serving example: run the coordinator (router + dynamic batcher +
-//! PJRT engine) against a synthetic client load and report latency
+//! engine actor) against a synthetic client load and report latency
 //! percentiles + throughput — the serving-systems view of the paper's
 //! accelerator.
 //!
+//! Works from a clean checkout: the default `native` backend synthesizes
+//! a structure-honouring pruned model and serves it through the
+//! block-sparse SpMM + bitonic-TDHM datapath, batched across cores.
+//!
 //!     cargo run --release --example serve -- \
-//!         --variant test-tiny_b8_rb0.7_rt0.7_bs4 \
-//!         --requests 128 --concurrency 8 --max-batch 4 --max-wait-ms 2
+//!         --model test-tiny --setting b8_rb0.7_rt0.7 \
+//!         --requests 128 --concurrency 8 --max-batch 8 --max-wait-ms 2
+//!
+//! With trained artifacts: add `--variant NAME [--artifacts DIR]` (still
+//! native — reads the VITW0001 weights directly), or build with
+//! `--features pjrt` and pass `--backend pjrt` for the XLA runtime.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+use vitfpga::backend::NativeBackend;
 use vitfpga::coordinator::{BatchPolicy, Coordinator};
 use vitfpga::util::cli::Args;
 use vitfpga::util::rng::Rng;
 
+fn start(args: &Args, policy: BatchPolicy) -> Result<Coordinator> {
+    match args.get_or("backend", "native") {
+        // Shared --variant/--artifacts/--model/--setting/--int16 handling.
+        "native" => Coordinator::start(NativeBackend::from_cli(args)?, policy),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+            Coordinator::start_pjrt(
+                &dir, args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4"), policy)
+        }
+        other => bail!("unknown backend '{}' (this build supports: native{})",
+                       other, if cfg!(feature = "pjrt") { ", pjrt" } else { "" }),
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4");
     let requests = args.get_usize("requests", 128);
     let concurrency = args.get_usize("concurrency", 8);
     let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 4),
+        max_batch: args.get_usize("max-batch", 8),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
     };
 
-    let coord = Arc::new(Coordinator::start(&dir, variant, policy)?);
+    let coord = Arc::new(start(&args, policy)?);
     println!(
         "serving {}: {} requests x {} clients, policy max_batch={} max_wait={:?}",
-        coord.variant_name, requests, concurrency, policy.max_batch, policy.max_wait
+        coord.backend_name, requests, concurrency, policy.max_batch, policy.max_wait
     );
 
     let t0 = std::time::Instant::now();

@@ -2,21 +2,33 @@
 //!
 //!   H1. block-sparse SpMM (the software mirror of the PE header walk);
 //!   H2. cycle simulator throughput (model_latency calls/sec);
-//!   H3. weights-file parsing;
-//!   H4. PJRT end-to-end inference (tiny + deit-small), if artifacts exist;
-//!   H5. coordinator round-trip overhead vs bare PJRT.
+//!   H3. weights-file parsing (if artifacts exist);
+//!   H4. PJRT end-to-end inference (tiny + deit-small), `--features pjrt`
+//!       + artifacts only;
+//!   H5. coordinator round-trip overhead vs bare PJRT (same gating);
+//!   H6. funcsim datapath twin on deit-small (if artifacts exist);
+//!   H7. NativeBackend::infer_batch across batch sizes {1,4,8,16} vs a
+//!       serial per-image loop — written to BENCH_native_forward.json so
+//!       later perf PRs have a trajectory to beat.
 
 mod common;
 
-use std::path::Path;
-use std::time::Duration;
+use std::path::PathBuf;
+use std::time::Instant;
 
-use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL};
-use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::backend::{Backend, NativeBackend};
+use vitfpga::config::{HardwareConfig, PruningSetting, DEIT_SMALL, TEST_TINY};
 use vitfpga::formats::BlockSparseMatrix;
-use vitfpga::runtime::{weights, Engine};
+use vitfpga::funcsim::{FuncSim, Precision};
+use vitfpga::runtime::weights;
 use vitfpga::sim::{AcceleratorSim, ModelStructure};
 use vitfpga::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("VITFPGA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
 
 fn main() {
     let mut rng = Rng::new(0);
@@ -50,9 +62,9 @@ fn main() {
         std::hint::black_box(sim.model_latency(&st, 1));
     });
 
-    // H3: weights parsing.
-    let dir = Path::new("artifacts");
+    let dir = artifacts_dir();
     if dir.join("manifest.json").exists() {
+        // H3: weights parsing.
         let wpath = dir.join("test-tiny_b8_rb0.7_rt0.7_bs1.weights.bin");
         if wpath.exists() {
             let bytes = std::fs::read(&wpath).unwrap();
@@ -60,58 +72,166 @@ fn main() {
                 std::hint::black_box(weights::parse_weights(&bytes).unwrap());
             });
         }
+        pjrt_benches(&dir, &mut rng);
 
-        // H4: PJRT inference.
-        let engine = Engine::new(dir).expect("engine");
-        if let Ok(tiny) = engine.load("test-tiny_b8_rb0.7_rt0.7_bs1") {
-            let img: Vec<f32> = (0..tiny.input_elems).map(|_| rng.normal()).collect();
-            common::bench("H4 PJRT infer test-tiny bs1", 100, || {
-                std::hint::black_box(tiny.infer(&img).unwrap());
-            });
-        }
-        if let Ok(small) = engine.load("deit-small_b16_rb0.5_rt0.5_bs1") {
-            let img: Vec<f32> = (0..small.input_elems).map(|_| rng.normal()).collect();
-            common::bench("H4 PJRT infer deit-small rb0.5 bs1", 10, || {
-                std::hint::black_box(small.infer(&img).unwrap());
-            });
-        }
-        if let Ok(base) = engine.load("deit-small_b16_rb1_rt1_bs1") {
-            let img: Vec<f32> = (0..base.input_elems).map(|_| rng.normal()).collect();
-            common::bench("H4 PJRT infer deit-small dense bs1", 10, || {
-                std::hint::black_box(base.infer(&img).unwrap());
-            });
-        }
-
-        // H6: functional datapath twin (block-sparse + bitonic TDHM).
-        if let Some(entry) = engine.manifest.find_matching("deit-small_b16_rb0.5_rt0.5_bs1") {
-            use vitfpga::funcsim::{FuncSim, Precision};
-            let fs = FuncSim::load(
-                &dir.join(&entry.weights_file),
-                &dir.join(&entry.structure_file),
-                (224, 16, 3),
-                Precision::F32,
-            )
-            .expect("funcsim");
-            let img: Vec<f32> = (0..224 * 224 * 3).map(|_| rng.normal()).collect();
-            common::bench("H6 funcsim deit-small rb0.5 (datapath twin)", 5, || {
-                std::hint::black_box(fs.forward(&img).unwrap());
-            });
-        }
-
-        // H5: coordinator overhead.
-        if let Ok(coord) = Coordinator::start(
-            dir,
-            "test-tiny_b8_rb0.7_rt0.7_bs1",
-            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
-        ) {
-            let img: Vec<f32> = (0..coord.input_elems_per_image)
-                .map(|_| rng.normal())
-                .collect();
-            common::bench("H5 coordinator round-trip (bs1)", 100, || {
-                std::hint::black_box(coord.infer(img.clone()).unwrap());
-            });
+        // H6: functional datapath twin on trained deit-small weights.
+        if let Ok(manifest) = vitfpga::runtime::Manifest::load(&dir) {
+            if let Some(entry) = manifest.find_matching("deit-small_b16_rb0.5_rt0.5_bs1") {
+                let fs = FuncSim::load(
+                    &dir.join(&entry.weights_file),
+                    &dir.join(&entry.structure_file),
+                    (224, 16, 3),
+                    Precision::F32,
+                )
+                .expect("funcsim");
+                let img: Vec<f32> = (0..224 * 224 * 3).map(|_| rng.normal()).collect();
+                let mut scratch = fs.scratch();
+                common::bench("H6 funcsim deit-small rb0.5 (datapath twin)", 5, || {
+                    std::hint::black_box(fs.forward_with(&img, &mut scratch).unwrap());
+                });
+            }
         }
     } else {
-        println!("[bench] artifacts/ missing — skipping H3-H5 (run `make artifacts`)");
+        println!(
+            "[bench] {} missing — skipping H3-H6 (run `make artifacts` / set \
+             VITFPGA_ARTIFACTS)",
+            dir.display()
+        );
+    }
+
+    // H7: native batched engine — the BENCH_native_forward.json series.
+    native_backend_bench(&mut rng);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(dir: &std::path::Path, rng: &mut Rng) {
+    use std::time::Duration;
+    use vitfpga::coordinator::{BatchPolicy, Coordinator};
+    use vitfpga::runtime::Engine;
+
+    // H4: PJRT inference.
+    let engine = Engine::new(dir).expect("engine");
+    if let Ok(tiny) = engine.load("test-tiny_b8_rb0.7_rt0.7_bs1") {
+        let img: Vec<f32> = (0..tiny.input_elems).map(|_| rng.normal()).collect();
+        common::bench("H4 PJRT infer test-tiny bs1", 100, || {
+            std::hint::black_box(tiny.infer(&img).unwrap());
+        });
+    }
+    if let Ok(small) = engine.load("deit-small_b16_rb0.5_rt0.5_bs1") {
+        let img: Vec<f32> = (0..small.input_elems).map(|_| rng.normal()).collect();
+        common::bench("H4 PJRT infer deit-small rb0.5 bs1", 10, || {
+            std::hint::black_box(small.infer(&img).unwrap());
+        });
+    }
+    if let Ok(base) = engine.load("deit-small_b16_rb1_rt1_bs1") {
+        let img: Vec<f32> = (0..base.input_elems).map(|_| rng.normal()).collect();
+        common::bench("H4 PJRT infer deit-small dense bs1", 10, || {
+            std::hint::black_box(base.infer(&img).unwrap());
+        });
+    }
+
+    // H5: coordinator overhead.
+    if let Ok(coord) = Coordinator::start_pjrt(
+        dir,
+        "test-tiny_b8_rb0.7_rt0.7_bs1",
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+    ) {
+        let img: Vec<f32> = (0..coord.input_elems_per_image)
+            .map(|_| rng.normal())
+            .collect();
+        common::bench("H5 coordinator round-trip (bs1)", 100, || {
+            std::hint::black_box(coord.infer(img.clone()).unwrap());
+        });
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_dir: &std::path::Path, _rng: &mut Rng) {
+    println!("[bench] built without --features pjrt — skipping H4/H5");
+}
+
+/// Median wall ms of `f` over `iters` runs (after one warmup).
+fn median_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f();
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn native_backend_bench(rng: &mut Rng) {
+    let setting = PruningSetting::new(8, 0.7, 0.7);
+    let mut nb = NativeBackend::synthetic(&TEST_TINY, &setting, 42, Precision::F32)
+        .expect("native backend")
+        .with_batch_capacity(16);
+    let threads = nb.threads();
+    let per = nb.input_elems_per_image();
+    let max_batch = 16usize;
+    let flat: Vec<f32> = (0..max_batch * per).map(|_| rng.normal()).collect();
+
+    // Serial per-image baseline at batch 8: the loop the parallel engine
+    // must beat (acceptance: >= 3x images/sec on a >= 4-core machine).
+    let sim = FuncSim::synthesize(&TEST_TINY, &setting, 42, Precision::F32).unwrap();
+    let mut scratch = sim.scratch();
+    let serial_ms = median_ms(30, || {
+        for i in 0..8 {
+            std::hint::black_box(
+                sim.forward_with(&flat[i * per..(i + 1) * per], &mut scratch).unwrap(),
+            );
+        }
+    });
+    let serial_ips = 8.0 / (serial_ms / 1e3);
+    println!(
+        "[bench] H7 serial per-image loop (batch 8)          p50 {:>9.4} ms   {:>9.1} img/s",
+        serial_ms, serial_ips
+    );
+
+    let mut rows = Vec::new();
+    let mut ips_batch8 = 0.0f64;
+    for &batch in &[1usize, 4, 8, 16] {
+        let span = &flat[..batch * per];
+        let ms = median_ms(30, || {
+            std::hint::black_box(nb.infer_batch(span, batch).unwrap());
+        });
+        let ips = batch as f64 / (ms / 1e3);
+        if batch == 8 {
+            ips_batch8 = ips;
+        }
+        println!(
+            "[bench] H7 NativeBackend::infer_batch (batch {:>2})    p50 {:>9.4} ms   {:>9.1} img/s",
+            batch, ms, ips
+        );
+        rows.push(format!(
+            "    {{\"batch\": {}, \"p50_ms\": {:.4}, \"images_per_sec\": {:.1}}}",
+            batch, ms, ips
+        ));
+    }
+    let speedup = ips_batch8 / serial_ips;
+    println!(
+        "[bench] H7 parallel speedup at batch 8: {:.2}x over serial ({} threads)",
+        speedup, threads
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"native_forward\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
+         \"threads\": {},\n  \"serial_batch8_p50_ms\": {:.4},\n  \
+         \"serial_batch8_images_per_sec\": {:.1},\n  \"speedup_batch8\": {:.2},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        TEST_TINY.name,
+        setting.label(),
+        threads,
+        serial_ms,
+        serial_ips,
+        speedup,
+        rows.join(",\n")
+    );
+    let out = "BENCH_native_forward.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("[bench] wrote {}", out),
+        Err(e) => eprintln!("[bench] could not write {}: {}", out, e),
     }
 }

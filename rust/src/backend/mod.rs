@@ -1,0 +1,58 @@
+//! Pluggable inference backends — the execution substrate under the
+//! serving coordinator.
+//!
+//! The coordinator owns request routing, dynamic batching, metrics and
+//! response plumbing; *how a batch of images becomes logits* is behind
+//! the [`Backend`] trait:
+//!
+//! * [`NativeBackend`] — the pure-Rust datapath twin (`funcsim`), made
+//!   servable: scratch-arena forward passes fanned across cores with
+//!   `std::thread::scope`. No artifacts or XLA toolchain required — it
+//!   can load VITW0001 weights from an artifacts dir or synthesize a
+//!   structure-honouring model on the spot.
+//! * `PjrtBackend` (`--features pjrt`) — thin adapter over the PJRT/XLA
+//!   artifact runtime (`runtime::Engine`); pads ragged batches to the
+//!   artifact's static batch dimension.
+//!
+//! Later scaling work (sharding, multi-engine, caching) composes here:
+//! a new substrate implements five methods and inherits the whole
+//! serving stack.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+
+/// An inference engine that turns a batch of images into logits.
+///
+/// Contract for [`Backend::infer_batch`]:
+/// * `flat` holds exactly `batch * input_elems_per_image()` f32s
+///   (row-major, image-major);
+/// * `1 <= batch <= batch_capacity()`;
+/// * the result holds exactly `batch * num_classes()` f32s, image-major —
+///   implementations with a static device batch (PJRT) pad internally
+///   and truncate the padded outputs before returning.
+///
+/// `&mut self` lets implementations keep reusable state (scratch arenas,
+/// staging buffers) without interior mutability; the coordinator runs the
+/// backend on a dedicated engine thread.
+pub trait Backend {
+    /// Human-readable identity, e.g. `native:test-tiny_b8_rb0.7_rt0.7`.
+    fn name(&self) -> &str;
+
+    /// Largest batch `infer_batch` accepts in one call.
+    fn batch_capacity(&self) -> usize;
+
+    fn num_classes(&self) -> usize;
+
+    /// f32 elements of one input image (H * W * C, NHWC).
+    fn input_elems_per_image(&self) -> usize;
+
+    /// Run `batch` images; returns `batch * num_classes()` logits.
+    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>>;
+}

@@ -1,0 +1,267 @@
+//! Pure-Rust batched inference over the funcsim datapath twin.
+//!
+//! Per-image work is embarrassingly parallel (each image's dynamic
+//! token-pruning routes independently), so `infer_batch` splits the
+//! batch into contiguous spans and runs them on scoped worker threads.
+//! Each worker owns a [`ForwardScratch`] arena cached across calls —
+//! after warmup the hot path allocates only the output logits vector.
+//! Per-image results are bit-identical to a serial `FuncSim::forward`
+//! loop: both run `forward_into`, and parallelism never reorders any
+//! per-image float operation (TDHM kept-token sets included).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::Backend;
+use crate::config::{model_by_name, ModelDims, PruningSetting};
+use crate::funcsim::{ForwardScratch, FuncSim, Precision};
+use crate::runtime::Manifest;
+use crate::util::cli::Args;
+
+/// Default cap on requests fused into one native batch; the dynamic
+/// batcher clamps its policy to this. Unlike an AOT artifact the native
+/// path has no static batch dimension, so this is a knob, not a limit
+/// baked into the model.
+pub const DEFAULT_BATCH_CAPACITY: usize = 64;
+
+pub struct NativeBackend {
+    sim: FuncSim,
+    name: String,
+    threads: usize,
+    capacity: usize,
+    /// One arena per worker slot, grown lazily, reused across batches.
+    scratches: Vec<ForwardScratch>,
+}
+
+impl NativeBackend {
+    /// Wrap an already-built FuncSim; worker count defaults to the
+    /// machine's available parallelism.
+    pub fn new(sim: FuncSim) -> NativeBackend {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let name = format!(
+            "native:{}_b{}_rb{}_rt{}",
+            sim.st.model_name, sim.st.block_size, sim.st.r_b, sim.st.r_t
+        );
+        NativeBackend {
+            sim,
+            name,
+            threads,
+            capacity: DEFAULT_BATCH_CAPACITY,
+            scratches: Vec::new(),
+        }
+    }
+
+    /// Fully synthetic model (structure + weights from `seed`): the
+    /// artifact-free serving path.
+    pub fn synthetic(dims: &ModelDims, setting: &PruningSetting, seed: u64,
+                     precision: Precision) -> Result<NativeBackend> {
+        Ok(Self::new(FuncSim::synthesize(dims, setting, seed, precision)?))
+    }
+
+    /// Load trained weights + structure from an artifacts directory by
+    /// (substring) variant name. Reads only the VITW0001/JSON files —
+    /// works without the XLA toolchain or the `pjrt` feature.
+    pub fn from_artifacts(artifacts_dir: &Path, variant: &str,
+                          precision: Precision) -> Result<NativeBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let entry = manifest
+            .find(variant)
+            .or_else(|| manifest.find_matching(variant))
+            .with_context(|| format!("variant '{}' not in manifest", variant))?;
+        let dims = model_by_name(&entry.model)
+            .ok_or_else(|| anyhow!("unknown model '{}' in manifest", entry.model))?;
+        let sim = FuncSim::load(
+            &manifest.path_of(&entry.weights_file),
+            &manifest.path_of(&entry.structure_file),
+            (dims.image_size, dims.patch_size, dims.in_channels),
+            precision,
+        )?;
+        let mut nb = Self::new(sim);
+        nb.name = format!("native:{}", entry.name);
+        Ok(nb)
+    }
+
+    /// Build from parsed CLI args — the one
+    /// `--variant/--artifacts/--model/--setting/--seed/--int16`
+    /// convention shared by the `vitfpga` CLI and the examples.
+    /// `--variant` loads trained weights and *requires* an artifacts
+    /// dir; without it a model is synthesized from `--model/--setting`.
+    pub fn from_cli(args: &Args) -> Result<NativeBackend> {
+        let precision = if args.has_flag("int16") {
+            Precision::Int16
+        } else {
+            Precision::F32
+        };
+        if let Some(variant) = args.get("variant") {
+            let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+            if !dir.join("manifest.json").exists() {
+                bail!(
+                    "--variant {} requires artifacts but {} has no manifest.json \
+                     (run `make artifacts`, or drop --variant to serve a synthetic model)",
+                    variant,
+                    dir.display()
+                );
+            }
+            return Self::from_artifacts(&dir, variant, precision);
+        }
+        let model = args.get_or("model", "test-tiny");
+        let dims = model_by_name(model)
+            .ok_or_else(|| anyhow!("unknown model '{}'", model))?;
+        let setting = PruningSetting::parse_label(args.get_or("setting", "b8_rb0.7_rt0.7"))
+            .map_err(|e| anyhow!("--setting: {}", e))?;
+        Self::synthetic(&dims, &setting, args.get_usize("seed", 42) as u64, precision)
+            .context("synthesizing native model")
+    }
+
+    /// Override the worker-thread count (1 = serial; useful for tests
+    /// and the bench's serial baseline).
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_batch_capacity(mut self, capacity: usize) -> NativeBackend {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// The underlying datapath model (reference path for tests).
+    pub fn funcsim(&self) -> &FuncSim {
+        &self.sim
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn num_classes(&self) -> usize {
+        self.sim.num_classes()
+    }
+
+    fn input_elems_per_image(&self) -> usize {
+        self.sim.input_elems()
+    }
+
+    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let per = self.sim.input_elems();
+        let classes = self.sim.num_classes();
+        if batch == 0 || batch > self.capacity {
+            bail!("batch {} outside 1..={}", batch, self.capacity);
+        }
+        if flat.len() != batch * per {
+            bail!("flat batch has {} f32s, expected {} ({} images x {})",
+                  flat.len(), batch * per, batch, per);
+        }
+
+        let workers = self.threads.min(batch).max(1);
+        while self.scratches.len() < workers {
+            self.scratches.push(self.sim.scratch());
+        }
+
+        let mut logits = vec![0.0f32; batch * classes];
+        if workers == 1 {
+            let scratch = &mut self.scratches[0];
+            for i in 0..batch {
+                self.sim.forward_into(
+                    &flat[i * per..(i + 1) * per],
+                    scratch,
+                    &mut logits[i * classes..(i + 1) * classes],
+                )?;
+            }
+            return Ok(logits);
+        }
+
+        let sim = &self.sim;
+        let outcome = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            let mut logits_rest: &mut [f32] = &mut logits;
+            let mut flat_rest: &[f32] = flat;
+            let mut start = 0usize;
+            for (w, scratch) in self.scratches[..workers].iter_mut().enumerate() {
+                let end = (batch * (w + 1)) / workers;
+                let count = end - start;
+                let (span_out, rest_out) =
+                    std::mem::take(&mut logits_rest).split_at_mut(count * classes);
+                logits_rest = rest_out;
+                let (span_in, rest_in) = flat_rest.split_at(count * per);
+                flat_rest = rest_in;
+                start = end;
+                handles.push(s.spawn(move || -> Result<()> {
+                    for i in 0..count {
+                        sim.forward_into(
+                            &span_in[i * per..(i + 1) * per],
+                            scratch,
+                            &mut span_out[i * classes..(i + 1) * classes],
+                        )?;
+                    }
+                    Ok(())
+                }));
+            }
+            let mut first_err = None;
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                    Err(_) => {
+                        first_err =
+                            first_err.or_else(|| Some(anyhow!("native worker panicked")));
+                    }
+                }
+            }
+            first_err
+        });
+        match outcome {
+            None => Ok(logits),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TEST_TINY;
+    use crate::util::rng::Rng;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::synthetic(
+            &TEST_TINY, &PruningSetting::new(8, 0.7, 0.7), 42, Precision::F32)
+            .unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_batch_shapes() {
+        let mut nb = backend().with_batch_capacity(4);
+        let per = nb.input_elems_per_image();
+        assert!(nb.infer_batch(&vec![0.0; 5 * per], 5).is_err()); // over capacity
+        assert!(nb.infer_batch(&vec![0.0; per - 1], 1).is_err()); // short image
+        assert!(nb.infer_batch(&[], 0).is_err());
+    }
+
+    #[test]
+    fn single_worker_matches_forward() {
+        let mut nb = backend().with_threads(1);
+        let per = nb.input_elems_per_image();
+        let mut rng = Rng::new(8);
+        let flat: Vec<f32> = (0..2 * per).map(|_| rng.normal()).collect();
+        let got = nb.infer_batch(&flat, 2).unwrap();
+        let classes = nb.num_classes();
+        for i in 0..2 {
+            let want = nb.funcsim().forward(&flat[i * per..(i + 1) * per]).unwrap();
+            assert_eq!(&got[i * classes..(i + 1) * classes], want.as_slice());
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! PJRT/XLA artifact backend (`--features pjrt`).
+//!
+//! Thin adapter making the AOT artifact runtime (`runtime::Engine` /
+//! `runtime::LoadedVariant`) servable through the [`Backend`] trait. The
+//! artifact's batch dimension is static (AOT shapes), so ragged batches
+//! are padded by replicating the last image and the padded rows are
+//! dropped from the returned logits.
+//!
+//! PJRT handles are not `Send`; build this backend *on the engine thread*
+//! via [`crate::coordinator::Coordinator::start_with`] (which is exactly
+//! what [`crate::coordinator::Coordinator::start_pjrt`] does).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::backend::Backend;
+use crate::coordinator::batcher::pad_batch;
+use crate::runtime::{Engine, LoadedVariant};
+
+pub struct PjrtBackend {
+    loaded: LoadedVariant,
+    name: String,
+}
+
+impl PjrtBackend {
+    /// Compile `variant` (exact or substring name) from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<PjrtBackend> {
+        let engine = Engine::new(artifacts_dir)?;
+        let loaded = engine.load(variant)?;
+        let name = format!("pjrt:{}", loaded.entry.name);
+        Ok(PjrtBackend { loaded, name })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.loaded.entry.name
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.loaded.batch()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.loaded.num_classes()
+    }
+
+    fn input_elems_per_image(&self) -> usize {
+        self.loaded.input_elems / self.loaded.batch()
+    }
+
+    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let model_batch = self.loaded.batch();
+        let per = self.input_elems_per_image();
+        if batch == 0 || batch > model_batch {
+            bail!("batch {} outside 1..={} (static artifact batch)", batch, model_batch);
+        }
+        if flat.len() != batch * per {
+            bail!("flat batch has {} f32s, expected {} ({} images x {})",
+                  flat.len(), batch * per, batch, per);
+        }
+        let classes = self.num_classes();
+        let mut logits = if batch == model_batch {
+            self.loaded.infer(flat)?
+        } else {
+            // Pad to the static batch (replicating the last image) with
+            // the batcher's shared helper; padded outputs are dropped.
+            let images: Vec<&[f32]> = flat.chunks(per).collect();
+            self.loaded.infer(&pad_batch(&images, model_batch, per))?
+        };
+        logits.truncate(batch * classes);
+        Ok(logits)
+    }
+}

@@ -134,12 +134,36 @@ impl PruningSetting {
         self.r_b < 1.0 || self.r_t < 1.0
     }
 
-    /// Token count after one TDM: 1 (CLS) + ceil((n-1)*r_t) + 1 (fused).
+    /// Token count after one TDM: 1 (CLS) + max(ceil((n-1)*r_t), 1) + 1
+    /// (fused). The inner max matches the TDHM datapath, which always
+    /// keeps at least one non-CLS token.
     pub fn tokens_after_tdm(&self, n: usize) -> usize {
         if self.r_t >= 1.0 {
             return n;
         }
-        1 + (((n - 1) as f64) * self.r_t).ceil() as usize + 1
+        1 + ((((n - 1) as f64) * self.r_t).ceil().max(1.0) as usize) + 1
+    }
+
+    /// Parse a `b16_rb0.5_rt0.7` label (any subset of parts; missing
+    /// parts keep the dense b16 defaults). Inverse of [`Self::label`];
+    /// the one parser every CLI/example shares.
+    pub fn parse_label(label: &str) -> Result<PruningSetting, String> {
+        let mut s = PruningSetting::dense(16);
+        for part in label.split('_') {
+            if let Some(v) = part.strip_prefix("rb") {
+                s.r_b = v.parse().map_err(|_| format!("bad r_b in '{}'", part))?;
+            } else if let Some(v) = part.strip_prefix("rt") {
+                s.r_t = v.parse().map_err(|_| format!("bad r_t in '{}'", part))?;
+            } else if let Some(v) = part.strip_prefix('b') {
+                s.block_size =
+                    v.parse().map_err(|_| format!("bad block size in '{}'", part))?;
+            } else if !part.is_empty() {
+                return Err(format!(
+                    "unrecognized setting part '{}' (expected bN, rbX, rtX)", part
+                ));
+            }
+        }
+        Ok(s)
     }
 
     /// Number of *input* tokens per encoder layer.
@@ -286,6 +310,18 @@ mod tests {
         assert!(counts[7] < counts[6]);
         assert!(counts[10] < counts[9]);
         assert_eq!(counts[1], counts[2]);
+    }
+
+    #[test]
+    fn parse_label_roundtrips_and_rejects_typos() {
+        for s in table6_settings() {
+            assert_eq!(PruningSetting::parse_label(&s.label()).unwrap(), s);
+        }
+        // partial labels keep dense b16 defaults
+        let p = PruningSetting::parse_label("rt0.5").unwrap();
+        assert_eq!((p.block_size, p.r_b, p.r_t), (16, 1.0, 0.5));
+        assert!(PruningSetting::parse_label("b16_rx0.5").is_err());
+        assert!(PruningSetting::parse_label("bASDF").is_err());
     }
 
     #[test]

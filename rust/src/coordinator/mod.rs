@@ -1,23 +1,24 @@
 //! Serving coordinator (L3): request router + dynamic batcher + engine
-//! actor over the PJRT runtime. Python never runs here — the artifacts
-//! are self-contained after `make artifacts`.
+//! actor over a pluggable inference [`Backend`]. Python never runs here.
 //!
 //! Architecture (vLLM-router-like, scaled to one device):
 //!
 //!   clients -> submit() -> mpsc queue -> engine thread
 //!                                         |  Batcher (size/timeout)
-//!                                         |  pad -> PJRT execute
+//!                                         |  Backend::infer_batch
 //!                                         -> per-request responders
 //!
-//! The PJRT executable lives on a dedicated engine thread (actor
-//! pattern), which also sidesteps any Send/Sync questions about the
-//! underlying C++ handles.
+//! The backend lives on a dedicated engine thread (actor pattern): the
+//! batcher, metrics and responder plumbing are shared across backends,
+//! and the thread confinement sidesteps Send/Sync questions about
+//! non-Send substrates (PJRT's C++ handles). Backends that *are* Send
+//! (the native engine) start via [`Coordinator::start`]; others are
+//! constructed on the engine thread via [`Coordinator::start_with`].
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -29,7 +30,7 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsReport};
 pub use request::{InferenceRequest, InferenceResponse};
 
-use crate::runtime::Engine;
+use crate::backend::Backend;
 
 enum Msg {
     Infer(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>),
@@ -37,41 +38,57 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle to a running coordinator; cloneable across client threads.
+/// Handle to a running coordinator; shareable across client threads
+/// (wrap in `Arc`). Not generic over the backend — the engine thread is
+/// monomorphized, the handle is plain.
 pub struct Coordinator {
     tx: mpsc::Sender<Msg>,
     next_id: AtomicU64,
     engine_thread: Option<JoinHandle<()>>,
-    pub variant_name: String,
+    /// Backend identity, e.g. `native:test-tiny_b8_rb0.7_rt0.7`.
+    pub backend_name: String,
     pub input_elems_per_image: usize,
     pub num_classes: usize,
+    /// Effective per-dispatch batch bound (policy clamped to the
+    /// backend's capacity).
+    pub batch_capacity: usize,
 }
 
 impl Coordinator {
-    /// Start the engine thread serving `variant` from `artifacts_dir`.
-    ///
-    /// PJRT handles are not Send, so the Engine and the compiled variant
-    /// are constructed *inside* the engine thread; the init outcome comes
-    /// back over a one-shot channel.
-    pub fn start(artifacts_dir: &Path, variant: &str, policy: BatchPolicy) -> Result<Coordinator> {
-        let dir = artifacts_dir.to_path_buf();
-        let variant = variant.to_string();
+    /// Start the engine thread over an already-built (Send) backend —
+    /// the native path.
+    pub fn start<B>(backend: B, policy: BatchPolicy) -> Result<Coordinator>
+    where
+        B: Backend + Send + 'static,
+    {
+        Self::start_with(move || Ok(backend), policy)
+    }
+
+    /// Start the engine thread, constructing the backend *on* it via
+    /// `factory`. Required for non-Send substrates: PJRT handles are not
+    /// Send, so the Engine and compiled variant must be built inside the
+    /// engine thread; the init outcome comes back over a one-shot
+    /// channel.
+    pub fn start_with<B, F>(factory: F, policy: BatchPolicy) -> Result<Coordinator>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (init_tx, init_rx) = mpsc::channel::<Result<(String, usize, usize, usize)>>();
 
         let engine_thread = std::thread::Builder::new()
             .name("vitfpga-engine".into())
             .spawn(move || {
-                let loaded = match Engine::new(&dir).and_then(|e| e.load(&variant)) {
-                    Ok(l) => {
-                        let batch = l.batch();
+                let backend = match factory() {
+                    Ok(b) => {
                         let _ = init_tx.send(Ok((
-                            l.entry.name.clone(),
-                            l.input_elems / batch,
-                            l.num_classes(),
-                            batch,
+                            b.name().to_string(),
+                            b.input_elems_per_image(),
+                            b.num_classes(),
+                            b.batch_capacity(),
                         )));
-                        l
+                        b
                     }
                     Err(e) => {
                         let _ = init_tx.send(Err(e));
@@ -79,15 +96,14 @@ impl Coordinator {
                     }
                 };
                 let policy = BatchPolicy {
-                    max_batch: policy.max_batch.min(loaded.batch()),
+                    max_batch: policy.max_batch.min(backend.batch_capacity()).max(1),
                     ..policy
                 };
-                let per_image = loaded.input_elems / loaded.batch();
-                engine_loop(loaded, policy, per_image, rx)
+                engine_loop(backend, policy, rx)
             })
             .context("spawning engine thread")?;
 
-        let (name, per_image, num_classes, _batch) = init_rx
+        let (name, per_image, num_classes, capacity) = init_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during init"))??;
 
@@ -95,10 +111,26 @@ impl Coordinator {
             tx,
             next_id: AtomicU64::new(1),
             engine_thread: Some(engine_thread),
-            variant_name: name,
+            backend_name: name,
             input_elems_per_image: per_image,
             num_classes,
+            batch_capacity: capacity.min(policy.max_batch.max(1)),
         })
+    }
+
+    /// Start over the PJRT artifact runtime (back-compat entry point).
+    #[cfg(feature = "pjrt")]
+    pub fn start_pjrt(
+        artifacts_dir: &std::path::Path,
+        variant: &str,
+        policy: BatchPolicy,
+    ) -> Result<Coordinator> {
+        let dir = artifacts_dir.to_path_buf();
+        let variant = variant.to_string();
+        Self::start_with(
+            move || crate::backend::PjrtBackend::load(&dir, &variant),
+            policy,
+        )
     }
 
     /// Submit one image; returns a receiver for the response.
@@ -146,18 +178,15 @@ impl Drop for Coordinator {
     }
 }
 
-fn engine_loop(
-    loaded: crate::runtime::LoadedVariant,
-    policy: BatchPolicy,
-    per_image: usize,
-    rx: mpsc::Receiver<Msg>,
-) {
+fn engine_loop<B: Backend>(mut backend: B, policy: BatchPolicy, rx: mpsc::Receiver<Msg>) {
+    let per_image = backend.input_elems_per_image();
+    let classes = backend.num_classes();
     let mut batcher = Batcher::new(policy);
     let mut metrics = Metrics::new();
     let mut pending: Vec<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)> =
         Vec::new();
-    let model_batch = loaded.batch();
-    let classes = loaded.num_classes();
+    // Flat image staging, reused across dispatches.
+    let mut flat: Vec<f32> = Vec::new();
 
     loop {
         // Wait for work: block if idle, poll with deadline if batching.
@@ -191,9 +220,13 @@ fn engine_loop(
         while batcher.ready() {
             let batch_reqs = batcher.take_batch();
             let n = batch_reqs.len();
-            let images: Vec<&[f32]> = batch_reqs.iter().map(|r| r.image.as_slice()).collect();
-            let flat = batcher::pad_batch(&images, model_batch, per_image);
-            let result = loaded.infer(&flat);
+            debug_assert!(n * per_image > 0);
+            flat.clear();
+            flat.reserve(n * per_image);
+            for r in &batch_reqs {
+                flat.extend_from_slice(&r.image);
+            }
+            let result = backend.infer_batch(&flat, n);
             metrics.record_batch(n);
             match result {
                 Ok(logits) => {

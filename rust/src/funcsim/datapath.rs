@@ -9,6 +9,13 @@
 //! its logits are cross-checked against the PJRT-executed HLO artifact
 //! in rust/tests/funcsim.rs (f32 mode ≈ 1e-3; int16 mode characterizes
 //! the Section VI datapath precision).
+//!
+//! The forward pass is written against a [`ForwardScratch`] arena so the
+//! serving backend can run many images without per-image allocation:
+//! every intermediate (embedded tokens, QKV, attention, MLP hidden) lives
+//! in a preallocated buffer sized for the model's worst-case token count,
+//! and [`FuncSim::forward_into`] reuses it across calls. The one-shot
+//! [`FuncSim::forward`] wrapper keeps the original per-image API.
 
 use std::path::Path;
 
@@ -63,6 +70,88 @@ pub struct FuncSim {
     image_size: usize,
     patch_size: usize,
     in_channels: usize,
+    /// Precomputed max token count over the layer schedule (scratch
+    /// sizing bound; constant per model, so not derived per image).
+    max_tokens: usize,
+}
+
+/// Max token count any layer sees. The TDM maps n to
+/// `tokens_after_tdm(n)` (CLS + kept + fused), which can exceed n for
+/// tiny n, so take the max over the whole schedule rather than assuming
+/// monotone.
+fn schedule_max_tokens(st: &ModelStructure) -> usize {
+    let setting = st.setting();
+    let mut n = st.dims.num_tokens;
+    let mut n_max = n;
+    for l in 0..st.dims.num_layers {
+        if st.tdm_layers.contains(&l) && st.r_t < 1.0 {
+            n = setting.tokens_after_tdm(n);
+            n_max = n_max.max(n);
+        }
+    }
+    n_max
+}
+
+/// Preallocated intermediate buffers for one in-flight image.
+///
+/// Sized for the model's *maximum* token count across layers (a TDM can
+/// transiently grow very small token counts by the fused token), so every
+/// layer's slices fit without reallocation. Obtain one per worker thread
+/// with [`FuncSim::scratch`] and reuse it across `forward_into` calls —
+/// the forward pass fully overwrites (or zero-fills before accumulating
+/// into) every region it reads, so no state leaks between images.
+#[derive(Debug)]
+pub struct ForwardScratch {
+    // Compatibility fingerprint: forward_into rejects a scratch whose
+    // geometry does not match the model it runs.
+    n_max: usize,
+    dim: usize,
+    qkv_dim: usize,
+    mlp_dim: usize,
+    patches: Vec<f32>,
+    z: Vec<f32>,
+    zn: Vec<f32>,
+    qkv: Vec<f32>,
+    sa: Vec<f32>,
+    attn_row: Vec<f32>,
+    cls_attn_mean: Vec<f32>,
+    zp: Vec<f32>,
+    tdm_out: Vec<f32>,
+    fused: Vec<f32>,
+    zn2: Vec<f32>,
+    h: Vec<f32>,
+    mlp_out: Vec<f32>,
+    cls_tok: Vec<f32>,
+}
+
+impl ForwardScratch {
+    fn new(sim: &FuncSim) -> ForwardScratch {
+        let d = sim.st.dims.dim;
+        let qkv_dim = sim.st.dims.num_heads * sim.st.dims.head_dim;
+        let dm = sim.st.dims.mlp_dim;
+        let n_patches = sim.st.dims.num_tokens - 1;
+        let n_max = sim.max_tokens();
+        ForwardScratch {
+            n_max,
+            dim: d,
+            qkv_dim,
+            mlp_dim: dm,
+            patches: vec![0.0; n_patches * sim.st.dims.patch_dim],
+            z: vec![0.0; n_max * d],
+            zn: vec![0.0; n_max * d],
+            qkv: vec![0.0; n_max * 3 * qkv_dim],
+            sa: vec![0.0; n_max * qkv_dim],
+            attn_row: vec![0.0; n_max],
+            cls_attn_mean: vec![0.0; n_max],
+            zp: vec![0.0; n_max * d],
+            tdm_out: vec![0.0; n_max * d],
+            fused: vec![0.0; d],
+            zn2: vec![0.0; n_max * d],
+            h: vec![0.0; n_max * dm],
+            mlp_out: vec![0.0; n_max * d],
+            cls_tok: vec![0.0; d],
+        }
+    }
 }
 
 fn quantize_roundtrip(data: &mut [f32]) {
@@ -172,6 +261,7 @@ impl FuncSim {
         let w_head = maybe_quant(next("w_head")?);
         let b_head = next("b_head")?;
 
+        let max_tokens = schedule_max_tokens(&st);
         Ok(FuncSim {
             st,
             precision,
@@ -187,7 +277,29 @@ impl FuncSim {
             image_size: image_geom.0,
             patch_size: image_geom.1,
             in_channels: image_geom.2,
+            max_tokens,
         })
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.st.dims.num_classes
+    }
+
+    /// f32 elements of one input image (H * W * C, NHWC).
+    pub fn input_elems(&self) -> usize {
+        self.image_size * self.image_size * self.in_channels
+    }
+
+    /// Max token count any layer sees — the scratch-arena sizing bound
+    /// (precomputed at construction).
+    pub fn max_tokens(&self) -> usize {
+        self.max_tokens
+    }
+
+    /// Allocate a scratch arena sized for this model. One per worker
+    /// thread; reuse across `forward_into` calls.
+    pub fn scratch(&self) -> ForwardScratch {
+        ForwardScratch::new(self)
     }
 
     fn maybe_quant_act(&self, x: &mut [f32]) {
@@ -196,21 +308,55 @@ impl FuncSim {
         }
     }
 
-    /// Forward one image (H*W*C f32, NHWC) -> logits.
+    /// Forward one image (H*W*C f32, NHWC) -> logits. Allocates a fresh
+    /// scratch arena; hot paths should hold one and use [`forward_with`].
+    ///
+    /// [`forward_with`]: FuncSim::forward_with
     pub fn forward(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let mut scratch = self.scratch();
+        self.forward_with(image, &mut scratch)
+    }
+
+    /// Forward one image reusing a preallocated scratch arena.
+    pub fn forward_with(&self, image: &[f32], scratch: &mut ForwardScratch) -> Result<Vec<f32>> {
+        let mut logits = vec![0.0f32; self.st.dims.num_classes];
+        self.forward_into(image, scratch, &mut logits)?;
+        Ok(logits)
+    }
+
+    /// Allocation-free forward: image -> `logits` (len num_classes),
+    /// all intermediates in `scratch`. The result is bit-identical to
+    /// [`FuncSim::forward`] — both run this code.
+    pub fn forward_into(&self, image: &[f32], scratch: &mut ForwardScratch,
+                        logits: &mut [f32]) -> Result<()> {
         let d = self.st.dims.dim;
-        let expect = self.image_size * self.image_size * self.in_channels;
+        let expect = self.input_elems();
         if image.len() != expect {
             bail!("image has {} f32s, expected {}", image.len(), expect);
         }
+        if logits.len() != self.st.dims.num_classes {
+            bail!("logits buffer has {} slots, expected {}",
+                  logits.len(), self.st.dims.num_classes);
+        }
+        let qkv_dim = self.st.dims.num_heads * self.st.dims.head_dim;
+        if scratch.dim != d
+            || scratch.qkv_dim != qkv_dim
+            || scratch.mlp_dim != self.st.dims.mlp_dim
+            || scratch.n_max < self.max_tokens()
+            || scratch.z.len() != scratch.n_max * d
+            || scratch.patches.len() != (self.st.dims.num_tokens - 1) * self.st.dims.patch_dim
+        {
+            bail!("scratch arena does not fit this model (build it with FuncSim::scratch)");
+        }
 
         // Patchify + embed + CLS + positions.
-        let patches = self.patchify(image);
+        self.patchify_into(image, &mut scratch.patches);
         let n_patches = self.st.dims.num_tokens - 1;
         let pd = self.st.dims.patch_dim;
-        let mut z = vec![0.0f32; (n_patches + 1) * d];
+        let z = &mut scratch.z[..(n_patches + 1) * d];
         z[..d].copy_from_slice(&self.cls);
-        matmul_into(&patches, &self.w_embed, n_patches, pd, d, &mut z[d..]);
+        z[d..].fill(0.0);
+        matmul_into(&scratch.patches, &self.w_embed, n_patches, pd, d, &mut z[d..]);
         for t in 1..=n_patches {
             for j in 0..d {
                 z[t * d + j] += self.b_embed[j];
@@ -220,34 +366,32 @@ impl FuncSim {
             *zi += pi;
         }
 
-        // Encoders.
+        // Encoders: each layer reads scratch.z[..n*d], leaves its output
+        // in scratch.z[..n_out*d].
         let mut n = n_patches + 1;
         for (l, enc) in self.encoders.iter().enumerate() {
             let has_tdm = self.st.tdm_layers.contains(&l) && self.st.r_t < 1.0;
-            z = self.encoder(&z, n, enc, has_tdm)?;
-            if has_tdm {
-                n = self.st.setting().tokens_after_tdm(n);
-            }
-            debug_assert_eq!(z.len(), n * d);
+            n = self.encoder_into(scratch, n, enc, has_tdm);
         }
 
         // Head on the CLS token.
-        let mut cls_tok = z[..d].to_vec();
-        layer_norm(&mut cls_tok, &self.ln_g, &self.ln_b, d);
+        let cls_tok = &mut scratch.cls_tok;
+        cls_tok.copy_from_slice(&scratch.z[..d]);
+        layer_norm(cls_tok, &self.ln_g, &self.ln_b, d);
         let classes = self.st.dims.num_classes;
-        let mut logits = vec![0.0f32; classes];
-        matmul_into(&cls_tok, &self.w_head, 1, d, classes, &mut logits);
+        logits.fill(0.0);
+        matmul_into(cls_tok, &self.w_head, 1, d, classes, logits);
         for (o, b) in logits.iter_mut().zip(self.b_head.iter()) {
             *o += b;
         }
-        Ok(logits)
+        Ok(())
     }
 
-    fn patchify(&self, image: &[f32]) -> Vec<f32> {
+    fn patchify_into(&self, image: &[f32], out: &mut [f32]) {
         let p = self.patch_size;
         let c = self.in_channels;
         let side = self.image_size / p;
-        let mut out = vec![0.0f32; side * side * p * p * c];
+        debug_assert_eq!(out.len(), side * side * p * p * c);
         let row = self.image_size * c;
         for ph in 0..side {
             for pw in 0..side {
@@ -262,40 +406,51 @@ impl FuncSim {
                 }
             }
         }
-        out
     }
 
-    fn encoder(&self, z: &[f32], n: usize, w: &EncoderWeights,
-               has_tdm: bool) -> Result<Vec<f32>> {
+    /// One encoder layer over scratch.z[..n*d]; returns the output token
+    /// count (result left in scratch.z[..n_out*d]).
+    fn encoder_into(&self, scratch: &mut ForwardScratch, n: usize,
+                    w: &EncoderWeights, has_tdm: bool) -> usize {
         let d = self.st.dims.dim;
         let nh = self.st.dims.num_heads;
         let hd = self.st.dims.head_dim;
         let qkv_dim = nh * hd;
+        // Destructure for disjoint borrows of the arena's buffers.
+        let ForwardScratch {
+            z, zn, qkv, sa, attn_row, cls_attn_mean, zp, tdm_out, fused,
+            zn2, h, mlp_out, ..
+        } = scratch;
+        let z = &mut z[..n * d];
 
         // LN1 -> QKV via SpMM (stage i).
-        let mut zn = z.to_vec();
+        let zn = &mut zn[..n * d];
+        zn.copy_from_slice(z);
         for t in 0..n {
             layer_norm(&mut zn[t * d..(t + 1) * d], &w.ln1_g, &w.ln1_b, d);
         }
-        let mut qkv = w.w_qkv.spmm(&zn, n);
+        let qkv = &mut qkv[..n * 3 * qkv_dim];
+        w.w_qkv.spmm_into(zn, n, qkv);
         for t in 0..n {
             for j in 0..3 * qkv_dim {
                 qkv[t * 3 * qkv_dim + j] += w.b_qkv[j];
             }
         }
-        self_maybe_quant(self, &mut qkv);
+        self.maybe_quant_act(qkv);
 
         // Per-head attention (stages ii-iii) + CLS row capture for TDM.
-        let mut sa = vec![0.0f32; n * qkv_dim];
-        let mut cls_attn_mean = vec![0.0f32; n];
+        let sa = &mut sa[..n * qkv_dim];
+        sa.fill(0.0);
+        let cls_attn_mean = &mut cls_attn_mean[..n];
+        cls_attn_mean.fill(0.0);
+        let attn_row = &mut attn_row[..n];
         let scale = 1.0 / (hd as f32).sqrt();
         let stride = 3 * qkv_dim;
-        for h in 0..nh {
-            let qo = h * hd;
-            let ko = qkv_dim + h * hd;
-            let vo = 2 * qkv_dim + h * hd;
+        for hh in 0..nh {
+            let qo = hh * hd;
+            let ko = qkv_dim + hh * hd;
+            let vo = 2 * qkv_dim + hh * hd;
             // logits row by row with streaming softmax.
-            let mut attn_row = vec![0.0f32; n];
             for i in 0..n {
                 let qrow = &qkv[i * stride + qo..i * stride + qo + hd];
                 let mut maxv = f32::NEG_INFINITY;
@@ -319,8 +474,8 @@ impl FuncSim {
                         cls_attn_mean[jt] += attn_row[jt] / nh as f32;
                     }
                 }
-                // sa[i, head h] = attn_row @ V_h
-                let out = &mut sa[i * qkv_dim + h * hd..i * qkv_dim + (h + 1) * hd];
+                // sa[i, head hh] = attn_row @ V_hh
+                let out = &mut sa[i * qkv_dim + hh * hd..i * qkv_dim + (hh + 1) * hd];
                 for jt in 0..n {
                     let a = attn_row[jt];
                     if a == 0.0 {
@@ -333,10 +488,11 @@ impl FuncSim {
                 }
             }
         }
-        self_maybe_quant(self, &mut sa);
+        self.maybe_quant_act(sa);
 
         // Projection via SpMM (stage iv) + residual.
-        let mut zp = w.w_proj.spmm(&sa, n);
+        let zp = &mut zp[..n * d];
+        w.w_proj.spmm_into(sa, n, zp);
         for t in 0..n {
             for j in 0..d {
                 zp[t * d + j] += w.b_proj[j] + z[t * d + j];
@@ -344,14 +500,18 @@ impl FuncSim {
         }
 
         // TDM between MSA and MLP: bitonic routing over non-CLS scores.
-        let zcur = if has_tdm {
+        let (zcur, n_out): (&[f32], usize) = if has_tdm {
             let scores = &cls_attn_mean[1..n];
             let k = (((n - 1) as f64) * self.st.r_t).ceil().max(1.0) as usize;
             let routes = bitonic::routing(scores, k);
             let n_out = 1 + k + 1;
-            let mut out = vec![0.0f32; n_out * d];
+            let out = &mut tdm_out[..n_out * d];
+            // Zero first (parity with the original freshly-allocated
+            // buffer): with fewer than k kept tokens (n=1 edge) some
+            // kept-slot rows are never written.
+            out.fill(0.0);
             out[..d].copy_from_slice(&zp[..d]); // CLS always kept
-            let mut fused = vec![0.0f32; d];
+            fused.fill(0.0);
             let mut wsum = 0.0f32;
             for r in &routes {
                 let src = &zp[(r.id_old + 1) * d..(r.id_old + 2) * d];
@@ -366,42 +526,42 @@ impl FuncSim {
                 }
             }
             let inv = 1.0 / (wsum + 1e-6);
-            for (o, f) in out[(n_out - 1) * d..].iter_mut().zip(&fused) {
+            for (o, f) in out[(n_out - 1) * d..].iter_mut().zip(fused.iter()) {
                 *o = f * inv;
             }
-            out
+            (&tdm_out[..n_out * d], n_out)
         } else {
-            zp
+            (&zp[..n * d], n)
         };
-        let n_out = zcur.len() / d;
 
         // LN2 -> MLP (dense, neuron-pruned columns are zero) -> residual.
-        let mut zn2 = zcur.clone();
+        let zn2 = &mut zn2[..n_out * d];
+        zn2.copy_from_slice(zcur);
         for t in 0..n_out {
             layer_norm(&mut zn2[t * d..(t + 1) * d], &w.ln2_g, &w.ln2_b, d);
         }
         let dm = self.st.dims.mlp_dim;
-        let mut h = vec![0.0f32; n_out * dm];
-        matmul_into(&zn2, &w.w_int, n_out, d, dm, &mut h);
+        let h = &mut h[..n_out * dm];
+        h.fill(0.0);
+        matmul_into(zn2, &w.w_int, n_out, d, dm, h);
         for t in 0..n_out {
             for j in 0..dm {
                 h[t * dm + j] = gelu(h[t * dm + j] + w.b_int[j]);
             }
         }
-        self_maybe_quant(self, &mut h);
-        let mut out = vec![0.0f32; n_out * d];
-        matmul_into(&h, &w.w_out, n_out, dm, d, &mut out);
+        self.maybe_quant_act(h);
+        let mlp_out = &mut mlp_out[..n_out * d];
+        mlp_out.fill(0.0);
+        matmul_into(h, &w.w_out, n_out, dm, d, mlp_out);
         for t in 0..n_out {
             for j in 0..d {
-                out[t * d + j] += w.b_out[j] + zcur[t * d + j];
+                mlp_out[t * d + j] += w.b_out[j] + zcur[t * d + j];
             }
         }
-        Ok(out)
+        // Layer output becomes next layer's input.
+        scratch.z[..n_out * d].copy_from_slice(&scratch.mlp_out[..n_out * d]);
+        n_out
     }
-}
-
-fn self_maybe_quant(s: &FuncSim, x: &mut [f32]) {
-    s.maybe_quant_act(x);
 }
 
 fn gelu(x: f32) -> f32 {
@@ -509,5 +669,27 @@ mod tests {
         let (mask, cb) = detect_block_mask(&w, (4, 4), 2);
         assert_eq!(cb, 2);
         assert_eq!(mask, vec![true, false, true, true]);
+    }
+
+    #[test]
+    fn scratch_sizes_cover_tdm_growth() {
+        // r_t close to 1 on a tiny token count makes the TDM *grow* the
+        // token set (CLS + ceil((n-1)*r_t) + fused > n); the arena must
+        // still fit.
+        use crate::config::{PruningSetting, TEST_TINY};
+        let st = ModelStructure::synthesize(
+            &TEST_TINY, &PruningSetting { block_size: 8, r_b: 1.0, r_t: 0.95,
+                                          tdm_layers: vec![0, 1, 2, 3] }, 5);
+        let ts = crate::funcsim::synth::synthesize_tensors(&st, 5);
+        let sim = FuncSim::from_tensors(&ts, st, (32, 8, 3), Precision::F32).unwrap();
+        let scratch = sim.scratch();
+        assert!(scratch.n_max >= sim.st.dims.num_tokens);
+        let img = vec![0.25f32; sim.input_elems()];
+        // must not panic on slice bounds
+        let logits = sim.forward(&img).unwrap();
+        assert_eq!(logits.len(), 10);
+        let mut s2 = sim.scratch();
+        let again = sim.forward_with(&img, &mut s2).unwrap();
+        assert_eq!(logits, again);
     }
 }

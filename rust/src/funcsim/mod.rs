@@ -2,10 +2,16 @@
 //! SpMM header walks, the TDHM bitonic routing network, neuron-pruned MLP
 //! and the int16 quantized path — the software twin RTL would be diffed
 //! against. Cross-checked against the PJRT-executed HLO artifacts in
-//! rust/tests/funcsim.rs.
+//! rust/tests/funcsim.rs (requires `--features pjrt` + artifacts).
+//!
+//! [`datapath`] provides the scratch-arena forward pass the native
+//! serving backend batches over; [`synth`] generates structure-honouring
+//! synthetic weights so the whole stack runs without artifacts.
 
 pub mod bitonic;
 pub mod datapath;
+pub mod synth;
 
 pub use bitonic::{bitonic_sort_desc, routing, Route};
-pub use datapath::{FuncSim, Precision};
+pub use datapath::{ForwardScratch, FuncSim, Precision};
+pub use synth::synthesize_tensors;

@@ -7,17 +7,39 @@
 //! * **L1/L2 (python, build time)** — the pruned DeiT model, the
 //!   simultaneous fine-pruning trainer and the Pallas kernels live in
 //!   `python/compile`; `make artifacts` AOT-lowers them to HLO text.
-//! * **L3 (this crate, runtime)** — a cycle-level simulator of the
-//!   paper's U250 accelerator ([`sim`]), the block-sparse data formats
-//!   ([`formats`]), complexity/resource models ([`complexity`],
-//!   [`sim::resources`]), cross-platform baselines ([`baselines`]), a
-//!   PJRT runtime executing the AOT artifacts ([`runtime`]) and a
-//!   serving coordinator ([`coordinator`]). Python never runs on the
-//!   request path.
+//! * **L3 (this crate, runtime)** — everything on the request path:
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//!   * [`sim`] — cycle-level simulator of the paper's U250 accelerator;
+//!   * [`formats`] — the Fig. 5 block-sparse layout + int16 quantization;
+//!   * [`funcsim`] — the functional datapath twin (block-sparse SpMM
+//!     header walks, bitonic TDHM token routing, neuron-pruned MLP),
+//!     written against a scratch-arena forward pass and able to
+//!     synthesize structure-honouring models with no artifacts at all;
+//!   * [`backend`] — the pluggable execution layer: the `Backend` trait,
+//!     the batched/parallel `NativeBackend` over funcsim, and (with
+//!     `--features pjrt`) the `PjrtBackend` over the AOT artifacts;
+//!   * [`coordinator`] — the serving stack (router, dynamic batcher,
+//!     metrics, engine actor), generic over any backend;
+//!   * [`runtime`] — artifact manifest + VITW0001 weight readers
+//!     (always built) and the PJRT engine (`pjrt` feature only);
+//!   * [`complexity`], [`sim::resources`], [`baselines`] — the paper's
+//!     analytic models and cross-platform comparisons.
+//!
+//!   Python never runs on the request path, and with the default feature
+//!   set nothing outside this crate does either: `serve --backend native`
+//!   serves pruned-ViT traffic from a clean checkout.
+//!
+//! Feature matrix:
+//!
+//! | feature | adds | needs |
+//! |---------|------|-------|
+//! | (default) | sim + funcsim + native backend + coordinator | rustc only |
+//! | `pjrt`  | `runtime::Engine`, `backend::PjrtBackend`, artifact tests | xla-rs toolchain + `make artifacts` |
+//!
+//! See DESIGN.md for the L3 architecture and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod backend;
 pub mod baselines;
 pub mod bench_harness;
 pub mod complexity;

@@ -5,23 +5,34 @@
 //!   fig --id N              regenerate paper Figure N (9, 10)
 //!   simulate [--setting L] [--batch B] [--structure FILE]
 //!                           cycle-level latency breakdown
-//!   infer --variant NAME [--artifacts DIR]
-//!                           one PJRT inference on a synthetic image
-//!   serve --variant NAME [--requests N] [--concurrency C]
+//!   infer [--backend native|pjrt] [--variant NAME] [--artifacts DIR]
+//!                           one inference on a synthetic image
+//!   serve [--backend native|pjrt] [--variant NAME] [--requests N]
+//!         [--concurrency C] [--model M] [--setting L] [--int16]
 //!                           run the coordinator against synthetic load
+//!   funcsim --variant NAME [--artifacts DIR] [--int16]
+//!                           functional datapath run (cross-checked
+//!                           against PJRT when built with --features pjrt)
 //!   sweep                   Table VI sweep (alias: table --id 6)
 //!   resources               Table IV resource model
 //!
-//! Python never runs here: artifacts must exist (`make artifacts`).
+//! Backends: `native` (default) is the pure-Rust batched engine over the
+//! funcsim datapath twin. With --variant it loads that variant's VITW0001
+//! weights from --artifacts (and errors if the artifacts are missing);
+//! without --variant it synthesizes a structure-honouring model from
+//! --model/--setting/--seed. `pjrt` executes the AOT artifacts and
+//! requires building with --features pjrt plus `make artifacts`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use vitfpga::backend::{Backend, NativeBackend};
 use vitfpga::bench_harness;
 use vitfpga::config::{model_by_name, HardwareConfig, PruningSetting};
 use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::funcsim::Precision;
 use vitfpga::sim::{AcceleratorSim, ModelStructure};
 use vitfpga::util::cli::Args;
 use vitfpga::util::rng::Rng;
@@ -34,7 +45,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: vitfpga <table|fig|simulate|infer|serve|sweep|resources> [options]\n\
+    "usage: vitfpga <table|fig|simulate|infer|serve|funcsim|sweep|resources> [options]\n\
      see rust/src/main.rs header for per-command options"
 }
 
@@ -64,20 +75,8 @@ fn run() -> Result<()> {
 }
 
 fn parse_setting(label: &str) -> Result<PruningSetting> {
-    // format: b16_rb0.5_rt0.7
-    let mut block = 16usize;
-    let mut rb = 1.0f64;
-    let mut rt = 1.0f64;
-    for part in label.split('_') {
-        if let Some(v) = part.strip_prefix("rb") {
-            rb = v.parse()?;
-        } else if let Some(v) = part.strip_prefix("rt") {
-            rt = v.parse()?;
-        } else if let Some(v) = part.strip_prefix('b') {
-            block = v.parse()?;
-        }
-    }
-    Ok(PruningSetting::new(block, rb, rt))
+    // format: b16_rb0.5_rt0.7 (shared parser in config.rs)
+    PruningSetting::parse_label(label).map_err(|e| anyhow::anyhow!("--setting: {}", e))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -132,7 +131,55 @@ fn synthetic_image(elems: usize, seed: u64) -> Vec<f32> {
     (0..elems).map(|_| rng.normal()).collect()
 }
 
+fn precision_of(args: &Args) -> Precision {
+    if args.has_flag("int16") { Precision::Int16 } else { Precision::F32 }
+}
+
+#[cfg(feature = "pjrt")]
+fn start_pjrt_coordinator(args: &Args, policy: BatchPolicy) -> Result<Coordinator> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4");
+    Coordinator::start_pjrt(&dir, variant, policy)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt_coordinator(_args: &Args, _policy: BatchPolicy) -> Result<Coordinator> {
+    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
+    match args.get_or("backend", "native") {
+        "native" => {
+            let mut nb = NativeBackend::from_cli(args)?;
+            println!("loaded {} (capacity={}, {} threads)",
+                     nb.name(), nb.batch_capacity(), nb.threads());
+            let img = synthetic_image(nb.input_elems_per_image(),
+                                      args.get_usize("seed", 7) as u64);
+            let t0 = std::time::Instant::now();
+            let logits = nb.infer_batch(&img, 1)?;
+            let dt = t0.elapsed();
+            report_logits(&logits, nb.num_classes());
+            println!("wall latency: {:.3} ms (native funcsim datapath)",
+                     dt.as_secs_f64() * 1e3);
+        }
+        "pjrt" => infer_pjrt(args)?,
+        other => bail!("unknown backend '{}'", other),
+    }
+    Ok(())
+}
+
+fn report_logits(logits: &[f32], classes: usize) {
+    for (b, row) in logits.chunks(classes).enumerate() {
+        let (argmax, max) = row
+            .iter()
+            .enumerate()
+            .fold((0usize, f32::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+        println!("image {}: class={} logit={:.4}", b, argmax, max);
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn infer_pjrt(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs1");
     let engine = vitfpga::runtime::Engine::new(&dir)?;
@@ -142,80 +189,92 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let logits = loaded.infer(&img)?;
     let dt = t0.elapsed();
-    let classes = loaded.num_classes();
-    for b in 0..loaded.batch() {
-        let row = &logits[b * classes..(b + 1) * classes];
-        let (argmax, max) = row
-            .iter()
-            .enumerate()
-            .fold((0usize, f32::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
-        println!("image {}: class={} logit={:.4}", b, argmax, max);
-    }
+    report_logits(&logits, loaded.num_classes());
     println!("wall latency: {:.3} ms (PJRT CPU, functional path)", dt.as_secs_f64() * 1e3);
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn infer_pjrt(_args: &Args) -> Result<()> {
+    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
+}
+
 fn cmd_funcsim(args: &Args) -> Result<()> {
     // Run the functional datapath model (block-sparse SpMM + bitonic TDHM
-    // + optional int16) against the PJRT artifact on the same input.
-    use vitfpga::funcsim::{FuncSim, Precision};
+    // + optional int16); cross-checked against the PJRT artifact when the
+    // runtime is compiled in.
+    use vitfpga::funcsim::FuncSim;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs1");
-    let precision = if args.has_flag("int16") { Precision::Int16 } else { Precision::F32 };
-    let engine = vitfpga::runtime::Engine::new(&dir)?;
-    let entry = engine
-        .manifest
+    let precision = precision_of(args);
+
+    let manifest = vitfpga::runtime::Manifest::load(&dir)?;
+    let entry = manifest
         .find_matching(variant)
         .ok_or_else(|| anyhow::anyhow!("variant '{}' not found", variant))?
         .clone();
-    let pjrt = engine.load(&entry.name)?;
-    let geom = if entry.model == "test-tiny" { (32, 8, 3) } else { (224, 16, 3) };
+    let dims = model_by_name(&entry.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", entry.model))?;
+    let geom = (dims.image_size, dims.patch_size, dims.in_channels);
     let fs = FuncSim::load(
         &dir.join(&entry.weights_file),
         &dir.join(&entry.structure_file),
         geom,
         precision,
     )?;
-    let per_image = pjrt.input_elems / pjrt.batch();
+    let per_image = fs.input_elems();
     let img = synthetic_image(per_image, args.get_usize("seed", 11) as u64);
-    let flat: Vec<f32> = (0..pjrt.batch()).flat_map(|_| img.iter().copied()).collect();
-    let t0 = std::time::Instant::now();
-    let want = pjrt.infer(&flat)?;
-    let t_pjrt = t0.elapsed();
     let t1 = std::time::Instant::now();
     let got = fs.forward(&img)?;
     let t_fs = t1.elapsed();
-    let classes = pjrt.num_classes();
-    let max_err = got
-        .iter()
-        .zip(&want[..classes])
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    println!(
-        "funcsim({:?}) vs PJRT on {}: max |err| = {:.6}",
-        precision, entry.name, max_err
-    );
-    println!(
-        "wall: PJRT {:.2} ms | funcsim {:.2} ms",
-        t_pjrt.as_secs_f64() * 1e3,
-        t_fs.as_secs_f64() * 1e3
-    );
+    println!("funcsim({:?}) on {}: wall {:.2} ms", precision, entry.name,
+             t_fs.as_secs_f64() * 1e3);
+
+    #[cfg(feature = "pjrt")]
+    {
+        let engine = vitfpga::runtime::Engine::new(&dir)?;
+        let pjrt = engine.load(&entry.name)?;
+        let flat: Vec<f32> = (0..pjrt.batch()).flat_map(|_| img.iter().copied()).collect();
+        let t0 = std::time::Instant::now();
+        let want = pjrt.infer(&flat)?;
+        let t_pjrt = t0.elapsed();
+        let classes = pjrt.num_classes();
+        let max_err = got
+            .iter()
+            .zip(&want[..classes])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "funcsim({:?}) vs PJRT on {}: max |err| = {:.6}",
+            precision, entry.name, max_err
+        );
+        println!("wall: PJRT {:.2} ms", t_pjrt.as_secs_f64() * 1e3);
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = &got;
+        println!("(built without --features pjrt: skipping PJRT cross-check)");
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4");
     let requests = args.get_usize("requests", 64);
     let concurrency = args.get_usize("concurrency", 4);
     let policy = BatchPolicy {
         max_batch: args.get_usize("max-batch", 8),
         max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
     };
-    let coord = Arc::new(Coordinator::start(&dir, variant, policy)?);
+    let coord = match args.get_or("backend", "native") {
+        "native" => Coordinator::start(NativeBackend::from_cli(args)?, policy)?,
+        "pjrt" => start_pjrt_coordinator(args, policy)?,
+        other => bail!("unknown backend '{}'", other),
+    };
+    let coord = Arc::new(coord);
     println!(
-        "serving {} ({} f32/image), {} requests x {} client threads",
-        coord.variant_name, coord.input_elems_per_image, requests, concurrency
+        "serving {} ({} f32/image, batch capacity {}), {} requests x {} client threads",
+        coord.backend_name, coord.input_elems_per_image, coord.batch_capacity,
+        requests, concurrency
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();

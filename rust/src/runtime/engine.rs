@@ -1,0 +1,115 @@
+//! PJRT engine: compile AOT artifacts (HLO text + weights) once, execute
+//! on the request path. Adapted from /opt/xla-example/load_hlo. Only
+//! built with `--features pjrt` — the default build has no XLA toolchain
+//! dependency.
+//!
+//! The HLO artifact's parameter 0 is the image batch (B, H, W, C) f32;
+//! parameters 1.. are the weight tensors in the python `param_order`.
+//! Weights are uploaded once per variant and reused across requests
+//! (cloned literals are cheap vs. compile).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, VariantEntry};
+use super::weights;
+
+/// A compiled model variant ready to execute.
+pub struct LoadedVariant {
+    pub entry: VariantEntry,
+    exe: xla::PjRtLoadedExecutable,
+    weight_literals: Vec<xla::Literal>,
+    pub input_elems: usize,
+}
+
+impl LoadedVariant {
+    /// Run one batch. `image` must have exactly `input_elems` f32s
+    /// (B*H*W*C, row-major NHWC). Returns the logits (B * num_classes).
+    pub fn infer(&self, image: &[f32]) -> Result<Vec<f32>> {
+        if image.len() != self.input_elems {
+            bail!(
+                "variant {} expects {} input elems, got {}",
+                self.entry.name,
+                self.input_elems,
+                image.len()
+            );
+        }
+        let img = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.entry.input_shape,
+            bytemuck_cast(image),
+        )?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_literals.len());
+        args.push(&img);
+        args.extend(self.weight_literals.iter());
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple of logits.
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.entry.num_classes
+    }
+}
+
+fn bytemuck_cast(v: &[f32]) -> &[u8] {
+    // Safe: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Engine owning the PJRT client and compiled variants.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest })
+    }
+
+    /// Compile a variant by exact name.
+    pub fn load(&self, name: &str) -> Result<LoadedVariant> {
+        let entry = self
+            .manifest
+            .find(name)
+            .or_else(|| self.manifest.find_matching(name))
+            .with_context(|| format!("variant '{}' not in manifest", name))?
+            .clone();
+        let hlo_path = self.manifest.path_of(&entry.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+
+        let tensors = weights::read_weights(&self.manifest.path_of(&entry.weights_file))?;
+        if tensors.len() != entry.num_weight_tensors {
+            bail!(
+                "weights file has {} tensors, manifest says {}",
+                tensors.len(),
+                entry.num_weight_tensors
+            );
+        }
+        let weight_literals = tensors
+            .iter()
+            .map(|t| {
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &t.dims,
+                    bytemuck_cast(&t.data),
+                )
+                .map_err(anyhow::Error::from)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let input_elems = entry.input_shape.iter().product();
+        Ok(LoadedVariant { entry, exe, weight_literals, input_elems })
+    }
+}

@@ -1,0 +1,253 @@
+//! The artifact-free serving stack: NativeBackend batching vs the serial
+//! datapath, and the backend-generic coordinator end-to-end. Runs with
+//! the default feature set — no artifacts, no XLA toolchain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use vitfpga::backend::{Backend, NativeBackend};
+use vitfpga::config::{PruningSetting, TEST_TINY};
+use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::funcsim::{FuncSim, Precision};
+use vitfpga::util::rng::Rng;
+
+const SEED: u64 = 42;
+
+fn setting() -> PruningSetting {
+    PruningSetting::new(8, 0.7, 0.7)
+}
+
+fn backend() -> NativeBackend {
+    NativeBackend::synthetic(&TEST_TINY, &setting(), SEED, Precision::F32).unwrap()
+}
+
+/// Independent reference model — same (dims, setting, seed) synthesis is
+/// bit-deterministic, so this equals the backend's internal model.
+fn reference() -> FuncSim {
+    FuncSim::synthesize(&TEST_TINY, &setting(), SEED, Precision::F32).unwrap()
+}
+
+fn images(n: usize, per: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * per).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn infer_batch_matches_serial_forward() {
+    // Batches 1 (degenerate), 3 (ragged split across workers) and 8:
+    // the parallel batched path must be bit-faithful to the serial
+    // per-image loop — identical TDHM routing included, since both run
+    // the same forward_into.
+    let mut nb = backend();
+    let reference = reference();
+    let per = nb.input_elems_per_image();
+    let classes = nb.num_classes();
+    for (batch, seed) in [(1usize, 10u64), (3, 11), (8, 12)] {
+        let flat = images(batch, per, seed);
+        let got = nb.infer_batch(&flat, batch).unwrap();
+        assert_eq!(got.len(), batch * classes);
+        for i in 0..batch {
+            let want = reference.forward(&flat[i * per..(i + 1) * per]).unwrap();
+            let row = &got[i * classes..(i + 1) * classes];
+            let max_err = want
+                .iter()
+                .zip(row)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err <= 1e-5,
+                "batch {} image {}: parallel-vs-serial max err {}",
+                batch, i, max_err
+            );
+            // Stronger than the 1e-5 criterion: the paths are the same
+            // code, so the logits are bit-identical.
+            assert_eq!(row, want.as_slice(), "batch {} image {}", batch, i);
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_leaks_no_state() {
+    // Same image inferred before/after unrelated work in the same arena
+    // must give identical logits (the arena fully overwrites or
+    // zero-fills every region it reads).
+    let sim = reference();
+    let per = sim.input_elems();
+    let img_a = images(1, per, 21);
+    let img_b = images(1, per, 22);
+    let mut scratch = sim.scratch();
+    let first = sim.forward_with(&img_a, &mut scratch).unwrap();
+    let _ = sim.forward_with(&img_b, &mut scratch).unwrap();
+    let again = sim.forward_with(&img_a, &mut scratch).unwrap();
+    assert_eq!(first, again);
+    assert_eq!(first, sim.forward(&img_a).unwrap());
+}
+
+#[test]
+fn worker_counts_do_not_change_results() {
+    let per = backend().input_elems_per_image();
+    let flat = images(8, per, 33);
+    let mut serial = backend().with_threads(1);
+    let want = serial.infer_batch(&flat, 8).unwrap();
+    for threads in [2usize, 3, 8, 16] {
+        let mut nb = backend().with_threads(threads);
+        let got = nb.infer_batch(&flat, 8).unwrap();
+        assert_eq!(got, want, "threads={}", threads);
+    }
+}
+
+#[test]
+fn int16_backend_serves_batches() {
+    let mut nb =
+        NativeBackend::synthetic(&TEST_TINY, &setting(), SEED, Precision::Int16).unwrap();
+    let per = nb.input_elems_per_image();
+    let flat = images(4, per, 44);
+    let got = nb.infer_batch(&flat, 4).unwrap();
+    assert_eq!(got.len(), 4 * nb.num_classes());
+    assert!(got.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn coordinator_native_serves_concurrent_clients() {
+    // submit -> batcher -> native engine -> responder, under concurrent
+    // clients, with logits checked against the independent reference.
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(4) };
+    let coord = Arc::new(
+        Coordinator::start(backend().with_batch_capacity(4), policy).expect("start"),
+    );
+    assert!(coord.backend_name.starts_with("native:"));
+    assert_eq!(coord.num_classes, TEST_TINY.num_classes);
+    let reference = Arc::new(reference());
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let coord = Arc::clone(&coord);
+        let reference = Arc::clone(&reference);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..8u64 {
+                let mut rng = Rng::new(c * 100 + i);
+                let img: Vec<f32> = (0..coord.input_elems_per_image)
+                    .map(|_| rng.normal())
+                    .collect();
+                let resp = coord.infer(img.clone()).expect("infer");
+                assert_eq!(resp.logits.len(), coord.num_classes);
+                assert!(resp.predicted_class < coord.num_classes);
+                assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+                let want = reference.forward(&img).unwrap();
+                assert_eq!(resp.logits, want, "client {} request {}", c, i);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics().expect("metrics");
+    assert_eq!(m.requests, 32);
+    assert!(m.batches <= 32);
+    assert!(m.mean_batch_occupancy >= 1.0);
+}
+
+#[test]
+fn coordinator_native_batches_under_load() {
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) };
+    let coord = Arc::new(Coordinator::start(backend(), policy).expect("start"));
+    // Fire 16 requests at once; with a 20 ms window the batcher should
+    // pack them into fewer than 16 executions.
+    let mut rxs = Vec::new();
+    for i in 0..16u64 {
+        let img = images(1, coord.input_elems_per_image, i);
+        rxs.push(coord.submit(img).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().expect("response");
+    }
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.requests, 16);
+    assert!(m.batches < 16, "no batching happened: {} batches", m.batches);
+    assert!(m.mean_batch_occupancy > 1.0);
+}
+
+#[test]
+fn coordinator_native_rejects_wrong_image_size() {
+    let coord = Coordinator::start(backend(), BatchPolicy::default()).expect("start");
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn coordinator_clamps_policy_to_backend_capacity() {
+    let policy = BatchPolicy { max_batch: 1000, max_wait: Duration::from_millis(1) };
+    let coord = Coordinator::start(backend().with_batch_capacity(2), policy).expect("start");
+    assert_eq!(coord.batch_capacity, 2);
+    // Saturating the queue must never produce an over-capacity dispatch
+    // (infer_batch would error and the responses would carry it).
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        rxs.push(coord.submit(images(1, coord.input_elems_per_image, i)).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().expect("over-capacity dispatch");
+    }
+}
+
+#[test]
+fn backend_loads_artifact_weights_when_present() {
+    // Exercise NativeBackend::from_artifacts against a *synthetic*
+    // artifacts dir written with the in-tree VITW0001 writer: proves the
+    // no-XLA artifact path end-to-end (manifest -> weights -> backend).
+    use vitfpga::funcsim::synthesize_tensors;
+    use vitfpga::runtime::weights::write_weights;
+    use vitfpga::sim::ModelStructure;
+
+    let st = ModelStructure::synthesize(&TEST_TINY, &setting(), 7);
+    let ts = synthesize_tensors(&st, 7);
+    let dir = std::env::temp_dir().join(format!("vitfpga_backend_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("w.bin"), write_weights(&ts)).unwrap();
+    // Minimal structure JSON matching the python exporter's schema.
+    let mut enc_json = String::new();
+    for (i, e) in st.encoders.iter().enumerate() {
+        if i > 0 {
+            enc_json.push(',');
+        }
+        enc_json.push_str(&format!(
+            "{{\"qkv_col_blocks\": {:?}, \"qkv_rows\": {}, \
+              \"proj_col_blocks\": {:?}, \"proj_rows\": {}, \
+              \"neurons_kept\": {}, \"heads_kept\": [true, true]}}",
+            e.qkv_col_blocks, e.qkv_rows, e.proj_col_blocks, e.proj_rows, e.neurons_kept
+        ));
+    }
+    std::fs::write(
+        dir.join("s.json"),
+        format!(
+            "{{\"model\": \"test-tiny\", \"block_size\": {}, \"r_b\": {}, \"r_t\": {}, \
+              \"tdm_layers\": {:?}, \"tokens_per_layer\": {:?}, \
+              \"encoders\": [{}], \
+              \"dims\": {{\"num_layers\": 4, \"num_heads\": 2, \"dim\": 32, \
+                          \"head_dim\": 16, \"mlp_dim\": 64, \"num_tokens\": 17, \
+                          \"patch_dim\": 192, \"num_classes\": 10}}}}",
+            st.block_size, st.r_b, st.r_t, st.tdm_layers, st.tokens_per_layer, enc_json
+        ),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        "{\"seed\": 7, \"variants\": [\
+          {\"name\": \"test-tiny_b8_rb0.7_rt0.7_bs1\", \"model\": \"test-tiny\", \
+           \"batch\": 1, \"use_kernels\": false, \
+           \"pruning\": {\"block_size\": 8, \"r_b\": 0.7, \"r_t\": 0.7, \
+                         \"tdm_layers\": [2, 6, 9]}, \
+           \"files\": {\"hlo\": \"x.hlo.txt\", \"weights\": \"w.bin\", \
+                       \"structure\": \"s.json\"}, \
+           \"num_weight_tensors\": 56, \
+           \"input_shape\": [1, 32, 32, 3], \"num_classes\": 10}]}",
+    )
+    .unwrap();
+
+    let mut nb = NativeBackend::from_artifacts(&dir, "rb0.7", Precision::F32)
+        .expect("from_artifacts");
+    assert_eq!(nb.name(), "native:test-tiny_b8_rb0.7_rt0.7_bs1");
+    let per = nb.input_elems_per_image();
+    let logits = nb.infer_batch(&images(2, per, 5), 2).unwrap();
+    assert_eq!(logits.len(), 2 * nb.num_classes());
+    assert!(logits.iter().all(|x| x.is_finite()));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -5,6 +5,12 @@
 //! MLP); PJRT executes the AOT-lowered jax graph. Same weights, same
 //! input -> the logits must agree. This pins the hardware datapath to
 //! the algorithm spec end-to-end.
+//!
+//! Needs the PJRT runtime (`--features pjrt`) AND trained artifacts:
+//! point VITFPGA_ARTIFACTS at the output of `make artifacts`. Without
+//! either, the whole suite skips (with a message) instead of failing.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
@@ -13,11 +19,18 @@ use vitfpga::runtime::{weights, Engine};
 use vitfpga::util::rng::Rng;
 
 fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = match std::env::var("VITFPGA_ARTIFACTS") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    };
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
-        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        eprintln!(
+            "skipping: no manifest.json under {} (run `make artifacts` and/or set \
+             VITFPGA_ARTIFACTS)",
+            dir.display()
+        );
         None
     }
 }

@@ -2,24 +2,34 @@
 //! numerics, the coordinator under concurrent load, and the simulator
 //! consuming python-exported structure files.
 //!
-//! These tests need `make artifacts` to have run; they skip (with a
-//! message) when artifacts/ is absent so `cargo test` works standalone.
+//! These tests need the PJRT runtime (`--features pjrt`) plus the
+//! artifacts from `make artifacts` (point VITFPGA_ARTIFACTS at them);
+//! they skip (with a message) otherwise so `cargo test` works
+//! standalone. The artifact-free serving stack is covered in
+//! rust/tests/backend.rs.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
 use vitfpga::coordinator::{BatchPolicy, Coordinator};
-use vitfpga::runtime::{weights, Engine, Manifest};
-use vitfpga::sim::{AcceleratorSim, ModelStructure};
-use vitfpga::config::HardwareConfig;
+use vitfpga::runtime::{weights, Engine};
 
 fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = match std::env::var("VITFPGA_ARTIFACTS") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    };
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
-        eprintln!("skipping: {} missing (run `make artifacts`)", dir.display());
+        eprintln!(
+            "skipping: no manifest.json under {} (run `make artifacts` and/or set \
+             VITFPGA_ARTIFACTS)",
+            dir.display()
+        );
         None
     }
 }
@@ -133,7 +143,7 @@ fn coordinator_serves_concurrent_requests() {
     let Some(dir) = artifacts_dir() else { return };
     let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(4) };
     let coord = Arc::new(
-        Coordinator::start(&dir, "test-tiny_b8_rb0.7_rt0.7_bs4", policy).expect("start"),
+        Coordinator::start_pjrt(&dir, "test-tiny_b8_rb0.7_rt0.7_bs4", policy).expect("start"),
     );
     let mut handles = Vec::new();
     for c in 0..4u64 {
@@ -164,7 +174,7 @@ fn coordinator_batches_under_load() {
     let Some(dir) = artifacts_dir() else { return };
     let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) };
     let coord = Arc::new(
-        Coordinator::start(&dir, "test-tiny_b8_rb0.7_rt0.7_bs4", policy).expect("start"),
+        Coordinator::start_pjrt(&dir, "test-tiny_b8_rb0.7_rt0.7_bs4", policy).expect("start"),
     );
     // Fire 16 requests at once; with a 20 ms window the batcher should
     // pack them into fewer than 16 executions.
@@ -188,7 +198,7 @@ fn coordinator_batches_under_load() {
 #[test]
 fn coordinator_rejects_wrong_image_size() {
     let Some(dir) = artifacts_dir() else { return };
-    let coord = Coordinator::start(
+    let coord = Coordinator::start_pjrt(
         &dir,
         "test-tiny_b8_rb0.7_rt0.7_bs1",
         BatchPolicy::default(),
@@ -197,37 +207,6 @@ fn coordinator_rejects_wrong_image_size() {
     assert!(coord.submit(vec![0.0; 3]).is_err());
 }
 
-#[test]
-fn simulator_consumes_python_structure_files() {
-    let Some(dir) = artifacts_dir() else { return };
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let sim = AcceleratorSim::new(HardwareConfig::u250());
-    for v in &manifest.variants {
-        let st = ModelStructure::load(&dir.join(&v.structure_file)).expect("structure");
-        assert_eq!(st.block_size, v.pruning.block_size);
-        let r = sim.model_latency(&st, 1);
-        assert!(r.total_cycles > 0);
-        assert!(r.latency_ms.is_finite());
-        // trained/deterministic masks: alpha within 10% of nominal r_b
-        for sp in st.sparsity_params() {
-            assert!((sp.alpha - st.r_b).abs() < 0.1,
-                    "{}: alpha {} vs r_b {}", v.name, sp.alpha, st.r_b);
-        }
-    }
-}
-
-#[test]
-fn deit_small_structure_latency_close_to_synthesized() {
-    let Some(dir) = artifacts_dir() else { return };
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let Some(v) = manifest.find_matching("deit-small_b16_rb0.5_rt0.5") else { return };
-    let st = ModelStructure::load(&dir.join(&v.structure_file)).expect("structure");
-    let sim = AcceleratorSim::new(HardwareConfig::u250());
-    let from_artifact = sim.model_latency(&st, 1).latency_ms;
-    let synth = ModelStructure::synthesize(
-        &vitfpga::config::DEIT_SMALL, &v.pruning, 42);
-    let from_synth = sim.model_latency(&synth, 1).latency_ms;
-    let ratio = from_artifact / from_synth;
-    assert!(ratio > 0.8 && ratio < 1.25,
-            "artifact {} vs synth {}", from_artifact, from_synth);
-}
+// NOTE: the simulator-vs-structure-file tests live in
+// rust/tests/structure.rs — they need artifacts but not PJRT, so they
+// run on default features.

@@ -1,0 +1,62 @@
+//! Python-exported structure files through the always-built APIs
+//! (Manifest, ModelStructure, AcceleratorSim) — no PJRT needed, so
+//! these run on default features whenever trained artifacts exist.
+//! They skip (with a message) when no artifacts are present.
+
+use std::path::{Path, PathBuf};
+
+use vitfpga::config::HardwareConfig;
+use vitfpga::runtime::Manifest;
+use vitfpga::sim::{AcceleratorSim, ModelStructure};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = match std::env::var("VITFPGA_ARTIFACTS") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    };
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "skipping: no manifest.json under {} (run `make artifacts` and/or set \
+             VITFPGA_ARTIFACTS)",
+            dir.display()
+        );
+        None
+    }
+}
+
+#[test]
+fn simulator_consumes_python_structure_files() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    for v in &manifest.variants {
+        let st = ModelStructure::load(&dir.join(&v.structure_file)).expect("structure");
+        assert_eq!(st.block_size, v.pruning.block_size);
+        let r = sim.model_latency(&st, 1);
+        assert!(r.total_cycles > 0);
+        assert!(r.latency_ms.is_finite());
+        // trained/deterministic masks: alpha within 10% of nominal r_b
+        for sp in st.sparsity_params() {
+            assert!((sp.alpha - st.r_b).abs() < 0.1,
+                    "{}: alpha {} vs r_b {}", v.name, sp.alpha, st.r_b);
+        }
+    }
+}
+
+#[test]
+fn deit_small_structure_latency_close_to_synthesized() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let Some(v) = manifest.find_matching("deit-small_b16_rb0.5_rt0.5") else { return };
+    let st = ModelStructure::load(&dir.join(&v.structure_file)).expect("structure");
+    let sim = AcceleratorSim::new(HardwareConfig::u250());
+    let from_artifact = sim.model_latency(&st, 1).latency_ms;
+    let synth = ModelStructure::synthesize(
+        &vitfpga::config::DEIT_SMALL, &v.pruning, 42);
+    let from_synth = sim.model_latency(&synth, 1).latency_ms;
+    let ratio = from_artifact / from_synth;
+    assert!(ratio > 0.8 && ratio < 1.25,
+            "artifact {} vs synth {}", from_artifact, from_synth);
+}
