@@ -1,38 +1,55 @@
-//! Serving example: run the coordinator (router + dynamic batcher +
-//! engine actor) against a synthetic client load and report latency
-//! percentiles + throughput — the serving-systems view of the paper's
-//! accelerator.
+//! Serving example: run the replicated serving pool (least-loaded
+//! dispatcher -> N engine replicas, each router + dynamic batcher +
+//! engine actor) against a synthetic client load and report pool-level
+//! latency percentiles, per-replica occupancy and throughput — the
+//! serving-systems view of the paper's load-balanced accelerator.
 //!
 //! Works from a clean checkout: the default `native` backend synthesizes
-//! a structure-honouring pruned model and serves it through the
-//! block-sparse SpMM + bitonic-TDHM datapath, batched across cores.
+//! a structure-honouring pruned model *per replica* and serves it
+//! through the block-sparse SpMM + bitonic-TDHM datapath, batched
+//! across cores.
 //!
 //!     cargo run --release --example serve -- \
 //!         --model test-tiny --setting b8_rb0.7_rt0.7 \
-//!         --requests 128 --concurrency 8 --max-batch 8 --max-wait-ms 2
+//!         --requests 128 --concurrency 8 --max-batch 8 --max-wait-ms 2 \
+//!         --replicas 4 --queue-capacity 256
 //!
-//! With trained artifacts: add `--variant NAME [--artifacts DIR]` (still
-//! native — reads the VITW0001 weights directly), or build with
-//! `--features pjrt` and pass `--backend pjrt` for the XLA runtime.
+//! `--replicas 1` (the default) is the plain single-coordinator setup.
+//! A tight `--queue-capacity` exercises admission control: overflowing
+//! submits shed with a typed `Overloaded` error and are counted, not
+//! queued. With trained artifacts: add `--variant NAME [--artifacts
+//! DIR]` (still native — reads the VITW0001 weights directly), or build
+//! with `--features pjrt` and pass `--backend pjrt` for the XLA runtime
+//! (each replica constructs its non-Send PJRT handle on its own engine
+//! thread).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 use vitfpga::backend::NativeBackend;
-use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::coordinator::{BackendPool, BatchPolicy, Overloaded, PoolPolicy};
 use vitfpga::util::cli::Args;
 use vitfpga::util::rng::Rng;
 
-fn start(args: &Args, policy: BatchPolicy) -> Result<Coordinator> {
+fn start(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
     match args.get_or("backend", "native") {
-        // Shared --variant/--artifacts/--model/--setting/--int16 handling.
-        "native" => Coordinator::start(NativeBackend::from_cli(args)?, policy),
+        // Shared --variant/--artifacts/--model/--setting/--int16 handling;
+        // the factory runs once per replica, on that replica's thread.
+        "native" => {
+            let args = args.clone();
+            BackendPool::start(move |_i| NativeBackend::from_cli(&args), policy)
+        }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
             let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-            Coordinator::start_pjrt(
-                &dir, args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4"), policy)
+            let variant = args
+                .get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4")
+                .to_string();
+            BackendPool::start(
+                move |_i| vitfpga::backend::PjrtBackend::load(&dir, &variant),
+                policy,
+            )
         }
         other => bail!("unknown backend '{}' (this build supports: native{})",
                        other, if cfg!(feature = "pjrt") { ", pjrt" } else { "" }),
@@ -43,51 +60,72 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let requests = args.get_usize("requests", 128);
     let concurrency = args.get_usize("concurrency", 8);
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 8),
-        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+    let policy = PoolPolicy {
+        replicas: args.get_usize("replicas", 1),
+        batch: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 8),
+            max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+        },
+        queue_capacity: args.get_usize(
+            "queue-capacity",
+            vitfpga::coordinator::pool::DEFAULT_QUEUE_CAPACITY,
+        ),
     };
 
-    let coord = Arc::new(start(&args, policy)?);
+    let pool = Arc::new(start(&args, policy)?);
     println!(
-        "serving {}: {} requests x {} clients, policy max_batch={} max_wait={:?}",
-        coord.backend_name, requests, concurrency, policy.max_batch, policy.max_wait
+        "serving {}: {} requests x {} clients, policy max_batch={} max_wait={:?} \
+         queue_capacity={}",
+        pool.backend_name, requests, concurrency, policy.batch.max_batch,
+        policy.batch.max_wait, policy.queue_capacity
     );
 
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..concurrency)
         .map(|c| {
-            let coord = Arc::clone(&coord);
-            std::thread::spawn(move || -> Result<u64> {
-                let mut correct_shape = 0u64;
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || -> Result<(u64, u64)> {
+                let (mut correct_shape, mut shed) = (0u64, 0u64);
                 for i in 0..requests {
                     let mut rng = Rng::new((c * 31337 + i) as u64);
-                    let img: Vec<f32> = (0..coord.input_elems_per_image)
+                    let img: Vec<f32> = (0..pool.input_elems_per_image)
                         .map(|_| rng.normal())
                         .collect();
-                    let resp = coord.infer(img)?;
-                    if resp.logits.len() == coord.num_classes {
-                        correct_shape += 1;
+                    match pool.infer(img) {
+                        Ok(resp) => {
+                            if resp.logits.len() == pool.num_classes {
+                                correct_shape += 1;
+                            }
+                        }
+                        // Admission control at work — count, don't fail.
+                        Err(e) if e.downcast_ref::<Overloaded>().is_some() => shed += 1,
+                        Err(e) => return Err(e),
                     }
                 }
-                Ok(correct_shape)
+                Ok((correct_shape, shed))
             })
         })
         .collect();
-    let mut ok = 0u64;
+    let (mut ok, mut shed) = (0u64, 0u64);
     for h in handles {
-        ok += h.join().unwrap()?;
+        let (o, s) = h.join().unwrap()?;
+        ok += o;
+        shed += s;
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let m = coord.metrics()?;
-    println!("{}", m);
+    println!("{}", pool.metrics()?);
+    let stats = pool.stats();
+    println!(
+        "admission: depth {}/{}, shed {} (gauge) / {} (client-observed)",
+        stats.queue_depth, stats.queue_capacity, stats.shed_count, shed
+    );
     println!(
         "{} / {} responses well-formed; wall {:.2}s -> {:.1} req/s end-to-end",
         ok,
         requests * concurrency,
         wall,
-        (requests * concurrency) as f64 / wall
+        ok as f64 / wall
     );
     Ok(())
 }

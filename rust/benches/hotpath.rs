@@ -9,7 +9,11 @@
 //!   H6. funcsim datapath twin on deit-small (if artifacts exist);
 //!   H7. NativeBackend::infer_batch across batch sizes {1,4,8,16} vs a
 //!       serial per-image loop — written to BENCH_native_forward.json so
-//!       later perf PRs have a trajectory to beat.
+//!       later perf PRs have a trajectory to beat;
+//!   H8. BackendPool end-to-end throughput across replicas {1,2,4} x
+//!       max_batch {1,8} under concurrent clients (one worker thread per
+//!       replica, so scaling is replication-driven) — written to
+//!       BENCH_pool_throughput.json.
 
 mod common;
 
@@ -101,6 +105,9 @@ fn main() {
 
     // H7: native batched engine — the BENCH_native_forward.json series.
     native_backend_bench(&mut rng);
+
+    // H8: replicated pool throughput — the BENCH_pool_throughput.json series.
+    pool_throughput_bench(&mut rng);
 }
 
 #[cfg(feature = "pjrt")]
@@ -230,6 +237,101 @@ fn native_backend_bench(rng: &mut Rng) {
         rows.join(",\n")
     );
     let out = "BENCH_native_forward.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("[bench] wrote {}", out),
+        Err(e) => eprintln!("[bench] could not write {}: {}", out, e),
+    }
+}
+
+fn pool_throughput_bench(rng: &mut Rng) {
+    use std::sync::Arc;
+    use std::time::Duration;
+    use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
+
+    let setting = PruningSetting::new(8, 0.7, 0.7);
+    let clients = 8usize;
+    let per_client = 32usize;
+
+    // Shared image set, generated outside the timed region.
+    let per = NativeBackend::synthetic(&TEST_TINY, &setting, 42, Precision::F32)
+        .expect("probe backend")
+        .input_elems_per_image();
+    let images: Arc<Vec<Vec<f32>>> = Arc::new(
+        (0..16)
+            .map(|_| (0..per).map(|_| rng.normal()).collect())
+            .collect(),
+    );
+
+    let mut rows = Vec::new();
+    for &replicas in &[1usize, 2, 4] {
+        for &max_batch in &[1usize, 8] {
+            // One worker thread per replica: H8 measures dispatch /
+            // replication scaling, not intra-batch fan-out (that's H7).
+            let setting = setting.clone();
+            let pool = BackendPool::start(
+                move |_i| {
+                    Ok(
+                        NativeBackend::synthetic(&TEST_TINY, &setting, 42, Precision::F32)?
+                            .with_threads(1)
+                            .with_batch_capacity(16),
+                    )
+                },
+                PoolPolicy {
+                    replicas,
+                    batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+                    queue_capacity: 4096,
+                },
+            )
+            .expect("pool start");
+            let pool = Arc::new(pool);
+            for img in images.iter().take(4) {
+                pool.infer(img.clone()).expect("warmup");
+            }
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let pool = Arc::clone(&pool);
+                    let images = Arc::clone(&images);
+                    std::thread::spawn(move || {
+                        for i in 0..per_client {
+                            let img = images[(c + i) % images.len()].clone();
+                            pool.infer(img).expect("pool infer");
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let rps = (clients * per_client) as f64 / (wall_ms / 1e3);
+            let m = pool.metrics().expect("pool metrics");
+            println!(
+                "[bench] H8 pool replicas={} max_batch={}  wall {:>8.1} ms  {:>8.1} req/s  \
+                 p50 {:>7.3} ms  occ {:.2}",
+                replicas, max_batch, wall_ms, rps, m.pool.p50_ms,
+                m.pool.mean_batch_occupancy
+            );
+            rows.push(format!(
+                "    {{\"replicas\": {}, \"max_batch\": {}, \"wall_ms\": {:.2}, \
+                 \"req_per_sec\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
+                 \"mean_batch_occupancy\": {:.2}}}",
+                replicas, max_batch, wall_ms, rps, m.pool.p50_ms, m.pool.p99_ms,
+                m.pool.mean_batch_occupancy
+            ));
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"pool_throughput\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
+         \"clients\": {},\n  \"requests_per_client\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        TEST_TINY.name,
+        setting.label(),
+        clients,
+        per_client,
+        rows.join(",\n")
+    );
+    let out = "BENCH_pool_throughput.json";
     match std::fs::write(out, &json) {
         Ok(()) => println!("[bench] wrote {}", out),
         Err(e) => eprintln!("[bench] could not write {}: {}", out, e),

@@ -14,9 +14,12 @@
 //!   artifact runtime (`runtime::Engine`); pads ragged batches to the
 //!   artifact's static batch dimension.
 //!
-//! Later scaling work (sharding, multi-engine, caching) composes here:
-//! a new substrate implements five methods and inherits the whole
-//! serving stack.
+//! Scaling composes over this trait: a new substrate implements five
+//! methods and inherits the whole serving stack — including replication,
+//! since `coordinator::BackendPool` factory-constructs one backend per
+//! replica on that replica's engine thread (so even non-`Send`
+//! substrates like PJRT replicate). Sharding and caching land the same
+//! way.
 
 pub mod native;
 #[cfg(feature = "pjrt")]

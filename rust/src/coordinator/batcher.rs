@@ -25,22 +25,25 @@ impl Default for BatchPolicy {
 }
 
 /// Accumulates requests and decides when a batch is ready.
+///
+/// The wait bound is anchored to the queue head's *true* arrival time
+/// (`InferenceRequest::submitted`), never re-stamped: after a partial
+/// drain the residual head keeps the deadline it accrued while queued,
+/// so no request waits longer than `max_wait` past its arrival before
+/// its batch dispatches (it used to be up to 2x when `take_batch` reset
+/// the clock).
 #[derive(Debug)]
 pub struct Batcher {
     pub policy: BatchPolicy,
     queue: VecDeque<InferenceRequest>,
-    oldest: Option<Instant>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queue: VecDeque::new(), oldest: None }
+        Batcher { policy, queue: VecDeque::new() }
     }
 
     pub fn push(&mut self, req: InferenceRequest) {
-        if self.queue.is_empty() {
-            self.oldest = Some(Instant::now());
-        }
         self.queue.push_back(req);
     }
 
@@ -52,29 +55,34 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    /// Arrival time of the queue head — the FIFO's oldest request, which
+    /// anchors the dispatch deadline.
+    pub fn oldest_arrival(&self) -> Option<Instant> {
+        self.queue.front().map(|r| r.submitted)
+    }
+
     /// Should a batch be dispatched now?
     pub fn ready(&self) -> bool {
         if self.queue.len() >= self.policy.max_batch {
             return true;
         }
-        match self.oldest {
-            Some(t) => !self.queue.is_empty() && t.elapsed() >= self.policy.max_wait,
+        match self.oldest_arrival() {
+            Some(t) => t.elapsed() >= self.policy.max_wait,
             None => false,
         }
     }
 
     /// Time until the wait bound expires (drives the engine's poll).
     pub fn time_to_deadline(&self) -> Option<Duration> {
-        self.oldest
+        self.oldest_arrival()
             .map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
     }
 
-    /// Take up to max_batch requests.
+    /// Take up to max_batch requests (FIFO). The residual queue keeps
+    /// its arrival timestamps; see the struct docs.
     pub fn take_batch(&mut self) -> Vec<InferenceRequest> {
         let n = self.queue.len().min(self.policy.max_batch);
-        let batch: Vec<_> = self.queue.drain(..n).collect();
-        self.oldest = if self.queue.is_empty() { None } else { Some(Instant::now()) };
-        batch
+        self.queue.drain(..n).collect()
     }
 }
 
@@ -135,6 +143,32 @@ mod tests {
         }
         assert_eq!(b.take_batch().len(), 2);
         assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn residual_queue_keeps_arrival_deadline_after_partial_drain() {
+        // Three requests that arrived 8 ms ago, max_wait 10 ms, max_batch
+        // 2: draining a full batch must leave the residual head ~2 ms
+        // from its deadline — not a fresh 10 ms (the re-stamping bug made
+        // tail requests wait up to 2x max_wait).
+        let arrived = Instant::now() - Duration::from_millis(8);
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(10),
+        });
+        for id in 0..3 {
+            b.push(InferenceRequest { id, image: vec![0.0; 4], submitted: arrived });
+        }
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.len(), 1);
+        let left = b.time_to_deadline().expect("residual head has a deadline");
+        assert!(
+            left <= Duration::from_millis(3),
+            "residual deadline re-stamped: {:?} left of a 10 ms bound after 8 ms queued",
+            left
+        );
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(), "residual head past its arrival deadline must dispatch");
     }
 
     #[test]

@@ -1,4 +1,14 @@
 //! Serving metrics: latency percentiles, throughput, batch occupancy.
+//!
+//! Two views of the same counters:
+//!
+//! * [`MetricsReport`] — the summarized, `Copy` scoreboard (percentiles,
+//!   throughput, occupancy) printed by the CLI and asserted by tests;
+//! * [`MetricsSnapshot`] — the raw samples behind a report. Snapshots
+//!   from independent engines [`merge`](MetricsSnapshot::merge) into one,
+//!   which is how the replica pool computes *true* pool-level latency
+//!   percentiles (percentiles do not aggregate from per-replica
+//!   summaries; the raw samples must be pooled before sorting).
 
 use std::time::{Duration, Instant};
 
@@ -22,6 +32,77 @@ pub struct MetricsReport {
     pub throughput_rps: f64,
     pub mean_batch_occupancy: f64,
     pub elapsed_s: f64,
+}
+
+/// Raw metric samples, detached from the engine thread. Mergeable across
+/// replicas; `report()` summarizes with the same math a single engine
+/// uses, so a 1-replica pool reports exactly what its coordinator would.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Per-request latencies, microseconds, arrival order (unsorted).
+    pub latencies_us: Vec<u64>,
+    pub batches: u64,
+    pub batch_occupancy_sum: u64,
+    /// Wall seconds the engine has been up.
+    pub elapsed_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Fold another engine's samples into this one. Latencies pool,
+    /// counters add, and elapsed takes the max (replicas run
+    /// concurrently, so pool wall time is the longest-lived engine, not
+    /// the sum).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batches += other.batches;
+        self.batch_occupancy_sum += other.batch_occupancy_sum;
+        self.elapsed_s = self.elapsed_s.max(other.elapsed_s);
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        summarize(&sorted, self.batches, self.batch_occupancy_sum, self.elapsed_s)
+    }
+}
+
+/// Summarize sorted latency samples. Percentiles use the nearest-rank
+/// index `round((n-1) * p)`; every divisor is guarded so a report over
+/// zero requests (or zero elapsed time) is all-zeros, never NaN/inf.
+fn summarize(
+    sorted_us: &[u64],
+    batches: u64,
+    batch_occupancy_sum: u64,
+    elapsed_s: f64,
+) -> MetricsReport {
+    let n = sorted_us.len();
+    let pct = |p: f64| -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let idx = ((n as f64 - 1.0) * p).round() as usize;
+        sorted_us[idx.min(n - 1)] as f64 / 1e3
+    };
+    MetricsReport {
+        requests: n,
+        batches,
+        mean_ms: if n == 0 {
+            0.0
+        } else {
+            sorted_us.iter().sum::<u64>() as f64 / n as f64 / 1e3
+        },
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        max_ms: sorted_us.last().copied().unwrap_or(0) as f64 / 1e3,
+        throughput_rps: if elapsed_s > 0.0 { n as f64 / elapsed_s } else { 0.0 },
+        mean_batch_occupancy: if batches == 0 {
+            0.0
+        } else {
+            batch_occupancy_sum as f64 / batches as f64
+        },
+        elapsed_s,
+    }
 }
 
 impl Default for Metrics {
@@ -49,34 +130,17 @@ impl Metrics {
         self.batch_occupancy_sum += occupancy as u64;
     }
 
-    pub fn report(&self) -> MetricsReport {
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_unstable();
-        let pct = |p: f64| -> f64 {
-            if sorted.is_empty() {
-                return 0.0;
-            }
-            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-            sorted[idx] as f64 / 1e3
-        };
-        let elapsed = self.start.elapsed().as_secs_f64();
-        let n = sorted.len();
-        MetricsReport {
-            requests: n,
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            latencies_us: self.latencies_us.clone(),
             batches: self.batches,
-            mean_ms: if n == 0 { 0.0 } else {
-                sorted.iter().sum::<u64>() as f64 / n as f64 / 1e3
-            },
-            p50_ms: pct(0.50),
-            p95_ms: pct(0.95),
-            p99_ms: pct(0.99),
-            max_ms: sorted.last().copied().unwrap_or(0) as f64 / 1e3,
-            throughput_rps: if elapsed > 0.0 { n as f64 / elapsed } else { 0.0 },
-            mean_batch_occupancy: if self.batches == 0 { 0.0 } else {
-                self.batch_occupancy_sum as f64 / self.batches as f64
-            },
-            elapsed_s: elapsed,
+            batch_occupancy_sum: self.batch_occupancy_sum,
+            elapsed_s: self.start.elapsed().as_secs_f64(),
         }
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        self.snapshot().report()
     }
 }
 
@@ -109,10 +173,38 @@ mod tests {
     }
 
     #[test]
-    fn empty_metrics_safe() {
+    fn percentiles_exact_on_known_set() {
+        // 101 latencies 0..=100 ms: nearest-rank idx = round(100 * p)
+        // lands exactly on the value, in any insertion order.
+        let mut m = Metrics::new();
+        for i in (0..=100u64).rev() {
+            m.record(Duration::from_millis(i));
+        }
+        let r = m.report();
+        assert_eq!(r.requests, 101);
+        assert!((r.p50_ms - 50.0).abs() < 1e-9, "p50 {}", r.p50_ms);
+        assert!((r.p95_ms - 95.0).abs() < 1e-9, "p95 {}", r.p95_ms);
+        assert!((r.p99_ms - 99.0).abs() < 1e-9, "p99 {}", r.p99_ms);
+        assert!((r.max_ms - 100.0).abs() < 1e-9);
+        assert!((r.mean_ms - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_all_fields_finite_and_zero() {
+        // Zero requests must never divide by zero: every field is a
+        // finite 0 (elapsed_s aside), including a zero-elapsed snapshot.
         let r = Metrics::new().report();
         assert_eq!(r.requests, 0);
-        assert_eq!(r.p99_ms, 0.0);
+        for v in [
+            r.mean_ms, r.p50_ms, r.p95_ms, r.p99_ms, r.max_ms,
+            r.throughput_rps, r.mean_batch_occupancy,
+        ] {
+            assert!(v.is_finite() && v == 0.0, "non-zero/NaN field: {}", v);
+        }
+        let frozen = MetricsSnapshot::default(); // elapsed_s == 0.0
+        let r = frozen.report();
+        assert!(r.throughput_rps.is_finite() && r.throughput_rps == 0.0);
+        assert!(r.elapsed_s == 0.0);
     }
 
     #[test]
@@ -121,5 +213,36 @@ mod tests {
         m.record_batch(1);
         m.record_batch(3);
         assert!((m.report().mean_batch_occupancy - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_snapshots_equal_pooled_samples() {
+        // Percentiles over merged snapshots == percentiles over the
+        // union of samples (the pool-level aggregation invariant).
+        let mut whole = Metrics::new();
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        for i in 1..=60u64 {
+            whole.record(Duration::from_millis(i));
+            if i % 3 == 0 {
+                a.record(Duration::from_millis(i));
+            } else {
+                b.record(Duration::from_millis(i));
+            }
+        }
+        a.record_batch(4);
+        b.record_batch(2);
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let (m, w) = (merged.report(), whole.report());
+        assert_eq!(m.requests, 60);
+        assert_eq!(m.batches, 2);
+        assert!((m.mean_batch_occupancy - 3.0).abs() < 1e-9);
+        for (x, y) in [
+            (m.p50_ms, w.p50_ms), (m.p95_ms, w.p95_ms),
+            (m.p99_ms, w.p99_ms), (m.max_ms, w.max_ms), (m.mean_ms, w.mean_ms),
+        ] {
+            assert!((x - y).abs() < 1e-9, "{} != {}", x, y);
+        }
     }
 }

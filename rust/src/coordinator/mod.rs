@@ -14,28 +14,107 @@
 //! non-Send substrates (PJRT's C++ handles). Backends that *are* Send
 //! (the native engine) start via [`Coordinator::start`]; others are
 //! constructed on the engine thread via [`Coordinator::start_with`].
+//!
+//! One `Coordinator` drives one engine. [`pool::BackendPool`] replicates
+//! that engine N times behind a least-loaded dispatcher with bounded
+//! admission — the coordinator stays the 1-replica special case.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{Metrics, MetricsReport};
+pub use metrics::{Metrics, MetricsReport, MetricsSnapshot};
+pub use pool::{BackendPool, Overloaded, PoolMetricsReport, PoolPolicy, PoolStats};
 pub use request::{InferenceRequest, InferenceResponse};
 
 use crate::backend::Backend;
 
 enum Msg {
     Infer(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>),
-    Report(mpsc::Sender<MetricsReport>),
+    Snapshot(mpsc::Sender<MetricsSnapshot>),
     Shutdown,
+}
+
+/// Gauges a pooled replica shares with its dispatcher. The pool
+/// increments at admission; the engine decrements when a response (or
+/// error) is delivered, so `total_inflight` is the pool's live queue
+/// depth and `replica_inflight` drives least-loaded dispatch.
+#[derive(Clone)]
+pub(crate) struct EngineShared {
+    pub(crate) replica_inflight: Arc<AtomicUsize>,
+    pub(crate) total_inflight: Arc<AtomicUsize>,
+}
+
+impl EngineShared {
+    fn release(&self, n: usize) {
+        if n > 0 {
+            self.replica_inflight.fetch_sub(n, Ordering::AcqRel);
+            self.total_inflight.fetch_sub(n, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Drop guard over the engine's admitted-but-unanswered count: slots
+/// are released one-by-one as responses go out, and whatever remains is
+/// released when the engine exits — *including* by panic unwind (a
+/// panicking backend must not leak pool capacity forever).
+struct SlotGuard {
+    shared: Option<EngineShared>,
+    admitted: usize,
+}
+
+impl SlotGuard {
+    fn add(&mut self) {
+        self.admitted += 1;
+    }
+    fn complete(&mut self) {
+        self.admitted = self.admitted.saturating_sub(1);
+        if let Some(sh) = &self.shared {
+            sh.release(1);
+        }
+    }
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        if let Some(sh) = &self.shared {
+            sh.release(self.admitted);
+        }
+    }
+}
+
+/// Owns the engine's receiver so that on engine exit — orderly or panic
+/// unwind — requests still *buffered in the channel* (sent but never
+/// received, so never counted by the `SlotGuard`) release their
+/// admission slots too. Runs after `engine_loop`'s own guard. A send
+/// landing in the nanoseconds between this drain and the receiver's
+/// teardown can still leak its slot; every later send fails and is
+/// reclaimed by the pool's failover, so a dead replica costs at most
+/// one slot, not its whole backlog.
+struct ChannelGuard {
+    rx: mpsc::Receiver<Msg>,
+    shared: Option<EngineShared>,
+}
+
+impl Drop for ChannelGuard {
+    fn drop(&mut self) {
+        if let Some(sh) = &self.shared {
+            while let Ok(m) = self.rx.try_recv() {
+                if matches!(m, Msg::Infer(..)) {
+                    sh.release(1);
+                }
+            }
+        }
+    }
 }
 
 /// Handle to a running coordinator; shareable across client threads
@@ -74,11 +153,26 @@ impl Coordinator {
         B: Backend + 'static,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
+        Self::start_shared(factory, policy, None, "vitfpga-engine")
+    }
+
+    /// Shared engine bring-up for the standalone coordinator and the
+    /// pool's replicas (`shared` = admission gauges, pool only).
+    pub(crate) fn start_shared<B, F>(
+        factory: F,
+        policy: BatchPolicy,
+        shared: Option<EngineShared>,
+        thread_name: &str,
+    ) -> Result<Coordinator>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (init_tx, init_rx) = mpsc::channel::<Result<(String, usize, usize, usize)>>();
 
         let engine_thread = std::thread::Builder::new()
-            .name("vitfpga-engine".into())
+            .name(thread_name.into())
             .spawn(move || {
                 let backend = match factory() {
                     Ok(b) => {
@@ -99,7 +193,11 @@ impl Coordinator {
                     max_batch: policy.max_batch.min(backend.batch_capacity()).max(1),
                     ..policy
                 };
-                engine_loop(backend, policy, rx)
+                // Declared before engine_loop runs so it drops *after*
+                // the loop's SlotGuard on unwind: received requests
+                // settle first, then the buffered remainder.
+                let guard = ChannelGuard { rx, shared: shared.clone() };
+                engine_loop(backend, policy, &guard.rx, shared)
             })
             .context("spawning engine thread")?;
 
@@ -142,15 +240,28 @@ impl Coordinator {
                 image.len()
             ));
         }
+        self.submit_reclaim(image)
+            .map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Forward a pre-validated image to the engine; hands the image back
+    /// if the engine thread is gone, so the pool can fail a submit over
+    /// to another replica without cloning the buffer.
+    pub(crate) fn submit_reclaim(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Result<InferenceResponse>>, Vec<f32>> {
+        debug_assert_eq!(image.len(), self.input_elems_per_image);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer(
-                InferenceRequest { id, image, submitted: Instant::now() },
-                rtx,
-            ))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        Ok(rrx)
+        match self.tx.send(Msg::Infer(
+            InferenceRequest { id, image, submitted: Instant::now() },
+            rtx,
+        )) {
+            Ok(()) => Ok(rrx),
+            Err(mpsc::SendError(Msg::Infer(req, _))) => Err(req.image),
+            Err(_) => Err(Vec::new()),
+        }
     }
 
     /// Blocking single inference.
@@ -161,9 +272,15 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> Result<MetricsReport> {
+        Ok(self.metrics_snapshot()?.report())
+    }
+
+    /// Raw metric samples (mergeable across engines — the pool's
+    /// aggregation primitive).
+    pub fn metrics_snapshot(&self) -> Result<MetricsSnapshot> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Msg::Report(rtx))
+            .send(Msg::Snapshot(rtx))
             .map_err(|_| anyhow!("engine thread gone"))?;
         rrx.recv().map_err(|_| anyhow!("engine dropped report"))
     }
@@ -178,43 +295,72 @@ impl Drop for Coordinator {
     }
 }
 
-fn engine_loop<B: Backend>(mut backend: B, policy: BatchPolicy, rx: mpsc::Receiver<Msg>) {
+fn engine_loop<B: Backend>(
+    mut backend: B,
+    policy: BatchPolicy,
+    rx: &mpsc::Receiver<Msg>,
+    shared: Option<EngineShared>,
+) {
     let per_image = backend.input_elems_per_image();
     let classes = backend.num_classes();
     let mut batcher = Batcher::new(policy);
     let mut metrics = Metrics::new();
-    let mut pending: Vec<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)> =
-        Vec::new();
+    // Responders keyed by request id; the request itself (image included)
+    // lives only in the batcher queue — no per-request buffer clone.
+    let mut pending: Vec<(u64, mpsc::Sender<Result<InferenceResponse>>)> = Vec::new();
+    let mut slots = SlotGuard { shared, admitted: 0 };
     // Flat image staging, reused across dispatches.
     let mut flat: Vec<f32> = Vec::new();
 
-    loop {
+    'run: loop {
         // Wait for work: block if idle, poll with deadline if batching.
         let msg = if batcher.is_empty() {
             match rx.recv() {
                 Ok(m) => Some(m),
-                Err(_) => return,
+                Err(_) => break 'run,
             }
         } else {
             let deadline = batcher.time_to_deadline().unwrap_or(Duration::ZERO);
             match rx.recv_timeout(deadline) {
                 Ok(m) => Some(m),
                 Err(mpsc::RecvTimeoutError::Timeout) => None,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
             }
         };
 
         match msg {
             Some(Msg::Infer(req, responder)) => {
-                batcher.push(req.clone());
-                pending.push((req, responder));
+                pending.push((req.id, responder));
+                slots.add();
+                batcher.push(req);
             }
-            Some(Msg::Report(tx)) => {
-                let _ = tx.send(metrics.report());
+            Some(Msg::Snapshot(tx)) => {
+                let _ = tx.send(metrics.snapshot());
                 continue;
             }
-            Some(Msg::Shutdown) => return,
+            Some(Msg::Shutdown) => break 'run,
             None => {} // timeout: fall through to dispatch check
+        }
+
+        // Greedily drain whatever already queued behind the message just
+        // handled. Deadlines anchor to true arrival times, so a request
+        // that aged in the channel (e.g. behind a slow batch) is already
+        // past its wait bound when pushed — without this drain each one
+        // would dispatch as a singleton batch and occupancy would
+        // collapse exactly when load is highest.
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Infer(req, responder)) => {
+                    pending.push((req.id, responder));
+                    slots.add();
+                    batcher.push(req);
+                }
+                Ok(Msg::Snapshot(tx)) => {
+                    let _ = tx.send(metrics.snapshot());
+                }
+                Ok(Msg::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => break 'run,
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
         }
 
         while batcher.ready() {
@@ -228,6 +374,9 @@ fn engine_loop<B: Backend>(mut backend: B, policy: BatchPolicy, rx: mpsc::Receiv
             }
             let result = backend.infer_batch(&flat, n);
             metrics.record_batch(n);
+            // Release each admission slot *before* its response is sent:
+            // a submitter that has its answer must never observe its own
+            // request still counted in the pool's queue depth.
             match result {
                 Ok(logits) => {
                     for (i, req) in batch_reqs.iter().enumerate() {
@@ -235,11 +384,13 @@ fn engine_loop<B: Backend>(mut backend: B, policy: BatchPolicy, rx: mpsc::Receiv
                         let resp = InferenceResponse::from_logits(
                             req.id, slice, req.submitted, n);
                         metrics.record(resp.latency);
+                        slots.complete();
                         respond(&mut pending, req.id, Ok(resp));
                     }
                 }
                 Err(e) => {
                     for req in &batch_reqs {
+                        slots.complete();
                         respond(&mut pending, req.id,
                                 Err(anyhow!("inference failed: {}", e)));
                     }
@@ -247,14 +398,18 @@ fn engine_loop<B: Backend>(mut backend: B, policy: BatchPolicy, rx: mpsc::Receiv
             }
         }
     }
+    // Exiting with requests still queued: their responders drop here
+    // (submitters see a clean "engine dropped response" error, never a
+    // hang); the SlotGuard releases their admission slots — on this
+    // orderly exit and on panic unwind alike — so pool gauges settle.
 }
 
 fn respond(
-    pending: &mut Vec<(InferenceRequest, mpsc::Sender<Result<InferenceResponse>>)>,
+    pending: &mut Vec<(u64, mpsc::Sender<Result<InferenceResponse>>)>,
     id: u64,
     resp: Result<InferenceResponse>,
 ) {
-    if let Some(pos) = pending.iter().position(|(r, _)| r.id == id) {
+    if let Some(pos) = pending.iter().position(|(rid, _)| *rid == id) {
         let (_, tx) = pending.swap_remove(pos);
         let _ = tx.send(resp);
     }

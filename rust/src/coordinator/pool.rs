@@ -1,0 +1,490 @@
+//! Replicated serving pool: N engine replicas behind one dispatcher.
+//!
+//! The paper's accelerator absorbs the irregular work left by block +
+//! token pruning with multi-level parallelism and *load-balanced*
+//! column schedules (`sim::load_balance`). This module applies the same
+//! idea one level up: a [`BackendPool`] spawns `replicas` independent
+//! engines (each a [`Coordinator`] actor with its own batcher thread)
+//! and routes every request to the least-loaded replica, so one slow
+//! batch never serializes the whole fleet.
+//!
+//! ```text
+//! clients -> BackendPool::submit() -- admission (bounded in-flight)
+//!               |        shed -> Overloaded error + shed_count gauge
+//!               v
+//!        least-loaded dispatch (per-replica in-flight gauges)
+//!          |            |            |
+//!       replica 0    replica 1  ... replica N-1     (engine threads,
+//!       batcher+backend  ...                         own Batcher each)
+//! ```
+//!
+//! **Dispatch** is the serving-level analogue of
+//! [`sim::load_balance::balanced_order`](crate::sim::load_balance):
+//! keep per-replica load even so the schedule cost (makespan) tracks
+//! the ideal `total/N` bound. Loads are live in-flight counts; ties
+//! rotate round-robin so an idle pool still alternates replicas.
+//!
+//! **Backpressure** is a hard bound on admitted-but-unanswered requests
+//! (`queue_capacity`): admission uses a compare-and-swap loop, so the
+//! bound is never exceeded, and a rejected submit returns a typed
+//! [`Overloaded`] error (downcastable from `anyhow::Error`) instead of
+//! queueing unboundedly. Shed requests and live depth are exposed via
+//! [`BackendPool::stats`].
+//!
+//! **Metrics** aggregate by merging per-replica raw
+//! [`MetricsSnapshot`]s — pool percentiles are computed over the pooled
+//! samples, not averaged summaries — with per-replica reports kept for
+//! occupancy/skew inspection ([`PoolMetricsReport`]).
+//!
+//! A 1-replica pool is behaviourally the plain coordinator (same
+//! engine loop, same batcher, same metrics math); `Coordinator::start`
+//! remains the single-engine special case and its API is unchanged.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::Backend;
+
+use super::metrics::{MetricsReport, MetricsSnapshot};
+use super::request::InferenceResponse;
+use super::{BatchPolicy, Coordinator, EngineShared};
+
+/// Default bound on in-flight requests across the pool. Sized for the
+/// CLI's synthetic load tests; production deployments should set it to
+/// (replicas x batch x acceptable queue depth).
+pub const DEFAULT_QUEUE_CAPACITY: usize = 1024;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolPolicy {
+    /// Engine replicas to spawn (min 1).
+    pub replicas: usize,
+    /// Per-replica dynamic batching policy.
+    pub batch: BatchPolicy,
+    /// Max requests admitted and not yet answered, across all replicas
+    /// (queued, batching, or executing). Submits beyond it shed with
+    /// [`Overloaded`].
+    pub queue_capacity: usize,
+}
+
+impl Default for PoolPolicy {
+    fn default() -> Self {
+        PoolPolicy {
+            replicas: 1,
+            batch: BatchPolicy::default(),
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+        }
+    }
+}
+
+/// Typed admission-control shed error: the pool's in-flight bound was
+/// hit. Carried inside `anyhow::Error`; recover it with
+/// `err.downcast_ref::<Overloaded>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// In-flight requests observed at rejection.
+    pub queue_depth: usize,
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pool overloaded: {} requests in flight at capacity {}",
+            self.queue_depth, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Live admission gauges (point-in-time; individual counters move under
+/// concurrent traffic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Admitted-but-unanswered requests right now.
+    pub queue_depth: usize,
+    pub queue_capacity: usize,
+    /// Submits rejected with [`Overloaded`] since start.
+    pub shed_count: u64,
+    /// In-flight requests per replica (the dispatch gauge).
+    pub per_replica_inflight: Vec<usize>,
+}
+
+/// Pool-level metrics: percentiles over the merged per-replica latency
+/// samples, plus each replica's own report (occupancy, share of
+/// requests — the load-balance evidence). A replica whose engine died
+/// contributes a zero report and is counted in `dead_replicas` instead
+/// of failing the whole aggregation (submit fails over past dead
+/// replicas, so the pool can outlive them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolMetricsReport {
+    pub pool: MetricsReport,
+    pub per_replica: Vec<MetricsReport>,
+    /// Replicas that no longer answer (their samples are lost).
+    pub dead_replicas: usize,
+}
+
+impl std::fmt::Display for PoolMetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pool(x{}): {}", self.per_replica.len(), self.pool)?;
+        if self.dead_replicas > 0 {
+            write!(f, " [{} replica(s) dead]", self.dead_replicas)?;
+        }
+        for (i, r) in self.per_replica.iter().enumerate() {
+            write!(
+                f,
+                "\n  replica {}: requests={} batches={} p50={:.3}ms occupancy={:.2}",
+                i, r.requests, r.batches, r.p50_ms, r.mean_batch_occupancy
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// N replicated engines behind least-loaded dispatch with bounded
+/// admission. Shareable across client threads (wrap in `Arc`), same as
+/// `Coordinator`.
+pub struct BackendPool {
+    replicas: Vec<Coordinator>,
+    loads: Vec<Arc<AtomicUsize>>,
+    total_inflight: Arc<AtomicUsize>,
+    shed: AtomicU64,
+    rr: AtomicUsize,
+    queue_capacity: usize,
+    /// `<replica 0 backend name> x<N>`.
+    pub backend_name: String,
+    pub input_elems_per_image: usize,
+    pub num_classes: usize,
+    /// Effective per-dispatch batch bound (identical on every replica).
+    pub batch_capacity: usize,
+}
+
+impl BackendPool {
+    /// Spawn `policy.replicas` engines, each constructing its own
+    /// backend *on its engine thread* via `factory(replica_index)` —
+    /// the same non-`Send`-friendly pattern as
+    /// [`Coordinator::start_with`], so PJRT replicas work too. All
+    /// replicas must expose the same model shape.
+    pub fn start<B, F>(factory: F, policy: PoolPolicy) -> Result<BackendPool>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        if policy.queue_capacity == 0 {
+            bail!("pool queue_capacity must be >= 1");
+        }
+        let n = policy.replicas.max(1);
+        let factory = Arc::new(factory);
+        let total_inflight = Arc::new(AtomicUsize::new(0));
+        let mut replicas: Vec<Coordinator> = Vec::with_capacity(n);
+        let mut loads = Vec::with_capacity(n);
+        for i in 0..n {
+            let load = Arc::new(AtomicUsize::new(0));
+            let shared = EngineShared {
+                replica_inflight: Arc::clone(&load),
+                total_inflight: Arc::clone(&total_inflight),
+            };
+            let f = Arc::clone(&factory);
+            let c = Coordinator::start_shared(
+                move || f(i),
+                policy.batch,
+                Some(shared),
+                &format!("vitfpga-replica-{}", i),
+            )?;
+            if let Some(first) = replicas.first() {
+                if c.input_elems_per_image != first.input_elems_per_image
+                    || c.num_classes != first.num_classes
+                    || c.batch_capacity != first.batch_capacity
+                {
+                    bail!(
+                        "replica {} shape mismatch: ({}, {}, {}) vs replica 0 ({}, {}, {})",
+                        i,
+                        c.input_elems_per_image,
+                        c.num_classes,
+                        c.batch_capacity,
+                        first.input_elems_per_image,
+                        first.num_classes,
+                        first.batch_capacity
+                    );
+                }
+            }
+            loads.push(load);
+            replicas.push(c);
+        }
+        let first = &replicas[0];
+        Ok(BackendPool {
+            backend_name: format!("{} x{}", first.backend_name, n),
+            input_elems_per_image: first.input_elems_per_image,
+            num_classes: first.num_classes,
+            batch_capacity: first.batch_capacity,
+            replicas,
+            loads,
+            total_inflight,
+            shed: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            queue_capacity: policy.queue_capacity,
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Least-loaded replica, ties broken by a rotating start index (the
+    /// online counterpart of `sim::load_balance::balanced_order`'s even
+    /// offline assignment).
+    fn pick_replica(&self) -> usize {
+        let n = self.replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = self.loads[start].load(Ordering::Acquire);
+        for off in 1..n {
+            let i = (start + off) % n;
+            let l = self.loads[i].load(Ordering::Acquire);
+            if l < best_load {
+                best = i;
+                best_load = l;
+            }
+        }
+        best
+    }
+
+    /// Submit one image; returns a receiver for the response, or an
+    /// [`Overloaded`] error if the in-flight bound is hit (check with
+    /// `err.downcast_ref::<Overloaded>()`).
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        // Validate before admission so a shape rejection never consumes
+        // a queue slot (and is never mistaken for a dead replica below).
+        if image.len() != self.input_elems_per_image {
+            return Err(anyhow!(
+                "expected {} f32s per image, got {}",
+                self.input_elems_per_image,
+                image.len()
+            ));
+        }
+        // Hard-bounded admission: CAS so concurrent submitters can never
+        // push depth past capacity.
+        let admitted = self.total_inflight.fetch_update(
+            Ordering::AcqRel,
+            Ordering::Acquire,
+            |depth| (depth < self.queue_capacity).then_some(depth + 1),
+        );
+        if admitted.is_err() {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(Overloaded {
+                queue_depth: self.total_inflight.load(Ordering::Relaxed),
+                capacity: self.queue_capacity,
+            }));
+        }
+        // Dispatch with failover: a replica whose engine thread died
+        // (backend panic) hands the image back, and the next replica is
+        // tried — one dead replica must not fail a share of all traffic.
+        let n = self.replicas.len();
+        let first = self.pick_replica();
+        let mut image = image;
+        for off in 0..n {
+            let idx = (first + off) % n;
+            self.loads[idx].fetch_add(1, Ordering::AcqRel);
+            match self.replicas[idx].submit_reclaim(image) {
+                Ok(rx) => return Ok(rx),
+                Err(img) => {
+                    // The dead engine will never settle this slot.
+                    self.loads[idx].fetch_sub(1, Ordering::AcqRel);
+                    image = img;
+                }
+            }
+        }
+        self.total_inflight.fetch_sub(1, Ordering::AcqRel);
+        Err(anyhow!("all {} replica engines are gone", n))
+    }
+
+    /// Blocking single inference through the pool.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
+        self.submit(image)?
+            .recv()
+            .map_err(|_| anyhow!("engine dropped response"))?
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            queue_depth: self.total_inflight.load(Ordering::Acquire),
+            queue_capacity: self.queue_capacity,
+            shed_count: self.shed.load(Ordering::Relaxed),
+            per_replica_inflight: self
+                .loads
+                .iter()
+                .map(|l| l.load(Ordering::Acquire))
+                .collect(),
+        }
+    }
+
+    /// Merge every replica's raw samples into one pool report (true
+    /// pooled percentiles), keeping per-replica reports alongside. Dead
+    /// replicas are skipped (zero report, counted) rather than failing
+    /// the surviving replicas' aggregation.
+    pub fn metrics(&self) -> Result<PoolMetricsReport> {
+        let mut merged = MetricsSnapshot::default();
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        let mut dead_replicas = 0;
+        for c in &self.replicas {
+            match c.metrics_snapshot() {
+                Ok(snap) => {
+                    merged.merge(&snap);
+                    per_replica.push(snap.report());
+                }
+                Err(_) => {
+                    dead_replicas += 1;
+                    per_replica.push(MetricsSnapshot::default().report());
+                }
+            }
+        }
+        Ok(PoolMetricsReport { pool: merged.report(), per_replica, dead_replicas })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Deterministic stand-in backend: logits[j] = image[0] + j, with an
+    /// optional per-batch delay to hold requests in flight.
+    struct EchoBackend {
+        classes: usize,
+        per: usize,
+        delay: Duration,
+    }
+
+    impl EchoBackend {
+        fn new(delay: Duration) -> Self {
+            EchoBackend { classes: 4, per: 2, delay }
+        }
+    }
+
+    impl Backend for EchoBackend {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn batch_capacity(&self) -> usize {
+            8
+        }
+        fn num_classes(&self) -> usize {
+            self.classes
+        }
+        fn input_elems_per_image(&self) -> usize {
+            self.per
+        }
+        fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            let mut out = Vec::with_capacity(batch * self.classes);
+            for i in 0..batch {
+                for j in 0..self.classes {
+                    out.push(flat[i * self.per] + j as f32);
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn pool(replicas: usize, capacity: usize, delay: Duration) -> BackendPool {
+        BackendPool::start(
+            move |_i| Ok(EchoBackend::new(delay)),
+            PoolPolicy {
+                replicas,
+                batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+                queue_capacity: capacity,
+            },
+        )
+        .expect("pool start")
+    }
+
+    #[test]
+    fn single_replica_round_trip() {
+        let p = pool(1, 16, Duration::ZERO);
+        assert_eq!(p.replicas(), 1);
+        assert_eq!(p.num_classes, 4);
+        let resp = p.infer(vec![2.0, 0.0]).unwrap();
+        assert_eq!(resp.logits, vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(resp.predicted_class, 3);
+        let m = p.metrics().unwrap();
+        assert_eq!(m.pool.requests, 1);
+        assert_eq!(m.per_replica.len(), 1);
+        let s = p.stats();
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.shed_count, 0);
+    }
+
+    #[test]
+    fn dispatch_spreads_load_across_replicas() {
+        // 24 in-flight requests against 3 slow replicas: least-loaded +
+        // round-robin dispatch must use every replica.
+        let p = pool(3, 64, Duration::from_millis(5));
+        let rxs: Vec<_> = (0..24)
+            .map(|i| p.submit(vec![i as f32, 0.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.logits[0], i as f32, "responses routed back per request");
+        }
+        let m = p.metrics().unwrap();
+        assert_eq!(m.pool.requests, 24);
+        for (i, r) in m.per_replica.iter().enumerate() {
+            assert!(r.requests > 0, "replica {} never dispatched", i);
+        }
+        assert_eq!(
+            m.per_replica.iter().map(|r| r.requests).sum::<usize>(),
+            24,
+            "pool report must cover exactly the admitted requests"
+        );
+    }
+
+    #[test]
+    fn admission_sheds_typed_overloaded_beyond_capacity() {
+        // Capacity 2 with a slow backend: the first two submits occupy
+        // the queue for >= 50 ms, so further submits must shed.
+        let p = pool(1, 2, Duration::from_millis(50));
+        let a = p.submit(vec![1.0, 0.0]).unwrap();
+        let b = p.submit(vec![2.0, 0.0]).unwrap();
+        let shed = p.submit(vec![3.0, 0.0]).expect_err("third submit over capacity");
+        let o = shed
+            .downcast_ref::<Overloaded>()
+            .expect("shed error downcasts to Overloaded");
+        assert_eq!(o.capacity, 2);
+        assert!(o.queue_depth >= 2);
+        assert_eq!(p.stats().shed_count, 1);
+        // Admitted requests still complete, and the gauge settles.
+        assert!(a.recv().unwrap().is_ok());
+        assert!(b.recv().unwrap().is_ok());
+        for _ in 0..100 {
+            if p.stats().queue_depth == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(p.stats().queue_depth, 0, "queue depth must settle to 0");
+        // Capacity freed: submits are admitted again.
+        assert!(p.infer(vec![4.0, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn zero_capacity_rejected_at_start() {
+        let r = BackendPool::start(
+            |_| Ok(EchoBackend::new(Duration::ZERO)),
+            PoolPolicy { replicas: 1, batch: BatchPolicy::default(), queue_capacity: 0 },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn wrong_image_size_releases_admission_slot() {
+        let p = pool(1, 4, Duration::ZERO);
+        assert!(p.submit(vec![0.0; 7]).is_err());
+        assert_eq!(p.stats().queue_depth, 0, "rejected submit must not leak a slot");
+        assert_eq!(p.stats().shed_count, 0, "shape rejection is not a shed");
+    }
+}

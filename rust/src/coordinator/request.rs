@@ -7,6 +7,10 @@ use std::time::{Duration, Instant};
 pub struct InferenceRequest {
     pub id: u64,
     pub image: Vec<f32>,
+    /// True arrival time, stamped once at `submit()`. Anchors both the
+    /// reported latency and the batcher's dispatch deadline — it is
+    /// never re-stamped, so time spent in the channel or behind a
+    /// partial drain counts against the wait bound.
     pub submitted: Instant,
 }
 

@@ -19,7 +19,9 @@
 //!     the batched/parallel `NativeBackend` over funcsim, and (with
 //!     `--features pjrt`) the `PjrtBackend` over the AOT artifacts;
 //!   * [`coordinator`] — the serving stack (router, dynamic batcher,
-//!     metrics, engine actor), generic over any backend;
+//!     metrics, engine actor), generic over any backend, plus the
+//!     replicated [`coordinator::BackendPool`] (least-loaded dispatch,
+//!     bounded admission with typed shedding, merged pool metrics);
 //!   * [`runtime`] — artifact manifest + VITW0001 weight readers
 //!     (always built) and the PJRT engine (`pjrt` feature only);
 //!   * [`complexity`], [`sim::resources`], [`baselines`] — the paper's

@@ -6,10 +6,13 @@
 //!   simulate [--setting L] [--batch B] [--structure FILE]
 //!                           cycle-level latency breakdown
 //!   infer [--backend native|pjrt] [--variant NAME] [--artifacts DIR]
-//!                           one inference on a synthetic image
+//!         [--replicas N]    one inference on a synthetic image
 //!   serve [--backend native|pjrt] [--variant NAME] [--requests N]
 //!         [--concurrency C] [--model M] [--setting L] [--int16]
-//!                           run the coordinator against synthetic load
+//!         [--replicas N] [--queue-capacity Q]
+//!                           run the coordinator (or, with --replicas > 1,
+//!                           the replicated pool with least-loaded dispatch
+//!                           and bounded admission) against synthetic load
 //!   funcsim --variant NAME [--artifacts DIR] [--int16]
 //!                           functional datapath run (cross-checked
 //!                           against PJRT when built with --features pjrt)
@@ -31,7 +34,9 @@ use anyhow::{bail, Result};
 use vitfpga::backend::{Backend, NativeBackend};
 use vitfpga::bench_harness;
 use vitfpga::config::{model_by_name, HardwareConfig, PruningSetting};
-use vitfpga::coordinator::{BatchPolicy, Coordinator};
+use vitfpga::coordinator::{
+    BackendPool, BatchPolicy, Coordinator, InferenceResponse, Overloaded, PoolPolicy,
+};
 use vitfpga::funcsim::Precision;
 use vitfpga::sim::{AcceleratorSim, ModelStructure};
 use vitfpga::util::cli::Args;
@@ -147,7 +152,122 @@ fn start_pjrt_coordinator(_args: &Args, _policy: BatchPolicy) -> Result<Coordina
     bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
 }
 
+#[cfg(feature = "pjrt")]
+fn start_pjrt_pool(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
+    // PJRT handles are not Send; the pool constructs one backend per
+    // replica *on* that replica's engine thread, so this composes.
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4").to_string();
+    BackendPool::start(
+        move |_i| vitfpga::backend::PjrtBackend::load(&dir, &variant),
+        policy,
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt_pool(_args: &Args, _policy: PoolPolicy) -> Result<BackendPool> {
+    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
+}
+
+/// One coordinator or a replicated pool, behind one client-facing shape —
+/// `Coordinator::start` stays the 1-replica special case.
+enum Server {
+    Single(Coordinator),
+    Pool(BackendPool),
+}
+
+impl Server {
+    fn start(args: &Args, policy: BatchPolicy) -> Result<Server> {
+        let replicas = args.get_usize("replicas", 1);
+        let queue_capacity = args.get_usize(
+            "queue-capacity",
+            vitfpga::coordinator::pool::DEFAULT_QUEUE_CAPACITY,
+        );
+        // An explicit --queue-capacity asks for admission control, which
+        // only the pool implements — honour it even at one replica
+        // rather than silently ignoring the flag.
+        let pooled = replicas > 1 || args.get("queue-capacity").is_some();
+        let pool_policy = PoolPolicy { replicas, batch: policy, queue_capacity };
+        match (args.get_or("backend", "native"), pooled) {
+            ("native", false) => {
+                Ok(Server::Single(Coordinator::start(NativeBackend::from_cli(args)?, policy)?))
+            }
+            ("native", true) => {
+                let args = args.clone();
+                Ok(Server::Pool(BackendPool::start(
+                    move |_i| NativeBackend::from_cli(&args),
+                    pool_policy,
+                )?))
+            }
+            ("pjrt", false) => Ok(Server::Single(start_pjrt_coordinator(args, policy)?)),
+            ("pjrt", true) => Ok(Server::Pool(start_pjrt_pool(args, pool_policy)?)),
+            (other, _) => bail!("unknown backend '{}'", other),
+        }
+    }
+
+    fn backend_name(&self) -> &str {
+        match self {
+            Server::Single(c) => &c.backend_name,
+            Server::Pool(p) => &p.backend_name,
+        }
+    }
+
+    fn input_elems_per_image(&self) -> usize {
+        match self {
+            Server::Single(c) => c.input_elems_per_image,
+            Server::Pool(p) => p.input_elems_per_image,
+        }
+    }
+
+    fn batch_capacity(&self) -> usize {
+        match self {
+            Server::Single(c) => c.batch_capacity,
+            Server::Pool(p) => p.batch_capacity,
+        }
+    }
+
+    fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
+        match self {
+            Server::Single(c) => c.infer(image),
+            Server::Pool(p) => p.infer(image),
+        }
+    }
+
+    fn print_metrics(&self) -> Result<()> {
+        match self {
+            Server::Single(c) => println!("{}", c.metrics()?),
+            Server::Pool(p) => {
+                println!("{}", p.metrics()?);
+                let s = p.stats();
+                println!(
+                    "admission: depth {}/{}, shed {}",
+                    s.queue_depth, s.queue_capacity, s.shed_count
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
+    if args.get_usize("replicas", 1) > 1 {
+        // Route the one inference through the replicated pool — mostly a
+        // bring-up check that N replicas construct and serve.
+        let policy = BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::ZERO,
+        };
+        let server = Server::start(args, policy)?;
+        println!("loaded {} (capacity={})", server.backend_name(), server.batch_capacity());
+        let img = synthetic_image(server.input_elems_per_image(),
+                                  args.get_usize("seed", 7) as u64);
+        let t0 = std::time::Instant::now();
+        let resp = server.infer(img)?;
+        let dt = t0.elapsed();
+        report_logits(&resp.logits, resp.logits.len());
+        println!("wall latency: {:.3} ms (pooled)", dt.as_secs_f64() * 1e3);
+        return Ok(());
+    }
     match args.get_or("backend", "native") {
         "native" => {
             let mut nb = NativeBackend::from_cli(args)?;
@@ -265,50 +385,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 8),
         max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
     };
-    let coord = match args.get_or("backend", "native") {
-        "native" => Coordinator::start(NativeBackend::from_cli(args)?, policy)?,
-        "pjrt" => start_pjrt_coordinator(args, policy)?,
-        other => bail!("unknown backend '{}'", other),
-    };
-    let coord = Arc::new(coord);
+    let server = Arc::new(Server::start(args, policy)?);
     println!(
         "serving {} ({} f32/image, batch capacity {}), {} requests x {} client threads",
-        coord.backend_name, coord.input_elems_per_image, coord.batch_capacity,
+        server.backend_name(), server.input_elems_per_image(), server.batch_capacity(),
         requests, concurrency
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..concurrency {
-        let coord = Arc::clone(&coord);
-        handles.push(std::thread::spawn(move || -> Result<()> {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || -> Result<u64> {
+            let mut shed = 0u64;
             for i in 0..requests {
-                let img = synthetic_image(coord.input_elems_per_image,
+                let img = synthetic_image(server.input_elems_per_image(),
                                           (c * 1000 + i) as u64);
-                let resp = coord.infer(img)?;
-                if i == 0 {
-                    println!(
-                        "  client {}: first response class={} latency={:.2} ms batch={}",
-                        c,
-                        resp.predicted_class,
-                        resp.latency.as_secs_f64() * 1e3,
-                        resp.batch_size
-                    );
+                match server.infer(img) {
+                    Ok(resp) => {
+                        if i == 0 {
+                            println!(
+                                "  client {}: first response class={} latency={:.2} ms batch={}",
+                                c,
+                                resp.predicted_class,
+                                resp.latency.as_secs_f64() * 1e3,
+                                resp.batch_size
+                            );
+                        }
+                    }
+                    // Backpressure is an expected outcome under a tight
+                    // --queue-capacity, not a client failure: count it.
+                    Err(e) if e.downcast_ref::<Overloaded>().is_some() => shed += 1,
+                    Err(e) => return Err(e),
                 }
             }
-            Ok(())
+            Ok(shed)
         }));
     }
+    let mut shed_total = 0u64;
     for h in handles {
-        h.join().unwrap()?;
+        shed_total += h.join().unwrap()?;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = coord.metrics()?;
-    println!("{}", m);
+    server.print_metrics()?;
+    let total = (requests * concurrency) as u64;
     println!(
-        "wall: {:.2}s for {} requests -> {:.1} req/s",
+        "wall: {:.2}s for {} requests ({} answered, {} shed) -> {:.1} req/s",
         wall,
-        requests * concurrency,
-        (requests * concurrency) as f64 / wall
+        total,
+        total - shed_total,
+        shed_total,
+        (total - shed_total) as f64 / wall
     );
     Ok(())
 }

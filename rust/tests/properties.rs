@@ -219,6 +219,83 @@ fn tokens_per_layer_conserved_across_structures() {
 }
 
 #[test]
+fn spmm_matches_dense_reference_over_random_shapes_and_masks() {
+    // formats::block_sparse::{spmm, spmm_into} against an independent
+    // dense reference: random (possibly ragged) shapes, block sizes,
+    // keep rates from ~empty to dense, at least one fully empty block
+    // column, and zero-valued x entries (the header walk's skip path).
+    use vitfpga::formats::BlockSparseMatrix;
+    forall(
+        9,
+        120,
+        |r: &mut Rng| {
+            let b = [2usize, 3, 4, 8][r.range(0, 3)];
+            let m1 = r.range(1, 5);
+            let m2 = r.range(1, 40);
+            let n = r.range(1, 40);
+            let (rb, cb) = (m2.div_ceil(b), n.div_ceil(b));
+            let keep_p = r.f64();
+            let mut mask: Vec<bool> = (0..rb * cb).map(|_| r.bool(keep_p)).collect();
+            if cb > 1 {
+                // Force an empty column of blocks.
+                let j = r.below(cb);
+                for i in 0..rb {
+                    mask[i * cb + j] = false;
+                }
+            }
+            let dense: Vec<f32> = (0..m2 * n).map(|_| r.normal()).collect();
+            let x: Vec<f32> = (0..m1 * m2)
+                .map(|_| if r.bool(0.2) { 0.0 } else { r.normal() })
+                .collect();
+            (m1, m2, n, b, mask, dense, x)
+        },
+        |(m1, m2, n, b, mask, dense, x)| {
+            let (m1, m2, n, b) = (*m1, *m2, *n, *b);
+            let cb = n.div_ceil(b);
+            // Independent reference: zero the pruned blocks on the dense
+            // matrix, then a plain triple-loop matmul.
+            let mut wm = dense.clone();
+            for i in 0..m2 {
+                for j in 0..n {
+                    if !mask[(i / b) * cb + (j / b)] {
+                        wm[i * n + j] = 0.0;
+                    }
+                }
+            }
+            let mut want = vec![0.0f32; m1 * n];
+            for i in 0..m1 {
+                for k in 0..m2 {
+                    let xv = x[i * m2 + k];
+                    for j in 0..n {
+                        want[i * n + j] += xv * wm[k * n + j];
+                    }
+                }
+            }
+            let sp = BlockSparseMatrix::from_dense(dense, (m2, n), b, mask, cb);
+            let got = sp.spmm(x, m1);
+            // spmm_into must fully overwrite a poisoned output buffer.
+            let mut also = vec![f32::NAN; m1 * n];
+            sp.spmm_into(x, m1, &mut also);
+            if got.len() != want.len() {
+                return Err(format!("shape: {} vs {}", got.len(), want.len()));
+            }
+            for (idx, (a, w)) in got.iter().zip(&want).enumerate() {
+                if (a - w).abs() > 1e-4 * (1.0 + w.abs()) {
+                    return Err(format!("spmm[{}] = {} vs dense {}", idx, a, w));
+                }
+                let v = also[idx];
+                // Bit equality: also catches a NaN poison value left
+                // unwritten (NaN would defeat any |a - v| threshold).
+                if v.to_bits() != a.to_bits() {
+                    return Err(format!("spmm_into[{}] = {} vs spmm {}", idx, v, a));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn structure_storage_matches_block_sparse_bytes() {
     // memory model vs the actual packed format: encoder weight bytes from
     // the structure must equal the BlockSparseMatrix storage computed from

@@ -1,0 +1,379 @@
+//! Serving battery for the replicated pool: response parity with the
+//! single-replica coordinator, bounded-admission shedding, pool-level
+//! metrics aggregation, and drop-while-in-flight shutdown behaviour
+//! (submitters always get a response or a clean error, never a hang).
+//! Runs with the default feature set — no artifacts, no XLA toolchain.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::Result;
+use vitfpga::backend::{Backend, NativeBackend};
+use vitfpga::config::{PruningSetting, TEST_TINY};
+use vitfpga::coordinator::{
+    BackendPool, BatchPolicy, Coordinator, InferenceResponse, Overloaded, PoolPolicy,
+};
+use vitfpga::funcsim::Precision;
+use vitfpga::util::rng::Rng;
+
+const SEED: u64 = 42;
+
+fn setting() -> PruningSetting {
+    PruningSetting::new(8, 0.7, 0.7)
+}
+
+fn native() -> NativeBackend {
+    NativeBackend::synthetic(&TEST_TINY, &setting(), SEED, Precision::F32).unwrap()
+}
+
+fn native_pool(replicas: usize, batch: BatchPolicy, queue_capacity: usize) -> BackendPool {
+    // Same (dims, setting, seed) per replica: synthesis is
+    // bit-deterministic, so every replica serves the identical model.
+    BackendPool::start(
+        |_i| NativeBackend::synthetic(&TEST_TINY, &setting(), SEED, Precision::F32),
+        PoolPolicy { replicas, batch, queue_capacity },
+    )
+    .expect("pool start")
+}
+
+fn images(n: usize, per: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..per).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+/// Test-only backend that holds every batch for `delay` — makes
+/// in-flight windows wide enough to exercise shedding and shutdown
+/// deterministically.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn batch_capacity(&self) -> usize {
+        4
+    }
+    fn num_classes(&self) -> usize {
+        3
+    }
+    fn input_elems_per_image(&self) -> usize {
+        2
+    }
+    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        let mut out = Vec::with_capacity(batch * 3);
+        for i in 0..batch {
+            for j in 0..3 {
+                out.push(flat[i * 2] + j as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn pool_response_parity_with_single_coordinator() {
+    // Acceptance: an N-replica pool must answer an identical request set
+    // with exactly the coordinator's logits — batch composition may
+    // differ per replica, but per-image results are batch-independent.
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) };
+    let coord = Coordinator::start(native(), policy).expect("coordinator");
+    let pool = native_pool(3, policy, 1024);
+    assert_eq!(pool.replicas(), 3);
+    assert_eq!(pool.input_elems_per_image, coord.input_elems_per_image);
+    assert_eq!(pool.num_classes, coord.num_classes);
+
+    let imgs = images(24, coord.input_elems_per_image, 77);
+    let coord_rxs: Vec<_> = imgs
+        .iter()
+        .map(|img| coord.submit(img.clone()).expect("coord submit"))
+        .collect();
+    let pool_rxs: Vec<_> = imgs
+        .iter()
+        .map(|img| pool.submit(img.clone()).expect("pool submit"))
+        .collect();
+    for (i, (crx, prx)) in coord_rxs.into_iter().zip(pool_rxs).enumerate() {
+        let want: InferenceResponse = crx.recv().unwrap().expect("coord response");
+        let got: InferenceResponse = prx.recv().unwrap().expect("pool response");
+        assert_eq!(got.logits, want.logits, "request {} logits diverge", i);
+        assert_eq!(got.predicted_class, want.predicted_class, "request {}", i);
+    }
+
+    // Aggregation: the pool report covers exactly the request set, and
+    // per-replica reports partition it.
+    let m = pool.metrics().expect("pool metrics");
+    assert_eq!(m.pool.requests, 24);
+    assert_eq!(m.per_replica.len(), 3);
+    assert_eq!(m.per_replica.iter().map(|r| r.requests).sum::<usize>(), 24);
+    assert!(m.pool.mean_batch_occupancy >= 1.0);
+    assert!(m.pool.p50_ms <= m.pool.p99_ms && m.pool.p99_ms <= m.pool.max_ms);
+    assert_eq!(coord.metrics().expect("coord metrics").requests, 24);
+}
+
+#[test]
+fn one_replica_pool_matches_coordinator() {
+    // The 1-replica pool is the coordinator special case end-to-end.
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+    let coord = Coordinator::start(native(), policy).expect("coordinator");
+    let pool = native_pool(1, policy, 64);
+    for img in images(6, coord.input_elems_per_image, 5) {
+        let want = coord.infer(img.clone()).expect("coord infer");
+        let got = pool.infer(img).expect("pool infer");
+        assert_eq!(got.logits, want.logits);
+    }
+    let m = pool.metrics().unwrap();
+    assert_eq!(m.pool.requests, 6);
+    assert_eq!(m.per_replica.len(), 1);
+}
+
+#[test]
+fn bounded_queue_overflow_returns_overloaded() {
+    // Capacity 3, one slow replica holding each batch 100 ms: submits
+    // 1-3 are admitted and stay in flight; 4+ must shed with the typed
+    // error while the batch executes.
+    let pool = BackendPool::start(
+        |_i| Ok(SlowBackend { delay: Duration::from_millis(100) }),
+        PoolPolicy {
+            replicas: 1,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            queue_capacity: 3,
+        },
+    )
+    .expect("pool start");
+
+    let admitted: Vec<_> = (0..3)
+        .map(|i| pool.submit(vec![i as f32, 0.0]).expect("admitted"))
+        .collect();
+    let err = pool.submit(vec![9.0, 0.0]).expect_err("over capacity");
+    let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+    assert_eq!(o.capacity, 3);
+    assert!(o.queue_depth >= 3);
+    assert!(err.to_string().contains("overloaded"), "got: {}", err);
+    let stats = pool.stats();
+    assert_eq!(stats.shed_count, 1);
+    assert_eq!(stats.queue_capacity, 3);
+
+    // Shedding lost nothing that was admitted.
+    for (i, rx) in admitted.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("no hang")
+            .expect("admitted request answered");
+        assert_eq!(resp.logits[0], i as f32);
+    }
+    // Slots released: the pool admits again.
+    assert!(pool.infer(vec![1.0, 0.0]).is_ok());
+    assert_eq!(pool.stats().queue_depth, 0);
+}
+
+#[test]
+fn drop_with_partial_batch_in_flight_errors_cleanly() {
+    // max_wait far in the future and a partial final batch: the tail
+    // requests are still queued when the pool drops. Their responders
+    // must drop (clean error at the receiver), not linger.
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(30) };
+    for replicas in [1usize, 2] {
+        let pool = native_pool(replicas, policy, 64);
+        let per = pool.input_elems_per_image;
+        let rxs: Vec<_> = images(6, per, 3)
+            .into_iter()
+            .map(|img| pool.submit(img).expect("submit"))
+            .collect();
+        drop(pool);
+        let mut answered = 0;
+        let mut clean_errors = 0;
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_secs(10)) {
+                Ok(Ok(_)) => answered += 1,
+                Ok(Err(_)) => clean_errors += 1,
+                Err(mpsc::RecvTimeoutError::Disconnected) => clean_errors += 1,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    panic!("submitter hung on dropped pool (replicas={})", replicas)
+                }
+            }
+        }
+        assert_eq!(answered + clean_errors, 6, "replicas={}", replicas);
+        // With a 30 s wait bound no full batch formed per replica at
+        // replicas=2 (3 requests each), so at least the tail errs.
+        assert!(clean_errors > 0, "replicas={}: expected dropped tail", replicas);
+    }
+}
+
+/// Backend whose replica 0 instance panics on its first batch — the
+/// worst-case engine death (poisoned thread, unread channel backlog).
+struct PanicBackend {
+    fail: bool,
+}
+
+impl Backend for PanicBackend {
+    fn name(&self) -> &str {
+        "panicky"
+    }
+    fn batch_capacity(&self) -> usize {
+        4
+    }
+    fn num_classes(&self) -> usize {
+        3
+    }
+    fn input_elems_per_image(&self) -> usize {
+        2
+    }
+    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if self.fail {
+            panic!("injected backend failure (expected in this test)");
+        }
+        Ok((0..batch * 3).map(|k| flat[(k / 3) * 2] + (k % 3) as f32).collect())
+    }
+}
+
+#[test]
+fn replica_panic_releases_slots_and_fails_over() {
+    let pool = BackendPool::start(
+        |i| Ok(PanicBackend { fail: i == 0 }),
+        PoolPolicy {
+            replicas: 2,
+            batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            queue_capacity: 64,
+        },
+    )
+    .expect("pool start");
+
+    // Sequential traffic: requests routed to replica 0 die with it (a
+    // clean error, from the dropped responder or the drained channel);
+    // once its receiver is gone, submits fail over to replica 1.
+    let (mut answered, mut clean) = (0, 0);
+    for round in 0..30 {
+        match pool.infer(vec![round as f32, 0.0]) {
+            Ok(resp) => {
+                assert_eq!(resp.logits[0], round as f32);
+                answered += 1;
+            }
+            Err(_) => clean += 1,
+        }
+    }
+    assert_eq!(answered + clean, 30, "every request resolved");
+    assert!(answered > 0, "healthy replica must keep serving after the panic");
+
+    // The panic must not leak admission capacity: received requests are
+    // settled by the engine's slot guard, buffered ones by the channel
+    // drain, so the depth gauge returns to zero.
+    for _ in 0..200 {
+        if pool.stats().queue_depth == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(pool.stats().queue_depth, 0, "backend panic leaked admission slots");
+
+    // Metrics survive a dead replica: zero report + dead count instead
+    // of a pool-wide error.
+    let m = pool.metrics().expect("metrics despite dead replica");
+    assert_eq!(m.per_replica.len(), 2);
+    assert!(m.dead_replicas <= 1);
+    assert_eq!(
+        m.pool.requests, answered,
+        "surviving replicas' samples cover every answered request"
+    );
+}
+
+#[test]
+fn drop_coordinator_under_concurrent_clients_never_hangs() {
+    stress_drop(|| {
+        let c = Coordinator::start(
+            SlowBackend { delay: Duration::from_millis(3) },
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        )
+        .expect("coordinator");
+        Arc::new(Submitter::Single(c))
+    });
+}
+
+#[test]
+fn drop_pool_under_concurrent_clients_never_hangs() {
+    stress_drop(|| {
+        let p = BackendPool::start(
+            |_i| Ok(SlowBackend { delay: Duration::from_millis(3) }),
+            PoolPolicy {
+                replicas: 3,
+                batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                queue_capacity: 4096,
+            },
+        )
+        .expect("pool");
+        Arc::new(Submitter::Pool(p))
+    });
+}
+
+enum Submitter {
+    Single(Coordinator),
+    Pool(BackendPool),
+}
+
+impl Submitter {
+    fn submit(&self, img: Vec<f32>) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        match self {
+            Submitter::Single(c) => c.submit(img),
+            Submitter::Pool(p) => p.submit(img),
+        }
+    }
+}
+
+/// Concurrent clients submit against a slow server, release their
+/// handles, then wait on their receivers while the server (whose last
+/// owner is a client thread) is torn down with work still queued and
+/// executing. Every receiver must resolve — response or clean error —
+/// within the hang guard.
+fn stress_drop(make: impl Fn() -> Arc<Submitter>) {
+    let server = make();
+    let answered = Arc::new(AtomicU64::new(0));
+    let clean = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let server = Arc::clone(&server);
+        let answered = Arc::clone(&answered);
+        let clean = Arc::clone(&clean);
+        handles.push(std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            for i in 0..25u64 {
+                match server.submit(vec![(c * 100 + i) as f32, 0.0]) {
+                    Ok(rx) => rxs.push(rx),
+                    // Engine already gone: must be an error, not a hang.
+                    Err(_) => {
+                        clean.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            // Release this client's ownership *before* waiting: the last
+            // release tears the server down while receivers from every
+            // client are still outstanding.
+            drop(server);
+            for rx in rxs {
+                match rx.recv_timeout(Duration::from_secs(20)) {
+                    Ok(Ok(_)) => {
+                        answered.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(Err(_)) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        clean.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        panic!("in-flight request hung across server drop")
+                    }
+                }
+            }
+        }));
+    }
+    drop(server);
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    assert_eq!(
+        answered.load(Ordering::Relaxed) + clean.load(Ordering::Relaxed),
+        100,
+        "every submitter saw a response or a clean error"
+    );
+}
