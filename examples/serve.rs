@@ -37,8 +37,10 @@ fn start(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
         // Shared --variant/--artifacts/--model/--setting/--int16 handling;
         // the factory runs once per replica, on that replica's thread.
         "native" => {
-            let args = args.clone();
-            BackendPool::start(move |_i| NativeBackend::from_cli(&args), policy)
+            // The shared factory splits cores across replicas (unless
+            // --threads pins a count) so N engines don't each fan
+            // intra-layer kernels over every core.
+            BackendPool::start(NativeBackend::pool_factory(args, policy.replicas), policy)
         }
         #[cfg(feature = "pjrt")]
         "pjrt" => {

@@ -13,7 +13,16 @@
 //!   H8. BackendPool end-to-end throughput across replicas {1,2,4} x
 //!       max_batch {1,8} under concurrent clients (one worker thread per
 //!       replica, so scaling is replication-driven) — written to
-//!       BENCH_pool_throughput.json.
+//!       BENCH_pool_throughput.json;
+//!   H9. token-parallel kernel engine microbench on the DeiT-shaped
+//!       synthetic config: panel SpMM vs the scalar header walk,
+//!       head-major repacked vs strided attention, and fused-batch
+//!       forward vs the per-image span baseline at batch {1,8,32} —
+//!       written to BENCH_kernels.json.
+//!
+//! Set VITFPGA_BENCH_SMOKE=1 to run every section with tiny iteration
+//! counts (the CI smoke step: proves the benches build and run, not a
+//! measurement).
 
 mod common;
 
@@ -34,18 +43,36 @@ fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// CI smoke mode: tiny iteration counts so the benches stay compiled
+/// and runnable without turning CI into a measurement run.
+fn smoke() -> bool {
+    std::env::var("VITFPGA_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Scale an iteration count down to a smoke-sized one when smoking.
+fn iters(n: usize) -> usize {
+    if smoke() {
+        n.clamp(1, 3)
+    } else {
+        n
+    }
+}
+
 fn main() {
     let mut rng = Rng::new(0);
+    if smoke() {
+        println!("[bench] VITFPGA_BENCH_SMOKE set — tiny iteration counts, not a measurement");
+    }
 
     // H1: SpMM on a DeiT-sized QKV weight (384 x 1152) at 50% blocks.
     let sp = BlockSparseMatrix::random((384, 1152), 16, 0.5, &mut rng);
     let x: Vec<f32> = (0..197 * 384).map(|_| rng.normal()).collect();
     let mut y = vec![0.0f32; 197 * 1152];
-    common::bench("H1 spmm 197x384 @ 50% blocks (qkv)", 200, || {
+    common::bench("H1 spmm 197x384 @ 50% blocks (qkv)", iters(200), || {
         sp.spmm_into(&x, 197, &mut y);
     });
     let dense = sp.to_dense();
-    common::bench("H1 dense matmul same shape (reference)", 50, || {
+    common::bench("H1 dense matmul same shape (reference)", iters(50), || {
         // naive dense reference
         y.fill(0.0);
         for i in 0..197 {
@@ -62,7 +89,7 @@ fn main() {
     // H2: simulator throughput.
     let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 42);
     let sim = AcceleratorSim::new(HardwareConfig::u250());
-    common::bench("H2 model_latency (full 12-layer sim)", 500, || {
+    common::bench("H2 model_latency (full 12-layer sim)", iters(500), || {
         std::hint::black_box(sim.model_latency(&st, 1));
     });
 
@@ -108,6 +135,9 @@ fn main() {
 
     // H8: replicated pool throughput — the BENCH_pool_throughput.json series.
     pool_throughput_bench(&mut rng);
+
+    // H9: token-parallel kernel engine — the BENCH_kernels.json series.
+    kernel_bench(&mut rng);
 }
 
 #[cfg(feature = "pjrt")]
@@ -184,7 +214,7 @@ fn native_backend_bench(rng: &mut Rng) {
     // must beat (acceptance: >= 3x images/sec on a >= 4-core machine).
     let sim = FuncSim::synthesize(&TEST_TINY, &setting, 42, Precision::F32).unwrap();
     let mut scratch = sim.scratch();
-    let serial_ms = median_ms(30, || {
+    let serial_ms = median_ms(iters(30), || {
         for i in 0..8 {
             std::hint::black_box(
                 sim.forward_with(&flat[i * per..(i + 1) * per], &mut scratch).unwrap(),
@@ -201,7 +231,7 @@ fn native_backend_bench(rng: &mut Rng) {
     let mut ips_batch8 = 0.0f64;
     for &batch in &[1usize, 4, 8, 16] {
         let span = &flat[..batch * per];
-        let ms = median_ms(30, || {
+        let ms = median_ms(iters(30), || {
             std::hint::black_box(nb.infer_batch(span, batch).unwrap());
         });
         let ips = batch as f64 / (ms / 1e3);
@@ -225,12 +255,13 @@ fn native_backend_bench(rng: &mut Rng) {
 
     let json = format!(
         "{{\n  \"bench\": \"native_forward\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
-         \"threads\": {},\n  \"serial_batch8_p50_ms\": {:.4},\n  \
+         \"threads\": {},\n  \"smoke\": {},\n  \"serial_batch8_p50_ms\": {:.4},\n  \
          \"serial_batch8_images_per_sec\": {:.1},\n  \"speedup_batch8\": {:.2},\n  \
          \"results\": [\n{}\n  ]\n}}\n",
         TEST_TINY.name,
         setting.label(),
         threads,
+        smoke(),
         serial_ms,
         serial_ips,
         speedup,
@@ -249,8 +280,8 @@ fn pool_throughput_bench(rng: &mut Rng) {
     use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
 
     let setting = PruningSetting::new(8, 0.7, 0.7);
-    let clients = 8usize;
-    let per_client = 32usize;
+    let clients = if smoke() { 2usize } else { 8 };
+    let per_client = if smoke() { 4usize } else { 32 };
 
     // Shared image set, generated outside the timed region.
     let per = NativeBackend::synthetic(&TEST_TINY, &setting, 42, Precision::F32)
@@ -324,14 +355,181 @@ fn pool_throughput_bench(rng: &mut Rng) {
 
     let json = format!(
         "{{\n  \"bench\": \"pool_throughput\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
-         \"clients\": {},\n  \"requests_per_client\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+         \"clients\": {},\n  \"requests_per_client\": {},\n  \"smoke\": {},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
         TEST_TINY.name,
         setting.label(),
         clients,
         per_client,
+        smoke(),
         rows.join(",\n")
     );
     let out = "BENCH_pool_throughput.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("[bench] wrote {}", out),
+        Err(e) => eprintln!("[bench] could not write {}: {}", out, e),
+    }
+}
+
+/// H9: the token-parallel kernel engine, each level measured against the
+/// serial shape it replaced, on the DeiT-shaped synthetic config.
+///
+/// The forward-level serial baseline (per-image spans, 1 thread) already
+/// runs the panel SpMM and repacked attention inside each image, so the
+/// reported fused/threaded speedups are *conservative* relative to the
+/// PR-2 scalar kernels — the kernel-level rows (panel vs scalar walk,
+/// repacked vs strided) capture that remaining delta.
+fn kernel_bench(rng: &mut Rng) {
+    use vitfpga::funcsim::kernels::{self, AttnLane, ColumnSchedule};
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // --- kernel level: panel SpMM vs the scalar header walk ----------
+    // DeiT-small QKV shape: (384 x 1152), b=16, 50% blocks, 197 tokens.
+    let sp = BlockSparseMatrix::random((384, 1152), 16, 0.5, rng);
+    let sched = ColumnSchedule::new(&sp);
+    let x: Vec<f32> = (0..197 * 384).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; 197 * 1152];
+    let it_k = iters(100);
+    let spmm_scalar_ms = median_ms(it_k, || {
+        sp.spmm_into(&x, 197, &mut y);
+        std::hint::black_box(&y);
+    });
+    let spmm_panel_1t_ms = median_ms(it_k, || {
+        kernels::spmm_bias_into(&sp, &sched, &x, 197, None, None, &mut y, 1);
+        std::hint::black_box(&y);
+    });
+    let spmm_panel_mt_ms = median_ms(it_k, || {
+        kernels::spmm_bias_into(&sp, &sched, &x, 197, None, None, &mut y, threads);
+        std::hint::black_box(&y);
+    });
+    println!(
+        "[bench] H9 spmm qkv-shape   scalar {:>8.4} ms   panel(1t) {:>8.4} ms ({:.2}x)   \
+         panel({}t) {:>8.4} ms ({:.2}x)",
+        spmm_scalar_ms, spmm_panel_1t_ms, spmm_scalar_ms / spmm_panel_1t_ms,
+        threads, spmm_panel_mt_ms, spmm_scalar_ms / spmm_panel_mt_ms
+    );
+
+    // --- kernel level: repacked vs strided attention ------------------
+    // DeiT-small attention shape: n=197 tokens, 6 heads of 64.
+    let (n, nh, hd) = (197usize, 6usize, 64usize);
+    let qkv_dim = nh * hd;
+    let qkv: Vec<f32> = (0..n * 3 * qkv_dim).map(|_| rng.normal()).collect();
+    let mut sa = vec![0.0f32; n * qkv_dim];
+    let mut cls = vec![0.0f32; nh * n];
+    let attn_strided_ms = median_ms(it_k, || {
+        // The shared pre-repack oracle from kernels.rs — the same code
+        // the bit-exactness tests pin, so the baseline can't drift.
+        kernels::attention_strided_reference(&qkv, n, nh, hd, &mut sa, &mut cls);
+        std::hint::black_box(&sa);
+    });
+    let mut lanes: Vec<AttnLane> = Vec::new();
+    let attn_repack_1t_ms = median_ms(it_k, || {
+        kernels::attention_batch_into(&qkv, 1, n, nh, hd, &mut lanes, &mut cls, &mut sa, 1);
+        std::hint::black_box(&sa);
+    });
+    let attn_repack_mt_ms = median_ms(it_k, || {
+        kernels::attention_batch_into(&qkv, 1, n, nh, hd, &mut lanes, &mut cls, &mut sa, threads);
+        std::hint::black_box(&sa);
+    });
+    println!(
+        "[bench] H9 attention n=197  strided {:>8.4} ms   repack(1t) {:>8.4} ms ({:.2}x)   \
+         repack({}t) {:>8.4} ms ({:.2}x)",
+        attn_strided_ms, attn_repack_1t_ms, attn_strided_ms / attn_repack_1t_ms,
+        threads, attn_repack_mt_ms, attn_strided_ms / attn_repack_mt_ms
+    );
+
+    // --- forward level: fused batches + intra-layer threading ---------
+    let setting = PruningSetting::new(16, 0.5, 0.5);
+    let max_batch = if smoke() { 8usize } else { 32 };
+    let batches: &[usize] = if smoke() { &[1, 8] } else { &[1, 8, 32] };
+    let mut nb = NativeBackend::synthetic(&DEIT_SMALL, &setting, 42, Precision::F32)
+        .expect("deit-small native backend")
+        .with_batch_capacity(max_batch);
+    let per = nb.input_elems_per_image();
+    let flat: Vec<f32> = (0..max_batch * per).map(|_| rng.normal()).collect();
+    let it_f = iters(5);
+
+    // Serial baseline: per-image spans, one worker (the PR-2 shape).
+    nb = nb.with_threads(1).with_fused(false);
+    let spans_1t_b8_ms = median_ms(it_f, || {
+        std::hint::black_box(nb.infer_batch(&flat[..8 * per], 8).unwrap());
+    });
+    // Fused batch on the same single worker: amortized weight streams.
+    nb = nb.with_fused(true);
+    let fused_1t_b8_ms = median_ms(it_f, || {
+        std::hint::black_box(nb.infer_batch(&flat[..8 * per], 8).unwrap());
+    });
+    // Single image: intra-layer threading is the only lever.
+    let single_1t_ms = median_ms(it_f, || {
+        std::hint::black_box(nb.infer_batch(&flat[..per], 1).unwrap());
+    });
+    nb = nb.with_threads(threads);
+    let single_mt_ms = median_ms(it_f, || {
+        std::hint::black_box(nb.infer_batch(&flat[..per], 1).unwrap());
+    });
+    let fused_b8_speedup_1t = spans_1t_b8_ms / fused_1t_b8_ms;
+    let single_speedup_mt = single_1t_ms / single_mt_ms;
+    println!(
+        "[bench] H9 forward deit-small batch 8 (1t)   spans {:>9.3} ms   fused {:>9.3} ms \
+         ({:.2}x single-thread)",
+        spans_1t_b8_ms, fused_1t_b8_ms, fused_b8_speedup_1t
+    );
+    println!(
+        "[bench] H9 forward deit-small batch 1        1t {:>9.3} ms   {}t {:>9.3} ms \
+         ({:.2}x intra-layer)",
+        single_1t_ms, threads, single_mt_ms, single_speedup_mt
+    );
+
+    let mut rows = Vec::new();
+    for &batch in batches {
+        let ms = median_ms(it_f, || {
+            std::hint::black_box(nb.infer_batch(&flat[..batch * per], batch).unwrap());
+        });
+        let ips = batch as f64 / (ms / 1e3);
+        println!(
+            "[bench] H9 fused forward ({}t, batch {:>2})       p50 {:>9.3} ms   {:>8.1} img/s",
+            threads, batch, ms, ips
+        );
+        rows.push(format!(
+            "      {{\"batch\": {}, \"p50_ms\": {:.4}, \"images_per_sec\": {:.1}}}",
+            batch, ms, ips
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
+         \"threads\": {},\n  \"smoke\": {},\n  \
+         \"spmm\": {{\"scalar_ms\": {:.4}, \"panel_1t_ms\": {:.4}, \"panel_mt_ms\": {:.4}, \
+         \"panel_speedup_1t\": {:.2}, \"panel_speedup_mt\": {:.2}}},\n  \
+         \"attention\": {{\"strided_ms\": {:.4}, \"repacked_1t_ms\": {:.4}, \
+         \"repacked_mt_ms\": {:.4}, \"repacked_speedup_1t\": {:.2}}},\n  \
+         \"forward\": {{\n    \"spans_1t_batch8_ms\": {:.4},\n    \"fused_1t_batch8_ms\": {:.4},\n    \
+         \"fused_batch8_speedup_1t\": {:.2},\n    \"single_image_1t_ms\": {:.4},\n    \
+         \"single_image_mt_ms\": {:.4},\n    \"single_image_speedup_mt\": {:.2},\n    \
+         \"fused_mt_rows\": [\n{}\n    ]\n  }}\n}}\n",
+        DEIT_SMALL.name,
+        setting.label(),
+        threads,
+        smoke(),
+        spmm_scalar_ms,
+        spmm_panel_1t_ms,
+        spmm_panel_mt_ms,
+        spmm_scalar_ms / spmm_panel_1t_ms,
+        spmm_scalar_ms / spmm_panel_mt_ms,
+        attn_strided_ms,
+        attn_repack_1t_ms,
+        attn_repack_mt_ms,
+        attn_strided_ms / attn_repack_1t_ms,
+        spans_1t_b8_ms,
+        fused_1t_b8_ms,
+        fused_b8_speedup_1t,
+        single_1t_ms,
+        single_mt_ms,
+        single_speedup_mt,
+        rows.join(",\n")
+    );
+    let out = "BENCH_kernels.json";
     match std::fs::write(out, &json) {
         Ok(()) => println!("[bench] wrote {}", out),
         Err(e) => eprintln!("[bench] could not write {}: {}", out, e),

@@ -33,22 +33,24 @@ use anyhow::Result;
 
 /// An inference engine that turns a batch of images into logits.
 ///
-/// Contract for [`Backend::infer_batch`]:
+/// Contract for [`Backend::infer_batch_into`]:
 /// * `flat` holds exactly `batch * input_elems_per_image()` f32s
 ///   (row-major, image-major);
 /// * `1 <= batch <= batch_capacity()`;
-/// * the result holds exactly `batch * num_classes()` f32s, image-major —
-///   implementations with a static device batch (PJRT) pad internally
-///   and truncate the padded outputs before returning.
+/// * `out` holds exactly `batch * num_classes()` f32s and is fully
+///   overwritten image-major — implementations with a static device
+///   batch (PJRT) pad internally and drop the padded outputs.
 ///
 /// `&mut self` lets implementations keep reusable state (scratch arenas,
 /// staging buffers) without interior mutability; the coordinator runs the
-/// backend on a dedicated engine thread.
+/// backend on a dedicated engine thread and reuses one output buffer
+/// across dispatches, so a steady-state engine allocates nothing per
+/// batch beyond the per-request response slices.
 pub trait Backend {
     /// Human-readable identity, e.g. `native:test-tiny_b8_rb0.7_rt0.7`.
     fn name(&self) -> &str;
 
-    /// Largest batch `infer_batch` accepts in one call.
+    /// Largest batch `infer_batch_into` accepts in one call.
     fn batch_capacity(&self) -> usize;
 
     fn num_classes(&self) -> usize;
@@ -56,6 +58,16 @@ pub trait Backend {
     /// f32 elements of one input image (H * W * C, NHWC).
     fn input_elems_per_image(&self) -> usize;
 
+    /// Run `batch` images into a caller-owned logits buffer — the
+    /// allocation-free primitive every backend implements.
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()>;
+
     /// Run `batch` images; returns `batch * num_classes()` logits.
-    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>>;
+    /// Convenience wrapper over [`Backend::infer_batch_into`] that
+    /// allocates the output vector.
+    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; batch * self.num_classes()];
+        self.infer_batch_into(flat, batch, &mut out)?;
+        Ok(out)
+    }
 }

@@ -1,13 +1,25 @@
 //! Pure-Rust batched inference over the funcsim datapath twin.
 //!
-//! Per-image work is embarrassingly parallel (each image's dynamic
-//! token-pruning routes independently), so `infer_batch` splits the
-//! batch into contiguous spans and runs them on scoped worker threads.
-//! Each worker owns a [`ForwardScratch`] arena cached across calls —
-//! after warmup the hot path allocates only the output logits vector.
-//! Per-image results are bit-identical to a serial `FuncSim::forward`
-//! loop: both run `forward_into`, and parallelism never reorders any
-//! per-image float operation (TDHM kept-token sets included).
+//! Three execution shapes, all bit-identical per image to a serial
+//! `FuncSim::forward` loop (the kernels never split a reduction):
+//!
+//! * **batch = 1** — `FuncSim::forward_into_threads`: tokens, heads and
+//!   block columns fan across worker threads *inside* each layer, so
+//!   single-image latency scales with cores, not just batch throughput.
+//! * **batch > 1, fused (default)** — `FuncSim::forward_batch_into`: the
+//!   whole batch marches through the layers together as packed
+//!   `[batch * n, ...]` matrices (the TDHM schedule keeps per-layer token
+//!   counts input-independent, so batches stay rectangular); every SpMM
+//!   header walk and MLP weight stream is amortized over all images, and
+//!   the same intra-layer threading applies on top.
+//! * **batch > 1, spans** (`with_fused(false)`) — the PR-2 shape: the
+//!   batch splits into contiguous per-image spans across scoped workers,
+//!   each running the serial forward. Kept as the comparison baseline
+//!   for the H9 kernel bench.
+//!
+//! Scratch arenas (`scratches` for span/single paths, `batch_scratch`
+//! for the fused path) and the caller's logits buffer are reused across
+//! calls, so the steady-state hot path performs no allocation.
 
 use std::path::Path;
 
@@ -15,7 +27,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::Backend;
 use crate::config::{model_by_name, ModelDims, PruningSetting};
-use crate::funcsim::{ForwardScratch, FuncSim, Precision};
+use crate::funcsim::{BatchScratch, ForwardScratch, FuncSim, Precision};
 use crate::runtime::Manifest;
 use crate::util::cli::Args;
 
@@ -30,8 +42,14 @@ pub struct NativeBackend {
     name: String,
     threads: usize,
     capacity: usize,
-    /// One arena per worker slot, grown lazily, reused across batches.
+    /// Route batches through the fused cross-image path (default); false
+    /// falls back to per-image spans across workers.
+    fused: bool,
+    /// One single-image arena per worker slot (span + batch-1 paths),
+    /// grown lazily, reused across batches.
     scratches: Vec<ForwardScratch>,
+    /// Fused-batch arena, grown to the largest batch seen, then reused.
+    batch_scratch: Option<BatchScratch>,
 }
 
 impl NativeBackend {
@@ -50,7 +68,9 @@ impl NativeBackend {
             name,
             threads,
             capacity: DEFAULT_BATCH_CAPACITY,
+            fused: true,
             scratches: Vec::new(),
+            batch_scratch: None,
         }
     }
 
@@ -85,7 +105,7 @@ impl NativeBackend {
     }
 
     /// Build from parsed CLI args — the one
-    /// `--variant/--artifacts/--model/--setting/--seed/--int16`
+    /// `--variant/--artifacts/--model/--setting/--seed/--int16/--threads`
     /// convention shared by the `vitfpga` CLI and the examples.
     /// `--variant` loads trained weights and *requires* an artifacts
     /// dir; without it a model is synthesized from `--model/--setting`.
@@ -95,7 +115,7 @@ impl NativeBackend {
         } else {
             Precision::F32
         };
-        if let Some(variant) = args.get("variant") {
+        let nb = if let Some(variant) = args.get("variant") {
             let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
             if !dir.join("manifest.json").exists() {
                 bail!(
@@ -105,15 +125,20 @@ impl NativeBackend {
                     dir.display()
                 );
             }
-            return Self::from_artifacts(&dir, variant, precision);
-        }
-        let model = args.get_or("model", "test-tiny");
-        let dims = model_by_name(model)
-            .ok_or_else(|| anyhow!("unknown model '{}'", model))?;
-        let setting = PruningSetting::parse_label(args.get_or("setting", "b8_rb0.7_rt0.7"))
-            .map_err(|e| anyhow!("--setting: {}", e))?;
-        Self::synthetic(&dims, &setting, args.get_usize("seed", 42) as u64, precision)
-            .context("synthesizing native model")
+            Self::from_artifacts(&dir, variant, precision)?
+        } else {
+            let model = args.get_or("model", "test-tiny");
+            let dims = model_by_name(model)
+                .ok_or_else(|| anyhow!("unknown model '{}'", model))?;
+            let setting = PruningSetting::parse_label(args.get_or("setting", "b8_rb0.7_rt0.7"))
+                .map_err(|e| anyhow!("--setting: {}", e))?;
+            Self::synthetic(&dims, &setting, args.get_usize("seed", 42) as u64, precision)
+                .context("synthesizing native model")?
+        };
+        Ok(match args.get("threads") {
+            Some(_) => nb.with_threads(args.get_usize("threads", 1)),
+            None => nb,
+        })
     }
 
     /// Override the worker-thread count (1 = serial; useful for tests
@@ -123,8 +148,50 @@ impl NativeBackend {
         self
     }
 
+    /// Worker threads each pool replica should use: an explicit
+    /// `--threads` wins (returns `None` — `from_cli` already applied
+    /// it); otherwise split the machine's cores evenly across replicas
+    /// so N engines don't each fan their intra-layer kernels over every
+    /// core (N-fold oversubscription of the serving hot path).
+    pub fn threads_per_replica(args: &Args, replicas: usize) -> Option<usize> {
+        if args.get("threads").is_some() {
+            return None;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Some((cores / replicas.max(1)).max(1))
+    }
+
+    /// Replica factory for `BackendPool::start` sharing the `from_cli`
+    /// convention, with [`NativeBackend::threads_per_replica`]
+    /// core-splitting applied — the one construction path the CLI and
+    /// the serve example both use.
+    pub fn pool_factory(
+        args: &Args,
+        replicas: usize,
+    ) -> impl Fn(usize) -> Result<NativeBackend> + Send + Sync + 'static {
+        let per_replica = Self::threads_per_replica(args, replicas);
+        let args = args.clone();
+        move |_i| {
+            let nb = NativeBackend::from_cli(&args)?;
+            Ok(match per_replica {
+                Some(t) => nb.with_threads(t),
+                None => nb,
+            })
+        }
+    }
+
     pub fn with_batch_capacity(mut self, capacity: usize) -> NativeBackend {
         self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Toggle the fused cross-image batch path (on by default). Off
+    /// falls back to per-image spans across workers — the PR-2 baseline
+    /// the kernel bench compares against.
+    pub fn with_fused(mut self, fused: bool) -> NativeBackend {
+        self.fused = fused;
         self
     }
 
@@ -136,58 +203,32 @@ impl NativeBackend {
     pub fn threads(&self) -> usize {
         self.threads
     }
-}
 
-impl Backend for NativeBackend {
-    fn name(&self) -> &str {
-        &self.name
-    }
-
-    fn batch_capacity(&self) -> usize {
-        self.capacity
-    }
-
-    fn num_classes(&self) -> usize {
-        self.sim.num_classes()
-    }
-
-    fn input_elems_per_image(&self) -> usize {
-        self.sim.input_elems()
-    }
-
-    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+    /// Per-image spans across scoped workers, each running the serial
+    /// forward — the pre-fusion execution shape.
+    fn infer_spans_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         let per = self.sim.input_elems();
         let classes = self.sim.num_classes();
-        if batch == 0 || batch > self.capacity {
-            bail!("batch {} outside 1..={}", batch, self.capacity);
-        }
-        if flat.len() != batch * per {
-            bail!("flat batch has {} f32s, expected {} ({} images x {})",
-                  flat.len(), batch * per, batch, per);
-        }
-
         let workers = self.threads.min(batch).max(1);
         while self.scratches.len() < workers {
             self.scratches.push(self.sim.scratch());
         }
-
-        let mut logits = vec![0.0f32; batch * classes];
         if workers == 1 {
             let scratch = &mut self.scratches[0];
             for i in 0..batch {
                 self.sim.forward_into(
                     &flat[i * per..(i + 1) * per],
                     scratch,
-                    &mut logits[i * classes..(i + 1) * classes],
+                    &mut out[i * classes..(i + 1) * classes],
                 )?;
             }
-            return Ok(logits);
+            return Ok(());
         }
 
         let sim = &self.sim;
         let outcome = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(workers);
-            let mut logits_rest: &mut [f32] = &mut logits;
+            let mut logits_rest: &mut [f32] = out;
             let mut flat_rest: &[f32] = flat;
             let mut start = 0usize;
             for (w, scratch) in self.scratches[..workers].iter_mut().enumerate() {
@@ -224,9 +265,71 @@ impl Backend for NativeBackend {
             first_err
         });
         match outcome {
-            None => Ok(logits),
+            None => Ok(()),
             Some(e) => Err(e),
         }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn num_classes(&self) -> usize {
+        self.sim.num_classes()
+    }
+
+    fn input_elems_per_image(&self) -> usize {
+        self.sim.input_elems()
+    }
+
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let per = self.sim.input_elems();
+        let classes = self.sim.num_classes();
+        if batch == 0 || batch > self.capacity {
+            bail!("batch {} outside 1..={}", batch, self.capacity);
+        }
+        if flat.len() != batch * per {
+            bail!("flat batch has {} f32s, expected {} ({} images x {})",
+                  flat.len(), batch * per, batch, per);
+        }
+        if out.len() != batch * classes {
+            bail!("logits buffer has {} slots, expected {} ({} images x {})",
+                  out.len(), batch * classes, batch, classes);
+        }
+
+        if batch == 1 && self.fused {
+            // Single image: intra-layer threading is the only
+            // parallelism available — use all workers inside the layers.
+            // (`with_fused(false)` keeps the full PR-2 shape instead:
+            // serial per-image forward, parallelism across images only.)
+            if self.scratches.is_empty() {
+                self.scratches.push(self.sim.scratch());
+            }
+            return self.sim.forward_into_threads(
+                flat, &mut self.scratches[0], out, self.threads);
+        }
+
+        if self.fused {
+            let need_rebuild = match &self.batch_scratch {
+                Some(bs) => bs.capacity() < batch,
+                None => true,
+            };
+            if need_rebuild {
+                // Grow to the largest batch seen (not eagerly to the
+                // capacity knob — a 64-image DeiT arena is ~300 MB).
+                self.batch_scratch = Some(self.sim.batch_scratch(batch));
+            }
+            let bs = self.batch_scratch.as_mut().expect("just built");
+            return self.sim.forward_batch_into(flat, batch, bs, out, self.threads);
+        }
+
+        self.infer_spans_into(flat, batch, out)
     }
 }
 
@@ -249,6 +352,10 @@ mod tests {
         assert!(nb.infer_batch(&vec![0.0; 5 * per], 5).is_err()); // over capacity
         assert!(nb.infer_batch(&vec![0.0; per - 1], 1).is_err()); // short image
         assert!(nb.infer_batch(&[], 0).is_err());
+        let mut short = vec![0.0f32; nb.num_classes() - 1];
+        assert!(nb
+            .infer_batch_into(&vec![0.0; per], 1, &mut short)
+            .is_err()); // short logits buffer
     }
 
     #[test]
@@ -263,5 +370,32 @@ mod tests {
             let want = nb.funcsim().forward(&flat[i * per..(i + 1) * per]).unwrap();
             assert_eq!(&got[i * classes..(i + 1) * classes], want.as_slice());
         }
+    }
+
+    #[test]
+    fn fused_and_span_paths_agree() {
+        let per = backend().input_elems_per_image();
+        let mut rng = Rng::new(9);
+        let flat: Vec<f32> = (0..6 * per).map(|_| rng.normal()).collect();
+        let mut fused = backend().with_threads(4);
+        let mut spans = backend().with_threads(4).with_fused(false);
+        let a = fused.infer_batch(&flat, 6).unwrap();
+        let b = spans.infer_batch(&flat, 6).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_scratch_grows_once_and_reuses() {
+        let mut nb = backend().with_batch_capacity(8);
+        let per = nb.input_elems_per_image();
+        let mut rng = Rng::new(10);
+        let flat: Vec<f32> = (0..8 * per).map(|_| rng.normal()).collect();
+        let small = nb.infer_batch(&flat[..2 * per], 2).unwrap();
+        let big = nb.infer_batch(&flat, 8).unwrap();
+        // Per-image results are batch-size independent...
+        assert_eq!(small.as_slice(), &big[..2 * nb.num_classes()]);
+        // ...and shrinking batches reuse the grown arena bit-stably.
+        let small_again = nb.infer_batch(&flat[..2 * per], 2).unwrap();
+        assert_eq!(small, small_again);
     }
 }

@@ -54,7 +54,7 @@ impl Backend for PjrtBackend {
         self.loaded.input_elems / self.loaded.batch()
     }
 
-    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         let model_batch = self.loaded.batch();
         let per = self.input_elems_per_image();
         if batch == 0 || batch > model_batch {
@@ -65,7 +65,10 @@ impl Backend for PjrtBackend {
                   flat.len(), batch * per, batch, per);
         }
         let classes = self.num_classes();
-        let mut logits = if batch == model_batch {
+        if out.len() != batch * classes {
+            bail!("logits buffer has {} slots, expected {}", out.len(), batch * classes);
+        }
+        let logits = if batch == model_batch {
             self.loaded.infer(flat)?
         } else {
             // Pad to the static batch (replicating the last image) with
@@ -73,7 +76,7 @@ impl Backend for PjrtBackend {
             let images: Vec<&[f32]> = flat.chunks(per).collect();
             self.loaded.infer(&pad_batch(&images, model_batch, per))?
         };
-        logits.truncate(batch * classes);
-        Ok(logits)
+        out.copy_from_slice(&logits[..batch * classes]);
+        Ok(())
     }
 }

@@ -309,8 +309,11 @@ fn engine_loop<B: Backend>(
     // lives only in the batcher queue — no per-request buffer clone.
     let mut pending: Vec<(u64, mpsc::Sender<Result<InferenceResponse>>)> = Vec::new();
     let mut slots = SlotGuard { shared, admitted: 0 };
-    // Flat image staging, reused across dispatches.
+    // Flat image staging and logits output, both reused across
+    // dispatches — the engine's steady-state dispatch loop allocates
+    // only the per-request response slices.
     let mut flat: Vec<f32> = Vec::new();
+    let mut logits_buf: Vec<f32> = Vec::new();
 
     'run: loop {
         // Wait for work: block if idle, poll with deadline if batching.
@@ -372,15 +375,18 @@ fn engine_loop<B: Backend>(
             for r in &batch_reqs {
                 flat.extend_from_slice(&r.image);
             }
-            let result = backend.infer_batch(&flat, n);
+            if logits_buf.len() < n * classes {
+                logits_buf.resize(n * classes, 0.0);
+            }
+            let result = backend.infer_batch_into(&flat, n, &mut logits_buf[..n * classes]);
             metrics.record_batch(n);
             // Release each admission slot *before* its response is sent:
             // a submitter that has its answer must never observe its own
             // request still counted in the pool's queue depth.
             match result {
-                Ok(logits) => {
+                Ok(()) => {
                     for (i, req) in batch_reqs.iter().enumerate() {
-                        let slice = logits[i * classes..(i + 1) * classes].to_vec();
+                        let slice = logits_buf[i * classes..(i + 1) * classes].to_vec();
                         let resp = InferenceResponse::from_logits(
                             req.id, slice, req.submitted, n);
                         metrics.record(resp.latency);

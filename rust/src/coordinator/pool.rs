@@ -377,17 +377,16 @@ mod tests {
         fn input_elems_per_image(&self) -> usize {
             self.per
         }
-        fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+        fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
             if !self.delay.is_zero() {
                 std::thread::sleep(self.delay);
             }
-            let mut out = Vec::with_capacity(batch * self.classes);
             for i in 0..batch {
                 for j in 0..self.classes {
-                    out.push(flat[i * self.per] + j as f32);
+                    out[i * self.classes + j] = flat[i * self.per] + j as f32;
                 }
             }
-            Ok(out)
+            Ok(())
         }
     }
 

@@ -140,10 +140,17 @@ impl BlockSparseMatrix {
         y
     }
 
+    /// Serial header-walk SpMM — the one-row-at-a-time reference kernel.
+    /// The panel-blocked, thread-partitioned production path lives in
+    /// `funcsim::kernels::spmm_bias_into` and is property-tested
+    /// bit-exact against this walk.
     pub fn spmm_into(&self, x: &[f32], x_rows: usize, y: &mut [f32]) {
         let (m2, n) = self.shape;
         let b = self.b;
-        y.fill(0.0);
+        debug_assert_eq!(y.len(), x_rows * n);
+        // No y.fill(0.0) here: every element of y is overwritten by the
+        // per-(column, row) copy_from_slice below — the columns cover
+        // 0..n and every x_row is walked.
         // Loop order (column, x_row, header, block-row): the b-wide
         // accumulator panel stays in registers across the whole header
         // walk, so y is written once per (column, row) instead of once

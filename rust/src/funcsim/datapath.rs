@@ -10,12 +10,16 @@
 //! in rust/tests/funcsim.rs (f32 mode ≈ 1e-3; int16 mode characterizes
 //! the Section VI datapath precision).
 //!
-//! The forward pass is written against a [`ForwardScratch`] arena so the
-//! serving backend can run many images without per-image allocation:
-//! every intermediate (embedded tokens, QKV, attention, MLP hidden) lives
-//! in a preallocated buffer sized for the model's worst-case token count,
-//! and [`FuncSim::forward_into`] reuses it across calls. The one-shot
-//! [`FuncSim::forward`] wrapper keeps the original per-image API.
+//! Since the token-parallel kernel engine landed there is exactly **one**
+//! numeric path: every forward — single image or fused batch, one worker
+//! or many — runs [`FuncSim::forward_batch_into`] over a [`BatchScratch`]
+//! arena and the kernels in [`super::kernels`]. The TDHM schedule makes
+//! per-layer token *counts* input-independent (only the routing differs
+//! per image), so a batch stays rectangular at every layer and cross-image
+//! fusion is just more rows through the same kernels. Kernels partition
+//! work only across independent output regions (block columns, token
+//! rows, heads), so per-image results are bit-identical at any batch
+//! size and worker count.
 
 use std::path::Path;
 
@@ -23,6 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::formats::{BlockSparseMatrix, Int16Quant};
 use crate::funcsim::bitonic;
+use crate::funcsim::kernels::{self, AttnLane, ColumnSchedule};
 use crate::runtime::weights::{read_weights, Tensor};
 use crate::sim::structure::ModelStructure;
 
@@ -39,8 +44,11 @@ struct EncoderWeights {
     ln1_g: Vec<f32>,
     ln1_b: Vec<f32>,
     w_qkv: BlockSparseMatrix,
+    /// Load-balanced column walk order for `w_qkv` (Section V-D1).
+    qkv_sched: ColumnSchedule,
     b_qkv: Vec<f32>,
     w_proj: BlockSparseMatrix,
+    proj_sched: ColumnSchedule,
     b_proj: Vec<f32>,
     ln2_g: Vec<f32>,
     ln2_b: Vec<f32>,
@@ -92,18 +100,23 @@ fn schedule_max_tokens(st: &ModelStructure) -> usize {
     n_max
 }
 
-/// Preallocated intermediate buffers for one in-flight image.
+/// Preallocated intermediate buffers for a fused batch of in-flight
+/// images, laid out image-major: at a layer with `n` tokens the live
+/// region of each activation buffer is a packed `[batch * n, ...]`
+/// matrix, so the fused kernels see one rectangular operand.
 ///
 /// Sized for the model's *maximum* token count across layers (a TDM can
 /// transiently grow very small token counts by the fused token), so every
-/// layer's slices fit without reallocation. Obtain one per worker thread
-/// with [`FuncSim::scratch`] and reuse it across `forward_into` calls —
-/// the forward pass fully overwrites (or zero-fills before accumulating
-/// into) every region it reads, so no state leaks between images.
+/// layer's slices fit without reallocation. Reuse across
+/// `forward_batch_into` calls — the forward pass fully overwrites (or
+/// zero-fills before accumulating into) every region it reads, so no
+/// state leaks between batches.
 #[derive(Debug)]
-pub struct ForwardScratch {
-    // Compatibility fingerprint: forward_into rejects a scratch whose
-    // geometry does not match the model it runs.
+pub struct BatchScratch {
+    /// Max images one call may carry.
+    capacity: usize,
+    // Compatibility fingerprint: forward_batch_into rejects a scratch
+    // whose geometry does not match the model it runs.
     n_max: usize,
     dim: usize,
     qkv_dim: usize,
@@ -113,7 +126,9 @@ pub struct ForwardScratch {
     zn: Vec<f32>,
     qkv: Vec<f32>,
     sa: Vec<f32>,
-    attn_row: Vec<f32>,
+    /// Per-head CLS attention rows (`batch * nh * n_max`): the TDM score
+    /// inputs before the head mean.
+    cls_rows: Vec<f32>,
     cls_attn_mean: Vec<f32>,
     zp: Vec<f32>,
     tdm_out: Vec<f32>,
@@ -122,35 +137,52 @@ pub struct ForwardScratch {
     h: Vec<f32>,
     mlp_out: Vec<f32>,
     cls_tok: Vec<f32>,
+    /// Per-worker attention lanes (K/V head planes + softmax row), grown
+    /// on first threaded use and reused thereafter.
+    lanes: Vec<AttnLane>,
 }
 
-impl ForwardScratch {
-    fn new(sim: &FuncSim) -> ForwardScratch {
+/// The single-image arena is just a capacity-1 [`BatchScratch`]: both the
+/// per-image and the fused-batch paths run the same code, so there is
+/// nothing image-specific left to specialize.
+pub type ForwardScratch = BatchScratch;
+
+impl BatchScratch {
+    fn build(sim: &FuncSim, capacity: usize) -> BatchScratch {
         let d = sim.st.dims.dim;
         let qkv_dim = sim.st.dims.num_heads * sim.st.dims.head_dim;
         let dm = sim.st.dims.mlp_dim;
+        let nh = sim.st.dims.num_heads;
         let n_patches = sim.st.dims.num_tokens - 1;
         let n_max = sim.max_tokens();
-        ForwardScratch {
+        let c = capacity.max(1);
+        BatchScratch {
+            capacity: c,
             n_max,
             dim: d,
             qkv_dim,
             mlp_dim: dm,
-            patches: vec![0.0; n_patches * sim.st.dims.patch_dim],
-            z: vec![0.0; n_max * d],
-            zn: vec![0.0; n_max * d],
-            qkv: vec![0.0; n_max * 3 * qkv_dim],
-            sa: vec![0.0; n_max * qkv_dim],
-            attn_row: vec![0.0; n_max],
-            cls_attn_mean: vec![0.0; n_max],
-            zp: vec![0.0; n_max * d],
-            tdm_out: vec![0.0; n_max * d],
-            fused: vec![0.0; d],
-            zn2: vec![0.0; n_max * d],
-            h: vec![0.0; n_max * dm],
-            mlp_out: vec![0.0; n_max * d],
-            cls_tok: vec![0.0; d],
+            patches: vec![0.0; c * n_patches * sim.st.dims.patch_dim],
+            z: vec![0.0; c * n_max * d],
+            zn: vec![0.0; c * n_max * d],
+            qkv: vec![0.0; c * n_max * 3 * qkv_dim],
+            sa: vec![0.0; c * n_max * qkv_dim],
+            cls_rows: vec![0.0; c * nh * n_max],
+            cls_attn_mean: vec![0.0; c * n_max],
+            zp: vec![0.0; c * n_max * d],
+            tdm_out: vec![0.0; c * n_max * d],
+            fused: vec![0.0; c * d],
+            zn2: vec![0.0; c * n_max * d],
+            h: vec![0.0; c * n_max * dm],
+            mlp_out: vec![0.0; c * n_max * d],
+            cls_tok: vec![0.0; c * d],
+            lanes: vec![AttnLane::new(n_max, sim.st.dims.head_dim)],
         }
+    }
+
+    /// Max images one `forward_batch_into` call may carry.
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 }
 
@@ -239,14 +271,20 @@ impl FuncSim {
 
             let (mask_qkv, cb_qkv) = detect_block_mask(&w_qkv_dense, (d, 3 * qkv_dim), b);
             let (mask_proj, cb_proj) = detect_block_mask(&w_proj_dense, (qkv_dim, d), b);
+            let w_qkv = BlockSparseMatrix::from_dense(
+                &w_qkv_dense, (d, 3 * qkv_dim), b, &mask_qkv, cb_qkv);
+            let w_proj = BlockSparseMatrix::from_dense(
+                &w_proj_dense, (qkv_dim, d), b, &mask_proj, cb_proj);
+            let qkv_sched = ColumnSchedule::new(&w_qkv);
+            let proj_sched = ColumnSchedule::new(&w_proj);
             encoders.push(EncoderWeights {
                 ln1_g,
                 ln1_b,
-                w_qkv: BlockSparseMatrix::from_dense(
-                    &w_qkv_dense, (d, 3 * qkv_dim), b, &mask_qkv, cb_qkv),
+                w_qkv,
+                qkv_sched,
                 b_qkv,
-                w_proj: BlockSparseMatrix::from_dense(
-                    &w_proj_dense, (qkv_dim, d), b, &mask_proj, cb_proj),
+                w_proj,
+                proj_sched,
                 b_proj,
                 ln2_g,
                 ln2_b,
@@ -296,10 +334,15 @@ impl FuncSim {
         self.max_tokens
     }
 
-    /// Allocate a scratch arena sized for this model. One per worker
-    /// thread; reuse across `forward_into` calls.
+    /// Allocate a single-image scratch arena for this model. One per
+    /// worker thread; reuse across `forward_into` calls.
     pub fn scratch(&self) -> ForwardScratch {
-        ForwardScratch::new(self)
+        BatchScratch::build(self, 1)
+    }
+
+    /// Allocate a fused-batch arena carrying up to `capacity` images.
+    pub fn batch_scratch(&self, capacity: usize) -> BatchScratch {
+        BatchScratch::build(self, capacity)
     }
 
     fn maybe_quant_act(&self, x: &mut [f32]) {
@@ -326,37 +369,136 @@ impl FuncSim {
 
     /// Allocation-free forward: image -> `logits` (len num_classes),
     /// all intermediates in `scratch`. The result is bit-identical to
-    /// [`FuncSim::forward`] — both run this code.
+    /// [`FuncSim::forward`] — both run the batch-1 fused path.
     pub fn forward_into(&self, image: &[f32], scratch: &mut ForwardScratch,
                         logits: &mut [f32]) -> Result<()> {
+        self.forward_batch_into(image, 1, scratch, logits, 1)
+    }
+
+    /// Single-image forward with intra-layer parallelism: tokens, heads
+    /// and block columns fan across `threads` workers inside each layer.
+    /// Bit-identical to [`FuncSim::forward_into`] at any thread count.
+    pub fn forward_into_threads(&self, image: &[f32], scratch: &mut ForwardScratch,
+                                logits: &mut [f32], threads: usize) -> Result<()> {
+        self.forward_batch_into(image, 1, scratch, logits, threads)
+    }
+
+    /// Forward a fused batch: `flat` holds `batch` images back to back,
+    /// `logits` receives `batch * num_classes` values image-major.
+    ///
+    /// All images march through the layers together: per-layer token
+    /// counts are input-independent (the TDHM schedule fixes them), so
+    /// activations stay packed `[batch * n, ...]` matrices and every
+    /// matmul/SpMM amortizes its weight traffic over the whole batch.
+    /// Attention, TDM routing and int16 activation scaling remain
+    /// strictly per-image, so each image's logits are bit-identical to a
+    /// serial [`FuncSim::forward`] of that image alone.
+    pub fn forward_batch_into(&self, flat: &[f32], batch: usize, scratch: &mut BatchScratch,
+                              logits: &mut [f32], threads: usize) -> Result<()> {
         let d = self.st.dims.dim;
-        let expect = self.input_elems();
-        if image.len() != expect {
-            bail!("image has {} f32s, expected {}", image.len(), expect);
+        let per = self.input_elems();
+        let classes = self.st.dims.num_classes;
+        if batch == 0 {
+            bail!("batch must be >= 1");
         }
-        if logits.len() != self.st.dims.num_classes {
+        if flat.len() != batch * per {
+            bail!("flat batch has {} f32s, expected {} ({} images x {})",
+                  flat.len(), batch * per, batch, per);
+        }
+        if logits.len() != batch * classes {
             bail!("logits buffer has {} slots, expected {}",
-                  logits.len(), self.st.dims.num_classes);
+                  logits.len(), batch * classes);
         }
         let qkv_dim = self.st.dims.num_heads * self.st.dims.head_dim;
+        let n0 = self.st.dims.num_tokens;
+        let pd = self.st.dims.patch_dim;
+        let pe = (n0 - 1) * pd;
         if scratch.dim != d
             || scratch.qkv_dim != qkv_dim
             || scratch.mlp_dim != self.st.dims.mlp_dim
             || scratch.n_max < self.max_tokens()
-            || scratch.z.len() != scratch.n_max * d
-            || scratch.patches.len() != (self.st.dims.num_tokens - 1) * self.st.dims.patch_dim
+            || scratch.capacity < batch
+            || scratch.z.len() != scratch.capacity * scratch.n_max * d
+            || scratch.patches.len() != scratch.capacity * pe
+            || scratch.cls_rows.len() != scratch.capacity * self.st.dims.num_heads * scratch.n_max
         {
-            bail!("scratch arena does not fit this model (build it with FuncSim::scratch)");
+            bail!("scratch arena does not fit this model/batch (build it with \
+                   FuncSim::scratch or FuncSim::batch_scratch)");
+        }
+        let threads = threads.max(1);
+
+        // Patchify + embed + CLS + positions, images fanned across workers.
+        let embed_workers = if threads > 1 && batch > 1 { threads.min(batch) } else { 1 };
+        if embed_workers == 1 {
+            for i in 0..batch {
+                self.embed_one(
+                    &flat[i * per..(i + 1) * per],
+                    &mut scratch.patches[i * pe..(i + 1) * pe],
+                    &mut scratch.z[i * n0 * d..(i + 1) * n0 * d],
+                );
+            }
+        } else {
+            std::thread::scope(|s| {
+                let mut z_rest: &mut [f32] = &mut scratch.z[..batch * n0 * d];
+                let mut p_rest: &mut [f32] = &mut scratch.patches[..batch * pe];
+                let mut start = 0usize;
+                for w in 0..embed_workers {
+                    let end = batch * (w + 1) / embed_workers;
+                    let count = end - start;
+                    let (z_span, zr) = std::mem::take(&mut z_rest).split_at_mut(count * n0 * d);
+                    let (p_span, pr) = std::mem::take(&mut p_rest).split_at_mut(count * pe);
+                    let f_span = &flat[start * per..end * per];
+                    z_rest = zr;
+                    p_rest = pr;
+                    start = end;
+                    s.spawn(move || {
+                        for (i, img) in f_span.chunks(per).enumerate() {
+                            self.embed_one(
+                                img,
+                                &mut p_span[i * pe..(i + 1) * pe],
+                                &mut z_span[i * n0 * d..(i + 1) * n0 * d],
+                            );
+                        }
+                    });
+                }
+            });
         }
 
-        // Patchify + embed + CLS + positions.
-        self.patchify_into(image, &mut scratch.patches);
+        // Encoders: each layer reads the packed [batch * n, d] region of
+        // scratch.z and leaves its output packed [batch * n_out, d].
+        let mut n = n0;
+        for (l, enc) in self.encoders.iter().enumerate() {
+            let has_tdm = self.st.tdm_layers.contains(&l) && self.st.r_t < 1.0;
+            n = self.encoder_batch_into(scratch, batch, n, enc, has_tdm, threads);
+        }
+
+        // Head on each image's CLS token.
+        let cls_tok = &mut scratch.cls_tok[..batch * d];
+        for img in 0..batch {
+            let ct = &mut cls_tok[img * d..(img + 1) * d];
+            ct.copy_from_slice(&scratch.z[img * n * d..img * n * d + d]);
+            kernels::layer_norm(ct, &self.ln_g, &self.ln_b, d);
+            let lrow = &mut logits[img * classes..(img + 1) * classes];
+            lrow.fill(0.0);
+            kernels::matmul_into(ct, &self.w_head, 1, d, classes, lrow);
+            for (o, b) in lrow.iter_mut().zip(self.b_head.iter()) {
+                *o += b;
+            }
+        }
+        Ok(())
+    }
+
+    /// Patchify + linear embed + CLS + positions for one image into its
+    /// `z` span (`num_tokens * dim`).
+    fn embed_one(&self, image: &[f32], patches: &mut [f32], z: &mut [f32]) {
+        let d = self.st.dims.dim;
         let n_patches = self.st.dims.num_tokens - 1;
         let pd = self.st.dims.patch_dim;
-        let z = &mut scratch.z[..(n_patches + 1) * d];
+        debug_assert_eq!(z.len(), (n_patches + 1) * d);
+        self.patchify_into(image, patches);
         z[..d].copy_from_slice(&self.cls);
         z[d..].fill(0.0);
-        matmul_into(&scratch.patches, &self.w_embed, n_patches, pd, d, &mut z[d..]);
+        kernels::matmul_into(patches, &self.w_embed, n_patches, pd, d, &mut z[d..]);
         for t in 1..=n_patches {
             for j in 0..d {
                 z[t * d + j] += self.b_embed[j];
@@ -365,26 +507,6 @@ impl FuncSim {
         for (zi, pi) in z.iter_mut().zip(self.pos.iter()) {
             *zi += pi;
         }
-
-        // Encoders: each layer reads scratch.z[..n*d], leaves its output
-        // in scratch.z[..n_out*d].
-        let mut n = n_patches + 1;
-        for (l, enc) in self.encoders.iter().enumerate() {
-            let has_tdm = self.st.tdm_layers.contains(&l) && self.st.r_t < 1.0;
-            n = self.encoder_into(scratch, n, enc, has_tdm);
-        }
-
-        // Head on the CLS token.
-        let cls_tok = &mut scratch.cls_tok;
-        cls_tok.copy_from_slice(&scratch.z[..d]);
-        layer_norm(cls_tok, &self.ln_g, &self.ln_b, d);
-        let classes = self.st.dims.num_classes;
-        logits.fill(0.0);
-        matmul_into(cls_tok, &self.w_head, 1, d, classes, logits);
-        for (o, b) in logits.iter_mut().zip(self.b_head.iter()) {
-            *o += b;
-        }
-        Ok(())
     }
 
     fn patchify_into(&self, image: &[f32], out: &mut [f32]) {
@@ -408,255 +530,125 @@ impl FuncSim {
         }
     }
 
-    /// One encoder layer over scratch.z[..n*d]; returns the output token
-    /// count (result left in scratch.z[..n_out*d]).
-    fn encoder_into(&self, scratch: &mut ForwardScratch, n: usize,
-                    w: &EncoderWeights, has_tdm: bool) -> usize {
+    /// One encoder layer over the packed batch `scratch.z[..batch*n*d]`;
+    /// returns the output token count (result left packed in
+    /// `scratch.z[..batch*n_out*d]`).
+    fn encoder_batch_into(&self, scratch: &mut BatchScratch, batch: usize, n: usize,
+                          w: &EncoderWeights, has_tdm: bool, threads: usize) -> usize {
         let d = self.st.dims.dim;
         let nh = self.st.dims.num_heads;
         let hd = self.st.dims.head_dim;
         let qkv_dim = nh * hd;
+        let dm = self.st.dims.mlp_dim;
+        let rows = batch * n;
         // Destructure for disjoint borrows of the arena's buffers.
-        let ForwardScratch {
-            z, zn, qkv, sa, attn_row, cls_attn_mean, zp, tdm_out, fused,
-            zn2, h, mlp_out, ..
+        let BatchScratch {
+            z, zn, qkv, sa, cls_rows, cls_attn_mean, zp, tdm_out, fused,
+            zn2, h, mlp_out, lanes, ..
         } = scratch;
-        let z = &mut z[..n * d];
 
-        // LN1 -> QKV via SpMM (stage i).
-        let zn = &mut zn[..n * d];
-        zn.copy_from_slice(z);
-        for t in 0..n {
-            layer_norm(&mut zn[t * d..(t + 1) * d], &w.ln1_g, &w.ln1_b, d);
+        // LN1 -> QKV via the fused panel SpMM (stage i), bias epilogue in
+        // the column walk.
+        kernels::layer_norm_tokens(&z[..rows * d], zn, &w.ln1_g, &w.ln1_b, d, threads);
+        let qkv = &mut qkv[..rows * 3 * qkv_dim];
+        kernels::spmm_bias_into(&w.w_qkv, &w.qkv_sched, &zn[..rows * d], rows,
+                                Some(&w.b_qkv[..]), None, qkv, threads);
+        for img_qkv in qkv.chunks_mut(n * 3 * qkv_dim) {
+            self.maybe_quant_act(img_qkv);
         }
-        let qkv = &mut qkv[..n * 3 * qkv_dim];
-        w.w_qkv.spmm_into(zn, n, qkv);
-        for t in 0..n {
-            for j in 0..3 * qkv_dim {
-                qkv[t * 3 * qkv_dim + j] += w.b_qkv[j];
+
+        // Head-major repacked attention (stages ii-iii): (image, head)
+        // items fan across workers; per-head CLS rows captured for the TDM.
+        let sa = &mut sa[..rows * qkv_dim];
+        let cls_rows = &mut cls_rows[..batch * nh * n];
+        kernels::attention_batch_into(qkv, batch, n, nh, hd, lanes, cls_rows, sa, threads);
+        // Mean CLS attention over heads — the division is hoisted out of
+        // the accumulation (one multiply per token, not nh divisions).
+        let cls = &mut cls_attn_mean[..batch * n];
+        let inv_nh = 1.0 / nh as f32;
+        for img in 0..batch {
+            let rows_img = &cls_rows[img * nh * n..(img + 1) * nh * n];
+            for (jt, c) in cls[img * n..(img + 1) * n].iter_mut().enumerate() {
+                let mut sum = 0.0f32;
+                for hh in 0..nh {
+                    sum += rows_img[hh * n + jt];
+                }
+                *c = sum * inv_nh;
             }
         }
-        self.maybe_quant_act(qkv);
-
-        // Per-head attention (stages ii-iii) + CLS row capture for TDM.
-        let sa = &mut sa[..n * qkv_dim];
-        sa.fill(0.0);
-        let cls_attn_mean = &mut cls_attn_mean[..n];
-        cls_attn_mean.fill(0.0);
-        let attn_row = &mut attn_row[..n];
-        let scale = 1.0 / (hd as f32).sqrt();
-        let stride = 3 * qkv_dim;
-        for hh in 0..nh {
-            let qo = hh * hd;
-            let ko = qkv_dim + hh * hd;
-            let vo = 2 * qkv_dim + hh * hd;
-            // logits row by row with streaming softmax.
-            for i in 0..n {
-                let qrow = &qkv[i * stride + qo..i * stride + qo + hd];
-                let mut maxv = f32::NEG_INFINITY;
-                for jt in 0..n {
-                    let krow = &qkv[jt * stride + ko..jt * stride + ko + hd];
-                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
-                    attn_row[jt] = dot * scale;
-                    maxv = maxv.max(attn_row[jt]);
-                }
-                let mut denom = 0.0f32;
-                for a in attn_row.iter_mut() {
-                    *a = (*a - maxv).exp();
-                    denom += *a;
-                }
-                let inv = 1.0 / denom;
-                for a in attn_row.iter_mut() {
-                    *a *= inv;
-                }
-                if i == 0 {
-                    for jt in 0..n {
-                        cls_attn_mean[jt] += attn_row[jt] / nh as f32;
-                    }
-                }
-                // sa[i, head hh] = attn_row @ V_hh
-                let out = &mut sa[i * qkv_dim + hh * hd..i * qkv_dim + (hh + 1) * hd];
-                for jt in 0..n {
-                    let a = attn_row[jt];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let vrow = &qkv[jt * stride + vo..jt * stride + vo + hd];
-                    for (o, v) in out.iter_mut().zip(vrow) {
-                        *o += a * v;
-                    }
-                }
-            }
-        }
-        self.maybe_quant_act(sa);
-
-        // Projection via SpMM (stage iv) + residual.
-        let zp = &mut zp[..n * d];
-        w.w_proj.spmm_into(sa, n, zp);
-        for t in 0..n {
-            for j in 0..d {
-                zp[t * d + j] += w.b_proj[j] + z[t * d + j];
-            }
+        for img_sa in sa.chunks_mut(n * qkv_dim) {
+            self.maybe_quant_act(img_sa);
         }
 
-        // TDM between MSA and MLP: bitonic routing over non-CLS scores.
-        let (zcur, n_out): (&[f32], usize) = if has_tdm {
-            let scores = &cls_attn_mean[1..n];
+        // Projection SpMM (stage iv) with bias + residual fused into the
+        // column-walk epilogue.
+        let zp = &mut zp[..rows * d];
+        kernels::spmm_bias_into(&w.w_proj, &w.proj_sched, sa, rows,
+                                Some(&w.b_proj[..]), Some(&z[..rows * d]), zp, threads);
+
+        // TDM between MSA and MLP: per-image bitonic routing over the
+        // non-CLS scores. Token counts are input-independent, so every
+        // image lands on the same n_out and the batch stays rectangular.
+        let (n_out, zcur): (usize, &[f32]) = if has_tdm {
             let k = (((n - 1) as f64) * self.st.r_t).ceil().max(1.0) as usize;
-            let routes = bitonic::routing(scores, k);
             let n_out = 1 + k + 1;
-            let out = &mut tdm_out[..n_out * d];
-            // Zero first (parity with the original freshly-allocated
-            // buffer): with fewer than k kept tokens (n=1 edge) some
-            // kept-slot rows are never written.
-            out.fill(0.0);
-            out[..d].copy_from_slice(&zp[..d]); // CLS always kept
-            fused.fill(0.0);
-            let mut wsum = 0.0f32;
-            for r in &routes {
-                let src = &zp[(r.id_old + 1) * d..(r.id_old + 2) * d];
-                if r.pruned {
-                    let s = scores[r.id_old];
-                    wsum += s;
-                    for (f, x) in fused.iter_mut().zip(src) {
-                        *f += s * x;
+            for img in 0..batch {
+                let scores = &cls[img * n + 1..(img + 1) * n];
+                let routes = bitonic::routing(scores, k);
+                let zp_img = &zp[img * n * d..(img + 1) * n * d];
+                let out = &mut tdm_out[img * n_out * d..(img + 1) * n_out * d];
+                // Zero first (parity with a freshly-allocated buffer):
+                // with fewer than k kept tokens (n=1 edge) some kept-slot
+                // rows are never written.
+                out.fill(0.0);
+                out[..d].copy_from_slice(&zp_img[..d]); // CLS always kept
+                let fused_img = &mut fused[img * d..(img + 1) * d];
+                fused_img.fill(0.0);
+                let mut wsum = 0.0f32;
+                for r in &routes {
+                    let src = &zp_img[(r.id_old + 1) * d..(r.id_old + 2) * d];
+                    if r.pruned {
+                        let s = scores[r.id_old];
+                        wsum += s;
+                        for (f, x) in fused_img.iter_mut().zip(src) {
+                            *f += s * x;
+                        }
+                    } else {
+                        out[(1 + r.id_new) * d..(2 + r.id_new) * d].copy_from_slice(src);
                     }
-                } else {
-                    out[(1 + r.id_new) * d..(2 + r.id_new) * d].copy_from_slice(src);
+                }
+                let inv = 1.0 / (wsum + 1e-6);
+                for (o, f) in out[(n_out - 1) * d..].iter_mut().zip(fused_img.iter()) {
+                    *o = f * inv;
                 }
             }
-            let inv = 1.0 / (wsum + 1e-6);
-            for (o, f) in out[(n_out - 1) * d..].iter_mut().zip(fused.iter()) {
-                *o = f * inv;
-            }
-            (&tdm_out[..n_out * d], n_out)
+            (n_out, &tdm_out[..batch * n_out * d])
         } else {
-            (&zp[..n * d], n)
+            (n, &zp[..rows * d])
         };
 
-        // LN2 -> MLP (dense, neuron-pruned columns are zero) -> residual.
-        let zn2 = &mut zn2[..n_out * d];
-        zn2.copy_from_slice(zcur);
-        for t in 0..n_out {
-            layer_norm(&mut zn2[t * d..(t + 1) * d], &w.ln2_g, &w.ln2_b, d);
+        // LN2 -> MLP with bias+GELU and bias+residual epilogues fused
+        // into the matmuls (dense, neuron-pruned columns are zero).
+        let rows_out = batch * n_out;
+        kernels::layer_norm_tokens(zcur, zn2, &w.ln2_g, &w.ln2_b, d, threads);
+        let h = &mut h[..rows_out * dm];
+        kernels::matmul_bias_gelu_into(&zn2[..rows_out * d], &w.w_int, &w.b_int,
+                                       rows_out, d, dm, h, threads);
+        for img_h in h.chunks_mut(n_out * dm) {
+            self.maybe_quant_act(img_h);
         }
-        let dm = self.st.dims.mlp_dim;
-        let h = &mut h[..n_out * dm];
-        h.fill(0.0);
-        matmul_into(zn2, &w.w_int, n_out, d, dm, h);
-        for t in 0..n_out {
-            for j in 0..dm {
-                h[t * dm + j] = gelu(h[t * dm + j] + w.b_int[j]);
-            }
-        }
-        self.maybe_quant_act(h);
-        let mlp_out = &mut mlp_out[..n_out * d];
-        mlp_out.fill(0.0);
-        matmul_into(h, &w.w_out, n_out, dm, d, mlp_out);
-        for t in 0..n_out {
-            for j in 0..d {
-                mlp_out[t * d + j] += w.b_out[j] + zcur[t * d + j];
-            }
-        }
+        let mlp_out = &mut mlp_out[..rows_out * d];
+        kernels::matmul_bias_residual_into(h, &w.w_out, &w.b_out, zcur,
+                                           rows_out, dm, d, mlp_out, threads);
         // Layer output becomes next layer's input.
-        scratch.z[..n_out * d].copy_from_slice(&scratch.mlp_out[..n_out * d]);
+        z[..rows_out * d].copy_from_slice(mlp_out);
         n_out
-    }
-}
-
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh())
-}
-
-fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
-    debug_assert_eq!(x.len(), d);
-    let mean = x.iter().sum::<f32>() / d as f32;
-    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
-    let inv = 1.0 / (var + 1e-6).sqrt();
-    for (xi, (gi, bi)) in x.iter_mut().zip(g.iter().zip(b.iter())) {
-        *xi = (*xi - mean) * inv * gi + bi;
-    }
-}
-
-/// y (m x n) = x (m x k) @ w (k x n), accumulating into y.
-///
-/// 4-row micro-kernel: each streamed weight row is reused across four
-/// output rows (§Perf change 3 — the MLP matmuls are memory-bound on w).
-fn matmul_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(y.len(), m * n);
-    let mut i = 0;
-    while i + 4 <= m {
-        let (rows0, rest) = y[i * n..].split_at_mut(n);
-        let (rows1, rest) = rest.split_at_mut(n);
-        let (rows2, rest) = rest.split_at_mut(n);
-        let rows3 = &mut rest[..n];
-        for kk in 0..k {
-            let x0 = x[i * k + kk];
-            let x1 = x[(i + 1) * k + kk];
-            let x2 = x[(i + 2) * k + kk];
-            let x3 = x[(i + 3) * k + kk];
-            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                let wv = wrow[j];
-                rows0[j] += x0 * wv;
-                rows1[j] += x1 * wv;
-                rows2[j] += x2 * wv;
-                rows3[j] += x3 * wv;
-            }
-        }
-        i += 4;
-    }
-    for i in i..m {
-        let yrow = &mut y[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let xv = x[i * k + kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                yrow[j] += xv * wrow[j];
-            }
-        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn gelu_matches_reference_points() {
-        assert!((gelu(0.0)).abs() < 1e-7);
-        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
-        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
-    }
-
-    #[test]
-    fn layer_norm_zero_mean_unit_var() {
-        let mut x = vec![1.0, 2.0, 3.0, 4.0];
-        let g = vec![1.0; 4];
-        let b = vec![0.0; 4];
-        layer_norm(&mut x, &g, &b, 4);
-        let mean: f32 = x.iter().sum::<f32>() / 4.0;
-        assert!(mean.abs() < 1e-6);
-        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
-        assert!((var - 1.0).abs() < 1e-3);
-    }
-
-    #[test]
-    fn matmul_into_identity() {
-        let x = vec![1.0, 2.0, 3.0, 4.0];
-        let eye = vec![1.0, 0.0, 0.0, 1.0];
-        let mut y = vec![0.0; 4];
-        matmul_into(&x, &eye, 2, 2, 2, &mut y);
-        assert_eq!(y, x);
-    }
 
     #[test]
     fn detect_block_mask_finds_zero_blocks() {
@@ -691,5 +683,40 @@ mod tests {
         let mut s2 = sim.scratch();
         let again = sim.forward_with(&img, &mut s2).unwrap();
         assert_eq!(logits, again);
+    }
+
+    #[test]
+    fn batched_and_threaded_forward_match_serial() {
+        // The fused batch path and intra-layer threading must reproduce
+        // the serial per-image forward exactly (kernels never split a
+        // reduction), including through the TDM growth edge.
+        use crate::config::{PruningSetting, TEST_TINY};
+        use crate::util::rng::Rng;
+        for setting in [
+            PruningSetting::new(8, 0.7, 0.7),
+            PruningSetting { block_size: 8, r_b: 1.0, r_t: 0.95, tdm_layers: vec![0, 1, 2, 3] },
+        ] {
+            let sim = FuncSim::synthesize(&TEST_TINY, &setting, 11, Precision::F32).unwrap();
+            let per = sim.input_elems();
+            let classes = sim.num_classes();
+            let batch = 5usize;
+            let mut rng = Rng::new(23);
+            let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+            let want: Vec<f32> = (0..batch)
+                .flat_map(|i| sim.forward(&flat[i * per..(i + 1) * per]).unwrap())
+                .collect();
+            let mut scratch = sim.batch_scratch(batch);
+            for threads in [1usize, 3] {
+                let mut got = vec![0.0f32; batch * classes];
+                sim.forward_batch_into(&flat, batch, &mut scratch, &mut got, threads)
+                    .unwrap();
+                assert_eq!(got, want, "threads={} setting={:?}", threads, setting);
+            }
+            // Threaded single-image path.
+            let mut s1 = sim.scratch();
+            let mut got1 = vec![0.0f32; classes];
+            sim.forward_into_threads(&flat[..per], &mut s1, &mut got1, 4).unwrap();
+            assert_eq!(got1.as_slice(), &want[..classes]);
+        }
     }
 }

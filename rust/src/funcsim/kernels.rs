@@ -1,0 +1,934 @@
+//! Token-parallel fused kernels for the native hot path.
+//!
+//! The serial datapath in [`super::datapath`] mirrors the hardware loop
+//! nests one token at a time; this module is the software analogue of the
+//! accelerator's *multi-level parallelism* (Section V): the same numeric
+//! kernels, restructured so that
+//!
+//! * **SpMM** walks each block column's header once per *panel* of
+//!   [`PANEL`] token rows instead of once per row (the inter-token ×
+//!   inter-column PE array of Algorithm 2), with block columns
+//!   partitioned across worker threads by the *offline load-balanced
+//!   schedule* of Section V-D1 ([`ColumnSchedule`] wraps
+//!   [`crate::sim::load_balance::balanced_order`] over
+//!   [`BlockSparseMatrix::column_populations`]);
+//! * **attention** gathers K and V into contiguous per-head planes once
+//!   per layer so QK dots and AV accumulation are unit-stride, and fans
+//!   (image, head) work items across threads;
+//! * **MLP matmuls** fuse the bias (+GELU / +residual) epilogue into the
+//!   accumulation pass, so activations are touched once.
+//!
+//! Every kernel preserves the *per-element* floating-point accumulation
+//! order of the serial datapath: partitioning is only ever across
+//! independent output regions (block columns, token rows, heads), never
+//! across a reduction. Results are therefore bit-identical to the
+//! one-token-at-a-time reference at any worker count — the invariant the
+//! backend tests pin.
+//!
+//! Threading uses `std::thread::scope` per kernel invocation; workers
+//! write disjoint regions of the shared output through a raw-pointer
+//! wrapper (`RawMat`), the one `unsafe` pattern in this module.
+
+use crate::formats::BlockSparseMatrix;
+use crate::sim::load_balance::balanced_order;
+
+/// Token rows amortizing one header walk in the panel-blocked SpMM.
+pub const PANEL: usize = 4;
+
+/// Largest block size the stack-allocated SpMM accumulator panel covers.
+pub const MAX_B: usize = 64;
+
+/// Largest per-head dimension the stack-allocated AV accumulator covers.
+pub const MAX_HD: usize = 128;
+
+/// Minimum MACs before a kernel spawns worker threads: below this the
+/// scope spawn/join overhead outweighs the fan-out (tuned for ~10 us
+/// thread bring-up). Purely a performance gate — results are identical
+/// either way.
+#[cfg(not(test))]
+const PAR_MIN_MACS: usize = 1 << 17;
+/// Unit tests drop the gate so the multi-worker code paths actually run
+/// on the tiny shapes the tests use.
+#[cfg(test)]
+const PAR_MIN_MACS: usize = 1;
+
+/// Effective gate: `VITFPGA_PAR_MIN_MACS` overrides the default —
+/// integration suites set it to 1 so the threaded kernel paths run even
+/// on test-tiny shapes (the cfg(test) override above only reaches
+/// in-crate unit tests). Read once, cached.
+fn par_min_macs() -> usize {
+    static GATE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *GATE.get_or_init(|| {
+        std::env::var("VITFPGA_PAR_MIN_MACS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(PAR_MIN_MACS)
+    })
+}
+
+/// Shared mutable output for workers writing provably disjoint regions.
+///
+/// Safety contract (upheld by every user in this module): each worker
+/// derives slices only from index ranges no other worker touches
+/// (distinct block columns, token-row spans, or (image, head) stripes),
+/// and the pointee outlives the `thread::scope` the workers run in.
+#[derive(Clone, Copy)]
+struct RawMat(*mut f32);
+
+unsafe impl Send for RawMat {}
+unsafe impl Sync for RawMat {}
+
+impl RawMat {
+    /// # Safety
+    /// `offset..offset + len` must be in bounds of the pointee, disjoint
+    /// from every region any concurrent worker writes, and the pointee
+    /// must outlive the returned slice (callers stay inside the
+    /// `thread::scope` that borrowed the buffer).
+    unsafe fn slice<'a>(self, offset: usize, len: usize) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+/// Clamp the requested worker count: 1 unless there are at least two
+/// independent work units and enough MACs to amortize the spawn cost.
+fn par_workers(workers: usize, units: usize, macs: usize) -> usize {
+    if workers <= 1 || units < 2 || macs < par_min_macs() {
+        1
+    } else {
+        workers.min(units)
+    }
+}
+
+/// Contiguous row spans `[(r0, r1); min(workers, rows)]` covering
+/// `0..rows` (same split the batched backend uses for image spans).
+fn span_bounds(rows: usize, workers: usize) -> Vec<(usize, usize)> {
+    let k = if rows == 0 { 1 } else { workers.min(rows) };
+    (0..k).map(|w| (rows * w / k, rows * (w + 1) / k)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Load-balanced column schedule (Section V-D1, offline assignment)
+// ---------------------------------------------------------------------------
+
+/// Precomputed load-balanced walk order over one block-sparse weight's
+/// columns. Block pruning leaves columns with different retained-block
+/// populations; walking them in descending-population order and dealing
+/// them greedily to workers keeps per-worker work within one column of
+/// the ideal `total/workers` bound — the software mirror of the paper's
+/// offline PE-column workload assignment.
+/// Most worker bins a schedule precomputes partitions for (few machines
+/// give one kernel more; `partition` clamps above it).
+const MAX_SCHED_BINS: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct ColumnSchedule {
+    /// Column indices in descending retained-population order.
+    order: Vec<usize>,
+    /// Retained blocks per column (natural index).
+    pops: Vec<usize>,
+    /// MACs one dense x-row costs against this weight (sum pops * b^2).
+    row_macs: usize,
+    /// `parts[k-1]`: the LPT deal into k bins, precomputed at
+    /// construction for every k up to `min(columns, MAX_SCHED_BINS)` so
+    /// the serving hot path never re-runs (or re-allocates) a partition
+    /// per dispatch. A few KB per weight matrix.
+    parts: Vec<Vec<Vec<usize>>>,
+}
+
+impl ColumnSchedule {
+    pub fn new(w: &BlockSparseMatrix) -> ColumnSchedule {
+        let pops = w.column_populations();
+        let order = balanced_order(&pops);
+        let row_macs = pops.iter().sum::<usize>() * w.b * w.b;
+        let max_bins = order.len().min(MAX_SCHED_BINS).max(1);
+        let parts = (1..=max_bins).map(|k| lpt_deal(&order, &pops, k)).collect();
+        ColumnSchedule { order, pops, row_macs, parts }
+    }
+
+    /// The precomputed deal of columns (heaviest first) to
+    /// `min(workers, columns, MAX_SCHED_BINS)` bins — the classic LPT
+    /// schedule. Every column appears in exactly one bin.
+    pub fn partition(&self, workers: usize) -> &[Vec<usize>] {
+        let k = workers.clamp(1, self.parts.len());
+        &self.parts[k - 1]
+    }
+}
+
+/// One LPT deal: each column (heaviest first) goes to the least-loaded
+/// of `k` bins.
+fn lpt_deal(order: &[usize], pops: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); k];
+    let mut loads = vec![0u64; k];
+    for &j in order {
+        let mut best = 0;
+        for i in 1..k {
+            if loads[i] < loads[best] {
+                best = i;
+            }
+        }
+        parts[best].push(j);
+        // Empty columns still cost a header visit; count at least 1
+        // so they spread instead of piling onto one worker.
+        loads[best] += pops[j].max(1) as u64;
+    }
+    parts
+}
+
+// ---------------------------------------------------------------------------
+// Panel-blocked SpMM with fused epilogue
+// ---------------------------------------------------------------------------
+
+/// Write one finished accumulator stripe with the fused epilogue. The
+/// sum is complete before bias/residual are applied, matching the serial
+/// datapath's separate epilogue passes (`acc + (bias + res)`).
+#[inline]
+fn store_stripe(dst: &mut [f32], acc: &[f32], bias: Option<&[f32]>, res: Option<&[f32]>) {
+    match (bias, res) {
+        (None, None) => dst.copy_from_slice(acc),
+        (Some(bv), None) => {
+            for ((d, a), b) in dst.iter_mut().zip(acc).zip(bv) {
+                *d = a + b;
+            }
+        }
+        (Some(bv), Some(rv)) => {
+            for (((d, a), b), r) in dst.iter_mut().zip(acc).zip(bv).zip(rv) {
+                *d = a + (b + r);
+            }
+        }
+        (None, Some(rv)) => {
+            for ((d, a), r) in dst.iter_mut().zip(acc).zip(rv) {
+                *d = a + r;
+            }
+        }
+    }
+}
+
+/// Walk `cols` of `w` against all `x_rows` rows of `x`, panel-blocked:
+/// each column's header is decoded once per PANEL rows, with the
+/// accumulator panel held on the stack. Writes only the element columns
+/// owned by `cols` — the disjointness the parallel caller relies on.
+fn spmm_cols(
+    w: &BlockSparseMatrix,
+    x: &[f32],
+    x_rows: usize,
+    cols: &[usize],
+    bias: Option<&[f32]>,
+    res: Option<&[f32]>,
+    y: RawMat,
+) {
+    let (m2, n) = w.shape;
+    let b = w.b;
+    let mut acc = [[0.0f32; MAX_B]; PANEL];
+    for &j in cols {
+        let col = &w.cols[j];
+        let c0 = j * b;
+        let cw = b.min(n - c0);
+        let bias_s = bias.map(|bv| &bv[c0..c0 + cw]);
+        let mut r = 0;
+        while r + PANEL <= x_rows {
+            for a in acc.iter_mut() {
+                a[..cw].fill(0.0);
+            }
+            for (t, &ib) in col.rows.iter().enumerate() {
+                let blk = &col.data[t * b * b..(t + 1) * b * b];
+                let r0 = ib as usize * b;
+                let rw = b.min(m2 - r0);
+                for bi in 0..rw {
+                    let brow = &blk[bi * b..bi * b + cw];
+                    for (p, a) in acc.iter_mut().enumerate() {
+                        let xv = x[(r + p) * m2 + r0 + bi];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (av, wv) in a[..cw].iter_mut().zip(brow) {
+                            *av += xv * wv;
+                        }
+                    }
+                }
+            }
+            for (p, a) in acc.iter().enumerate() {
+                // Safety: this worker owns element columns c0..c0+cw of
+                // every row (cols are disjoint across workers).
+                let dst = unsafe { y.slice((r + p) * n + c0, cw) };
+                store_stripe(dst, &a[..cw], bias_s, res.map(|rv| &rv[(r + p) * n + c0..(r + p) * n + c0 + cw]));
+            }
+            r += PANEL;
+        }
+        while r < x_rows {
+            let a = &mut acc[0];
+            a[..cw].fill(0.0);
+            for (t, &ib) in col.rows.iter().enumerate() {
+                let blk = &col.data[t * b * b..(t + 1) * b * b];
+                let r0 = ib as usize * b;
+                let rw = b.min(m2 - r0);
+                for bi in 0..rw {
+                    let xv = x[r * m2 + r0 + bi];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let brow = &blk[bi * b..bi * b + cw];
+                    for (av, wv) in a[..cw].iter_mut().zip(brow) {
+                        *av += xv * wv;
+                    }
+                }
+            }
+            // Safety: same disjoint column ownership as the panel path.
+            let dst = unsafe { y.slice(r * n + c0, cw) };
+            store_stripe(dst, &a[..cw], bias_s, res.map(|rv| &rv[r * n + c0..r * n + c0 + cw]));
+            r += 1;
+        }
+    }
+}
+
+/// Y = X * W with optional fused `+ bias` / `+ residual` epilogue, over
+/// `workers` threads following the load-balanced column schedule. Fully
+/// overwrites `y`. Bit-identical to
+/// [`BlockSparseMatrix::spmm_into`] followed by the separate epilogue
+/// passes, at any worker count.
+pub fn spmm_bias_into(
+    w: &BlockSparseMatrix,
+    sched: &ColumnSchedule,
+    x: &[f32],
+    x_rows: usize,
+    bias: Option<&[f32]>,
+    res: Option<&[f32]>,
+    y: &mut [f32],
+    workers: usize,
+) {
+    let (m2, n) = w.shape;
+    assert_eq!(x.len(), x_rows * m2);
+    assert_eq!(y.len(), x_rows * n);
+    assert_eq!(sched.pops.len(), w.cols.len(), "schedule built for another matrix");
+    assert!(w.b <= MAX_B, "panel SpMM supports b <= {}", MAX_B);
+    if let Some(bv) = bias {
+        assert_eq!(bv.len(), n);
+    }
+    if let Some(rv) = res {
+        assert_eq!(rv.len(), x_rows * n);
+    }
+    let yraw = RawMat(y.as_mut_ptr());
+    let workers = par_workers(workers, sched.order.len(), x_rows * sched.row_macs);
+    if workers == 1 {
+        spmm_cols(w, x, x_rows, &sched.order, bias, res, yraw);
+        return;
+    }
+    let parts = sched.partition(workers);
+    std::thread::scope(|s| {
+        for part in &parts[1..] {
+            s.spawn(move || spmm_cols(w, x, x_rows, part, bias, res, yraw));
+        }
+        spmm_cols(w, x, x_rows, &parts[0], bias, res, yraw);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Head-major repacked attention
+// ---------------------------------------------------------------------------
+
+/// Per-worker attention scratch: contiguous K and V planes for the head
+/// being processed plus one softmax row. Reused across layers and calls.
+#[derive(Debug)]
+pub struct AttnLane {
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    attn: Vec<f32>,
+    n_cap: usize,
+    hd: usize,
+}
+
+impl AttnLane {
+    pub fn new(n_cap: usize, hd: usize) -> AttnLane {
+        AttnLane {
+            kh: vec![0.0; n_cap * hd],
+            vh: vec![0.0; n_cap * hd],
+            attn: vec![0.0; n_cap],
+            n_cap,
+            hd,
+        }
+    }
+}
+
+/// Grow `lanes` to `count` lanes each covering at least `(n_cap, hd)`;
+/// existing lanes that are too small are replaced. New lanes inherit the
+/// largest capacity already present, so an arena seeded with one
+/// schedule-max lane (`BatchScratch` does this) never re-allocates as
+/// per-layer token counts move — steady state: no allocation.
+fn ensure_lanes(lanes: &mut Vec<AttnLane>, count: usize, n_cap: usize, hd: usize) {
+    if lanes.iter().any(|l| l.n_cap < n_cap || l.hd != hd) {
+        lanes.clear();
+    }
+    let cap = lanes.iter().map(|l| l.n_cap).max().unwrap_or(0).max(n_cap);
+    while lanes.len() < count {
+        lanes.push(AttnLane::new(cap, hd));
+    }
+}
+
+/// One worker's share of the (image, head) work items: items
+/// `start, start + step, ...` — disjoint across workers by construction.
+///
+/// For each item, K and V are gathered once into the lane's head-major
+/// planes (unit-stride inner loops thereafter), then each query row runs
+/// the streaming softmax and AV accumulation of the serial datapath in
+/// the same element order. Writes: `sa` stripe `[img, i, hh*hd..]` and
+/// the per-head CLS row `cls_rows[img*nh + hh]` — both unique per item.
+fn attn_items(
+    qkv: &[f32],
+    batch: usize,
+    n: usize,
+    nh: usize,
+    hd: usize,
+    lane: &mut AttnLane,
+    start: usize,
+    step: usize,
+    sa: RawMat,
+    cls_rows: RawMat,
+) {
+    let qkv_dim = nh * hd;
+    let stride = 3 * qkv_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut item = start;
+    while item < batch * nh {
+        let img = item / nh;
+        let hh = item % nh;
+        let base = img * n * stride;
+        let qo = hh * hd;
+        let ko = qkv_dim + hh * hd;
+        let vo = 2 * qkv_dim + hh * hd;
+        for jt in 0..n {
+            lane.kh[jt * hd..(jt + 1) * hd]
+                .copy_from_slice(&qkv[base + jt * stride + ko..base + jt * stride + ko + hd]);
+            lane.vh[jt * hd..(jt + 1) * hd]
+                .copy_from_slice(&qkv[base + jt * stride + vo..base + jt * stride + vo + hd]);
+        }
+        for i in 0..n {
+            let qrow = &qkv[base + i * stride + qo..base + i * stride + qo + hd];
+            let mut maxv = f32::NEG_INFINITY;
+            for jt in 0..n {
+                let krow = &lane.kh[jt * hd..jt * hd + hd];
+                let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                lane.attn[jt] = dot * scale;
+                maxv = maxv.max(lane.attn[jt]);
+            }
+            let mut denom = 0.0f32;
+            for a in lane.attn[..n].iter_mut() {
+                *a = (*a - maxv).exp();
+                denom += *a;
+            }
+            let inv = 1.0 / denom;
+            for a in lane.attn[..n].iter_mut() {
+                *a *= inv;
+            }
+            if i == 0 {
+                // Safety: CLS row (img, hh) belongs to this item alone.
+                let dst = unsafe { cls_rows.slice((img * nh + hh) * n, n) };
+                dst.copy_from_slice(&lane.attn[..n]);
+            }
+            let mut out = [0.0f32; MAX_HD];
+            let out = &mut out[..hd];
+            for jt in 0..n {
+                let a = lane.attn[jt];
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = &lane.vh[jt * hd..jt * hd + hd];
+                for (o, v) in out.iter_mut().zip(vrow) {
+                    *o += a * v;
+                }
+            }
+            // Safety: sa stripe (img, i, head hh) belongs to this item.
+            let dst = unsafe { sa.slice(img * n * qkv_dim + i * qkv_dim + hh * hd, hd) };
+            dst.copy_from_slice(out);
+        }
+        item += step;
+    }
+}
+
+/// Multi-head self-attention over a batch of images sharing one token
+/// count `n` (the TDHM schedule makes per-layer counts input-independent,
+/// so fused batches are always rectangular).
+///
+/// * `qkv`: `batch * n * 3*nh*hd`, image-major, the serial layout;
+/// * `sa`: `batch * n * nh*hd`, fully overwritten;
+/// * `cls_rows`: `batch * nh * n` per-head CLS attention rows (the TDM
+///   score inputs), fully overwritten — callers reduce heads themselves
+///   with the division hoisted out of the accumulation.
+///
+/// (image, head) items fan across `workers` threads; per-image results
+/// are bit-identical to the serial per-head loop at any worker count.
+pub fn attention_batch_into(
+    qkv: &[f32],
+    batch: usize,
+    n: usize,
+    nh: usize,
+    hd: usize,
+    lanes: &mut Vec<AttnLane>,
+    cls_rows: &mut [f32],
+    sa: &mut [f32],
+    workers: usize,
+) {
+    let qkv_dim = nh * hd;
+    assert_eq!(qkv.len(), batch * n * 3 * qkv_dim);
+    assert_eq!(sa.len(), batch * n * qkv_dim);
+    assert_eq!(cls_rows.len(), batch * nh * n);
+    assert!(hd <= MAX_HD, "attention kernel supports head_dim <= {}", MAX_HD);
+    let items = batch * nh;
+    let workers = par_workers(workers, items, items * n * n * 2 * hd);
+    ensure_lanes(lanes, workers.max(1), n, hd);
+    let sa_raw = RawMat(sa.as_mut_ptr());
+    let cls_raw = RawMat(cls_rows.as_mut_ptr());
+    if workers == 1 {
+        attn_items(qkv, batch, n, nh, hd, &mut lanes[0], 0, 1, sa_raw, cls_raw);
+        return;
+    }
+    let (lane0, rest) = lanes.split_at_mut(1);
+    std::thread::scope(|s| {
+        for (w, lane) in rest[..workers - 1].iter_mut().enumerate() {
+            s.spawn(move || attn_items(qkv, batch, n, nh, hd, lane, w + 1, workers, sa_raw, cls_raw));
+        }
+        attn_items(qkv, batch, n, nh, hd, &mut lane0[0], 0, workers, sa_raw, cls_raw);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Dense matmuls with fused epilogues (neuron-pruned MLP, embedding)
+// ---------------------------------------------------------------------------
+
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    debug_assert_eq!(x.len(), d);
+    let mean = x.iter().sum::<f32>() / d as f32;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    for (xi, (gi, bi)) in x.iter_mut().zip(g.iter().zip(b.iter())) {
+        *xi = (*xi - mean) * inv * gi + bi;
+    }
+}
+
+/// Fan `rows` output rows (`n` columns each) across `workers` scoped
+/// threads as contiguous spans: `f(r0, r1, y_span)` runs once per span
+/// with the span's exclusive `&mut` view of `y`. The single audited home
+/// of the row-span `unsafe` pattern — every row-parallel kernel routes
+/// through here.
+fn parallel_row_spans<F>(rows: usize, n: usize, workers: usize, y: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(y.len(), rows * n);
+    if workers <= 1 {
+        f(0, rows, y);
+        return;
+    }
+    let spans = span_bounds(rows, workers);
+    let yraw = RawMat(y.as_mut_ptr());
+    std::thread::scope(|s| {
+        for &(r0, r1) in &spans[1..] {
+            let f = &f;
+            s.spawn(move || {
+                // Safety: row span r0..r1 is exclusive to this worker.
+                let ys = unsafe { yraw.slice(r0 * n, (r1 - r0) * n) };
+                f(r0, r1, ys);
+            });
+        }
+        let (r0, r1) = spans[0];
+        // Safety: row span r0..r1 is exclusive to the inline worker.
+        let ys = unsafe { yraw.slice(r0 * n, (r1 - r0) * n) };
+        f(r0, r1, ys);
+    });
+}
+
+/// `dst[..rows*d] = LayerNorm(src)` token-wise, rows fanned across
+/// workers. Fully overwrites the `dst` prefix it covers.
+pub fn layer_norm_tokens(
+    src: &[f32],
+    dst: &mut [f32],
+    g: &[f32],
+    b: &[f32],
+    d: usize,
+    workers: usize,
+) {
+    assert_eq!(src.len() % d, 0);
+    assert!(dst.len() >= src.len());
+    let rows = src.len() / d;
+    let dst = &mut dst[..rows * d];
+    let workers = par_workers(workers, rows, rows * d * 8);
+    parallel_row_spans(rows, d, workers, dst, |r0, r1, dst_s| {
+        dst_s.copy_from_slice(&src[r0 * d..r1 * d]);
+        for row in dst_s.chunks_mut(d) {
+            layer_norm(row, g, b, d);
+        }
+    });
+}
+
+/// y (m x n) += x (m x k) @ w (k x n), accumulating into y.
+///
+/// 4-row micro-kernel: each streamed weight row is reused across four
+/// output rows (the MLP matmuls are memory-bound on w).
+pub fn matmul_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(y.len(), m * n);
+    let mut i = 0;
+    while i + 4 <= m {
+        let (rows0, rest) = y[i * n..].split_at_mut(n);
+        let (rows1, rest) = rest.split_at_mut(n);
+        let (rows2, rest) = rest.split_at_mut(n);
+        let rows3 = &mut rest[..n];
+        for kk in 0..k {
+            let x0 = x[i * k + kk];
+            let x1 = x[(i + 1) * k + kk];
+            let x2 = x[(i + 2) * k + kk];
+            let x3 = x[(i + 3) * k + kk];
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                let wv = wrow[j];
+                rows0[j] += x0 * wv;
+                rows1[j] += x1 * wv;
+                rows2[j] += x2 * wv;
+                rows3[j] += x3 * wv;
+            }
+        }
+        i += 4;
+    }
+    for i in i..m {
+        let yrow = &mut y[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                yrow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// One row span of the bias+GELU fused matmul (the sum finishes before
+/// the epilogue touches it, matching the serial two-pass order).
+fn mm_gelu_span(x: &[f32], w: &[f32], bias: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    let m = y.len() / n;
+    y.fill(0.0);
+    matmul_into(x, w, m, k, n, y);
+    for row in y.chunks_mut(n) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v = gelu(*v + b);
+        }
+    }
+}
+
+/// y = GELU(x @ w + bias), fully overwriting y, rows fanned across
+/// workers — the MLP intermediate stage with its epilogue fused.
+pub fn matmul_bias_gelu_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+    workers: usize,
+) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(bias.len(), n);
+    assert_eq!(y.len(), m * n);
+    let workers = par_workers(workers, m, m * k * n);
+    parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
+        mm_gelu_span(&x[r0 * k..r1 * k], w, bias, k, n, ys);
+    });
+}
+
+/// One row span of the bias+residual fused matmul. Epilogue order is
+/// `sum + (bias + residual)` — exactly the serial datapath's
+/// `y += b[j] + res[t*d + j]` pass.
+fn mm_res_span(x: &[f32], w: &[f32], bias: &[f32], res: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    let m = y.len() / n;
+    y.fill(0.0);
+    matmul_into(x, w, m, k, n, y);
+    for (row, rrow) in y.chunks_mut(n).zip(res.chunks(n)) {
+        for ((v, b), r) in row.iter_mut().zip(bias).zip(rrow) {
+            *v += b + r;
+        }
+    }
+}
+
+/// y = x @ w + bias + res, fully overwriting y — the MLP output stage
+/// with bias and residual fused into the accumulation pass.
+pub fn matmul_bias_residual_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    res: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+    workers: usize,
+) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(bias.len(), n);
+    assert_eq!(res.len(), m * n);
+    assert_eq!(y.len(), m * n);
+    let workers = par_workers(workers, m, m * k * n);
+    parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
+        mm_res_span(&x[r0 * k..r1 * k], w, bias, &res[r0 * n..r1 * n], k, n, ys);
+    });
+}
+
+/// The pre-repack attention loop — strided K/V reads straight out of the
+/// interleaved QKV buffer, one head at a time. **Not** a hot-path kernel:
+/// kept as the single shared oracle for the bit-exactness tests and the
+/// H9 bench baseline, so the comparison shape can never drift from what
+/// the tests pin. Writes `sa` (`n * nh*hd`, fully overwritten) and
+/// `cls_rows` (`nh * n` per-head CLS rows).
+pub fn attention_strided_reference(
+    qkv: &[f32],
+    n: usize,
+    nh: usize,
+    hd: usize,
+    sa: &mut [f32],
+    cls_rows: &mut [f32],
+) {
+    let qkv_dim = nh * hd;
+    let stride = 3 * qkv_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+    assert_eq!(qkv.len(), n * stride);
+    assert_eq!(sa.len(), n * qkv_dim);
+    assert_eq!(cls_rows.len(), nh * n);
+    let mut attn_row = vec![0.0f32; n];
+    sa.fill(0.0);
+    for hh in 0..nh {
+        let qo = hh * hd;
+        let ko = qkv_dim + hh * hd;
+        let vo = 2 * qkv_dim + hh * hd;
+        for i in 0..n {
+            let qrow = &qkv[i * stride + qo..i * stride + qo + hd];
+            let mut maxv = f32::NEG_INFINITY;
+            for jt in 0..n {
+                let krow = &qkv[jt * stride + ko..jt * stride + ko + hd];
+                let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                attn_row[jt] = dot * scale;
+                maxv = maxv.max(attn_row[jt]);
+            }
+            let mut denom = 0.0f32;
+            for a in attn_row.iter_mut() {
+                *a = (*a - maxv).exp();
+                denom += *a;
+            }
+            let inv = 1.0 / denom;
+            for a in attn_row.iter_mut() {
+                *a *= inv;
+            }
+            if i == 0 {
+                cls_rows[hh * n..(hh + 1) * n].copy_from_slice(&attn_row);
+            }
+            let out = &mut sa[i * qkv_dim + hh * hd..i * qkv_dim + (hh + 1) * hd];
+            for jt in 0..n {
+                let a = attn_row[jt];
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = &qkv[jt * stride + vo..jt * stride + vo + hd];
+                for (o, v) in out.iter_mut().zip(vrow) {
+                    *o += a * v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, m2: usize, n: usize, b: usize, rb: f64) -> BlockSparseMatrix {
+        BlockSparseMatrix::random((m2, n), b, rb, rng)
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layer_norm(&mut x, &g, &b, 4);
+        let mean: f32 = x.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_into_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let mut y = vec![0.0; 4];
+        matmul_into(&x, &eye, 2, 2, 2, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn partition_covers_every_column_once() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let cols = 8 * rng.range(1, 12);
+            let rb = rng.f64();
+            let sp = random_sparse(&mut rng, 32, cols, 8, rb);
+            let sched = ColumnSchedule::new(&sp);
+            for workers in [1usize, 2, 3, 7] {
+                let parts = sched.partition(workers);
+                assert!(parts.len() <= workers.max(1));
+                let mut seen: Vec<usize> = parts.iter().flatten().copied().collect();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..sp.col_blocks()).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn panel_spmm_bitexact_vs_scalar_reference() {
+        // The panel walk must match the scalar header walk bit-for-bit:
+        // same per-element accumulation order, only amortized headers.
+        let mut rng = Rng::new(7);
+        for &(rows, m2, n, b) in
+            &[(1usize, 16usize, 24usize, 8usize), (3, 16, 24, 8), (4, 32, 32, 16), (9, 24, 40, 8), (17, 32, 96, 8)]
+        {
+            let sp = random_sparse(&mut rng, m2, n, b, 0.6);
+            let sched = ColumnSchedule::new(&sp);
+            let x: Vec<f32> = (0..rows * m2)
+                .map(|_| if rng.bool(0.2) { 0.0 } else { rng.normal() })
+                .collect();
+            let mut want = vec![f32::NAN; rows * n];
+            sp.spmm_into(&x, rows, &mut want);
+            for workers in [1usize, 2, 4] {
+                let mut got = vec![f32::NAN; rows * n];
+                spmm_bias_into(&sp, &sched, &x, rows, None, None, &mut got, workers);
+                for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), w.to_bits(), "rows={} workers={} idx={}", rows, workers, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_epilogue_matches_separate_passes() {
+        let mut rng = Rng::new(11);
+        let (rows, m2, n, b) = (6usize, 24usize, 32usize, 8usize);
+        let sp = random_sparse(&mut rng, m2, n, b, 0.5);
+        let sched = ColumnSchedule::new(&sp);
+        let x: Vec<f32> = (0..rows * m2).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let res: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        // Serial reference: scalar spmm then the datapath's epilogue.
+        let mut want = vec![0.0f32; rows * n];
+        sp.spmm_into(&x, rows, &mut want);
+        for t in 0..rows {
+            for j in 0..n {
+                want[t * n + j] += bias[j] + res[t * n + j];
+            }
+        }
+        for workers in [1usize, 3] {
+            let mut got = vec![f32::NAN; rows * n];
+            spmm_bias_into(&sp, &sched, &x, rows, Some(&bias[..]), Some(&res[..]), &mut got, workers);
+            for (a, w) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), w.to_bits(), "workers={}", workers);
+            }
+        }
+    }
+
+    #[test]
+    fn repacked_attention_bitexact_vs_strided() {
+        let mut rng = Rng::new(13);
+        for &(n, nh, hd) in &[(5usize, 2usize, 8usize), (17, 2, 16), (12, 3, 8)] {
+            let qkv_dim = nh * hd;
+            let qkv: Vec<f32> = (0..n * 3 * qkv_dim).map(|_| rng.normal()).collect();
+            let mut want_sa = vec![0.0f32; n * qkv_dim];
+            let mut want_cls = vec![0.0f32; nh * n];
+            attention_strided_reference(&qkv, n, nh, hd, &mut want_sa, &mut want_cls);
+            for workers in [1usize, 2, 5] {
+                let mut lanes = Vec::new();
+                let mut sa = vec![f32::NAN; n * qkv_dim];
+                let mut cls = vec![f32::NAN; nh * n];
+                attention_batch_into(&qkv, 1, n, nh, hd, &mut lanes, &mut cls, &mut sa, workers);
+                assert_eq!(sa, want_sa, "sa n={} workers={}", n, workers);
+                assert_eq!(cls, want_cls, "cls n={} workers={}", n, workers);
+            }
+            // Batched: two copies of the same image must both match.
+            let mut qkv2 = qkv.clone();
+            qkv2.extend_from_slice(&qkv);
+            let mut lanes = Vec::new();
+            let mut sa = vec![f32::NAN; 2 * n * qkv_dim];
+            let mut cls = vec![f32::NAN; 2 * nh * n];
+            attention_batch_into(&qkv2, 2, n, nh, hd, &mut lanes, &mut cls, &mut sa, 3);
+            assert_eq!(&sa[..n * qkv_dim], want_sa.as_slice());
+            assert_eq!(&sa[n * qkv_dim..], want_sa.as_slice());
+            assert_eq!(&cls[nh * n..], want_cls.as_slice());
+        }
+    }
+
+    #[test]
+    fn fused_mlp_matmuls_match_separate_passes() {
+        let mut rng = Rng::new(17);
+        let (m, k, n) = (11usize, 12usize, 20usize);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let res: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+
+        let mut want = vec![0.0f32; m * n];
+        matmul_into(&x, &w, m, k, n, &mut want);
+        let mut want_gelu = want.clone();
+        for i in 0..m {
+            for j in 0..n {
+                want_gelu[i * n + j] = gelu(want_gelu[i * n + j] + bias[j]);
+            }
+        }
+        let mut want_res = want;
+        for i in 0..m {
+            for j in 0..n {
+                want_res[i * n + j] += bias[j] + res[i * n + j];
+            }
+        }
+        for workers in [1usize, 2, 4] {
+            let mut got = vec![f32::NAN; m * n];
+            matmul_bias_gelu_into(&x, &w, &bias, m, k, n, &mut got, workers);
+            assert_eq!(got, want_gelu, "gelu workers={}", workers);
+            let mut got = vec![f32::NAN; m * n];
+            matmul_bias_residual_into(&x, &w, &bias, &res, m, k, n, &mut got, workers);
+            assert_eq!(got, want_res, "residual workers={}", workers);
+        }
+    }
+
+    #[test]
+    fn layer_norm_tokens_matches_per_row() {
+        let mut rng = Rng::new(19);
+        let (rows, d) = (13usize, 16usize);
+        let src: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal() * 0.1).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal() * 0.1).collect();
+        let mut want = src.clone();
+        for row in want.chunks_mut(d) {
+            layer_norm(row, &g, &b, d);
+        }
+        for workers in [1usize, 3, 5] {
+            let mut got = vec![f32::NAN; rows * d];
+            layer_norm_tokens(&src, &mut got, &g, &b, d, workers);
+            assert_eq!(got, want, "workers={}", workers);
+        }
+    }
+}

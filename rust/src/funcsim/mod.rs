@@ -4,14 +4,18 @@
 //! against. Cross-checked against the PJRT-executed HLO artifacts in
 //! rust/tests/funcsim.rs (requires `--features pjrt` + artifacts).
 //!
-//! [`datapath`] provides the scratch-arena forward pass the native
-//! serving backend batches over; [`synth`] generates structure-honouring
-//! synthetic weights so the whole stack runs without artifacts.
+//! [`datapath`] orchestrates the forward pass over a scratch arena;
+//! [`kernels`] holds the token-parallel fused kernels it runs on (panel
+//! SpMM with the load-balanced column schedule, head-major repacked
+//! attention, epilogue-fused matmuls); [`synth`] generates
+//! structure-honouring synthetic weights so the whole stack runs without
+//! artifacts.
 
 pub mod bitonic;
 pub mod datapath;
+pub mod kernels;
 pub mod synth;
 
 pub use bitonic::{bitonic_sort_desc, routing, Route};
-pub use datapath::{ForwardScratch, FuncSim, Precision};
+pub use datapath::{BatchScratch, ForwardScratch, FuncSim, Precision};
 pub use synth::synthesize_tensors;

@@ -6,10 +6,11 @@
 //!   simulate [--setting L] [--batch B] [--structure FILE]
 //!                           cycle-level latency breakdown
 //!   infer [--backend native|pjrt] [--variant NAME] [--artifacts DIR]
-//!         [--replicas N]    one inference on a synthetic image
+//!         [--replicas N] [--threads T]
+//!                           one inference on a synthetic image
 //!   serve [--backend native|pjrt] [--variant NAME] [--requests N]
 //!         [--concurrency C] [--model M] [--setting L] [--int16]
-//!         [--replicas N] [--queue-capacity Q]
+//!         [--replicas N] [--queue-capacity Q] [--threads T]
 //!                           run the coordinator (or, with --replicas > 1,
 //!                           the replicated pool with least-loaded dispatch
 //!                           and bounded admission) against synthetic load
@@ -19,8 +20,10 @@
 //!   sweep                   Table VI sweep (alias: table --id 6)
 //!   resources               Table IV resource model
 //!
-//! Backends: `native` (default) is the pure-Rust batched engine over the
-//! funcsim datapath twin. With --variant it loads that variant's VITW0001
+//! Backends: `native` (default) is the pure-Rust token-parallel engine
+//! over the funcsim datapath twin (fused cross-image batches, intra-layer
+//! threading at batch 1; --threads caps its workers). With --variant it
+//! loads that variant's VITW0001
 //! weights from --artifacts (and errors if the artifacts are missing);
 //! without --variant it synthesizes a structure-honouring model from
 //! --model/--setting/--seed. `pjrt` executes the AOT artifacts and
@@ -193,9 +196,11 @@ impl Server {
                 Ok(Server::Single(Coordinator::start(NativeBackend::from_cli(args)?, policy)?))
             }
             ("native", true) => {
-                let args = args.clone();
+                // The factory splits cores across replicas (unless
+                // --threads pins a count) so N engines don't each fan
+                // their intra-layer kernels over every core.
                 Ok(Server::Pool(BackendPool::start(
-                    move |_i| NativeBackend::from_cli(&args),
+                    NativeBackend::pool_factory(args, replicas),
                     pool_policy,
                 )?))
             }

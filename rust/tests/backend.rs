@@ -34,10 +34,10 @@ fn images(n: usize, per: usize, seed: u64) -> Vec<f32> {
 
 #[test]
 fn infer_batch_matches_serial_forward() {
-    // Batches 1 (degenerate), 3 (ragged split across workers) and 8:
-    // the parallel batched path must be bit-faithful to the serial
-    // per-image loop — identical TDHM routing included, since both run
-    // the same forward_into.
+    // Batches 1 (intra-layer threaded single image), 3 and 8 (fused
+    // cross-image batches): the token-parallel engine must be
+    // bit-faithful to the serial per-image loop — identical TDHM routing
+    // included, since the kernels never split a per-image reduction.
     let mut nb = backend();
     let reference = reference();
     let per = nb.input_elems_per_image();

@@ -296,6 +296,86 @@ fn spmm_matches_dense_reference_over_random_shapes_and_masks() {
 }
 
 #[test]
+fn batched_fused_forward_matches_serial_per_image() {
+    // The token-parallel fused engine vs the serial per-image forward:
+    // across random pruning settings (including the TDM growth edge,
+    // where r_t near 1 on a tiny token count *grows* the token set),
+    // both precisions, random batch sizes and worker counts, every
+    // image's logits from the fused batch must stay within 1e-5 of its
+    // serial forward. (The kernels are designed bit-exact — they never
+    // split a reduction — so 1e-5 is a loose ceiling, not a budget.)
+    use vitfpga::backend::{Backend, NativeBackend};
+    use vitfpga::funcsim::{FuncSim, Precision};
+    forall(
+        10,
+        10,
+        |r: &mut Rng| {
+            let setting = if r.bool(0.2) {
+                // Growth edge: TDM in every layer, keep rate near 1.
+                PruningSetting {
+                    block_size: 8,
+                    r_b: 1.0,
+                    r_t: 0.95,
+                    tdm_layers: vec![0, 1, 2, 3],
+                }
+            } else {
+                let mut s = PruningSetting::new(
+                    if r.bool(0.5) { 8 } else { 16 },
+                    ((0.3 + 0.7 * r.f64()) * 10.0).round() / 10.0,
+                    ((0.3 + 0.7 * r.f64()) * 10.0).round() / 10.0,
+                );
+                // TEST_TINY has 4 layers; re-home the TDMs randomly.
+                s.tdm_layers = (0..4).filter(|_| r.bool(0.5)).collect();
+                s
+            };
+            let int16 = r.bool(0.5);
+            (setting, int16, r.next_u64(), r.range(2, 5), r.range(1, 4))
+        },
+        |(setting, int16, seed, batch, threads)| {
+            let (batch, threads) = (*batch, *threads);
+            let precision = if *int16 { Precision::Int16 } else { Precision::F32 };
+            let sim = FuncSim::synthesize(&TEST_TINY, setting, *seed, precision)
+                .map_err(|e| e.to_string())?;
+            let per = sim.input_elems();
+            let classes = sim.num_classes();
+            let mut rng = Rng::new(seed ^ 0xF0CA_CC1A);
+            let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+            // Serial reference: one image at a time, fresh scratch each.
+            let mut want: Vec<f32> = Vec::with_capacity(batch * classes);
+            for i in 0..batch {
+                want.extend(
+                    sim.forward(&flat[i * per..(i + 1) * per])
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            // Fused batch through the datapath directly.
+            let mut scratch = sim.batch_scratch(batch);
+            let mut got = vec![0.0f32; batch * classes];
+            sim.forward_batch_into(&flat, batch, &mut scratch, &mut got, threads)
+                .map_err(|e| e.to_string())?;
+            for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                if (a - w).abs() > 1e-5 {
+                    return Err(format!("logit {}: fused {} vs serial {}", i, a, w));
+                }
+            }
+            // And through the serving backend's fused routing.
+            let served = NativeBackend::synthetic(&TEST_TINY, setting, *seed, precision)
+                .map_err(|e| e.to_string())?
+                .with_threads(threads)
+                .with_batch_capacity(batch)
+                .infer_batch(&flat, batch)
+                .map_err(|e| e.to_string())?;
+            for (i, (a, w)) in served.iter().zip(&want).enumerate() {
+                if (a - w).abs() > 1e-5 {
+                    return Err(format!("logit {}: served {} vs serial {}", i, a, w));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn structure_storage_matches_block_sparse_bytes() {
     // memory model vs the actual packed format: encoder weight bytes from
     // the structure must equal the BlockSparseMatrix storage computed from

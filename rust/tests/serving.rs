@@ -64,15 +64,14 @@ impl Backend for SlowBackend {
     fn input_elems_per_image(&self) -> usize {
         2
     }
-    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         std::thread::sleep(self.delay);
-        let mut out = Vec::with_capacity(batch * 3);
         for i in 0..batch {
             for j in 0..3 {
-                out.push(flat[i * 2] + j as f32);
+                out[i * 3 + j] = flat[i * 2] + j as f32;
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -223,11 +222,14 @@ impl Backend for PanicBackend {
     fn input_elems_per_image(&self) -> usize {
         2
     }
-    fn infer_batch(&mut self, flat: &[f32], batch: usize) -> Result<Vec<f32>> {
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         if self.fail {
             panic!("injected backend failure (expected in this test)");
         }
-        Ok((0..batch * 3).map(|k| flat[(k / 3) * 2] + (k % 3) as f32).collect())
+        for (k, o) in out.iter_mut().enumerate().take(batch * 3) {
+            *o = flat[(k / 3) * 2] + (k % 3) as f32;
+        }
+        Ok(())
     }
 }
 
