@@ -22,6 +22,11 @@
 //! with `--features pjrt` and pass `--backend pjrt` for the XLA runtime
 //! (each replica constructs its non-Send PJRT handle on its own engine
 //! thread).
+//!
+//! Add `--http 127.0.0.1:0` to run the same experiment over the wire:
+//! the pool is exposed through the `server` HTTP edge and the clients
+//! become `server::loadgen` workers speaking JSON over keep-alive
+//! connections (add `--qps N` for an open-loop arrival schedule).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -73,6 +78,10 @@ fn main() -> Result<()> {
             vitfpga::coordinator::pool::DEFAULT_QUEUE_CAPACITY,
         ),
     };
+
+    if let Some(addr) = args.get("http") {
+        return serve_over_http(start(&args, policy)?, addr, &args, requests, concurrency);
+    }
 
     let pool = Arc::new(start(&args, policy)?);
     println!(
@@ -128,6 +137,54 @@ fn main() -> Result<()> {
         requests * concurrency,
         wall,
         ok as f64 / wall
+    );
+    Ok(())
+}
+
+/// The `--http` variant: same pool, but clients reach it through the
+/// network edge (HTTP/1.1 + JSON) and the load is generated by
+/// `server::loadgen` instead of in-process `pool.infer` calls.
+fn serve_over_http(
+    pool: BackendPool,
+    addr: &str,
+    args: &Args,
+    requests: usize,
+    concurrency: usize,
+) -> Result<()> {
+    use vitfpga::server::{loadgen, route, AppState, HttpConfig, HttpServer, LoadMode, LoadgenConfig};
+
+    let state = Arc::new(AppState::new(pool, args.get_ms_opt("request-timeout-ms", 30_000)));
+    let handler_state = Arc::clone(&state);
+    let mut server = HttpServer::start(addr, HttpConfig::default(), move |req| {
+        route(&handler_state, req)
+    })?;
+    println!(
+        "pool on the network: {} at http://{}",
+        state.pool.backend_name,
+        server.local_addr()
+    );
+
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        mode: match args.get("qps") {
+            Some(_) => LoadMode::Open { qps: args.get_f64("qps", 100.0) },
+            None => LoadMode::Closed,
+        },
+        concurrency,
+        requests: requests * concurrency,
+        batch: args.get_usize("batch", 1),
+        timeout: Duration::from_secs(30),
+        seed: 7,
+    };
+    let report = loadgen::run(&cfg)?;
+    println!("{}", report);
+
+    server.shutdown();
+    println!("{}", state.pool.metrics()?);
+    let stats = state.pool.stats();
+    println!(
+        "admission: depth {}/{}, shed {} (pool gauge) / {} (HTTP 429s observed)",
+        stats.queue_depth, stats.queue_capacity, stats.shed_count, report.shed
     );
     Ok(())
 }

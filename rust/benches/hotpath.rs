@@ -18,11 +18,18 @@
 //!       synthetic config: panel SpMM vs the scalar header walk,
 //!       head-major repacked vs strided attention, and fused-batch
 //!       forward vs the per-image span baseline at batch {1,8,32} —
-//!       written to BENCH_kernels.json.
+//!       written to BENCH_kernels.json;
+//!   H10. HTTP serving edge end-to-end: a loopback `server::HttpServer`
+//!       over the pool, driven closed-loop by `server::loadgen` across
+//!       replicas {1,4} x concurrency {1,8,32} — p50/p99 wire latency,
+//!       achieved req/s and shed rate, written to
+//!       BENCH_http_serving.json.
 //!
 //! Set VITFPGA_BENCH_SMOKE=1 to run every section with tiny iteration
 //! counts (the CI smoke step: proves the benches build and run, not a
-//! measurement).
+//! measurement). VITFPGA_BENCH_ONLY=H10 (comma-separated section names)
+//! restricts the run to the named sections — the CI loadgen-smoke step
+//! uses it to exercise just the network path.
 
 mod common;
 
@@ -58,43 +65,61 @@ fn iters(n: usize) -> usize {
     }
 }
 
+/// Section filter: VITFPGA_BENCH_ONLY unset runs everything; set, it is
+/// a comma-separated list of section names ("H10", "h7,h10", ...).
+fn section_on(name: &str) -> bool {
+    match std::env::var("VITFPGA_BENCH_ONLY") {
+        Ok(list) if !list.trim().is_empty() => list
+            .split(',')
+            .any(|s| s.trim().eq_ignore_ascii_case(name)),
+        _ => true,
+    }
+}
+
 fn main() {
     let mut rng = Rng::new(0);
     if smoke() {
         println!("[bench] VITFPGA_BENCH_SMOKE set — tiny iteration counts, not a measurement");
     }
 
-    // H1: SpMM on a DeiT-sized QKV weight (384 x 1152) at 50% blocks.
-    let sp = BlockSparseMatrix::random((384, 1152), 16, 0.5, &mut rng);
-    let x: Vec<f32> = (0..197 * 384).map(|_| rng.normal()).collect();
-    let mut y = vec![0.0f32; 197 * 1152];
-    common::bench("H1 spmm 197x384 @ 50% blocks (qkv)", iters(200), || {
-        sp.spmm_into(&x, 197, &mut y);
-    });
-    let dense = sp.to_dense();
-    common::bench("H1 dense matmul same shape (reference)", iters(50), || {
-        // naive dense reference
-        y.fill(0.0);
-        for i in 0..197 {
-            for k in 0..384 {
-                let xv = x[i * 384 + k];
-                for j in 0..1152 {
-                    y[i * 1152 + j] += xv * dense[k * 1152 + j];
+    if section_on("H1") {
+        // H1: SpMM on a DeiT-sized QKV weight (384 x 1152) at 50% blocks.
+        let sp = BlockSparseMatrix::random((384, 1152), 16, 0.5, &mut rng);
+        let x: Vec<f32> = (0..197 * 384).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; 197 * 1152];
+        common::bench("H1 spmm 197x384 @ 50% blocks (qkv)", iters(200), || {
+            sp.spmm_into(&x, 197, &mut y);
+        });
+        let dense = sp.to_dense();
+        common::bench("H1 dense matmul same shape (reference)", iters(50), || {
+            // naive dense reference
+            y.fill(0.0);
+            for i in 0..197 {
+                for k in 0..384 {
+                    let xv = x[i * 384 + k];
+                    for j in 0..1152 {
+                        y[i * 1152 + j] += xv * dense[k * 1152 + j];
+                    }
                 }
             }
-        }
-        std::hint::black_box(&y);
-    });
+            std::hint::black_box(&y);
+        });
+    }
 
-    // H2: simulator throughput.
-    let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 42);
-    let sim = AcceleratorSim::new(HardwareConfig::u250());
-    common::bench("H2 model_latency (full 12-layer sim)", iters(500), || {
-        std::hint::black_box(sim.model_latency(&st, 1));
-    });
+    if section_on("H2") {
+        // H2: simulator throughput.
+        let st = ModelStructure::synthesize(&DEIT_SMALL, &PruningSetting::new(16, 0.5, 0.5), 42);
+        let sim = AcceleratorSim::new(HardwareConfig::u250());
+        common::bench("H2 model_latency (full 12-layer sim)", iters(500), || {
+            std::hint::black_box(sim.model_latency(&st, 1));
+        });
+    }
 
     let dir = artifacts_dir();
-    if dir.join("manifest.json").exists() {
+    let artifacts_sections = ["H3", "H4", "H5", "H6"]
+        .into_iter()
+        .any(section_on);
+    if artifacts_sections && dir.join("manifest.json").exists() {
         // H3: weights parsing.
         let wpath = dir.join("test-tiny_b8_rb0.7_rt0.7_bs1.weights.bin");
         if wpath.exists() {
@@ -122,7 +147,7 @@ fn main() {
                 });
             }
         }
-    } else {
+    } else if artifacts_sections {
         println!(
             "[bench] {} missing — skipping H3-H6 (run `make artifacts` / set \
              VITFPGA_ARTIFACTS)",
@@ -131,13 +156,24 @@ fn main() {
     }
 
     // H7: native batched engine — the BENCH_native_forward.json series.
-    native_backend_bench(&mut rng);
+    if section_on("H7") {
+        native_backend_bench(&mut rng);
+    }
 
     // H8: replicated pool throughput — the BENCH_pool_throughput.json series.
-    pool_throughput_bench(&mut rng);
+    if section_on("H8") {
+        pool_throughput_bench(&mut rng);
+    }
 
     // H9: token-parallel kernel engine — the BENCH_kernels.json series.
-    kernel_bench(&mut rng);
+    if section_on("H9") {
+        kernel_bench(&mut rng);
+    }
+
+    // H10: HTTP serving edge — the BENCH_http_serving.json series.
+    if section_on("H10") {
+        http_serving_bench();
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -530,6 +566,102 @@ fn kernel_bench(rng: &mut Rng) {
         rows.join(",\n")
     );
     let out = "BENCH_kernels.json";
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("[bench] wrote {}", out),
+        Err(e) => eprintln!("[bench] could not write {}: {}", out, e),
+    }
+}
+
+/// H10: the network serving edge end to end — a loopback HTTP server
+/// over the replicated pool, driven closed-loop by `server::loadgen`.
+/// One intra-layer worker per replica (H10 measures the wire + dispatch
+/// path, not kernel fan-out), replicas {1,4} x concurrency {1,8,32}.
+fn http_serving_bench() {
+    use std::sync::Arc;
+    use std::time::Duration;
+    use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
+    use vitfpga::server::{
+        loadgen, route, AppState, HttpConfig, HttpServer, LoadMode, LoadgenConfig,
+    };
+
+    let setting = PruningSetting::new(8, 0.7, 0.7);
+    let per_worker = if smoke() { 2usize } else { 16 };
+
+    let mut rows = Vec::new();
+    for &replicas in &[1usize, 4] {
+        let factory_setting = setting.clone();
+        let pool = BackendPool::start(
+            move |_i| {
+                Ok(
+                    NativeBackend::synthetic(&TEST_TINY, &factory_setting, 42, Precision::F32)?
+                        .with_threads(1)
+                        .with_batch_capacity(16),
+                )
+            },
+            PoolPolicy {
+                replicas,
+                batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                queue_capacity: 256,
+            },
+        )
+        .expect("pool start");
+        let state = Arc::new(AppState::new(pool, Some(Duration::from_secs(30))));
+        let handler_state = Arc::clone(&state);
+        let mut server =
+            HttpServer::start("127.0.0.1:0", HttpConfig::default(), move |req| {
+                route(&handler_state, req)
+            })
+            .expect("http server start");
+        let addr = server.local_addr().to_string();
+
+        for &concurrency in &[1usize, 8, 32] {
+            let cfg = LoadgenConfig {
+                addr: addr.clone(),
+                mode: LoadMode::Closed,
+                concurrency,
+                requests: concurrency * per_worker,
+                batch: 1,
+                timeout: Duration::from_secs(30),
+                seed: 7,
+            };
+            let report = loadgen::run(&cfg).expect("loadgen run");
+            println!(
+                "[bench] H10 http replicas={} concurrency={:>2}  {:>8.1} req/s  \
+                 p50 {:>8.3} ms  p99 {:>8.3} ms  shed {:.1}%",
+                replicas,
+                concurrency,
+                report.achieved_rps,
+                report.p50_ms,
+                report.p99_ms,
+                report.shed_rate() * 100.0
+            );
+            rows.push(format!(
+                "    {{\"replicas\": {}, \"concurrency\": {}, \"requests\": {}, \
+                 \"req_per_sec\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
+                 \"shed_rate\": {:.4}, \"client_errors\": {}}}",
+                replicas,
+                concurrency,
+                report.sent,
+                report.achieved_rps,
+                report.p50_ms,
+                report.p99_ms,
+                report.shed_rate(),
+                report.client_errors
+            ));
+        }
+        server.shutdown();
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"http_serving\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
+         \"requests_per_worker\": {},\n  \"smoke\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        TEST_TINY.name,
+        setting.label(),
+        per_worker,
+        smoke(),
+        rows.join(",\n")
+    );
+    let out = "BENCH_http_serving.json";
     match std::fs::write(out, &json) {
         Ok(()) => println!("[bench] wrote {}", out),
         Err(e) => eprintln!("[bench] could not write {}: {}", out, e),

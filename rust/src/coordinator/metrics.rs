@@ -24,6 +24,10 @@ pub struct Metrics {
 pub struct MetricsReport {
     pub requests: usize,
     pub batches: u64,
+    /// Sum of all request latencies — with `requests`, the pair behind a
+    /// Prometheus summary's `_sum`/`_count` (lets scrapers derive means
+    /// over arbitrary scrape windows).
+    pub sum_ms: f64,
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -83,14 +87,12 @@ fn summarize(
         let idx = ((n as f64 - 1.0) * p).round() as usize;
         sorted_us[idx.min(n - 1)] as f64 / 1e3
     };
+    let sum_ms = sorted_us.iter().sum::<u64>() as f64 / 1e3;
     MetricsReport {
         requests: n,
         batches,
-        mean_ms: if n == 0 {
-            0.0
-        } else {
-            sorted_us.iter().sum::<u64>() as f64 / n as f64 / 1e3
-        },
+        sum_ms,
+        mean_ms: if n == 0 { 0.0 } else { sum_ms / n as f64 },
         p50_ms: pct(0.50),
         p95_ms: pct(0.95),
         p99_ms: pct(0.99),
@@ -196,7 +198,7 @@ mod tests {
         let r = Metrics::new().report();
         assert_eq!(r.requests, 0);
         for v in [
-            r.mean_ms, r.p50_ms, r.p95_ms, r.p99_ms, r.max_ms,
+            r.sum_ms, r.mean_ms, r.p50_ms, r.p95_ms, r.p99_ms, r.max_ms,
             r.throughput_rps, r.mean_batch_occupancy,
         ] {
             assert!(v.is_finite() && v == 0.0, "non-zero/NaN field: {}", v);
@@ -239,8 +241,8 @@ mod tests {
         assert_eq!(m.batches, 2);
         assert!((m.mean_batch_occupancy - 3.0).abs() < 1e-9);
         for (x, y) in [
-            (m.p50_ms, w.p50_ms), (m.p95_ms, w.p95_ms),
-            (m.p99_ms, w.p99_ms), (m.max_ms, w.max_ms), (m.mean_ms, w.mean_ms),
+            (m.p50_ms, w.p50_ms), (m.p95_ms, w.p95_ms), (m.p99_ms, w.p99_ms),
+            (m.max_ms, w.max_ms), (m.mean_ms, w.mean_ms), (m.sum_ms, w.sum_ms),
         ] {
             assert!((x - y).abs() < 1e-9, "{} != {}", x, y);
         }

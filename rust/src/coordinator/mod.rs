@@ -33,7 +33,9 @@ use anyhow::{anyhow, Context, Result};
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsReport, MetricsSnapshot};
-pub use pool::{BackendPool, Overloaded, PoolMetricsReport, PoolPolicy, PoolStats};
+pub use pool::{
+    BackendPool, DeadlineExceeded, Overloaded, PoolMetricsReport, PoolPolicy, PoolStats,
+};
 pub use request::{InferenceRequest, InferenceResponse};
 
 use crate::backend::Backend;

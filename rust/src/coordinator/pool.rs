@@ -42,6 +42,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -99,6 +100,26 @@ impl std::fmt::Display for Overloaded {
 }
 
 impl std::error::Error for Overloaded {}
+
+/// Typed per-request deadline error: the request was admitted but no
+/// response arrived within the caller's deadline (wedged or very slow
+/// replica). Carried inside `anyhow::Error`; recover it with
+/// `err.downcast_ref::<DeadlineExceeded>()`. The serving edge maps it
+/// to HTTP 504 — unlike [`Overloaded`] (429), the work may still
+/// complete; only the caller stopped waiting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded {
+    /// How long the caller waited before giving up.
+    pub waited: Duration,
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no response within the {:?} request deadline", self.waited)
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
 
 /// Live admission gauges (point-in-time; individual counters move under
 /// concurrent traffic).
@@ -303,9 +324,34 @@ impl BackendPool {
 
     /// Blocking single inference through the pool.
     pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
-        self.submit(image)?
-            .recv()
-            .map_err(|_| anyhow!("engine dropped response"))?
+        self.infer_deadline(image, None)
+    }
+
+    /// Blocking single inference with an optional per-request deadline.
+    /// `None` waits forever (the [`BackendPool::infer`] behaviour); with
+    /// `Some(d)`, a response that has not arrived within `d` returns a
+    /// typed [`DeadlineExceeded`] error instead of blocking the caller
+    /// on a wedged replica. The abandoned request's admission slot is
+    /// still released by the engine when (if) it completes, so a timeout
+    /// never leaks pool capacity.
+    pub fn infer_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<InferenceResponse> {
+        let rx = self.submit(image)?;
+        match deadline {
+            None => rx.recv().map_err(|_| anyhow!("engine dropped response"))?,
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(resp) => resp,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    Err(anyhow::Error::new(DeadlineExceeded { waited: d }))
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(anyhow!("engine dropped response"))
+                }
+            },
+        }
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -407,10 +453,10 @@ mod tests {
         let p = pool(1, 16, Duration::ZERO);
         assert_eq!(p.replicas(), 1);
         assert_eq!(p.num_classes, 4);
-        let resp = p.infer(vec![2.0, 0.0]).unwrap();
+        let resp = p.infer(vec![2.0, 0.0]).expect("infer through 1-replica pool");
         assert_eq!(resp.logits, vec![2.0, 3.0, 4.0, 5.0]);
         assert_eq!(resp.predicted_class, 3);
-        let m = p.metrics().unwrap();
+        let m = p.metrics().expect("pool metrics after one request");
         assert_eq!(m.pool.requests, 1);
         assert_eq!(m.per_replica.len(), 1);
         let s = p.stats();
@@ -424,13 +470,19 @@ mod tests {
         // round-robin dispatch must use every replica.
         let p = pool(3, 64, Duration::from_millis(5));
         let rxs: Vec<_> = (0..24)
-            .map(|i| p.submit(vec![i as f32, 0.0]).unwrap())
+            .map(|i| {
+                p.submit(vec![i as f32, 0.0])
+                    .unwrap_or_else(|e| panic!("submit {} under capacity shed: {:#}", i, e))
+            })
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv().unwrap().unwrap();
+            let resp = rx
+                .recv()
+                .unwrap_or_else(|e| panic!("engine dropped response {}: {}", i, e))
+                .unwrap_or_else(|e| panic!("inference {} failed: {:#}", i, e));
             assert_eq!(resp.logits[0], i as f32, "responses routed back per request");
         }
-        let m = p.metrics().unwrap();
+        let m = p.metrics().expect("pool metrics after 24 requests");
         assert_eq!(m.pool.requests, 24);
         for (i, r) in m.per_replica.iter().enumerate() {
             assert!(r.requests > 0, "replica {} never dispatched", i);
@@ -447,18 +499,22 @@ mod tests {
         // Capacity 2 with a slow backend: the first two submits occupy
         // the queue for >= 50 ms, so further submits must shed.
         let p = pool(1, 2, Duration::from_millis(50));
-        let a = p.submit(vec![1.0, 0.0]).unwrap();
-        let b = p.submit(vec![2.0, 0.0]).unwrap();
+        let a = p.submit(vec![1.0, 0.0]).expect("first submit fills slot 1");
+        let b = p.submit(vec![2.0, 0.0]).expect("second submit fills slot 2");
         let shed = p.submit(vec![3.0, 0.0]).expect_err("third submit over capacity");
         let o = shed
             .downcast_ref::<Overloaded>()
-            .expect("shed error downcasts to Overloaded");
+            .unwrap_or_else(|| panic!("shed error must downcast to Overloaded, got: {:#}", shed));
         assert_eq!(o.capacity, 2);
         assert!(o.queue_depth >= 2);
         assert_eq!(p.stats().shed_count, 1);
         // Admitted requests still complete, and the gauge settles.
-        assert!(a.recv().unwrap().is_ok());
-        assert!(b.recv().unwrap().is_ok());
+        a.recv()
+            .expect("engine dropped first admitted response")
+            .expect("first admitted request must still infer");
+        b.recv()
+            .expect("engine dropped second admitted response")
+            .expect("second admitted request must still infer");
         for _ in 0..100 {
             if p.stats().queue_depth == 0 {
                 break;
@@ -467,7 +523,34 @@ mod tests {
         }
         assert_eq!(p.stats().queue_depth, 0, "queue depth must settle to 0");
         // Capacity freed: submits are admitted again.
-        assert!(p.infer(vec![4.0, 0.0]).is_ok());
+        p.infer(vec![4.0, 0.0]).expect("submit after drain must be re-admitted");
+    }
+
+    #[test]
+    fn deadline_times_out_then_settles() {
+        // 50 ms batches against a 5 ms deadline: the caller gets a typed
+        // DeadlineExceeded quickly, while the abandoned request still
+        // completes inside the engine and releases its admission slot.
+        let p = pool(1, 4, Duration::from_millis(50));
+        let err = p
+            .infer_deadline(vec![1.0, 0.0], Some(Duration::from_millis(5)))
+            .expect_err("5 ms deadline against a 50 ms backend must time out");
+        let d = err
+            .downcast_ref::<DeadlineExceeded>()
+            .unwrap_or_else(|| panic!("timeout must downcast to DeadlineExceeded, got: {:#}", err));
+        assert_eq!(d.waited, Duration::from_millis(5));
+        for _ in 0..200 {
+            if p.stats().queue_depth == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(p.stats().queue_depth, 0, "abandoned request must not leak its slot");
+        // A generous deadline behaves like a plain infer.
+        let resp = p
+            .infer_deadline(vec![2.0, 0.0], Some(Duration::from_secs(10)))
+            .expect("roomy deadline must answer normally");
+        assert_eq!(resp.logits, vec![2.0, 3.0, 4.0, 5.0]);
     }
 
     #[test]

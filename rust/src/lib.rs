@@ -22,6 +22,10 @@
 //!     metrics, engine actor), generic over any backend, plus the
 //!     replicated [`coordinator::BackendPool`] (least-loaded dispatch,
 //!     bounded admission with typed shedding, merged pool metrics);
+//!   * [`server`] — the network edge: a std-only threaded HTTP/1.1
+//!     listener + JSON routes over the pool (`POST /v1/infer`,
+//!     `/v1/infer_batch`, `GET /healthz`, Prometheus `GET /metrics`),
+//!     and an open-/closed-loop load generator (`vitfpga loadgen`);
 //!   * [`runtime`] — artifact manifest + VITW0001 weight readers
 //!     (always built) and the PJRT engine (`pjrt` feature only);
 //!   * [`complexity`], [`sim::resources`], [`baselines`] — the paper's
@@ -50,5 +54,6 @@ pub mod coordinator;
 pub mod formats;
 pub mod funcsim;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod util;

@@ -14,6 +14,20 @@
 //!                           run the coordinator (or, with --replicas > 1,
 //!                           the replicated pool with least-loaded dispatch
 //!                           and bounded admission) against synthetic load
+//!   serve --http ADDR [--request-timeout-ms MS] [--duration-s S]
+//!         [...same backend/pool options]
+//!                           expose the pool over HTTP/1.1 instead of
+//!                           driving synthetic load: POST /v1/infer and
+//!                           /v1/infer_batch, GET /healthz and /metrics
+//!                           (Prometheus). ADDR like 127.0.0.1:8080 (port
+//!                           0 picks an ephemeral port). Stops on Enter /
+//!                           stdin EOF, or after --duration-s, with a
+//!                           graceful in-flight drain
+//!   loadgen --addr HOST:PORT [--qps Q] [--concurrency C] [--requests N]
+//!           [--batch B] [--timeout-ms MS] [--out FILE]
+//!                           drive a running serve --http edge: closed-loop
+//!                           (default) or open-loop at --qps, reporting
+//!                           latency percentiles, shed rate and a histogram
 //!   funcsim --variant NAME [--artifacts DIR] [--int16]
 //!                           functional datapath run (cross-checked
 //!                           against PJRT when built with --features pjrt)
@@ -53,7 +67,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: vitfpga <table|fig|simulate|infer|serve|funcsim|sweep|resources> [options]\n\
+    "usage: vitfpga <table|fig|simulate|infer|serve|loadgen|funcsim|sweep|resources> [options]\n\
      see rust/src/main.rs header for per-command options"
 }
 
@@ -76,6 +90,7 @@ fn run() -> Result<()> {
         "simulate" => cmd_simulate(&args)?,
         "infer" => cmd_infer(&args)?,
         "serve" => cmd_serve(&args)?,
+        "loadgen" => cmd_loadgen(&args)?,
         "funcsim" => cmd_funcsim(&args)?,
         _ => bail!("{}", usage()),
     }
@@ -191,22 +206,17 @@ impl Server {
         // rather than silently ignoring the flag.
         let pooled = replicas > 1 || args.get("queue-capacity").is_some();
         let pool_policy = PoolPolicy { replicas, batch: policy, queue_capacity };
-        match (args.get_or("backend", "native"), pooled) {
-            ("native", false) => {
+        if pooled {
+            // One construction path for every pooled server (also the
+            // one `serve --http` uses), so backend arms can't drift.
+            return Ok(Server::Pool(start_pool(args, pool_policy)?));
+        }
+        match args.get_or("backend", "native") {
+            "native" => {
                 Ok(Server::Single(Coordinator::start(NativeBackend::from_cli(args)?, policy)?))
             }
-            ("native", true) => {
-                // The factory splits cores across replicas (unless
-                // --threads pins a count) so N engines don't each fan
-                // their intra-layer kernels over every core.
-                Ok(Server::Pool(BackendPool::start(
-                    NativeBackend::pool_factory(args, replicas),
-                    pool_policy,
-                )?))
-            }
-            ("pjrt", false) => Ok(Server::Single(start_pjrt_coordinator(args, policy)?)),
-            ("pjrt", true) => Ok(Server::Pool(start_pjrt_pool(args, pool_policy)?)),
-            (other, _) => bail!("unknown backend '{}'", other),
+            "pjrt" => Ok(Server::Single(start_pjrt_coordinator(args, policy)?)),
+            other => bail!("unknown backend '{}'", other),
         }
     }
 
@@ -383,6 +393,107 @@ fn cmd_funcsim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the replicated pool from the shared CLI conventions — the
+/// construction path behind `serve --http`.
+fn start_pool(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
+    match args.get_or("backend", "native") {
+        // The factory splits cores across replicas (unless --threads
+        // pins a count) so N engines don't each fan their intra-layer
+        // kernels over every core.
+        "native" => BackendPool::start(
+            NativeBackend::pool_factory(args, policy.replicas),
+            policy,
+        ),
+        "pjrt" => start_pjrt_pool(args, policy),
+        other => bail!("unknown backend '{}'", other),
+    }
+}
+
+/// `serve --http ADDR`: put the pool on the network. Serves until Enter
+/// / stdin EOF (or `--duration-s`), then drains in-flight requests.
+fn cmd_serve_http(args: &Args, addr: &str, policy: BatchPolicy) -> Result<()> {
+    use vitfpga::server::{route, AppState, HttpConfig, HttpServer};
+    let pool_policy = PoolPolicy {
+        replicas: args.get_usize("replicas", 1),
+        batch: policy,
+        queue_capacity: args.get_usize(
+            "queue-capacity",
+            vitfpga::coordinator::pool::DEFAULT_QUEUE_CAPACITY,
+        ),
+    };
+    let pool = start_pool(args, pool_policy)?;
+    // 0 disables the deadline; the 30 s default keeps a wedged replica
+    // from pinning clients forever.
+    let timeout = args.get_ms_opt("request-timeout-ms", 30_000);
+    println!(
+        "serving {} over HTTP (queue capacity {}, request timeout {:?})",
+        pool.backend_name, pool_policy.queue_capacity, timeout
+    );
+    let state = Arc::new(AppState::new(pool, timeout));
+    let handler_state = Arc::clone(&state);
+    let mut server = HttpServer::start(addr, HttpConfig::default(), move |req| {
+        route(&handler_state, req)
+    })?;
+    println!("listening on http://{}", server.local_addr());
+    println!("  POST /v1/infer       one image -> logits+argmax+metadata");
+    println!("  POST /v1/infer_batch batched images");
+    println!("  GET  /healthz        liveness + model shape");
+    println!("  GET  /metrics        Prometheus text exposition");
+    match args.get_usize("duration-s", 0) {
+        0 => {
+            println!("press Enter (or close stdin) to stop");
+            let mut line = String::new();
+            let _ = std::io::stdin().read_line(&mut line);
+        }
+        secs => std::thread::sleep(std::time::Duration::from_secs(secs as u64)),
+    }
+    println!("draining in-flight requests...");
+    server.shutdown();
+    println!("{}", state.pool.metrics()?);
+    let s = state.pool.stats();
+    println!("admission: depth {}/{}, shed {}", s.queue_depth, s.queue_capacity, s.shed_count);
+    Ok(())
+}
+
+/// `loadgen`: drive a running `serve --http` edge and report latency
+/// percentiles, shed rate and a histogram.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use vitfpga::server::loadgen::{self, LoadMode, LoadgenConfig};
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("loadgen needs --addr HOST:PORT"))?;
+    let mode = match args.get("qps") {
+        Some(_) => LoadMode::Open { qps: args.get_f64("qps", 100.0) },
+        None => LoadMode::Closed,
+    };
+    let cfg = LoadgenConfig {
+        addr: addr.to_string(),
+        mode,
+        concurrency: args.get_usize("concurrency", 4),
+        requests: args.get_usize("requests", 256),
+        batch: args.get_usize("batch", 1),
+        // 0 means "disabled" in the get_ms_opt convention, but a
+        // loadgen worker without a give-up bound can hang the whole
+        // run on one dead connection — require a positive timeout.
+        timeout: args.get_ms_opt("timeout-ms", 30_000).ok_or_else(|| {
+            anyhow::anyhow!("--timeout-ms 0 is not supported; pass a positive client timeout")
+        })?,
+        seed: args.get_usize("seed", 7) as u64,
+    };
+    println!(
+        "loadgen -> http://{}: {:?}, {} requests x {} workers, batch {}",
+        cfg.addr, cfg.mode, cfg.requests, cfg.concurrency, cfg.batch
+    );
+    let report = loadgen::run(&cfg)?;
+    println!("{}", report);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {}", out, e))?;
+        println!("wrote {}", out);
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 64);
     let concurrency = args.get_usize("concurrency", 4);
@@ -390,6 +501,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 8),
         max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
     };
+    // --http flips serve from "drive synthetic load in-process" to
+    // "expose the pool on the network" (drive it with `vitfpga loadgen`).
+    if let Some(addr) = args.get("http") {
+        return cmd_serve_http(args, addr, policy);
+    }
     let server = Arc::new(Server::start(args, policy)?);
     println!(
         "serving {} ({} f32/image, batch capacity {}), {} requests x {} client threads",

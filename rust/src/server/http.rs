@@ -1,0 +1,527 @@
+//! Std-only threaded HTTP/1.1 listener.
+//!
+//! Scope is deliberately narrow — exactly what the serving edge needs
+//! and nothing the crate's `anyhow`-only dependency policy would have
+//! to buy elsewhere:
+//!
+//! * request parsing (request line, headers, `Content-Length` bodies);
+//! * bounded everything: header bytes, body bytes, read deadlines —
+//!   a slow or malicious client can never hold unbounded memory;
+//! * **no chunked transfer encoding**: a chunked request is answered
+//!   with `411 Length Required` (bodies must be length-delimited so the
+//!   bound is enforceable before buffering);
+//! * keep-alive (HTTP/1.1 default; `Connection: close` honoured; 1.0
+//!   opt-in via `Connection: keep-alive`) including pipelined bytes
+//!   left over after a request's body;
+//! * one worker thread per connection, capped by
+//!   [`HttpConfig::max_connections`] (excess connections get an
+//!   immediate `503` and are closed);
+//! * cooperative shutdown: a shared flag stops the accept loop, idle
+//!   keep-alive workers notice it on their next read tick, and
+//!   [`HttpServer::shutdown`] waits for in-flight requests to finish
+//!   writing their responses before the listener socket is dropped.
+//!
+//! The handler is a plain `Fn(&HttpRequest) -> HttpResponse` — routing
+//! and JSON live one layer up in `server::routes`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Tunables of the listener. Defaults are sized for the JSON inference
+/// wire: bodies can carry a batch of images (a deit-small image is
+/// ~1.9 MB of JSON text), headers cannot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HttpConfig {
+    /// Hard cap on a request's header block, bytes.
+    pub max_header_bytes: usize,
+    /// Hard cap on `Content-Length` (and thus on the buffered body).
+    pub max_body_bytes: usize,
+    /// Deadline for reading one full request once its first byte has
+    /// arrived; exceeded -> `408 Request Timeout`.
+    pub read_deadline: Duration,
+    /// How long an idle keep-alive connection is kept before closing.
+    pub keep_alive_idle: Duration,
+    /// Max concurrently served connections; excess get an instant 503.
+    pub max_connections: usize,
+    /// Upper bound `shutdown()` waits for in-flight requests to drain.
+    pub drain_deadline: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 64 * 1024 * 1024,
+            read_deadline: Duration::from_secs(10),
+            keep_alive_idle: Duration::from_secs(30),
+            max_connections: 256,
+            drain_deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One parsed request. Header names are lowercased at parse time;
+/// values keep their bytes (trimmed of surrounding whitespace).
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Request target as sent (path + optional query, no normalization).
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// True for `HTTP/1.0` requests (keep-alive becomes opt-in).
+    pub http10: bool,
+}
+
+impl HttpRequest {
+    /// Target with any `?query` suffix stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// Extra headers; `Content-Length` and `Connection` are managed by
+    /// the writer, `Content-Type` defaults to `application/json` unless
+    /// set here.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn new(status: u16, body: impl Into<Vec<u8>>) -> HttpResponse {
+        HttpResponse { status, headers: Vec::new(), body: body.into() }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> HttpResponse {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+}
+
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Why a connection's request could not be parsed. Carries the status
+/// the worker answers with before closing (framing is unrecoverable
+/// after any of these).
+#[derive(Debug)]
+enum ParseOutcome {
+    /// A complete request (plus any pipelined leftover bytes).
+    Request(HttpRequest),
+    /// Peer closed (or idle/shutdown tick said to stop). No response.
+    Closed,
+    /// Protocol error: answer with this status + message, then close.
+    Reject(u16, &'static str),
+}
+
+/// Counters shared between the accept loop, the workers and
+/// `shutdown()`. All relaxed-ish orderings are fine: these gate drain
+/// waits and caps, not data handoffs.
+struct Shared {
+    shutdown: AtomicBool,
+    /// Live connection worker threads.
+    connections: AtomicUsize,
+    /// Requests fully parsed whose response has not been written yet —
+    /// the drain gauge.
+    in_flight: AtomicUsize,
+}
+
+/// A running HTTP server. Dropping it (or calling
+/// [`HttpServer::shutdown`]) stops the accept loop, lets in-flight
+/// requests finish, and closes the listener.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    config: HttpConfig,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// `handler` on per-connection worker threads until shutdown.
+    pub fn start<A, H>(addr: A, config: HttpConfig, handler: H) -> Result<HttpServer>
+    where
+        A: ToSocketAddrs + std::fmt::Debug,
+        H: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding http {:?}", addr))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let shared = Arc::new(Shared {
+            shutdown: AtomicBool::new(false),
+            connections: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+        });
+        let handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync> = Arc::new(handler);
+
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::Builder::new()
+            .name("vitfpga-http-accept".into())
+            .spawn(move || accept_loop(listener, config, accept_shared, handler))
+            .context("spawning http accept thread")?;
+
+        Ok(HttpServer {
+            addr: local,
+            shared,
+            config,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address — the real port even when started on `:0`.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests parsed but not yet answered (the drain gauge).
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Graceful stop: no new connections are accepted, in-flight
+    /// requests get to write their responses (bounded by
+    /// [`HttpConfig::drain_deadline`]), then the listener socket closes.
+    /// Idempotent; also invoked by `Drop`.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Drain phase 1: in-flight requests (parsed, handler running or
+        // response being written) must complete.
+        let deadline = Instant::now() + self.config.drain_deadline;
+        while self.shared.in_flight.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Drain phase 2: workers notice the flag on their next read tick
+        // and close their sockets; give them a bounded window too.
+        while self.shared.connections.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Joining the accept thread drops the listener: the port is
+        // released only after the drain above.
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    config: HttpConfig,
+    shared: Arc<Shared>,
+    handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>,
+) {
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.connections.load(Ordering::Acquire) >= config.max_connections {
+                    // Over the connection cap: answer 503 inline (the
+                    // accept thread pays the tiny write) and move on.
+                    let _ = stream.set_nonblocking(false);
+                    let resp = HttpResponse::new(503, b"{\"error\":\"connection limit\"}".to_vec());
+                    let mut stream = stream;
+                    let _ = write_response(&mut stream, &resp, false);
+                    continue;
+                }
+                shared.connections.fetch_add(1, Ordering::AcqRel);
+                let conn_shared = Arc::clone(&shared);
+                let conn_handler = Arc::clone(&handler);
+                let spawned = std::thread::Builder::new()
+                    .name("vitfpga-http-conn".into())
+                    .spawn(move || {
+                        serve_connection(stream, config, &conn_shared, conn_handler.as_ref());
+                        conn_shared.connections.fetch_sub(1, Ordering::AcqRel);
+                    });
+                if spawned.is_err() {
+                    shared.connections.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept error (e.g. aborted connection):
+                // back off briefly and keep listening.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    config: HttpConfig,
+    shared: &Shared,
+    handler: &(dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync),
+) {
+    // The listener is non-blocking; make sure the accepted socket is
+    // not (a non-blocking worker would spin through its read loop).
+    // Short read ticks so idle keep-alive workers observe the shutdown
+    // flag promptly; per-request deadlines are enforced on top.
+    if stream.set_nonblocking(false).is_err()
+        || stream
+            .set_read_timeout(Some(Duration::from_millis(100)))
+            .is_err()
+    {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    // Bytes read past the previous request's body (pipelining).
+    let mut leftover: Vec<u8> = Vec::new();
+    loop {
+        match read_request(&mut stream, &mut leftover, &config, shared) {
+            ParseOutcome::Closed => return,
+            ParseOutcome::Reject(status, msg) => {
+                // Framing is unknown after a parse failure: answer and
+                // close regardless of keep-alive.
+                let body = format!("{{\"error\":{}}}", crate::util::json::Json::Str(msg.into()));
+                let resp = HttpResponse::new(status, body.into_bytes());
+                let _ = write_response(&mut stream, &resp, false);
+                return;
+            }
+            ParseOutcome::Request(req) => {
+                shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                let resp = handler(&req);
+                let keep_alive = wants_keep_alive(&req) && !shared.shutdown.load(Ordering::Acquire);
+                let wrote = write_response(&mut stream, &resp, keep_alive);
+                shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                if wrote.is_err() || !keep_alive {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn wants_keep_alive(req: &HttpRequest) -> bool {
+    let conn = req.header("connection").unwrap_or("");
+    if conn.eq_ignore_ascii_case("close") {
+        return false;
+    }
+    // HTTP/1.1 defaults to persistent connections; 1.0 must opt in.
+    if req.http10 {
+        return conn.eq_ignore_ascii_case("keep-alive");
+    }
+    true
+}
+
+/// Read one request from `stream`, consuming from/into `leftover` for
+/// pipelined bytes. Returns a reject status instead of erroring so the
+/// caller can answer before closing.
+fn read_request(
+    stream: &mut TcpStream,
+    leftover: &mut Vec<u8>,
+    config: &HttpConfig,
+    shared: &Shared,
+) -> ParseOutcome {
+    let mut buf = std::mem::take(leftover);
+    let idle_deadline = Instant::now() + config.keep_alive_idle;
+    // Set once the first byte of this request exists.
+    let mut read_deadline: Option<Instant> = if buf.is_empty() {
+        None
+    } else {
+        Some(Instant::now() + config.read_deadline)
+    };
+    let mut chunk = [0u8; 8192];
+
+    // Phase 1: accumulate the header block (ending "\r\n\r\n").
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() > config.max_header_bytes {
+            return ParseOutcome::Reject(431, "header block too large");
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return ParseOutcome::Closed,
+            Ok(n) => {
+                if read_deadline.is_none() {
+                    read_deadline = Some(Instant::now() + config.read_deadline);
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                match read_deadline {
+                    // Mid-request: enforce the read deadline.
+                    Some(d) if Instant::now() >= d => {
+                        return ParseOutcome::Reject(408, "request read deadline exceeded");
+                    }
+                    Some(_) => continue,
+                    // Idle between requests: close on shutdown or after
+                    // the keep-alive idle window.
+                    None => {
+                        if shared.shutdown.load(Ordering::Acquire)
+                            || Instant::now() >= idle_deadline
+                        {
+                            return ParseOutcome::Closed;
+                        }
+                        continue;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ParseOutcome::Closed,
+        }
+    };
+
+    // Phase 2: parse the header block.
+    let head = match std::str::from_utf8(&buf[..header_end]) {
+        Ok(s) => s,
+        Err(_) => return ParseOutcome::Reject(400, "header block is not valid UTF-8"),
+    };
+    let mut lines = head.split("\r\n").filter(|l| !l.is_empty());
+    let request_line = match lines.next() {
+        Some(l) => l,
+        None => return ParseOutcome::Reject(400, "empty request line"),
+    };
+    let parts: Vec<&str> = request_line.split(' ').collect();
+    let (method, target, version) = match parts.as_slice() {
+        [m, t, v] => (*m, *t, *v),
+        _ => return ParseOutcome::Reject(400, "malformed request line"),
+    };
+    let http10 = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        _ => return ParseOutcome::Reject(505, "unsupported HTTP version"),
+    };
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        match line.split_once(':') {
+            Some((name, value)) => headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            )),
+            None => return ParseOutcome::Reject(400, "malformed header line"),
+        }
+    }
+    // Phase 3: body framing. Chunked is rejected; Content-Length is
+    // bounded before a single body byte is buffered.
+    let lookup = |name: &str| -> Option<&str> {
+        headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    };
+    if let Some(te) = lookup("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return ParseOutcome::Reject(411, "chunked bodies unsupported; send Content-Length");
+        }
+    }
+    let body_len = match lookup("content-length") {
+        None => 0usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return ParseOutcome::Reject(400, "unparseable Content-Length"),
+        },
+    };
+    if body_len > config.max_body_bytes {
+        return ParseOutcome::Reject(413, "body exceeds the configured size bound");
+    }
+
+    // Phase 4: read the body (some of it may already be in `buf`).
+    let body_start = header_end + 4;
+    let deadline = read_deadline.unwrap_or_else(|| Instant::now() + config.read_deadline);
+    while buf.len() < body_start + body_len {
+        match stream.read(&mut chunk) {
+            Ok(0) => return ParseOutcome::Closed,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if Instant::now() >= deadline {
+                    return ParseOutcome::Reject(408, "body read deadline exceeded");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ParseOutcome::Closed,
+        }
+    }
+    let body = buf[body_start..body_start + body_len].to_vec();
+    // Preserve pipelined bytes for the next request on this connection.
+    *leftover = buf.split_off(body_start + body_len);
+
+    ParseOutcome::Request(HttpRequest {
+        method: method.to_string(),
+        target: target.to_string(),
+        headers,
+        body,
+        http10,
+    })
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    let mut has_content_type = false;
+    for (name, value) in &resp.headers {
+        if name.eq_ignore_ascii_case("content-type") {
+            has_content_type = true;
+        }
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    if !has_content_type {
+        head.push_str("Content-Type: application/json\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}

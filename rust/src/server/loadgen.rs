@@ -1,0 +1,611 @@
+//! Std-only HTTP load-generator for the serving edge.
+//!
+//! Two driving disciplines, both over persistent keep-alive
+//! connections (one per worker):
+//!
+//! * **closed-loop** — `concurrency` workers each keep exactly one
+//!   request outstanding, back-to-back. Measures the server's capacity
+//!   frontier: latency and throughput at a fixed in-flight population.
+//! * **open-loop** — requests are launched on a fixed global schedule
+//!   (`qps`), regardless of whether earlier ones have answered.
+//!   Latencies are measured from the *scheduled* send instant, so
+//!   server backlog shows up as latency instead of silently throttling
+//!   the offered load (the coordinated-omission-free discipline).
+//!
+//! The generator probes `GET /healthz` first to learn the model shape,
+//! then drives `POST /v1/infer` (or `/v1/infer_batch` with
+//! `batch > 1`), classifying responses: 200 ok, 429 shed, 504
+//! deadline, other 5xx server error. Results aggregate into a
+//! [`LoadgenReport`] with exact percentiles plus a log2-bucketed
+//! latency histogram. [`HttpClient`] is public — the integration tests
+//! and bench H10 reuse it as their loopback client.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A minimal blocking HTTP/1.1 client over one keep-alive connection,
+/// reconnecting once per request if the pooled connection went away.
+pub struct HttpClient {
+    addr: SocketAddr,
+    timeout: Duration,
+    stream: Option<TcpStream>,
+    /// Bytes read past the previous response's body.
+    leftover: Vec<u8>,
+}
+
+/// Marker for failures where the server provably never started
+/// answering on a connection it had already closed (write failed, or
+/// EOF arrived before any response byte). Only these are safe to retry
+/// on a fresh connection: the POSTs this client sends are not
+/// idempotent, and a retry after a timeout or a partial response could
+/// execute the inference twice.
+#[derive(Debug)]
+struct StaleConnection;
+
+impl std::fmt::Display for StaleConnection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("keep-alive connection was closed by the server between requests")
+    }
+}
+
+/// A parsed response: status, headers (lowercased names), body bytes.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body parsed as JSON (most endpoints speak it).
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("response body is not UTF-8")?;
+        Json::parse(text).map_err(|e| anyhow!("response body is not JSON: {}", e))
+    }
+}
+
+impl HttpClient {
+    /// Resolve `addr` (e.g. `127.0.0.1:8080`) and prepare a client; the
+    /// TCP connection is established lazily on the first request.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<HttpClient> {
+        let sockaddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", addr))?
+            .next()
+            .ok_or_else(|| anyhow!("{} resolves to no address", addr))?;
+        Ok(HttpClient { addr: sockaddr, timeout, stream: None, leftover: Vec::new() })
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &[u8]) -> Result<ClientResponse> {
+        self.request("POST", path, Some(body))
+    }
+
+    /// One request/response exchange. Only a [`StaleConnection`]
+    /// failure on a *reused* connection (the server closed it between
+    /// requests, before accepting this one) is retried, once, on a
+    /// fresh connection — any other failure (timeout, partial
+    /// response) may mean the server is already executing the request,
+    /// and these POSTs are not idempotent. Every failure resets the
+    /// pooled connection so the next request starts clean.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<ClientResponse> {
+        let reused = self.stream.is_some();
+        match self.exchange(method, path, body) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.stream = None;
+                self.leftover.clear();
+                if reused && e.downcast_ref::<StaleConnection>().is_some() {
+                    self.exchange(method, path, body)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn exchange(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<ClientResponse> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect_timeout(&self.addr, self.timeout)
+                .with_context(|| format!("connecting {}", self.addr))?;
+            s.set_read_timeout(Some(Duration::from_millis(50)))
+                .context("setting client read timeout")?;
+            s.set_write_timeout(Some(self.timeout))
+                .context("setting client write timeout")?;
+            let _ = s.set_nodelay(true);
+            self.stream = Some(s);
+            self.leftover.clear();
+        }
+        let stream = self.stream.as_mut().expect("stream just ensured");
+
+        let mut head = format!(
+            "{} {} HTTP/1.1\r\nHost: {}\r\nConnection: keep-alive\r\n",
+            method, path, self.addr
+        );
+        if let Some(b) = body {
+            head.push_str(&format!(
+                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                b.len()
+            ));
+        }
+        head.push_str("\r\n");
+        // A write failure means the server never accepted the request
+        // (it closed the connection first) — safe to retry.
+        stream
+            .write_all(head.as_bytes())
+            .map_err(|e| anyhow::Error::new(e).context(StaleConnection))?;
+        if let Some(b) = body {
+            stream
+                .write_all(b)
+                .map_err(|e| anyhow::Error::new(e).context(StaleConnection))?;
+        }
+        stream
+            .flush()
+            .map_err(|e| anyhow::Error::new(e).context(StaleConnection))?;
+
+        let resp = read_response(stream, &mut self.leftover, self.timeout)?;
+        if resp
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+        {
+            self.stream = None;
+            self.leftover.clear();
+        }
+        Ok(resp)
+    }
+}
+
+/// Read one `Content-Length`-framed response.
+fn read_response(
+    stream: &mut TcpStream,
+    leftover: &mut Vec<u8>,
+    timeout: Duration,
+) -> Result<ClientResponse> {
+    let deadline = Instant::now() + timeout;
+    let mut buf = std::mem::take(leftover);
+    let mut chunk = [0u8; 8192];
+
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        match stream.read(&mut chunk) {
+            // EOF before any response byte: the server closed this
+            // (keep-alive) connection without seeing the request —
+            // retryable. EOF mid-response is not.
+            Ok(0) if buf.is_empty() => {
+                return Err(anyhow::Error::new(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "closed before response",
+                ))
+                .context(StaleConnection))
+            }
+            Ok(0) => bail!("server closed the connection mid-response"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if Instant::now() >= deadline {
+                    bail!("client timeout waiting for response headers");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading response"),
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end]).context("response head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {:?}", status_line))?;
+    let mut headers = Vec::new();
+    for line in lines.filter(|l| !l.is_empty()) {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    let body_len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+
+    let body_start = header_end + 4;
+    while buf.len() < body_start + body_len {
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("server closed the connection mid-body"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if Instant::now() >= deadline {
+                    bail!("client timeout waiting for response body");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading response body"),
+        }
+    }
+    let body = buf[body_start..body_start + body_len].to_vec();
+    *leftover = buf.split_off(body_start + body_len);
+    Ok(ClientResponse { status, headers, body })
+}
+
+// ---------------------------------------------------------------------------
+// load generation
+// ---------------------------------------------------------------------------
+
+/// Driving discipline of the generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// Each worker keeps one request outstanding, back-to-back.
+    Closed,
+    /// Fixed global arrival schedule at this rate; backlog surfaces as
+    /// latency (measured from the scheduled instant), never as reduced
+    /// offered load.
+    Open { qps: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// `host:port` of a running `vitfpga serve --http` edge.
+    pub addr: String,
+    pub mode: LoadMode,
+    /// Worker connections (and, closed-loop, the in-flight population).
+    pub concurrency: usize,
+    /// Total requests across all workers.
+    pub requests: usize,
+    /// Images per request: 1 drives `/v1/infer`, >1 `/v1/infer_batch`.
+    pub batch: usize,
+    /// Client-side give-up bound per request.
+    pub timeout: Duration,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8080".into(),
+            mode: LoadMode::Closed,
+            concurrency: 4,
+            requests: 64,
+            batch: 1,
+            timeout: Duration::from_secs(30),
+            seed: 7,
+        }
+    }
+}
+
+/// Log2-bucketed latency histogram (microsecond buckets: bucket `i`
+/// holds samples in `[2^(i-1), 2^i) us`). Coarse by design — exact
+/// percentiles come from the raw samples; this is the shape-at-a-glance
+/// view the CLI prints.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    buckets: [u64; 32],
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, us: u64) {
+        let idx = (64 - us.leading_zeros()) as usize;
+        self.buckets[idx.min(self.buckets.len() - 1)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// ASCII rendering, one line per non-empty bucket.
+    pub fn render(&self) -> String {
+        let total = self.total().max(1);
+        let lo = self.buckets.iter().position(|&n| n > 0);
+        let hi = self.buckets.iter().rposition(|&n| n > 0);
+        let (lo, hi) = match (lo, hi) {
+            (Some(l), Some(h)) => (l, h),
+            _ => return "  (no samples)".to_string(),
+        };
+        let mut out = String::new();
+        for i in lo..=hi {
+            let upper_us = 1u64 << i;
+            let n = self.buckets[i];
+            let bar = "#".repeat(((n * 40).div_ceil(total)) as usize);
+            out.push_str(&format!(
+                "  < {:>9.3} ms {:>7}  {}\n",
+                upper_us as f64 / 1e3,
+                n,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+/// Aggregated outcome of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub ok: u64,
+    /// 429 responses (admission shed).
+    pub shed: u64,
+    /// 504 responses (server-side deadline).
+    pub deadline: u64,
+    /// Other non-2xx HTTP responses.
+    pub http_errors: u64,
+    /// Transport failures (connect/read/write/client timeout).
+    pub client_errors: u64,
+    pub wall_s: f64,
+    /// Completed-OK requests per wall second.
+    pub achieved_rps: f64,
+    /// Open-loop only: the configured arrival rate.
+    pub offered_qps: Option<f64>,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub histogram: LatencyHistogram,
+}
+
+impl LoadgenReport {
+    /// Fraction of sent requests shed with 429.
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.sent as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("sent", self.sent as f64);
+        num("ok", self.ok as f64);
+        num("shed", self.shed as f64);
+        num("deadline", self.deadline as f64);
+        num("http_errors", self.http_errors as f64);
+        num("client_errors", self.client_errors as f64);
+        num("shed_rate", self.shed_rate());
+        num("wall_s", self.wall_s);
+        num("achieved_rps", self.achieved_rps);
+        if let Some(q) = self.offered_qps {
+            num("offered_qps", q);
+        }
+        num("mean_ms", self.mean_ms);
+        num("p50_ms", self.p50_ms);
+        num("p90_ms", self.p90_ms);
+        num("p99_ms", self.p99_ms);
+        num("max_ms", self.max_ms);
+        Json::Obj(m)
+    }
+}
+
+impl std::fmt::Display for LoadgenReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "sent={} ok={} shed={} ({:.1}%) deadline={} http_err={} client_err={}",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.deadline,
+            self.http_errors,
+            self.client_errors
+        )?;
+        if let Some(q) = self.offered_qps {
+            writeln!(f, "offered {:.1} req/s (open loop)", q)?;
+        }
+        writeln!(
+            f,
+            "wall {:.2}s -> {:.1} req/s ok; latency mean={:.3}ms p50={:.3}ms p90={:.3}ms \
+             p99={:.3}ms max={:.3}ms",
+            self.wall_s, self.achieved_rps, self.mean_ms, self.p50_ms, self.p90_ms,
+            self.p99_ms, self.max_ms
+        )?;
+        write!(f, "{}", self.histogram.render())
+    }
+}
+
+/// Per-worker tally, merged after the join.
+#[derive(Debug, Default)]
+struct WorkerTally {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    deadline: u64,
+    http_errors: u64,
+    client_errors: u64,
+    latencies_us: Vec<u64>,
+    histogram: LatencyHistogram,
+}
+
+/// Probe `/healthz` for the served model's shape.
+fn probe_shape(addr: &str, timeout: Duration) -> Result<(usize, usize)> {
+    let mut probe = HttpClient::connect(addr, timeout)?;
+    let resp = probe.get("/healthz").context("probing /healthz")?;
+    if resp.status != 200 {
+        bail!("/healthz answered {} — server unhealthy", resp.status);
+    }
+    let j = resp.json()?;
+    let elems = j
+        .get("input_elems_per_image")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("/healthz reports no input_elems_per_image"))?;
+    let classes = j
+        .get("num_classes")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    Ok((elems, classes))
+}
+
+/// Build the (reused) request body for one worker: synthetic normal
+/// pixels, compact JSON.
+fn request_body(elems: usize, batch: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let image = |rng: &mut Rng| {
+        Json::Arr((0..elems).map(|_| Json::Num(rng.normal() as f64)).collect())
+    };
+    let mut m = std::collections::BTreeMap::new();
+    if batch <= 1 {
+        m.insert("image".to_string(), image(&mut rng));
+    } else {
+        m.insert(
+            "images".to_string(),
+            Json::Arr((0..batch).map(|_| image(&mut rng)).collect()),
+        );
+    }
+    Json::Obj(m).to_string().into_bytes()
+}
+
+/// Drive one load-generation run to completion.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.concurrency == 0 || cfg.requests == 0 {
+        bail!("loadgen needs concurrency >= 1 and requests >= 1");
+    }
+    if let LoadMode::Open { qps } = cfg.mode {
+        if !qps.is_finite() || qps <= 0.0 {
+            bail!("open-loop load needs a finite --qps > 0");
+        }
+    }
+    let (elems, _classes) = probe_shape(&cfg.addr, cfg.timeout)?;
+    let path = if cfg.batch <= 1 { "/v1/infer" } else { "/v1/infer_batch" };
+
+    let workers = cfg.concurrency.min(cfg.requests);
+    let start = Instant::now();
+    let tallies = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(move || -> Result<WorkerTally> {
+                let body = request_body(elems, cfg.batch, cfg.seed.wrapping_add(w as u64));
+                let mut client = HttpClient::connect(&cfg.addr, cfg.timeout)?;
+                let mut tally = WorkerTally::default();
+                // Worker w owns global request indices w, w+C, w+2C, ...
+                let mut k = w;
+                while k < cfg.requests {
+                    let anchor = match cfg.mode {
+                        LoadMode::Closed => Instant::now(),
+                        LoadMode::Open { qps } => {
+                            let scheduled =
+                                start + Duration::from_secs_f64(k as f64 / qps);
+                            let now = Instant::now();
+                            if scheduled > now {
+                                std::thread::sleep(scheduled - now);
+                            }
+                            // Measure from the schedule, not from the
+                            // (possibly late) actual send.
+                            scheduled
+                        }
+                    };
+                    tally.sent += 1;
+                    match client.post(path, &body) {
+                        Ok(resp) => {
+                            let us = anchor.elapsed().as_micros() as u64;
+                            match resp.status {
+                                200..=299 => {
+                                    tally.ok += 1;
+                                    tally.latencies_us.push(us);
+                                    tally.histogram.record(us);
+                                }
+                                429 => tally.shed += 1,
+                                504 => tally.deadline += 1,
+                                _ => tally.http_errors += 1,
+                            }
+                        }
+                        Err(_) => tally.client_errors += 1,
+                    }
+                    k += workers;
+                }
+                Ok(tally)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("loadgen worker panicked"))))
+            .collect::<Vec<_>>()
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+
+    let mut merged = WorkerTally::default();
+    for t in tallies {
+        let t = t?;
+        merged.sent += t.sent;
+        merged.ok += t.ok;
+        merged.shed += t.shed;
+        merged.deadline += t.deadline;
+        merged.http_errors += t.http_errors;
+        merged.client_errors += t.client_errors;
+        merged.latencies_us.extend_from_slice(&t.latencies_us);
+        merged.histogram.merge(&t.histogram);
+    }
+    merged.latencies_us.sort_unstable();
+    let n = merged.latencies_us.len();
+    let pct = |p: f64| -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let idx = ((n as f64 - 1.0) * p).round() as usize;
+        merged.latencies_us[idx.min(n - 1)] as f64 / 1e3
+    };
+    Ok(LoadgenReport {
+        sent: merged.sent,
+        ok: merged.ok,
+        shed: merged.shed,
+        deadline: merged.deadline,
+        http_errors: merged.http_errors,
+        client_errors: merged.client_errors,
+        wall_s,
+        achieved_rps: if wall_s > 0.0 { merged.ok as f64 / wall_s } else { 0.0 },
+        offered_qps: match cfg.mode {
+            LoadMode::Open { qps } => Some(qps),
+            LoadMode::Closed => None,
+        },
+        mean_ms: if n == 0 {
+            0.0
+        } else {
+            merged.latencies_us.iter().sum::<u64>() as f64 / n as f64 / 1e3
+        },
+        p50_ms: pct(0.50),
+        p90_ms: pct(0.90),
+        p99_ms: pct(0.99),
+        max_ms: merged.latencies_us.last().copied().unwrap_or(0) as f64 / 1e3,
+        histogram: merged.histogram,
+    })
+}

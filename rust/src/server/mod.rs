@@ -1,0 +1,36 @@
+//! Network serving edge (L3's front door): HTTP/1.1 in front of the
+//! replicated [`BackendPool`](crate::coordinator::BackendPool).
+//!
+//! ```text
+//!  clients --TCP--> server::http (listener, keep-alive workers,
+//!      |            bounded bodies, shutdown drain)
+//!      |                |  HttpRequest
+//!      |                v
+//!      |            server::routes (JSON <-> pool, error mapping,
+//!      |            /healthz, /metrics Prometheus exposition)
+//!      |                |  submit / infer_deadline
+//!      |                v
+//!      |            coordinator::BackendPool (admission, dispatch,
+//!      |            batching, replicas)
+//!      |
+//!  server::loadgen (open/closed-loop client, the measurement side)
+//! ```
+//!
+//! Everything is `std`-only — the crate's `anyhow`-only dependency
+//! policy holds on the network edge too. The module splits three ways:
+//!
+//! * [`http`] — transport: parsing, framing bounds, keep-alive,
+//!   per-connection workers, graceful shutdown;
+//! * [`routes`] — semantics: the `/v1/*` JSON API, typed-error ->
+//!   status-code mapping (429 shed, 504 deadline, 503 dead engines),
+//!   health and Prometheus metrics;
+//! * [`loadgen`] — the client: an open-/closed-loop load generator
+//!   (and the reusable [`loadgen::HttpClient`]) driving that API.
+
+pub mod http;
+pub mod loadgen;
+pub mod routes;
+
+pub use http::{HttpConfig, HttpRequest, HttpResponse, HttpServer};
+pub use loadgen::{HttpClient, LoadMode, LoadgenConfig, LoadgenReport};
+pub use routes::{route, AppState, HttpCounters};

@@ -1,0 +1,475 @@
+//! Routing layer of the serving edge: JSON request/response bodies over
+//! the replicated [`BackendPool`], plus health and Prometheus metrics.
+//!
+//! Routes:
+//!
+//! | method | path              | purpose                                   |
+//! |--------|-------------------|-------------------------------------------|
+//! | POST   | `/v1/infer`       | one image -> logits + argmax + metadata   |
+//! | POST   | `/v1/infer_batch` | N images, pipelined through the batcher   |
+//! | GET    | `/healthz`        | liveness + model shape (loadgen probes it)|
+//! | GET    | `/metrics`        | Prometheus text exposition                |
+//!
+//! Error mapping (the typed pool errors become status codes here):
+//!
+//! | condition                                  | status                     |
+//! |--------------------------------------------|----------------------------|
+//! | malformed JSON / wrong shape / bad types   | 400                        |
+//! | admission shed ([`Overloaded`])            | 429 + `Retry-After`        |
+//! | unknown path / wrong method                | 404 / 405                  |
+//! | all replicas dead, engine gone             | 503                        |
+//! | per-request deadline ([`DeadlineExceeded`])| 504                        |
+//!
+//! Transport-level rejections (408/411/413/431/505) are produced below
+//! this layer in `server::http` and do not pass through these counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::coordinator::{BackendPool, DeadlineExceeded, InferenceResponse, Overloaded};
+use crate::util::json::Json;
+
+use super::http::{HttpRequest, HttpResponse};
+
+/// Monotonic request/response counters of the HTTP edge, exported on
+/// `/metrics`. Relaxed ordering throughout: these are statistics, not
+/// synchronization.
+#[derive(Debug, Default)]
+pub struct HttpCounters {
+    pub requests_total: AtomicU64,
+    pub infer_total: AtomicU64,
+    pub infer_batch_total: AtomicU64,
+    pub healthz_total: AtomicU64,
+    pub metrics_total: AtomicU64,
+    pub status_2xx: AtomicU64,
+    pub status_4xx: AtomicU64,
+    pub status_5xx: AtomicU64,
+    /// 429 responses (a subset of `status_4xx`).
+    pub shed_total: AtomicU64,
+    /// 504 responses (a subset of `status_5xx`).
+    pub deadline_total: AtomicU64,
+}
+
+/// Everything a request handler needs: the pool plus edge policy.
+/// Shared across connection workers behind an `Arc`.
+pub struct AppState {
+    pub pool: BackendPool,
+    /// Per-request deadline applied at this edge (`--request-timeout-ms`);
+    /// `None` waits forever.
+    pub request_timeout: Option<std::time::Duration>,
+    pub counters: HttpCounters,
+    started: Instant,
+}
+
+impl AppState {
+    pub fn new(pool: BackendPool, request_timeout: Option<std::time::Duration>) -> AppState {
+        AppState {
+            pool,
+            request_timeout,
+            counters: HttpCounters::default(),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// Dispatch one parsed request. This is the handler `HttpServer` runs on
+/// every connection worker thread.
+pub fn route(state: &AppState, req: &HttpRequest) -> HttpResponse {
+    let c = &state.counters;
+    c.requests_total.fetch_add(1, Ordering::Relaxed);
+    let resp = match (req.method.as_str(), req.path()) {
+        ("POST", "/v1/infer") => {
+            c.infer_total.fetch_add(1, Ordering::Relaxed);
+            infer_one(state, req)
+        }
+        ("POST", "/v1/infer_batch") => {
+            c.infer_batch_total.fetch_add(1, Ordering::Relaxed);
+            infer_batch(state, req)
+        }
+        ("GET", "/healthz") => {
+            c.healthz_total.fetch_add(1, Ordering::Relaxed);
+            healthz(state)
+        }
+        ("GET", "/metrics") => {
+            c.metrics_total.fetch_add(1, Ordering::Relaxed);
+            metrics(state)
+        }
+        (_, "/v1/infer" | "/v1/infer_batch" | "/healthz" | "/metrics") => {
+            error_response(405, "method not allowed for this path")
+        }
+        _ => error_response(404, "no such route"),
+    };
+    match resp.status {
+        200..=299 => c.status_2xx.fetch_add(1, Ordering::Relaxed),
+        429 => {
+            c.shed_total.fetch_add(1, Ordering::Relaxed);
+            c.status_4xx.fetch_add(1, Ordering::Relaxed)
+        }
+        400..=499 => c.status_4xx.fetch_add(1, Ordering::Relaxed),
+        504 => {
+            c.deadline_total.fetch_add(1, Ordering::Relaxed);
+            c.status_5xx.fetch_add(1, Ordering::Relaxed)
+        }
+        _ => c.status_5xx.fetch_add(1, Ordering::Relaxed),
+    };
+    resp
+}
+
+fn json_response(status: u16, j: &Json) -> HttpResponse {
+    // Compact (`Display`) serialization: the wire pays no pretty-print
+    // whitespace.
+    HttpResponse::new(status, j.to_string().into_bytes())
+}
+
+fn error_response(status: u16, msg: &str) -> HttpResponse {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    json_response(status, &Json::Obj(m))
+}
+
+/// Map a failed pool inference to a status + body. Typed errors first
+/// (shed, deadline); anything else means the engine side is unhealthy.
+fn pool_error_response(state: &AppState, err: &anyhow::Error) -> HttpResponse {
+    if let Some(o) = err.downcast_ref::<Overloaded>() {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".into(), Json::Str("pool overloaded; retry later".into()));
+        m.insert("queue_depth".into(), Json::Num(o.queue_depth as f64));
+        m.insert("queue_capacity".into(), Json::Num(o.capacity as f64));
+        return json_response(429, &Json::Obj(m)).with_header("Retry-After", "1");
+    }
+    if err.downcast_ref::<DeadlineExceeded>().is_some() {
+        let waited_ms = state
+            .request_timeout
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".into(), Json::Str("request deadline exceeded".into()));
+        m.insert("deadline_ms".into(), Json::Num(waited_ms));
+        return json_response(504, &Json::Obj(m));
+    }
+    error_response(503, &format!("inference unavailable: {:#}", err))
+}
+
+fn parse_json_body(req: &HttpRequest) -> Result<Json, HttpResponse> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| error_response(400, "body is not valid UTF-8"))?;
+    Json::parse(text).map_err(|e| error_response(400, &format!("malformed JSON: {}", e)))
+}
+
+/// Extract one image (a JSON array of numbers) and validate its length
+/// against the pool's model shape.
+fn image_from(state: &AppState, j: &Json, what: &str) -> Result<Vec<f32>, HttpResponse> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| error_response(400, &format!("{} must be an array of numbers", what)))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        match v.as_f64() {
+            Some(x) => out.push(x as f32),
+            None => {
+                return Err(error_response(
+                    400,
+                    &format!("{} must contain only numbers", what),
+                ))
+            }
+        }
+    }
+    let want = state.pool.input_elems_per_image;
+    if out.len() != want {
+        return Err(error_response(
+            400,
+            &format!("{} must hold {} values, got {}", what, want, out.len()),
+        ));
+    }
+    Ok(out)
+}
+
+/// One response object: logits, argmax, queue/latency metadata.
+/// `queue_depth` is sampled once by the caller (one snapshot per HTTP
+/// request, shared by every item of a batch).
+fn response_json(resp: &InferenceResponse, queue_depth: usize) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("predicted_class".into(), Json::Num(resp.predicted_class as f64));
+    m.insert(
+        "logits".into(),
+        Json::Arr(resp.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    m.insert("latency_ms".into(), Json::Num(resp.latency.as_secs_f64() * 1e3));
+    m.insert("batch_size".into(), Json::Num(resp.batch_size as f64));
+    m.insert("queue_depth".into(), Json::Num(queue_depth as f64));
+    Json::Obj(m)
+}
+
+fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let image_json = match body.get("image") {
+        Some(j) => j,
+        None => return error_response(400, "missing \"image\" field"),
+    };
+    let image = match image_from(state, image_json, "\"image\"") {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    match state.pool.infer_deadline(image, state.request_timeout) {
+        Ok(resp) => {
+            let depth = state.pool.stats().queue_depth;
+            json_response(200, &response_json(&resp, depth))
+        }
+        Err(e) => pool_error_response(state, &e),
+    }
+}
+
+fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let images_json = match body.get("images").and_then(|j| j.as_arr()) {
+        Some(a) if !a.is_empty() => a,
+        Some(_) => return error_response(400, "\"images\" must not be empty"),
+        None => return error_response(400, "missing \"images\" array"),
+    };
+    let mut images = Vec::with_capacity(images_json.len());
+    for (i, j) in images_json.iter().enumerate() {
+        match image_from(state, j, &format!("images[{}]", i)) {
+            Ok(v) => images.push(v),
+            Err(resp) => return resp,
+        }
+    }
+    // Submit everything before collecting anything: the requests land in
+    // the replicas' batchers together, so a batch-capable backend sees
+    // them as one dispatch instead of N serialized singletons.
+    let mut rxs = Vec::with_capacity(images.len());
+    for image in images {
+        match state.pool.submit(image) {
+            Ok(rx) => rxs.push(rx),
+            // All-or-nothing shed: answering 429 for the whole request
+            // keeps retry semantics simple. Receivers already submitted
+            // are dropped; the engine completes them and releases their
+            // admission slots.
+            Err(e) => return pool_error_response(state, &e),
+        }
+    }
+    // One deadline for the whole batch, shared across the collects, and
+    // one queue-depth snapshot shared by every item's metadata.
+    let deadline = state.request_timeout.map(|d| Instant::now() + d);
+    let queue_depth = state.pool.stats().queue_depth;
+    let mut results = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        let received = match deadline {
+            None => rx.recv().map_err(anyhow::Error::new).and_then(|r| r),
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(r) => r,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(anyhow::Error::new(
+                        DeadlineExceeded { waited: state.request_timeout.unwrap_or_default() },
+                    )),
+                    Err(e) => Err(anyhow::Error::new(e)),
+                }
+            }
+        };
+        match received {
+            Ok(resp) => results.push(response_json(&resp, queue_depth)),
+            Err(e) => return pool_error_response(state, &e),
+        }
+    }
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("count".into(), Json::Num(results.len() as f64));
+    m.insert("results".into(), Json::Arr(results));
+    json_response(200, &Json::Obj(m))
+}
+
+fn healthz(state: &AppState) -> HttpResponse {
+    let replicas = state.pool.replicas();
+    let dead = state.pool.metrics().map(|m| m.dead_replicas).unwrap_or(replicas);
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "status".into(),
+        Json::Str(if dead >= replicas { "dead" } else { "ok" }.into()),
+    );
+    m.insert("backend".into(), Json::Str(state.pool.backend_name.clone()));
+    m.insert("replicas".into(), Json::Num(replicas as f64));
+    m.insert("dead_replicas".into(), Json::Num(dead as f64));
+    m.insert(
+        "input_elems_per_image".into(),
+        Json::Num(state.pool.input_elems_per_image as f64),
+    );
+    m.insert("num_classes".into(), Json::Num(state.pool.num_classes as f64));
+    m.insert("batch_capacity".into(), Json::Num(state.pool.batch_capacity as f64));
+    m.insert(
+        "uptime_s".into(),
+        Json::Num(state.started.elapsed().as_secs_f64()),
+    );
+    let status = if dead >= replicas { 503 } else { 200 };
+    json_response(status, &Json::Obj(m))
+}
+
+/// One unlabelled Prometheus sample with its HELP/TYPE preamble.
+fn prom_scalar(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
+    out.push_str(&format!(
+        "# HELP {n} {h}\n# TYPE {n} {k}\n{n} {v}\n",
+        n = name,
+        h = help,
+        k = kind,
+        v = value
+    ));
+}
+
+/// Prometheus text exposition (format 0.0.4) rendered from
+/// `PoolMetricsReport` + `PoolStats` + the HTTP edge counters.
+fn metrics(state: &AppState) -> HttpResponse {
+    let stats = state.pool.stats();
+    let report = state.pool.metrics().ok();
+    let c = &state.counters;
+    let mut out = String::with_capacity(2048);
+
+    prom_scalar(
+        &mut out,
+        "vitfpga_uptime_seconds",
+        "gauge",
+        "Seconds since the serving edge started.",
+        state.started.elapsed().as_secs_f64(),
+    );
+    prom_scalar(
+        &mut out,
+        "vitfpga_pool_queue_depth",
+        "gauge",
+        "Admitted-but-unanswered requests right now.",
+        stats.queue_depth as f64,
+    );
+    prom_scalar(
+        &mut out,
+        "vitfpga_pool_queue_capacity",
+        "gauge",
+        "Hard bound on admitted in-flight requests.",
+        stats.queue_capacity as f64,
+    );
+    prom_scalar(
+        &mut out,
+        "vitfpga_pool_shed_total",
+        "counter",
+        "Submits rejected with Overloaded since start.",
+        stats.shed_count as f64,
+    );
+
+    if let Some(r) = &report {
+        prom_scalar(
+            &mut out,
+            "vitfpga_pool_requests_total",
+            "counter",
+            "Requests answered by the pool.",
+            r.pool.requests as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "vitfpga_pool_batches_total",
+            "counter",
+            "Batches dispatched across all replicas.",
+            r.pool.batches as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "vitfpga_pool_mean_batch_occupancy",
+            "gauge",
+            "Mean requests per dispatched batch.",
+            r.pool.mean_batch_occupancy,
+        );
+        prom_scalar(
+            &mut out,
+            "vitfpga_pool_dead_replicas",
+            "gauge",
+            "Replicas whose engine no longer answers.",
+            r.dead_replicas as f64,
+        );
+        out.push_str(
+            "# HELP vitfpga_pool_latency_ms Request latency (queue+batch+execute), pooled \
+             across replicas.\n# TYPE vitfpga_pool_latency_ms summary\n",
+        );
+        for (q, v) in [(0.5, r.pool.p50_ms), (0.95, r.pool.p95_ms), (0.99, r.pool.p99_ms)] {
+            out.push_str(&format!(
+                "vitfpga_pool_latency_ms{{quantile=\"{}\"}} {}\n",
+                q, v
+            ));
+        }
+        out.push_str(&format!("vitfpga_pool_latency_ms_sum {}\n", r.pool.sum_ms));
+        out.push_str(&format!("vitfpga_pool_latency_ms_count {}\n", r.pool.requests));
+        out.push_str(
+            "# HELP vitfpga_pool_replica_requests_total Requests answered per replica.\n\
+             # TYPE vitfpga_pool_replica_requests_total counter\n",
+        );
+        for (i, rep) in r.per_replica.iter().enumerate() {
+            out.push_str(&format!(
+                "vitfpga_pool_replica_requests_total{{replica=\"{}\"}} {}\n",
+                i, rep.requests
+            ));
+        }
+    }
+    out.push_str(
+        "# HELP vitfpga_pool_replica_inflight In-flight requests per replica (dispatch \
+         gauge).\n# TYPE vitfpga_pool_replica_inflight gauge\n",
+    );
+    for (i, n) in stats.per_replica_inflight.iter().enumerate() {
+        out.push_str(&format!(
+            "vitfpga_pool_replica_inflight{{replica=\"{}\"}} {}\n",
+            i, n
+        ));
+    }
+
+    prom_scalar(
+        &mut out,
+        "vitfpga_http_requests_total",
+        "counter",
+        "HTTP requests routed (parse-level rejects excluded).",
+        c.requests_total.load(Ordering::Relaxed) as f64,
+    );
+    out.push_str(
+        "# HELP vitfpga_http_route_requests_total HTTP requests per route.\n\
+         # TYPE vitfpga_http_route_requests_total counter\n",
+    );
+    for (route, n) in [
+        ("infer", c.infer_total.load(Ordering::Relaxed)),
+        ("infer_batch", c.infer_batch_total.load(Ordering::Relaxed)),
+        ("healthz", c.healthz_total.load(Ordering::Relaxed)),
+        ("metrics", c.metrics_total.load(Ordering::Relaxed)),
+    ] {
+        out.push_str(&format!(
+            "vitfpga_http_route_requests_total{{route=\"{}\"}} {}\n",
+            route, n
+        ));
+    }
+    out.push_str(
+        "# HELP vitfpga_http_responses_total HTTP responses by status class.\n\
+         # TYPE vitfpga_http_responses_total counter\n",
+    );
+    for (class, n) in [
+        ("2xx", c.status_2xx.load(Ordering::Relaxed)),
+        ("4xx", c.status_4xx.load(Ordering::Relaxed)),
+        ("5xx", c.status_5xx.load(Ordering::Relaxed)),
+    ] {
+        out.push_str(&format!(
+            "vitfpga_http_responses_total{{class=\"{}\"}} {}\n",
+            class, n
+        ));
+    }
+    prom_scalar(
+        &mut out,
+        "vitfpga_http_shed_total",
+        "counter",
+        "429 responses (admission shed mapped to HTTP).",
+        c.shed_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_scalar(
+        &mut out,
+        "vitfpga_http_deadline_total",
+        "counter",
+        "504 responses (per-request deadline exceeded).",
+        c.deadline_total.load(Ordering::Relaxed) as f64,
+    );
+
+    HttpResponse::new(200, out.into_bytes())
+        .with_header("Content-Type", "text/plain; version=0.0.4")
+}

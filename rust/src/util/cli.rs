@@ -63,6 +63,14 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Millisecond option as an optional `Duration`: `--key 0` (or a
+    /// zero default) means "disabled" and returns `None`. The
+    /// convention used by `--request-timeout-ms` and friends.
+    pub fn get_ms_opt(&self, key: &str, default_ms: u64) -> Option<std::time::Duration> {
+        let ms = self.get_usize(key, default_ms as usize) as u64;
+        (ms > 0).then(|| std::time::Duration::from_millis(ms))
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +104,20 @@ mod tests {
         let a = parse("cmd");
         assert_eq!(a.get_or("x", "d"), "d");
         assert_eq!(a.get_f64("r", 0.5), 0.5);
+    }
+
+    #[test]
+    fn ms_option_zero_disables() {
+        let a = parse("serve --request-timeout-ms 250 --other-ms 0");
+        assert_eq!(
+            a.get_ms_opt("request-timeout-ms", 0),
+            Some(std::time::Duration::from_millis(250))
+        );
+        assert_eq!(a.get_ms_opt("other-ms", 1000), None, "explicit 0 disables");
+        assert_eq!(a.get_ms_opt("absent-ms", 0), None, "zero default disables");
+        assert_eq!(
+            a.get_ms_opt("absent-ms", 30_000),
+            Some(std::time::Duration::from_secs(30))
+        );
     }
 }

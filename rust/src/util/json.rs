@@ -112,6 +112,14 @@ impl Json {
         out
     }
 
+    /// Compact serialization: no newlines, no indentation, no spaces
+    /// after `,` or `:`. This is the wire format — `to_string()` (via
+    /// `Display`) is what the HTTP server and load-generator put on the
+    /// network, where pretty-print whitespace is pure overhead.
+    fn write_compact(&self, out: &mut String) {
+        self.write(out, 0, false)
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -165,6 +173,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact (wire-format) serialization; `Json::to_string()` comes from
+/// the blanket `ToString`. Use [`Json::to_string_pretty`] for humans.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -392,5 +410,64 @@ mod tests {
     fn unicode_string() {
         let j = Json::parse("\"héllo \\u00e9\"").unwrap();
         assert_eq!(j.as_str().unwrap(), "héllo é");
+    }
+
+    #[test]
+    fn compact_has_no_interstitial_whitespace() {
+        let src = r#"{"a": [1, 2.5, true, null], "b": {"c": "x y"}, "d": "s"}"#;
+        let j = Json::parse(src).unwrap();
+        let compact = j.to_string();
+        assert_eq!(
+            compact,
+            r#"{"a":[1,2.5,true,null],"b":{"c":"x y"},"d":"s"}"#,
+            "compact output must drop every byte of pretty-print whitespace"
+        );
+        assert!(compact.len() < j.to_string_pretty().len());
+        assert_eq!(Json::parse(&compact).unwrap(), j, "compact form must re-parse identically");
+    }
+
+    #[test]
+    fn string_escapes_round_trip_compact_and_pretty() {
+        // Every escape class the writer can emit: quote, backslash, the
+        // named escapes, a raw \u-range control char, multi-byte UTF-8.
+        let cases = [
+            "plain",
+            "with \"quotes\" inside",
+            "back\\slash and \\\" mix",
+            "newline\nand\ttab\rand cr",
+            "control \u{1} \u{1f} chars",
+            "unicode: héllo → 世界",
+            "trailing backslash \\",
+            "", // empty string
+        ];
+        for s in cases {
+            let j = Json::Str(s.to_string());
+            for wire in [j.to_string(), j.to_string_pretty()] {
+                let back = Json::parse(&wire)
+                    .unwrap_or_else(|e| panic!("re-parse of {:?} failed: {}", wire, e));
+                assert_eq!(back.as_str(), Some(s), "escape round-trip through {:?}", wire);
+            }
+        }
+    }
+
+    #[test]
+    fn escaped_keys_round_trip() {
+        let mut m = BTreeMap::new();
+        m.insert("key with \"quote\" and \\".to_string(), Json::Num(1.0));
+        m.insert("tab\tkey".to_string(), Json::Bool(false));
+        let j = Json::Obj(m);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn parsed_escapes_survive_rewrite() {
+        // Parser-side escapes (\/ \b \f \uXXXX) re-serialize to an
+        // equivalent document even though the writer uses different
+        // (raw or named) spellings.
+        let j = Json::parse(r#""a\/b \b \f \u0041 \u00e9""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a/b \u{8} \u{c} A é");
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
     }
 }

@@ -1,0 +1,476 @@
+//! Integration battery for the HTTP serving edge, driven over real
+//! loopback sockets: response parity with direct `BackendPool::infer`,
+//! typed-error -> status-code mapping (429 shed with `Retry-After`,
+//! 504 deadline), malformed/oversized body rejection, Prometheus
+//! scrape well-formedness with advancing counters, keep-alive reuse,
+//! and graceful drain-on-shutdown. Runs with the default feature set —
+//! no artifacts, no XLA toolchain, no non-std dependencies.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use vitfpga::backend::{Backend, NativeBackend};
+use vitfpga::config::{PruningSetting, TEST_TINY};
+use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
+use vitfpga::funcsim::Precision;
+use vitfpga::server::{route, AppState, HttpClient, HttpConfig, HttpRequest, HttpServer};
+use vitfpga::util::json::Json;
+use vitfpga::util::rng::Rng;
+
+const SEED: u64 = 42;
+
+/// Deterministic instant backend: logits[j] = image[0] + j.
+struct EchoBackend;
+
+impl Backend for EchoBackend {
+    fn name(&self) -> &str {
+        "echo"
+    }
+    fn batch_capacity(&self) -> usize {
+        8
+    }
+    fn num_classes(&self) -> usize {
+        4
+    }
+    fn input_elems_per_image(&self) -> usize {
+        2
+    }
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        for i in 0..batch {
+            for j in 0..4 {
+                out[i * 4 + j] = flat[i * 2] + j as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Echo with a per-batch delay — widens in-flight windows so shed,
+/// deadline and drain behaviour are deterministic.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn batch_capacity(&self) -> usize {
+        8
+    }
+    fn num_classes(&self) -> usize {
+        4
+    }
+    fn input_elems_per_image(&self) -> usize {
+        2
+    }
+    fn infer_batch_into(&mut self, flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        std::thread::sleep(self.delay);
+        for i in 0..batch {
+            for j in 0..4 {
+                out[i * 4 + j] = flat[i * 2] + j as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn batch_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }
+}
+
+fn native_pool(replicas: usize) -> BackendPool {
+    BackendPool::start(
+        |_i| NativeBackend::synthetic(&TEST_TINY, &PruningSetting::new(8, 0.7, 0.7), SEED, Precision::F32),
+        PoolPolicy { replicas, batch: batch_policy(), queue_capacity: 64 },
+    )
+    .expect("native pool start")
+}
+
+/// Boot a server on an ephemeral loopback port over `pool`.
+fn serve(
+    pool: BackendPool,
+    timeout: Option<Duration>,
+    config: HttpConfig,
+) -> (HttpServer, Arc<AppState>) {
+    let state = Arc::new(AppState::new(pool, timeout));
+    let handler_state = Arc::clone(&state);
+    let server = HttpServer::start("127.0.0.1:0", config, move |req: &HttpRequest| {
+        route(&handler_state, req)
+    })
+    .expect("http server start");
+    (server, state)
+}
+
+fn client_for(server: &HttpServer) -> HttpClient {
+    HttpClient::connect(&server.local_addr().to_string(), Duration::from_secs(10))
+        .expect("client connect")
+}
+
+fn image_body(img: &[f32]) -> Vec<u8> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "image".to_string(),
+        Json::Arr(img.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(m).to_string().into_bytes()
+}
+
+fn images_body(imgs: &[Vec<f32>]) -> Vec<u8> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "images".to_string(),
+        Json::Arr(
+            imgs.iter()
+                .map(|img| Json::Arr(img.iter().map(|&v| Json::Num(v as f64)).collect()))
+                .collect(),
+        ),
+    );
+    Json::Obj(m).to_string().into_bytes()
+}
+
+fn logits_of(j: &Json) -> Vec<f32> {
+    j.get("logits")
+        .and_then(|l| l.as_arr())
+        .expect("response carries logits")
+        .iter()
+        .map(|v| v.as_f64().expect("logit is a number") as f32)
+        .collect()
+}
+
+fn synthetic_images(n: usize, per: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..per).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+
+#[test]
+fn infer_parity_with_direct_pool() {
+    // The same pool answers over HTTP and in-process; logits must match
+    // bit-for-bit (f32 -> JSON f64 shortest-repr -> f32 is lossless).
+    let (server, state) = serve(native_pool(1), None, HttpConfig::default());
+    let per = state.pool.input_elems_per_image;
+    let mut client = client_for(&server);
+    for (i, img) in synthetic_images(3, per, 7).into_iter().enumerate() {
+        let resp = client
+            .post("/v1/infer", &image_body(&img))
+            .expect("http infer");
+        assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+        let j = resp.json().expect("response is JSON");
+        let want = state.pool.infer(img).expect("direct pool infer");
+        assert_eq!(logits_of(&j), want.logits, "image {}: HTTP logits != pool logits", i);
+        assert_eq!(
+            j.get("predicted_class").and_then(|v| v.as_usize()),
+            Some(want.predicted_class),
+            "image {}: argmax mismatch",
+            i
+        );
+        // Queue/latency metadata is present and sane.
+        assert!(j.get("latency_ms").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 0.0);
+        assert!(j.get("batch_size").and_then(|v| v.as_usize()).unwrap_or(0) >= 1);
+        assert!(j.get("queue_depth").and_then(|v| v.as_f64()).is_some());
+    }
+}
+
+#[test]
+fn batch_parity_with_direct_pool() {
+    let (server, state) = serve(native_pool(2), None, HttpConfig::default());
+    let per = state.pool.input_elems_per_image;
+    let imgs = synthetic_images(3, per, 11);
+    let mut client = client_for(&server);
+    let resp = client
+        .post("/v1/infer_batch", &images_body(&imgs))
+        .expect("http infer_batch");
+    assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+    let j = resp.json().expect("response is JSON");
+    assert_eq!(j.get("count").and_then(|v| v.as_usize()), Some(3));
+    let results = j.get("results").and_then(|r| r.as_arr()).expect("results array");
+    assert_eq!(results.len(), 3);
+    for (i, (r, img)) in results.iter().zip(&imgs).enumerate() {
+        let want = state.pool.infer(img.clone()).expect("direct pool infer");
+        assert_eq!(logits_of(r), want.logits, "batch item {} logits mismatch", i);
+    }
+}
+
+#[test]
+fn shed_maps_to_429_with_retry_after() {
+    let pool = BackendPool::start(
+        |_i| Ok(SlowBackend { delay: Duration::from_millis(200) }),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 2 },
+    )
+    .expect("slow pool start");
+    let (server, state) = serve(pool, None, HttpConfig::default());
+    // Fill both admission slots directly at the pool...
+    let a = state.pool.submit(vec![1.0, 0.0]).expect("slot 1");
+    let b = state.pool.submit(vec![2.0, 0.0]).expect("slot 2");
+    // ...then the HTTP request must shed.
+    let mut client = client_for(&server);
+    let resp = client
+        .post("/v1/infer", &image_body(&[3.0, 0.0]))
+        .expect("http exchange");
+    assert_eq!(resp.status, 429);
+    assert_eq!(resp.header("retry-after"), Some("1"), "429 must carry Retry-After");
+    let j = resp.json().expect("shed body is JSON");
+    assert_eq!(j.get("queue_capacity").and_then(|v| v.as_usize()), Some(2));
+    drop(a);
+    drop(b);
+}
+
+#[test]
+fn request_deadline_maps_to_504() {
+    let pool = BackendPool::start(
+        |_i| Ok(SlowBackend { delay: Duration::from_millis(500) }),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("slow pool start");
+    let (server, _state) = serve(pool, Some(Duration::from_millis(30)), HttpConfig::default());
+    let mut client = client_for(&server);
+    let resp = client
+        .post("/v1/infer", &image_body(&[1.0, 0.0]))
+        .expect("http exchange");
+    assert_eq!(resp.status, 504, "30 ms deadline against a 500 ms backend");
+    let batch = client
+        .post("/v1/infer_batch", &images_body(&[vec![1.0, 0.0], vec![2.0, 0.0]]))
+        .expect("http exchange");
+    assert_eq!(batch.status, 504, "batch route honours the deadline too");
+}
+
+#[test]
+fn malformed_bodies_map_to_400() {
+    let pool = BackendPool::start(
+        |_i| Ok(EchoBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("echo pool start");
+    let (server, _state) = serve(pool, None, HttpConfig::default());
+    let mut client = client_for(&server);
+    for (what, body) in [
+        ("unparseable JSON", b"{not json".to_vec()),
+        ("missing image field", b"{\"img\":[1,2]}".to_vec()),
+        ("non-array image", b"{\"image\":3}".to_vec()),
+        ("non-numeric entries", b"{\"image\":[1,\"x\"]}".to_vec()),
+        ("wrong length", image_body(&[1.0, 2.0, 3.0])),
+        ("empty batch", b"{\"images\":[]}".to_vec()),
+    ] {
+        let resp = client.post("/v1/infer", &body).expect("http exchange");
+        // The batch-shaped probe goes to the batch route.
+        let status = if what == "empty batch" {
+            client
+                .post("/v1/infer_batch", &body)
+                .expect("http exchange")
+                .status
+        } else {
+            resp.status
+        };
+        assert_eq!(status, 400, "{} must map to 400", what);
+    }
+    // Routing errors.
+    assert_eq!(client.get("/nope").expect("404 route").status, 404);
+    assert_eq!(client.get("/v1/infer").expect("405 route").status, 405);
+}
+
+#[test]
+fn oversized_body_maps_to_413() {
+    let pool = BackendPool::start(
+        |_i| Ok(EchoBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("echo pool start");
+    let config = HttpConfig { max_body_bytes: 128, ..HttpConfig::default() };
+    let (server, _state) = serve(pool, None, config);
+    let mut client = client_for(&server);
+    let big = image_body(&[0.123456f32; 200]);
+    assert!(big.len() > 128);
+    let resp = client.post("/v1/infer", &big).expect("http exchange");
+    assert_eq!(resp.status, 413, "body over max_body_bytes is rejected before buffering");
+    // The connection was closed by the reject; the client transparently
+    // reconnects and the edge still serves.
+    let ok = client.post("/v1/infer", &image_body(&[1.0, 2.0])).expect("follow-up");
+    assert_eq!(ok.status, 200);
+}
+
+#[test]
+fn chunked_transfer_encoding_maps_to_411() {
+    let pool = BackendPool::start(
+        |_i| Ok(EchoBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("echo pool start");
+    let (server, _state) = serve(pool, None, HttpConfig::default());
+    // Raw socket: the HttpClient never sends chunked bodies.
+    let mut stream = TcpStream::connect(server.local_addr()).expect("raw connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .expect("raw read timeout");
+    stream
+        .write_all(
+            b"POST /v1/infer HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n",
+        )
+        .expect("raw write");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("raw read");
+    assert!(
+        response.starts_with("HTTP/1.1 411 "),
+        "chunked must be rejected with 411, got: {}",
+        response.lines().next().unwrap_or("")
+    );
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let (server, state) = serve(native_pool(1), None, HttpConfig::default());
+    let per = state.pool.input_elems_per_image;
+    let mut client = client_for(&server);
+    let img = synthetic_images(1, per, 3).remove(0);
+    for round in 0..3 {
+        let health = client.get("/healthz").expect("healthz");
+        assert_eq!(health.status, 200, "round {}", round);
+        let resp = client.post("/v1/infer", &image_body(&img)).expect("infer");
+        assert_eq!(resp.status, 200, "round {}", round);
+    }
+    // healthz reports the model shape loadgen needs.
+    let j = client.get("/healthz").expect("healthz").json().expect("json");
+    assert_eq!(j.get("input_elems_per_image").and_then(|v| v.as_usize()), Some(per));
+    assert_eq!(j.get("status").and_then(|v| v.as_str()), Some("ok"));
+}
+
+/// Pull one labelled-or-not sample value out of a Prometheus exposition.
+fn prom_value(text: &str, name_with_labels: &str) -> Option<f64> {
+    text.lines()
+        .find(|l| l.starts_with(name_with_labels) && !l.starts_with('#'))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn metrics_scrape_parses_and_counters_advance() {
+    let (server, state) = serve(native_pool(2), None, HttpConfig::default());
+    let per = state.pool.input_elems_per_image;
+    let mut client = client_for(&server);
+
+    let scrape = |client: &mut HttpClient| -> String {
+        let resp = client.get("/metrics").expect("metrics scrape");
+        assert_eq!(resp.status, 200);
+        assert!(
+            resp.header("content-type").unwrap_or("").starts_with("text/plain"),
+            "Prometheus exposition is text/plain"
+        );
+        String::from_utf8(resp.body.clone()).expect("exposition is UTF-8")
+    };
+
+    let before = scrape(&mut client);
+    // Every sample line is `name[{labels}] value` with a finite value.
+    let mut samples = 0;
+    for line in before.lines().filter(|l| !l.starts_with('#') && !l.trim().is_empty()) {
+        let (name, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(!name.is_empty());
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparseable value: {}", line));
+        assert!(v.is_finite(), "non-finite sample: {}", line);
+        samples += 1;
+    }
+    assert!(samples >= 10, "exposition should carry the full gauge set, got {}", samples);
+
+    let infer_before =
+        prom_value(&before, "vitfpga_http_route_requests_total{route=\"infer\"}").unwrap_or(0.0);
+    let pool_before = prom_value(&before, "vitfpga_pool_requests_total").unwrap_or(0.0);
+
+    let img = synthetic_images(1, per, 5).remove(0);
+    for _ in 0..3 {
+        assert_eq!(client.post("/v1/infer", &image_body(&img)).expect("infer").status, 200);
+    }
+
+    let after = scrape(&mut client);
+    let infer_after =
+        prom_value(&after, "vitfpga_http_route_requests_total{route=\"infer\"}").expect("counter");
+    let pool_after = prom_value(&after, "vitfpga_pool_requests_total").expect("counter");
+    assert_eq!(infer_after, infer_before + 3.0, "HTTP route counter must advance");
+    assert_eq!(pool_after, pool_before + 3.0, "pool request counter must advance");
+    assert!(
+        prom_value(&after, "vitfpga_pool_latency_ms_count").unwrap_or(0.0) >= 3.0,
+        "latency summary count tracks answered requests"
+    );
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_before_socket_closes() {
+    let pool = BackendPool::start(
+        |_i| Ok(SlowBackend { delay: Duration::from_millis(300) }),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("slow pool start");
+    let (mut server, _state) = serve(pool, None, HttpConfig::default());
+    let addr = server.local_addr();
+
+    // A request that will still be executing when shutdown starts.
+    let worker = std::thread::spawn(move || {
+        let mut client =
+            HttpClient::connect(&addr.to_string(), Duration::from_secs(10)).expect("client");
+        client.post("/v1/infer", &image_body(&[5.0, 0.0]))
+    });
+    // Wait until the server has parsed it (it is now in flight).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.in_flight() == 0 {
+        assert!(Instant::now() < deadline, "request never became in-flight");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    server.shutdown();
+
+    // The in-flight request was answered, not reset.
+    let resp = worker.join().expect("client thread").expect("drained response");
+    assert_eq!(resp.status, 200, "in-flight request must complete through the drain");
+    let j = resp.json().expect("drained body is JSON");
+    assert_eq!(logits_of(&j), vec![5.0, 6.0, 7.0, 8.0]);
+
+    // And only after the drain did the socket close.
+    let refused = TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+    assert!(refused.is_err(), "listener must be closed after shutdown");
+}
+
+#[test]
+fn concurrent_keep_alive_clients_all_answered() {
+    // The acceptance-bar smoke: N concurrent keep-alive clients, each
+    // issuing several requests, all answered correctly by the pool.
+    let (server, state) = serve(native_pool(2), None, HttpConfig::default());
+    let per = state.pool.input_elems_per_image;
+    let addr = server.local_addr().to_string();
+    let want = state
+        .pool
+        .infer(synthetic_images(1, per, 21).remove(0))
+        .expect("reference infer")
+        .logits;
+
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            let want = want.clone();
+            std::thread::spawn(move || {
+                let mut client =
+                    HttpClient::connect(&addr, Duration::from_secs(10)).expect("client");
+                // Learn the model shape the way loadgen does.
+                let health = client.get("/healthz").expect("healthz").json().expect("json");
+                let per = health
+                    .get("input_elems_per_image")
+                    .and_then(|v| v.as_usize())
+                    .expect("shape");
+                let img = synthetic_images(1, per, 21).remove(0);
+                for _ in 0..4 {
+                    let resp = client.post("/v1/infer", &image_body(&img)).expect("infer");
+                    assert_eq!(resp.status, 200);
+                    assert_eq!(logits_of(&resp.json().expect("json")), want);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let m = state.pool.metrics().expect("pool metrics");
+    assert!(m.pool.requests >= 24, "all 6x4 HTTP requests reached the pool");
+}
