@@ -1,18 +1,28 @@
-//! Serving example: run the replicated serving pool (least-loaded
-//! dispatcher -> N engine replicas, each router + dynamic batcher +
-//! engine actor) against a synthetic client load and report pool-level
-//! latency percentiles, per-replica occupancy and throughput — the
+//! Serving example: run the model registry (named pruning variants,
+//! each backed by its own replicated pool: least-loaded dispatcher ->
+//! N engine replicas, each router + dynamic batcher + engine actor)
+//! against a synthetic client load and report per-model latency
+//! percentiles, per-replica occupancy and throughput — the
 //! serving-systems view of the paper's load-balanced accelerator.
 //!
-//! Works from a clean checkout: the default `native` backend synthesizes
-//! a structure-honouring pruned model *per replica* and serves it
-//! through the block-sparse SpMM + bitonic-TDHM datapath, batched
-//! across cores.
+//! Works from a clean checkout: the default `native` backend
+//! synthesizes a structure-honouring pruned model *per replica* and
+//! serves it through the block-sparse SpMM + bitonic-TDHM datapath,
+//! batched across cores.
 //!
 //!     cargo run --release --example serve -- \
 //!         --model test-tiny --setting b8_rb0.7_rt0.7 \
 //!         --requests 128 --concurrency 8 --max-batch 8 --max-wait-ms 2 \
 //!         --replicas 4 --queue-capacity 256
+//!
+//! Construction is shared with the `vitfpga serve` CLI
+//! (`registry::from_cli` — the same `Args` conventions, no private
+//! duplicate), so everything that works there works here, including
+//! registry mode with several named variants in one process:
+//!
+//!     cargo run --release --example serve -- \
+//!         --model fast=test-tiny@b8_rb0.5_rt0.5 \
+//!         --model accurate=test-tiny@b8_rb0.7_rt0.9@replicas=2
 //!
 //! `--replicas 1` (the default) is the plain single-coordinator setup.
 //! A tight `--queue-capacity` exercises admission control: overflowing
@@ -24,87 +34,66 @@
 //! thread).
 //!
 //! Add `--http 127.0.0.1:0` to run the same experiment over the wire:
-//! the pool is exposed through the `server` HTTP edge and the clients
-//! become `server::loadgen` workers speaking JSON over keep-alive
-//! connections (add `--qps N` for an open-loop arrival schedule).
+//! the registry is exposed through the `server` HTTP edge and the
+//! clients become `server::loadgen` workers speaking JSON over
+//! keep-alive connections (add `--qps N` for an open-loop arrival
+//! schedule; with several registered models the load becomes an even
+//! `--model-mix` across them).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
-use vitfpga::backend::NativeBackend;
-use vitfpga::coordinator::{BackendPool, BatchPolicy, Overloaded, PoolPolicy};
+use anyhow::Result;
+use vitfpga::coordinator::Overloaded;
+use vitfpga::registry::{self, Registry};
 use vitfpga::util::cli::Args;
 use vitfpga::util::rng::Rng;
-
-fn start(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
-    match args.get_or("backend", "native") {
-        // Shared --variant/--artifacts/--model/--setting/--int16 handling;
-        // the factory runs once per replica, on that replica's thread.
-        "native" => {
-            // The shared factory splits cores across replicas (unless
-            // --threads pins a count) so N engines don't each fan
-            // intra-layer kernels over every core.
-            BackendPool::start(NativeBackend::pool_factory(args, policy.replicas), policy)
-        }
-        #[cfg(feature = "pjrt")]
-        "pjrt" => {
-            let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-            let variant = args
-                .get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4")
-                .to_string();
-            BackendPool::start(
-                move |_i| vitfpga::backend::PjrtBackend::load(&dir, &variant),
-                policy,
-            )
-        }
-        other => bail!("unknown backend '{}' (this build supports: native{})",
-                       other, if cfg!(feature = "pjrt") { ", pjrt" } else { "" }),
-    }
-}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let requests = args.get_usize("requests", 128);
     let concurrency = args.get_usize("concurrency", 8);
-    let policy = PoolPolicy {
-        replicas: args.get_usize("replicas", 1),
-        batch: BatchPolicy {
-            max_batch: args.get_usize("max-batch", 8),
-            max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
-        },
-        queue_capacity: args.get_usize(
-            "queue-capacity",
-            vitfpga::coordinator::pool::DEFAULT_QUEUE_CAPACITY,
-        ),
-    };
+    // The same construction path as `vitfpga serve`: legacy flags build
+    // one "default" model, `--model NAME=SPEC` (repeatable) registers
+    // named variants with per-model pool policy.
+    let reg = registry::from_cli(&args, registry::pool_policy_from_cli(&args))?;
 
     if let Some(addr) = args.get("http") {
-        return serve_over_http(start(&args, policy)?, addr, &args, requests, concurrency);
+        return serve_over_http(reg, addr, &args, requests, concurrency);
     }
 
-    let pool = Arc::new(start(&args, policy)?);
+    let reg = Arc::new(reg);
+    // Resolve each variant's shape once, outside the request loops —
+    // describe() allocates and takes the entry's slot lock.
+    let targets: Vec<(String, usize, usize)> = reg
+        .describe_all()
+        .into_iter()
+        .map(|d| (d.name, d.input_elems_per_image, d.num_classes))
+        .collect();
     println!(
-        "serving {}: {} requests x {} clients, policy max_batch={} max_wait={:?} \
-         queue_capacity={}",
-        pool.backend_name, requests, concurrency, policy.batch.max_batch,
-        policy.batch.max_wait, policy.queue_capacity
+        "serving {} model(s) [{}]: {} requests x {} clients",
+        targets.len(),
+        targets.iter().map(|(n, _, _)| n.as_str()).collect::<Vec<_>>().join(", "),
+        requests,
+        concurrency
     );
 
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..concurrency)
         .map(|c| {
-            let pool = Arc::clone(&pool);
+            let reg = Arc::clone(&reg);
+            let targets = targets.clone();
             std::thread::spawn(move || -> Result<(u64, u64)> {
                 let (mut correct_shape, mut shed) = (0u64, 0u64);
                 for i in 0..requests {
+                    // Clients rotate across the registered variants, so
+                    // every model sees traffic.
+                    let (name, elems, classes) = &targets[(c + i) % targets.len()];
                     let mut rng = Rng::new((c * 31337 + i) as u64);
-                    let img: Vec<f32> = (0..pool.input_elems_per_image)
-                        .map(|_| rng.normal())
-                        .collect();
-                    match pool.infer(img) {
+                    let img: Vec<f32> = (0..*elems).map(|_| rng.normal()).collect();
+                    match reg.infer(Some(name.as_str()), img) {
                         Ok(resp) => {
-                            if resp.logits.len() == pool.num_classes {
+                            if resp.logits.len() == *classes {
                                 correct_shape += 1;
                             }
                         }
@@ -125,12 +114,7 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("{}", pool.metrics()?);
-    let stats = pool.stats();
-    println!(
-        "admission: depth {}/{}, shed {} (gauge) / {} (client-observed)",
-        stats.queue_depth, stats.queue_capacity, stats.shed_count, shed
-    );
+    print_metrics(&reg, shed);
     println!(
         "{} / {} responses well-formed; wall {:.2}s -> {:.1} req/s end-to-end",
         ok,
@@ -141,11 +125,28 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// The `--http` variant: same pool, but clients reach it through the
-/// network edge (HTTP/1.1 + JSON) and the load is generated by
-/// `server::loadgen` instead of in-process `pool.infer` calls.
+fn print_metrics(reg: &Registry, client_shed: u64) {
+    for name in reg.names() {
+        if let Some(pool) = reg.ready_pool(name) {
+            match pool.metrics() {
+                Ok(m) => println!("[{}] {}", name, m),
+                Err(e) => println!("[{}] metrics unavailable: {:#}", name, e),
+            }
+            let stats = pool.stats();
+            println!(
+                "[{}] admission: depth {}/{}, shed {} (gauge) / {} (client-observed, all models)",
+                name, stats.queue_depth, stats.queue_capacity, stats.shed_count, client_shed
+            );
+        }
+    }
+}
+
+/// The `--http` variant: same registry, but clients reach it through
+/// the network edge (HTTP/1.1 + JSON) and the load is generated by
+/// `server::loadgen` instead of in-process `Registry::infer` calls —
+/// an even model mix when several variants are registered.
 fn serve_over_http(
-    pool: BackendPool,
+    reg: Registry,
     addr: &str,
     args: &Args,
     requests: usize,
@@ -153,14 +154,24 @@ fn serve_over_http(
 ) -> Result<()> {
     use vitfpga::server::{loadgen, route, AppState, HttpConfig, HttpServer, LoadMode, LoadgenConfig};
 
-    let state = Arc::new(AppState::new(pool, args.get_ms_opt("request-timeout-ms", 30_000)));
+    // Mixed-model traffic needs named requests; a single model keeps
+    // the unnamed (default-model) wire format.
+    let models: Vec<(String, f64)> = if reg.names().len() > 1 {
+        reg.names().iter().map(|n| (n.clone(), 1.0)).collect()
+    } else {
+        Vec::new()
+    };
+    let state = Arc::new(AppState::with_registry(
+        reg,
+        args.get_ms_opt("request-timeout-ms", 30_000),
+    ));
     let handler_state = Arc::clone(&state);
     let mut server = HttpServer::start(addr, HttpConfig::default(), move |req| {
         route(&handler_state, req)
     })?;
     println!(
-        "pool on the network: {} at http://{}",
-        state.pool.backend_name,
+        "registry on the network: {} model(s) at http://{}",
+        state.registry.names().len(),
         server.local_addr()
     );
 
@@ -175,16 +186,12 @@ fn serve_over_http(
         batch: args.get_usize("batch", 1),
         timeout: Duration::from_secs(30),
         seed: 7,
+        models,
     };
     let report = loadgen::run(&cfg)?;
     println!("{}", report);
 
     server.shutdown();
-    println!("{}", state.pool.metrics()?);
-    let stats = state.pool.stats();
-    println!(
-        "admission: depth {}/{}, shed {} (pool gauge) / {} (HTTP 429s observed)",
-        stats.queue_depth, stats.queue_capacity, stats.shed_count, report.shed
-    );
+    print_metrics(&state.registry, report.shed);
     Ok(())
 }

@@ -623,6 +623,7 @@ fn http_serving_bench() {
                 batch: 1,
                 timeout: Duration::from_secs(30),
                 seed: 7,
+                models: Vec::new(),
             };
             let report = loadgen::run(&cfg).expect("loadgen run");
             println!(

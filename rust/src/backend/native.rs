@@ -81,6 +81,17 @@ impl NativeBackend {
         Ok(Self::new(FuncSim::synthesize(dims, setting, seed, precision)?))
     }
 
+    /// Build from a parsed registry
+    /// [`ModelSpec`](crate::registry::ModelSpec) — the construction
+    /// path behind `serve --model NAME=SPEC`. The backend is named
+    /// after the spec's canonical identity string, so pool/replica
+    /// names read `native:test-tiny@b8_rb0.5_rt0.7` etc.
+    pub fn from_spec(spec: &crate::registry::ModelSpec) -> Result<NativeBackend> {
+        let mut nb = Self::new(FuncSim::synthesize_spec(spec)?);
+        nb.name = format!("native:{}", spec.spec_string());
+        Ok(nb)
+    }
+
     /// Load trained weights + structure from an artifacts directory by
     /// (substring) variant name. Reads only the VITW0001/JSON files —
     /// works without the XLA toolchain or the `pjrt` feature.

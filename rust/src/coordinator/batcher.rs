@@ -108,7 +108,12 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> InferenceRequest {
-        InferenceRequest { id, image: vec![0.0; 4], submitted: Instant::now() }
+        InferenceRequest {
+            id,
+            model: super::super::ModelId::unnamed(),
+            image: vec![0.0; 4],
+            submitted: Instant::now(),
+        }
     }
 
     #[test]
@@ -157,7 +162,12 @@ mod tests {
             max_wait: Duration::from_millis(10),
         });
         for id in 0..3 {
-            b.push(InferenceRequest { id, image: vec![0.0; 4], submitted: arrived });
+            b.push(InferenceRequest {
+                id,
+                model: super::super::ModelId::unnamed(),
+                image: vec![0.0; 4],
+                submitted: arrived,
+            });
         }
         assert_eq!(b.take_batch().len(), 2);
         assert_eq!(b.len(), 1);

@@ -36,7 +36,7 @@ pub use metrics::{Metrics, MetricsReport, MetricsSnapshot};
 pub use pool::{
     BackendPool, DeadlineExceeded, Overloaded, PoolMetricsReport, PoolPolicy, PoolStats,
 };
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{InferenceRequest, InferenceResponse, ModelId};
 
 use crate::backend::Backend;
 
@@ -126,6 +126,9 @@ pub struct Coordinator {
     tx: mpsc::Sender<Msg>,
     next_id: AtomicU64,
     engine_thread: Option<JoinHandle<()>>,
+    /// Registered model name this engine serves; stamped on every
+    /// request/response. `ModelId::unnamed()` outside a registry.
+    pub model: ModelId,
     /// Backend identity, e.g. `native:test-tiny_b8_rb0.7_rt0.7`.
     pub backend_name: String,
     pub input_elems_per_image: usize,
@@ -155,16 +158,18 @@ impl Coordinator {
         B: Backend + 'static,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
-        Self::start_shared(factory, policy, None, "vitfpga-engine")
+        Self::start_shared(factory, policy, None, "vitfpga-engine", ModelId::unnamed())
     }
 
     /// Shared engine bring-up for the standalone coordinator and the
-    /// pool's replicas (`shared` = admission gauges, pool only).
+    /// pool's replicas (`shared` = admission gauges, pool only;
+    /// `model` = the registered name stamped on every request).
     pub(crate) fn start_shared<B, F>(
         factory: F,
         policy: BatchPolicy,
         shared: Option<EngineShared>,
         thread_name: &str,
+        model: ModelId,
     ) -> Result<Coordinator>
     where
         B: Backend + 'static,
@@ -211,6 +216,7 @@ impl Coordinator {
             tx,
             next_id: AtomicU64::new(1),
             engine_thread: Some(engine_thread),
+            model,
             backend_name: name,
             input_elems_per_image: per_image,
             num_classes,
@@ -257,7 +263,7 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         match self.tx.send(Msg::Infer(
-            InferenceRequest { id, image, submitted: Instant::now() },
+            InferenceRequest { id, model: self.model.clone(), image, submitted: Instant::now() },
             rtx,
         )) {
             Ok(()) => Ok(rrx),
@@ -389,8 +395,7 @@ fn engine_loop<B: Backend>(
                 Ok(()) => {
                     for (i, req) in batch_reqs.iter().enumerate() {
                         let slice = logits_buf[i * classes..(i + 1) * classes].to_vec();
-                        let resp = InferenceResponse::from_logits(
-                            req.id, slice, req.submitted, n);
+                        let resp = InferenceResponse::for_request(req, slice, n);
                         metrics.record(resp.latency);
                         slots.complete();
                         respond(&mut pending, req.id, Ok(resp));

@@ -49,7 +49,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::backend::Backend;
 
 use super::metrics::{MetricsReport, MetricsSnapshot};
-use super::request::InferenceResponse;
+use super::request::{InferenceResponse, ModelId};
 use super::{BatchPolicy, Coordinator, EngineShared};
 
 /// Default bound on in-flight requests across the pool. Sized for the
@@ -175,6 +175,10 @@ pub struct BackendPool {
     shed: AtomicU64,
     rr: AtomicUsize,
     queue_capacity: usize,
+    /// Registered model name this pool serves (stamped on every
+    /// request/response by the replicas). `ModelId::unnamed()` for a
+    /// pool started outside a registry.
+    pub model: ModelId,
     /// `<replica 0 backend name> x<N>`.
     pub backend_name: String,
     pub input_elems_per_image: usize,
@@ -190,6 +194,17 @@ impl BackendPool {
     /// [`Coordinator::start_with`], so PJRT replicas work too. All
     /// replicas must expose the same model shape.
     pub fn start<B, F>(factory: F, policy: PoolPolicy) -> Result<BackendPool>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        Self::start_named(ModelId::unnamed(), factory, policy)
+    }
+
+    /// [`BackendPool::start`] under a registered model name: every
+    /// replica stamps `model` on its requests/responses, and the
+    /// registry's metrics label this pool's samples with it.
+    pub fn start_named<B, F>(model: ModelId, factory: F, policy: PoolPolicy) -> Result<BackendPool>
     where
         B: Backend + 'static,
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
@@ -214,6 +229,7 @@ impl BackendPool {
                 policy.batch,
                 Some(shared),
                 &format!("vitfpga-replica-{}", i),
+                model.clone(),
             )?;
             if let Some(first) = replicas.first() {
                 if c.input_elems_per_image != first.input_elems_per_image
@@ -237,6 +253,7 @@ impl BackendPool {
         }
         let first = &replicas[0];
         Ok(BackendPool {
+            model,
             backend_name: format!("{} x{}", first.backend_name, n),
             input_elems_per_image: first.input_elems_per_image,
             num_classes: first.num_classes,

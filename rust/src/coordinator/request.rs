@@ -1,11 +1,61 @@
 //! Request/response types of the serving coordinator.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Name of the model an engine serves, threaded through every request
+/// and response on the serving path. Cheap to clone (shared `Arc<str>`)
+/// so stamping it per request costs a refcount, not an allocation.
+///
+/// Standalone coordinators/pools that never registered under a name use
+/// [`ModelId::unnamed`] (`"default"`) — the same name the registry gives
+/// a single anonymous model, so metrics labels stay stable when a
+/// deployment grows from one model to many.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelId(Arc<str>);
+
+impl ModelId {
+    pub fn new(name: &str) -> ModelId {
+        ModelId(Arc::from(name))
+    }
+
+    /// The id of a model nobody named: `"default"`.
+    pub fn unnamed() -> ModelId {
+        ModelId::new("default")
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Default for ModelId {
+    fn default() -> Self {
+        ModelId::unnamed()
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::ops::Deref for ModelId {
+    type Target = str;
+    fn deref(&self) -> &str {
+        &self.0
+    }
+}
 
 /// One inference request: a single image (H*W*C f32, NHWC row-major).
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
+    /// Which registered model this request targets. Stamped by the
+    /// owning coordinator/pool at submit; the engine copies it onto the
+    /// response so multi-model callers can attribute answers.
+    pub model: ModelId,
     pub image: Vec<f32>,
     /// True arrival time, stamped once at `submit()`. Anchors both the
     /// reported latency and the batcher's dispatch deadline — it is
@@ -17,6 +67,8 @@ pub struct InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// Copied from the request — which model produced these logits.
+    pub model: ModelId,
     pub logits: Vec<f32>,
     pub predicted_class: usize,
     /// Queue + batch + execute, measured at the coordinator.
@@ -26,7 +78,13 @@ pub struct InferenceResponse {
 }
 
 impl InferenceResponse {
-    pub fn from_logits(id: u64, logits: Vec<f32>, submitted: Instant,
+    /// Build the response for `req`: argmax, latency anchored to the
+    /// request's true arrival, model id carried over.
+    pub fn for_request(req: &InferenceRequest, logits: Vec<f32>, batch_size: usize) -> Self {
+        Self::from_logits(req.id, req.model.clone(), logits, req.submitted, batch_size)
+    }
+
+    pub fn from_logits(id: u64, model: ModelId, logits: Vec<f32>, submitted: Instant,
                        batch_size: usize) -> Self {
         let predicted_class = logits
             .iter()
@@ -36,6 +94,7 @@ impl InferenceResponse {
             .unwrap_or(0);
         InferenceResponse {
             id,
+            model,
             logits,
             predicted_class,
             latency: submitted.elapsed(),

@@ -152,6 +152,15 @@ impl FuncSim {
             precision,
         )
     }
+
+    /// Spec-driven construction: build the synthetic model a parsed
+    /// [`ModelSpec`](crate::registry::ModelSpec) names. Equal identity
+    /// fields (model, setting, precision, seed) give bit-identical
+    /// models, which is what lets the registry's per-model pools match
+    /// a dedicated pool exactly — the serving parity tests rely on it.
+    pub fn synthesize_spec(spec: &crate::registry::ModelSpec) -> Result<FuncSim> {
+        Self::synthesize(&spec.dims, &spec.setting, spec.seed, spec.precision)
+    }
 }
 
 #[cfg(test)]

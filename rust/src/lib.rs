@@ -22,10 +22,16 @@
 //!     metrics, engine actor), generic over any backend, plus the
 //!     replicated [`coordinator::BackendPool`] (least-loaded dispatch,
 //!     bounded admission with typed shedding, merged pool metrics);
+//!   * [`registry`] — named pruning variants: `ModelSpec` strings
+//!     (`deit-small@b16_rb0.5_rt0.5`) registered under model names,
+//!     each lazily backed by its own `BackendPool` with per-model
+//!     replica/queue policy, routed by `ModelId` end to end;
 //!   * [`server`] — the network edge: a std-only threaded HTTP/1.1
-//!     listener + JSON routes over the pool (`POST /v1/infer`,
-//!     `/v1/infer_batch`, `GET /healthz`, Prometheus `GET /metrics`),
-//!     and an open-/closed-loop load generator (`vitfpga loadgen`);
+//!     listener + JSON routes over the registry (`POST /v1/infer`,
+//!     `/v1/infer_batch` with a `"model"` field, `GET /v1/models`,
+//!     `GET /healthz`, Prometheus `GET /metrics` with `model=` labels),
+//!     and an open-/closed-loop load generator (`vitfpga loadgen`,
+//!     including mixed-model `--model-mix` traffic);
 //!   * [`runtime`] — artifact manifest + VITW0001 weight readers
 //!     (always built) and the PJRT engine (`pjrt` feature only);
 //!   * [`complexity`], [`sim::resources`], [`baselines`] — the paper's
@@ -53,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod formats;
 pub mod funcsim;
+pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod sim;

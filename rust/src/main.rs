@@ -14,20 +14,34 @@
 //!                           run the coordinator (or, with --replicas > 1,
 //!                           the replicated pool with least-loaded dispatch
 //!                           and bounded admission) against synthetic load
+//!   serve --model NAME=SPEC [--model NAME=SPEC ...] [--default-model NAME]
+//!                           registry mode: serve several named pruning
+//!                           variants from one process. SPEC grammar:
+//!                           model@setting[@int16][@seed=N][@replicas=N]
+//!                           [@queue=N][@batch=N], e.g.
+//!                           small=deit-small@b16_rb0.5_rt0.5. Each model
+//!                           gets its own lazily-built replica pool;
+//!                           requests route by name (default: the first).
+//!                           Works with and without --http
 //!   serve --http ADDR [--request-timeout-ms MS] [--duration-s S]
-//!         [...same backend/pool options]
-//!                           expose the pool over HTTP/1.1 instead of
+//!         [...same backend/pool/registry options]
+//!                           expose the registry over HTTP/1.1 instead of
 //!                           driving synthetic load: POST /v1/infer and
-//!                           /v1/infer_batch, GET /healthz and /metrics
-//!                           (Prometheus). ADDR like 127.0.0.1:8080 (port
-//!                           0 picks an ephemeral port). Stops on Enter /
-//!                           stdin EOF, or after --duration-s, with a
-//!                           graceful in-flight drain
+//!                           /v1/infer_batch (optional "model" field),
+//!                           GET /v1/models, /healthz and /metrics
+//!                           (Prometheus, model="..." labels). ADDR like
+//!                           127.0.0.1:8080 (port 0 picks an ephemeral
+//!                           port). Stops on Enter / stdin EOF, or after
+//!                           --duration-s, with a graceful in-flight drain
 //!   loadgen --addr HOST:PORT [--qps Q] [--concurrency C] [--requests N]
 //!           [--batch B] [--timeout-ms MS] [--out FILE]
+//!           [--model NAME | --model-mix NAME:W,NAME:W,...]
 //!                           drive a running serve --http edge: closed-loop
 //!                           (default) or open-loop at --qps, reporting
-//!                           latency percentiles, shed rate and a histogram
+//!                           latency percentiles, shed rate and a histogram.
+//!                           --model pins all traffic to one registered
+//!                           variant; --model-mix drives a weighted mix
+//!                           (per-model ok counts in the report)
 //!   funcsim --variant NAME [--artifacts DIR] [--int16]
 //!                           functional datapath run (cross-checked
 //!                           against PJRT when built with --features pjrt)
@@ -55,6 +69,7 @@ use vitfpga::coordinator::{
     BackendPool, BatchPolicy, Coordinator, InferenceResponse, Overloaded, PoolPolicy,
 };
 use vitfpga::funcsim::Precision;
+use vitfpga::registry::{self, Registry};
 use vitfpga::sim::{AcceleratorSim, ModelStructure};
 use vitfpga::util::cli::Args;
 use vitfpga::util::rng::Rng;
@@ -170,23 +185,6 @@ fn start_pjrt_coordinator(_args: &Args, _policy: BatchPolicy) -> Result<Coordina
     bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
 }
 
-#[cfg(feature = "pjrt")]
-fn start_pjrt_pool(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
-    // PJRT handles are not Send; the pool constructs one backend per
-    // replica *on* that replica's engine thread, so this composes.
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4").to_string();
-    BackendPool::start(
-        move |_i| vitfpga::backend::PjrtBackend::load(&dir, &variant),
-        policy,
-    )
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn start_pjrt_pool(_args: &Args, _policy: PoolPolicy) -> Result<BackendPool> {
-    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
-}
-
 /// One coordinator or a replicated pool, behind one client-facing shape —
 /// `Coordinator::start` stays the 1-replica special case.
 enum Server {
@@ -207,9 +205,10 @@ impl Server {
         let pooled = replicas > 1 || args.get("queue-capacity").is_some();
         let pool_policy = PoolPolicy { replicas, batch: policy, queue_capacity };
         if pooled {
-            // One construction path for every pooled server (also the
-            // one `serve --http` uses), so backend arms can't drift.
-            return Ok(Server::Pool(start_pool(args, pool_policy)?));
+            // One construction path for every pooled server (shared with
+            // `serve --http` via the registry), so backend arms can't
+            // drift.
+            return Ok(Server::Pool(registry::legacy_pool_from_cli(args, pool_policy)?));
         }
         match args.get_or("backend", "native") {
             "native" => {
@@ -393,52 +392,66 @@ fn cmd_funcsim(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build the replicated pool from the shared CLI conventions — the
-/// construction path behind `serve --http`.
-fn start_pool(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
-    match args.get_or("backend", "native") {
-        // The factory splits cores across replicas (unless --threads
-        // pins a count) so N engines don't each fan their intra-layer
-        // kernels over every core.
-        "native" => BackendPool::start(
-            NativeBackend::pool_factory(args, policy.replicas),
-            policy,
-        ),
-        "pjrt" => start_pjrt_pool(args, policy),
-        other => bail!("unknown backend '{}'", other),
+/// Print each registered model's pooled metrics + admission gauges
+/// (skipping models that never cold-started).
+fn print_registry_metrics(registry: &Registry) {
+    for name in registry.names() {
+        if let Some(pool) = registry.ready_pool(name) {
+            match pool.metrics() {
+                Ok(m) => println!("[{}] {}", name, m),
+                Err(e) => println!("[{}] metrics unavailable: {:#}", name, e),
+            }
+            let s = pool.stats();
+            println!(
+                "[{}] admission: depth {}/{}, shed {}",
+                name, s.queue_depth, s.queue_capacity, s.shed_count
+            );
+        } else {
+            println!("[{}] never started (no traffic)", name);
+        }
     }
 }
 
-/// `serve --http ADDR`: put the pool on the network. Serves until Enter
-/// / stdin EOF (or `--duration-s`), then drains in-flight requests.
-fn cmd_serve_http(args: &Args, addr: &str, policy: BatchPolicy) -> Result<()> {
+/// `serve --http ADDR`: put the model registry on the network. Serves
+/// until Enter / stdin EOF (or `--duration-s`), then drains in-flight
+/// requests.
+fn cmd_serve_http(args: &Args, addr: &str) -> Result<()> {
     use vitfpga::server::{route, AppState, HttpConfig, HttpServer};
-    let pool_policy = PoolPolicy {
-        replicas: args.get_usize("replicas", 1),
-        batch: policy,
-        queue_capacity: args.get_usize(
-            "queue-capacity",
-            vitfpga::coordinator::pool::DEFAULT_QUEUE_CAPACITY,
-        ),
-    };
-    let pool = start_pool(args, pool_policy)?;
+    let reg = registry::from_cli(args, registry::pool_policy_from_cli(args))?;
+    // Warm the default model so construction errors surface at startup,
+    // not on the first request; other registered variants stay lazy.
+    let default_pool = reg.default_pool()?;
     // 0 disables the deadline; the 30 s default keeps a wedged replica
     // from pinning clients forever.
     let timeout = args.get_ms_opt("request-timeout-ms", 30_000);
     println!(
-        "serving {} over HTTP (queue capacity {}, request timeout {:?})",
-        pool.backend_name, pool_policy.queue_capacity, timeout
+        "serving {} model(s) over HTTP (default '{}' = {}, request timeout {:?})",
+        reg.names().len(),
+        reg.default_model(),
+        default_pool.backend_name,
+        timeout
     );
-    let state = Arc::new(AppState::new(pool, timeout));
+    for info in reg.describe_all() {
+        println!(
+            "  model '{}': {} (replicas {}, queue {}, {})",
+            info.name,
+            info.spec.as_deref().unwrap_or("prebuilt pool"),
+            info.replicas,
+            info.queue_capacity,
+            if info.ready { "warm" } else { "lazy" }
+        );
+    }
+    let state = Arc::new(AppState::with_registry(reg, timeout));
     let handler_state = Arc::clone(&state);
     let mut server = HttpServer::start(addr, HttpConfig::default(), move |req| {
         route(&handler_state, req)
     })?;
     println!("listening on http://{}", server.local_addr());
-    println!("  POST /v1/infer       one image -> logits+argmax+metadata");
-    println!("  POST /v1/infer_batch batched images");
-    println!("  GET  /healthz        liveness + model shape");
-    println!("  GET  /metrics        Prometheus text exposition");
+    println!("  POST /v1/infer       one image -> logits+argmax+metadata (\"model\" optional)");
+    println!("  POST /v1/infer_batch batched images (\"model\" optional)");
+    println!("  GET  /v1/models      registered variants + readiness");
+    println!("  GET  /healthz        liveness + per-model shapes");
+    println!("  GET  /metrics        Prometheus text exposition (model=\"...\" labels)");
     match args.get_usize("duration-s", 0) {
         0 => {
             println!("press Enter (or close stdin) to stop");
@@ -449,10 +462,110 @@ fn cmd_serve_http(args: &Args, addr: &str, policy: BatchPolicy) -> Result<()> {
     }
     println!("draining in-flight requests...");
     server.shutdown();
-    println!("{}", state.pool.metrics()?);
-    let s = state.pool.stats();
-    println!("admission: depth {}/{}, shed {}", s.queue_depth, s.queue_capacity, s.shed_count);
+    print_registry_metrics(&state.registry);
     Ok(())
+}
+
+/// `serve` with `--model NAME=SPEC` but without `--http`: drive the
+/// registry with in-process synthetic load, clients rotating across
+/// every registered variant — the quickest way to watch mixed-model
+/// dispatch without a network in the loop.
+fn cmd_serve_registry(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests", 64);
+    let concurrency = args.get_usize("concurrency", 4);
+    let reg = Arc::new(registry::from_cli(args, registry::pool_policy_from_cli(args))?);
+    // Resolve each variant's shape once, outside the request loops —
+    // describe() allocates and takes the entry's slot lock.
+    let targets: Vec<(String, usize)> = reg
+        .describe_all()
+        .into_iter()
+        .map(|d| (d.name, d.input_elems_per_image))
+        .collect();
+    println!(
+        "serving {} registered model(s) in-process: {} requests x {} client threads",
+        targets.len(),
+        requests,
+        concurrency
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..concurrency {
+        let reg = Arc::clone(&reg);
+        let targets = targets.clone();
+        handles.push(std::thread::spawn(move || -> Result<u64> {
+            let mut shed = 0u64;
+            for i in 0..requests {
+                // Deterministic rotation: every client cycles through
+                // the registered variants.
+                let (name, elems) = &targets[(c + i) % targets.len()];
+                let img = synthetic_image(*elems, (c * 1000 + i) as u64);
+                match reg.infer(Some(name.as_str()), img) {
+                    Ok(resp) => {
+                        if i == 0 {
+                            println!(
+                                "  client {}: first response model={} class={} \
+                                 latency={:.2} ms batch={}",
+                                c,
+                                resp.model,
+                                resp.predicted_class,
+                                resp.latency.as_secs_f64() * 1e3,
+                                resp.batch_size
+                            );
+                        }
+                    }
+                    Err(e) if e.downcast_ref::<Overloaded>().is_some() => shed += 1,
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(shed)
+        }));
+    }
+    let mut shed_total = 0u64;
+    for h in handles {
+        shed_total += h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    print_registry_metrics(&reg);
+    let total = (requests * concurrency) as u64;
+    println!(
+        "wall: {:.2}s for {} requests across {} models ({} answered, {} shed) -> {:.1} req/s",
+        wall,
+        total,
+        targets.len(),
+        total - shed_total,
+        shed_total,
+        (total - shed_total) as f64 / wall
+    );
+    Ok(())
+}
+
+/// Parse `--model-mix NAME:WEIGHT,NAME:WEIGHT,...` (weight defaults to
+/// 1 when omitted: `a:2,b` = 2:1).
+fn parse_model_mix(s: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("empty entry in --model-mix '{}'", s);
+        }
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (
+                n.trim(),
+                w.trim().parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("bad weight in --model-mix entry '{}'", part)
+                })?,
+            ),
+            None => (part, 1.0),
+        };
+        if name.is_empty() {
+            bail!("empty model name in --model-mix entry '{}'", part);
+        }
+        if !(weight.is_finite() && weight > 0.0) {
+            bail!("--model-mix weight for '{}' must be > 0, got {}", name, weight);
+        }
+        out.push((name.to_string(), weight));
+    }
+    Ok(out)
 }
 
 /// `loadgen`: drive a running `serve --http` edge and report latency
@@ -465,6 +578,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let mode = match args.get("qps") {
         Some(_) => LoadMode::Open { qps: args.get_f64("qps", 100.0) },
         None => LoadMode::Closed,
+    };
+    let models = match (args.get("model"), args.get("model-mix")) {
+        (Some(_), Some(_)) => {
+            bail!("--model and --model-mix are mutually exclusive")
+        }
+        (Some(name), None) => vec![(name.to_string(), 1.0)],
+        (None, Some(mix)) => parse_model_mix(mix)?,
+        (None, None) => Vec::new(),
     };
     let cfg = LoadgenConfig {
         addr: addr.to_string(),
@@ -479,10 +600,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             anyhow::anyhow!("--timeout-ms 0 is not supported; pass a positive client timeout")
         })?,
         seed: args.get_usize("seed", 7) as u64,
+        models,
     };
     println!(
-        "loadgen -> http://{}: {:?}, {} requests x {} workers, batch {}",
-        cfg.addr, cfg.mode, cfg.requests, cfg.concurrency, cfg.batch
+        "loadgen -> http://{}: {:?}, {} requests x {} workers, batch {}{}",
+        cfg.addr,
+        cfg.mode,
+        cfg.requests,
+        cfg.concurrency,
+        cfg.batch,
+        if cfg.models.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", models [{}]",
+                cfg.models
+                    .iter()
+                    .map(|(n, w)| format!("{}:{}", n, w))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )
+        }
     );
     let report = loadgen::run(&cfg)?;
     println!("{}", report);
@@ -502,9 +640,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
     };
     // --http flips serve from "drive synthetic load in-process" to
-    // "expose the pool on the network" (drive it with `vitfpga loadgen`).
+    // "expose the registry on the network" (drive it with `vitfpga
+    // loadgen`).
     if let Some(addr) = args.get("http") {
-        return cmd_serve_http(args, addr, policy);
+        return cmd_serve_http(args, addr);
+    }
+    // Any --model NAME=SPEC flips the in-process driver to registry
+    // mode too (clients rotate across the registered variants).
+    if args.get_all("model").iter().any(|v| v.contains('=')) {
+        return cmd_serve_registry(args);
     }
     let server = Arc::new(Server::start(args, policy)?);
     println!(

@@ -1,0 +1,649 @@
+//! Model registry: named pruning variants behind one serving API.
+//!
+//! The paper's central trade-off is a *family* of models — every
+//! (weight-pruning rate x token-pruning rate) pair is its own
+//! accuracy/latency operating point (Tables VI-VII), the way HeatViT
+//! and SPViT expose latency-aware pruning configurations as selectable
+//! modes. One process should therefore serve many of them: a
+//! [`Registry`] maps model *names* to [`ModelSpec`]s and lazily
+//! constructs one replicated [`BackendPool`] per registered model, each
+//! with its own replica count, admission bound and batch policy.
+//!
+//! ```text
+//!   /v1/infer {"model": "small-fast", ...}
+//!        |
+//!        v
+//!   Registry::infer("small-fast", image)
+//!        |  resolve (404 UnknownModel on miss; None -> default model)
+//!        |  lazy: first request builds the pool, later ones reuse it
+//!        v
+//!   BackendPool "small-fast"      BackendPool "small-accurate"   ...
+//!   (replicas, admission,         (its own replicas/queue/batcher)
+//!    batcher per replica)
+//! ```
+//!
+//! Everything below the registry is unchanged: a pool still dispatches
+//! least-loaded over its replicas, still sheds with typed
+//! [`Overloaded`](crate::coordinator::Overloaded), still merges true
+//! pooled percentiles. The registry adds the *naming* layer: requests
+//! carry a [`ModelId`], responses come back labeled, and the serving
+//! edge can enumerate every registered variant on `/v1/models`,
+//! `/healthz` and `/metrics` (as `model="..."` labels).
+//!
+//! A registry with one anonymous model (name `"default"`) behaves
+//! exactly like the bare pool it wraps — [`Registry::single`] is the
+//! back-compat constructor the single-model CLI path and the existing
+//! HTTP surface use.
+
+pub mod spec;
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::NativeBackend;
+use crate::coordinator::pool::DEFAULT_QUEUE_CAPACITY;
+use crate::coordinator::{
+    BackendPool, BatchPolicy, InferenceResponse, ModelId, PoolPolicy,
+};
+use crate::util::cli::Args;
+
+pub use spec::{ModelSpec, DEFAULT_SPEC_SEED};
+
+/// Name a single anonymous model registers under (and the model
+/// `/v1/infer` routes to when the request names none).
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Typed routing error: the request named a model nobody registered.
+/// Carried inside `anyhow::Error`; recover it with
+/// `err.downcast_ref::<UnknownModel>()`. The serving edge maps it to
+/// HTTP 404.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownModel {
+    pub requested: String,
+    /// Registered names, for the error body.
+    pub known: Vec<String>,
+}
+
+impl std::fmt::Display for UnknownModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown model '{}' (registered: {})",
+            self.requested,
+            self.known.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownModel {}
+
+/// Public description of one registered model — what `/v1/models` and
+/// `/healthz` render. Shape fields are known even for cold (not yet
+/// constructed) entries: specs compute them from the architecture dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Canonical spec identity (`test-tiny@b8_rb0.7_rt0.7`); `None` for
+    /// a prebuilt pool registered directly (legacy/artifact path).
+    pub spec: Option<String>,
+    /// Replica-0 backend identity; `None` until the pool is built.
+    pub backend_name: Option<String>,
+    /// Whether the pool has been constructed (first request, or warm).
+    pub ready: bool,
+    pub replicas: usize,
+    pub queue_capacity: usize,
+    pub batch_capacity: usize,
+    pub input_elems_per_image: usize,
+    pub num_classes: usize,
+}
+
+/// One registered model: its spec (None for prebuilt pools), the
+/// effective pool policy, and the lazily-built pool itself.
+///
+/// The built pool lives behind an `RwLock` that is only ever held for
+/// the instant of a read or the install-after-build write; the slow
+/// construction itself is serialized by the separate `build` mutex.
+/// That split keeps `/healthz`, `/metrics` and warm-model traffic from
+/// blocking behind another request's cold start.
+struct ModelEntry {
+    spec: Option<ModelSpec>,
+    policy: PoolPolicy,
+    /// Worker threads per replica (core split across the whole
+    /// registry); `None` lets the backend default apply.
+    threads: Option<usize>,
+    pool: RwLock<Option<Arc<BackendPool>>>,
+    /// Serializes first-construction only (never held while the slot
+    /// lock is held, and never taken by readers).
+    build: Mutex<()>,
+}
+
+impl ModelEntry {
+    fn built(&self) -> Option<Arc<BackendPool>> {
+        self.pool
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .as_ref()
+            .map(Arc::clone)
+    }
+}
+
+/// Named pruning variants, each lazily backed by its own
+/// [`BackendPool`]. Shareable across threads (`Arc<Registry>`); only
+/// racing *builders* of the same cold model serialize — readers
+/// (health, metrics, warm traffic, other models) never wait behind a
+/// cold start.
+pub struct Registry {
+    models: BTreeMap<String, ModelEntry>,
+    /// Registration order (the `/v1/models` listing order).
+    order: Vec<String>,
+    default_model: String,
+}
+
+/// Builder for [`Registry`]; see [`Registry::builder`].
+pub struct RegistryBuilder {
+    defaults: PoolPolicy,
+    models: BTreeMap<String, ModelEntry>,
+    order: Vec<String>,
+    default_model: Option<String>,
+}
+
+/// Model names become Prometheus label values and JSON keys: keep them
+/// to a safe charset instead of escaping at every exposition site.
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("model name must not be empty");
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+    {
+        bail!(
+            "model name '{}' may only contain [A-Za-z0-9._-] \
+             (it becomes a metrics label and a JSON key)",
+            name
+        );
+    }
+    Ok(())
+}
+
+impl RegistryBuilder {
+    /// Register `name` as a spec-driven (lazily constructed) model.
+    /// `threads` caps each replica's intra-layer workers — the registry
+    /// CLI path splits cores across the *total* replica count so ten
+    /// registered models don't each fan out over every core.
+    pub fn register(mut self, name: &str, spec: ModelSpec,
+                    threads: Option<usize>) -> Result<RegistryBuilder> {
+        validate_name(name)?;
+        if self.models.contains_key(name) {
+            bail!("model '{}' registered twice", name);
+        }
+        let policy = PoolPolicy {
+            replicas: spec.replicas.unwrap_or(self.defaults.replicas).max(1),
+            queue_capacity: spec.queue_capacity.unwrap_or(self.defaults.queue_capacity),
+            batch: BatchPolicy {
+                max_batch: spec.max_batch.unwrap_or(self.defaults.batch.max_batch),
+                max_wait: self.defaults.batch.max_wait,
+            },
+        };
+        self.models.insert(
+            name.to_string(),
+            ModelEntry {
+                spec: Some(spec),
+                policy,
+                threads,
+                pool: RwLock::new(None),
+                build: Mutex::new(()),
+            },
+        );
+        self.order.push(name.to_string());
+        Ok(self)
+    }
+
+    /// Register an already-running pool under `name` (the legacy /
+    /// artifact-backed path — anything a spec cannot express).
+    pub fn register_pool(mut self, name: &str, pool: BackendPool) -> Result<RegistryBuilder> {
+        validate_name(name)?;
+        if self.models.contains_key(name) {
+            bail!("model '{}' registered twice", name);
+        }
+        let policy = PoolPolicy {
+            replicas: pool.replicas(),
+            queue_capacity: pool.stats().queue_capacity,
+            batch: BatchPolicy {
+                max_batch: pool.batch_capacity,
+                max_wait: self.defaults.batch.max_wait,
+            },
+        };
+        self.models.insert(
+            name.to_string(),
+            ModelEntry {
+                spec: None,
+                policy,
+                threads: None,
+                pool: RwLock::new(Some(Arc::new(pool))),
+                build: Mutex::new(()),
+            },
+        );
+        self.order.push(name.to_string());
+        Ok(self)
+    }
+
+    /// Route requests that name no model to `name` (default: the first
+    /// registered model).
+    pub fn default_model(mut self, name: &str) -> RegistryBuilder {
+        self.default_model = Some(name.to_string());
+        self
+    }
+
+    pub fn finish(self) -> Result<Registry> {
+        let default_model = match self.default_model {
+            Some(d) => d,
+            None => self
+                .order
+                .first()
+                .cloned()
+                .ok_or_else(|| anyhow!("registry needs at least one registered model"))?,
+        };
+        if !self.models.contains_key(&default_model) {
+            bail!(
+                "default model '{}' is not registered (registered: {})",
+                default_model,
+                self.order.join(", ")
+            );
+        }
+        Ok(Registry { models: self.models, order: self.order, default_model })
+    }
+}
+
+impl Registry {
+    /// Start building a registry; `defaults` is the pool policy a spec
+    /// inherits wherever it doesn't override.
+    pub fn builder(defaults: PoolPolicy) -> RegistryBuilder {
+        RegistryBuilder {
+            defaults,
+            models: BTreeMap::new(),
+            order: Vec::new(),
+            default_model: None,
+        }
+    }
+
+    /// Wrap one already-running pool as a single-model registry under
+    /// [`DEFAULT_MODEL`] — the bare-pool back-compat path.
+    pub fn single(pool: BackendPool) -> Registry {
+        Registry::builder(PoolPolicy::default())
+            .register_pool(DEFAULT_MODEL, pool)
+            .expect("the fixed default name is valid and unique")
+            .finish()
+            .expect("one model is registered")
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// Resolve an optional requested name (`None` -> default model) to
+    /// a registered one, or a typed [`UnknownModel`] error.
+    pub fn resolve(&self, requested: Option<&str>) -> Result<&str> {
+        match requested {
+            None => Ok(self.default_model.as_str()),
+            Some(name) => self
+                .models
+                .get_key_value(name)
+                .map(|(k, _)| k.as_str())
+                .ok_or_else(|| {
+                    anyhow::Error::new(UnknownModel {
+                        requested: name.to_string(),
+                        known: self.order.clone(),
+                    })
+                }),
+        }
+    }
+
+    /// The parsed spec behind `name` (None for prebuilt pools or
+    /// unknown names).
+    pub fn spec_of(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.get(name).and_then(|e| e.spec.as_ref())
+    }
+
+    /// Whether `name`'s pool has been constructed.
+    pub fn is_ready(&self, name: &str) -> bool {
+        self.models
+            .get(name)
+            .map(|e| e.built().is_some())
+            .unwrap_or(false)
+    }
+
+    /// `name`'s pool if it is already built — never triggers
+    /// construction (metrics/health must not cold-start a model).
+    pub fn ready_pool(&self, name: &str) -> Option<Arc<BackendPool>> {
+        self.models.get(name).and_then(|e| e.built())
+    }
+
+    /// `name`'s pool, constructing it on first use. Racing first
+    /// requests for one model build it once (serialized by the entry's
+    /// build mutex); the slot lock is only held for the read/install
+    /// instants, so health/metrics scrapes and other models' traffic
+    /// never wait behind a cold start.
+    pub fn pool(&self, name: &str) -> Result<Arc<BackendPool>> {
+        let entry = self.models.get(name).ok_or_else(|| {
+            anyhow::Error::new(UnknownModel {
+                requested: name.to_string(),
+                known: self.order.clone(),
+            })
+        })?;
+        if let Some(p) = entry.built() {
+            return Ok(p);
+        }
+        // Cold: serialize builders, then re-check (the losers of the
+        // race find the winner's pool installed).
+        let _building = entry.build.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(p) = entry.built() {
+            return Ok(p);
+        }
+        let spec = entry
+            .spec
+            .as_ref()
+            .expect("cold registry entries always carry a spec")
+            .clone();
+        let threads = entry.threads;
+        let pool = BackendPool::start_named(
+            ModelId::new(name),
+            move |_i| {
+                let nb = NativeBackend::from_spec(&spec)?;
+                Ok(match threads {
+                    Some(t) => nb.with_threads(t),
+                    None => nb,
+                })
+            },
+            entry.policy,
+        )?;
+        let pool = Arc::new(pool);
+        *entry.pool.write().unwrap_or_else(|p| p.into_inner()) = Some(Arc::clone(&pool));
+        Ok(pool)
+    }
+
+    /// The default model's pool (built if cold).
+    pub fn default_pool(&self) -> Result<Arc<BackendPool>> {
+        self.pool(&self.default_model)
+    }
+
+    /// Blocking single inference on `model` (`None` -> default).
+    pub fn infer(&self, model: Option<&str>, image: Vec<f32>) -> Result<InferenceResponse> {
+        self.infer_deadline(model, image, None)
+    }
+
+    /// Blocking single inference with an optional per-request deadline
+    /// (the pool's [`BackendPool::infer_deadline`] semantics).
+    pub fn infer_deadline(
+        &self,
+        model: Option<&str>,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<InferenceResponse> {
+        let name = self.resolve(model)?;
+        self.pool(name)?.infer_deadline(image, deadline)
+    }
+
+    /// Submit one image to `model`'s pool; returns the response
+    /// receiver (the pool's [`BackendPool::submit`] semantics,
+    /// including typed `Overloaded` shedding).
+    pub fn submit(
+        &self,
+        model: Option<&str>,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        let name = self.resolve(model)?;
+        self.pool(name)?.submit(image)
+    }
+
+    /// Describe one registered model (shape known even when cold).
+    pub fn describe(&self, name: &str) -> Option<ModelInfo> {
+        let entry = self.models.get(name)?;
+        let built = entry.built();
+        let (input_elems, classes, batch_capacity) = match (&built, &entry.spec) {
+            (Some(pool), _) => (pool.input_elems_per_image, pool.num_classes, pool.batch_capacity),
+            (None, Some(spec)) => (
+                spec.input_elems_per_image(),
+                spec.num_classes(),
+                entry.policy.batch.max_batch,
+            ),
+            (None, None) => unreachable!("prebuilt entries are always built"),
+        };
+        Some(ModelInfo {
+            name: name.to_string(),
+            spec: entry.spec.as_ref().map(|s| s.spec_string()),
+            backend_name: built.as_ref().map(|p| p.backend_name.clone()),
+            ready: built.is_some(),
+            replicas: entry.policy.replicas,
+            queue_capacity: entry.policy.queue_capacity,
+            batch_capacity,
+            input_elems_per_image: input_elems,
+            num_classes: classes,
+        })
+    }
+
+    /// Describe every registered model, in registration order.
+    pub fn describe_all(&self) -> Vec<ModelInfo> {
+        self.order
+            .iter()
+            .filter_map(|n| self.describe(n))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI construction — the one path `vitfpga serve` and examples share
+// ---------------------------------------------------------------------------
+
+/// Server-wide pool defaults from the shared CLI conventions
+/// (`--replicas/--queue-capacity/--max-batch/--max-wait-ms`); specs
+/// override per model.
+pub fn pool_policy_from_cli(args: &Args) -> PoolPolicy {
+    PoolPolicy {
+        replicas: args.get_usize("replicas", 1),
+        batch: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 8),
+            max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+        },
+        queue_capacity: args.get_usize("queue-capacity", DEFAULT_QUEUE_CAPACITY),
+    }
+}
+
+/// Build a registry from parsed CLI args — the construction path behind
+/// `vitfpga serve` and `examples/serve.rs` (both binaries reuse this,
+/// so `--model NAME=SPEC` works identically in each).
+///
+/// Two modes, decided by the `--model` values:
+///
+/// * **registry mode** — any `--model NAME=SPEC` (repeatable) registers
+///   that name with the spec grammar of [`ModelSpec::parse`]; the first
+///   one is the default model unless `--default-model NAME` says
+///   otherwise. Worker threads are split across the *total* replica
+///   count of all registered models (an explicit `--threads` pins the
+///   per-replica count instead).
+/// * **legacy mode** — no `NAME=SPEC` values: the whole legacy flag set
+///   (`--backend/--variant/--artifacts/--model ARCH/--setting/--seed/
+///   --int16/--threads`) builds one pool, registered as
+///   [`DEFAULT_MODEL`] — byte-compatible with the pre-registry CLI.
+pub fn from_cli(args: &Args, defaults: PoolPolicy) -> Result<Registry> {
+    let model_args = args.get_all("model");
+    let named: Vec<(&str, &str)> = model_args
+        .iter()
+        .filter_map(|v| v.split_once('='))
+        .collect();
+    if named.is_empty() {
+        let pool = legacy_pool_from_cli(args, defaults)?;
+        return Ok(Registry::single(pool));
+    }
+    if named.len() != model_args.len() {
+        bail!(
+            "mixing '--model NAME=SPEC' with the legacy '--model ARCH' flag is ambiguous; \
+             give every model as NAME=SPEC"
+        );
+    }
+    let backend = args.get_or("backend", "native");
+    if backend != "native" {
+        bail!(
+            "--model NAME=SPEC registers synthetic native models; \
+             --backend {} cannot be spec-driven (use the legacy --variant path)",
+            backend
+        );
+    }
+    // Parse everything before registering anything: the core split
+    // below needs the total replica count, and a bad spec should fail
+    // the whole invocation rather than half-register.
+    let mut parsed: Vec<(&str, ModelSpec)> = Vec::with_capacity(named.len());
+    for (name, spec_str) in named {
+        parsed.push((name, ModelSpec::parse(spec_str)?));
+    }
+    let total_replicas: usize = parsed
+        .iter()
+        .map(|(_, s)| s.replicas.unwrap_or(defaults.replicas).max(1))
+        .sum();
+    // Split cores across every replica of every model (the same
+    // oversubscription guard `NativeBackend::pool_factory` applies to a
+    // single pool); an explicit --threads pins the per-replica count
+    // (`threads_per_replica` returns None exactly in that case).
+    let threads = Some(
+        NativeBackend::threads_per_replica(args, total_replicas)
+            .unwrap_or_else(|| args.get_usize("threads", 1)),
+    );
+    let mut builder = Registry::builder(defaults);
+    for (name, spec) in parsed {
+        builder = builder.register(name, spec, threads)?;
+    }
+    if let Some(d) = args.get("default-model") {
+        builder = builder.default_model(d);
+    }
+    builder.finish()
+}
+
+/// The pre-registry single-pool construction (shared `--backend/
+/// --variant/--model ARCH/--setting` conventions). Kept public so the
+/// CLI's non-registry paths build pools identically.
+pub fn legacy_pool_from_cli(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
+    match args.get_or("backend", "native") {
+        // The factory splits cores across replicas (unless --threads
+        // pins a count) so N engines don't each fan their intra-layer
+        // kernels over every core.
+        "native" => BackendPool::start_named(
+            ModelId::new(DEFAULT_MODEL),
+            NativeBackend::pool_factory(args, policy.replicas),
+            policy,
+        ),
+        "pjrt" => pjrt_pool_from_cli(args, policy),
+        other => bail!("unknown backend '{}'", other),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_pool_from_cli(args: &Args, policy: PoolPolicy) -> Result<BackendPool> {
+    // PJRT handles are not Send; the pool constructs one backend per
+    // replica *on* that replica's engine thread, so this composes.
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "test-tiny_b8_rb0.7_rt0.7_bs4").to_string();
+    BackendPool::start_named(
+        ModelId::new(DEFAULT_MODEL),
+        move |_i| crate::backend::PjrtBackend::load(&dir, &variant),
+        policy,
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_pool_from_cli(_args: &Args, _policy: PoolPolicy) -> Result<BackendPool> {
+    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_policy() -> PoolPolicy {
+        PoolPolicy {
+            replicas: 1,
+            batch: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            queue_capacity: 8,
+        }
+    }
+
+    fn parse_args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn duplicate_and_invalid_names_rejected() {
+        let spec = ModelSpec::parse("test-tiny@b8_rb0.7_rt0.7").unwrap();
+        let b = Registry::builder(tiny_policy())
+            .register("a", spec.clone(), None)
+            .expect("first registration");
+        assert!(b.register("a", spec.clone(), None).is_err(), "duplicate name");
+        for bad in ["", "with space", "quo\"te", "mod{el}"] {
+            assert!(
+                Registry::builder(tiny_policy()).register(bad, spec.clone(), None).is_err(),
+                "name '{}' must be rejected",
+                bad
+            );
+        }
+    }
+
+    #[test]
+    fn empty_registry_and_bad_default_rejected() {
+        assert!(Registry::builder(tiny_policy()).finish().is_err());
+        let spec = ModelSpec::parse("test-tiny@b8_rb0.7_rt0.7").unwrap();
+        let r = Registry::builder(tiny_policy())
+            .register("a", spec, None)
+            .unwrap()
+            .default_model("nope")
+            .finish();
+        assert!(r.is_err(), "default must be a registered name");
+    }
+
+    #[test]
+    fn resolve_defaults_and_typed_unknown() {
+        let spec = ModelSpec::parse("test-tiny@b8_rb0.7_rt0.7").unwrap();
+        let r = Registry::builder(tiny_policy())
+            .register("a", spec.clone(), None)
+            .unwrap()
+            .register("b", spec, None)
+            .unwrap()
+            .finish()
+            .unwrap();
+        assert_eq!(r.default_model(), "a", "first registered is the default");
+        assert_eq!(r.resolve(None).unwrap(), "a");
+        assert_eq!(r.resolve(Some("b")).unwrap(), "b");
+        let err = r.resolve(Some("c")).expect_err("unknown model");
+        let u = err.downcast_ref::<UnknownModel>().expect("typed UnknownModel");
+        assert_eq!(u.requested, "c");
+        assert_eq!(u.known, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn spec_overrides_beat_cli_defaults() {
+        let args = parse_args(
+            "serve --replicas 1 --queue-capacity 64 --max-batch 8 --threads 1 \
+             --model fast=test-tiny@b8_rb0.7_rt0.7@replicas=2@queue=16@batch=4 \
+             --model slow=test-tiny@b8_rb0.5_rt0.5",
+        );
+        let r = from_cli(&args, pool_policy_from_cli(&args)).expect("registry from cli");
+        assert_eq!(r.names(), ["fast".to_string(), "slow".to_string()]);
+        let fast = r.describe("fast").unwrap();
+        assert_eq!((fast.replicas, fast.queue_capacity, fast.batch_capacity), (2, 16, 4));
+        let slow = r.describe("slow").unwrap();
+        assert_eq!((slow.replicas, slow.queue_capacity, slow.batch_capacity), (1, 64, 8));
+        assert!(!fast.ready && !slow.ready, "registration must not build pools");
+    }
+
+    #[test]
+    fn mixed_legacy_and_spec_model_flags_rejected() {
+        let args = parse_args("serve --model test-tiny --model a=test-tiny@b8_rb0.7_rt0.7");
+        assert!(from_cli(&args, pool_policy_from_cli(&args)).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Model specs: the string grammar naming one pruning variant.
+//!
+//! The paper's result is a *family* of operating points — every
+//! (block size, weight keep rate r_b, token keep rate r_t) pair is its
+//! own accuracy/latency trade-off (Tables VI-VII). A [`ModelSpec`]
+//! names one such point plus the serving precision, so a registry can
+//! host several of them side by side:
+//!
+//! ```text
+//! SPEC    := MODEL ('@' PART)*
+//! MODEL   := deit-small | deit-tiny | test-tiny        (config.rs names)
+//! PART    := SETTING                                    b8_rb0.7_rt0.5
+//!          | int16 | f32                                datapath precision
+//!          | seed=N                                     synthesis seed
+//!          | replicas=N                                 pool override
+//!          | queue=N                                    pool override
+//!          | batch=N                                    pool override
+//! ```
+//!
+//! `SETTING` is the shared [`PruningSetting::parse_label`] grammar
+//! (`bN_rbX_rtX`, any subset; omitted entirely -> the dense, unpruned
+//! baseline). `replicas`/`queue`/`batch` override the server-wide pool
+//! defaults for this one model; they are deployment knobs, not model
+//! identity, so [`ModelSpec::spec_string`] — the canonical label shown
+//! in `/v1/models` and `/healthz` — omits them.
+//!
+//! Examples:
+//!
+//! ```text
+//! deit-small@b16_rb0.5_rt0.5            half the weights, half the tokens
+//! test-tiny@b8_rb0.7_rt0.7@int16        the paper's datapath width
+//! test-tiny@b8_rb0.5_rt0.9@seed=7@replicas=2@queue=128
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{model_by_name, ModelDims, PruningSetting};
+use crate::funcsim::Precision;
+
+/// Seed a spec synthesizes with when no `seed=` part is given.
+pub const DEFAULT_SPEC_SEED: u64 = 42;
+
+/// One named pruning variant: architecture + pruning configuration +
+/// precision (+ synthesis seed), optionally carrying per-model pool
+/// overrides. Parsed from the spec grammar above; two specs with equal
+/// identity fields synthesize bit-identical models.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Architecture name (`config::model_by_name`).
+    pub model: String,
+    pub dims: ModelDims,
+    pub setting: PruningSetting,
+    pub precision: Precision,
+    pub seed: u64,
+    /// Per-model replica-count override (None -> server default).
+    pub replicas: Option<usize>,
+    /// Per-model admission-bound override (None -> server default).
+    pub queue_capacity: Option<usize>,
+    /// Per-model dynamic-batch-bound override (None -> server default).
+    pub max_batch: Option<usize>,
+}
+
+impl ModelSpec {
+    /// Parse `model@setting@opt...`. See the module docs for the
+    /// grammar; errors name the offending part.
+    pub fn parse(spec: &str) -> Result<ModelSpec> {
+        let mut parts = spec.split('@');
+        let model = parts.next().unwrap_or("").trim();
+        if model.is_empty() {
+            bail!("empty model spec (expected e.g. 'test-tiny@b8_rb0.7_rt0.7')");
+        }
+        let dims = model_by_name(model)
+            .ok_or_else(|| anyhow!("unknown model '{}' in spec '{}'", model, spec))?;
+        let mut out = ModelSpec {
+            model: model.to_string(),
+            dims,
+            setting: PruningSetting::dense(16),
+            precision: Precision::F32,
+            seed: DEFAULT_SPEC_SEED,
+            replicas: None,
+            queue_capacity: None,
+            max_batch: None,
+        };
+        let mut saw_setting = false;
+        let parse_n = |part: &str, v: &str| -> Result<usize> {
+            v.parse()
+                .map_err(|_| anyhow!("'{}' in spec '{}' needs an integer", part, spec))
+        };
+        for part in parts {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("empty '@' part in spec '{}'", spec);
+            } else if part == "int16" {
+                out.precision = Precision::Int16;
+            } else if part == "f32" {
+                out.precision = Precision::F32;
+            } else if let Some(v) = part.strip_prefix("seed=") {
+                out.seed = parse_n(part, v)? as u64;
+            } else if let Some(v) = part.strip_prefix("replicas=") {
+                let n = parse_n(part, v)?;
+                if n == 0 {
+                    bail!("'{}' in spec '{}' must be >= 1", part, spec);
+                }
+                out.replicas = Some(n);
+            } else if let Some(v) = part.strip_prefix("queue=") {
+                let n = parse_n(part, v)?;
+                if n == 0 {
+                    bail!("'{}' in spec '{}' must be >= 1", part, spec);
+                }
+                out.queue_capacity = Some(n);
+            } else if let Some(v) = part.strip_prefix("batch=") {
+                let n = parse_n(part, v)?;
+                if n == 0 {
+                    bail!("'{}' in spec '{}' must be >= 1", part, spec);
+                }
+                out.max_batch = Some(n);
+            } else if saw_setting {
+                bail!(
+                    "unrecognized part '{}' in spec '{}' (setting already given)",
+                    part, spec
+                );
+            } else {
+                out.setting = PruningSetting::parse_label(part)
+                    .map_err(|e| anyhow!("bad setting '{}' in spec '{}': {}", part, spec, e))?;
+                saw_setting = true;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical identity label: `model@setting[@int16][@seed=N]`.
+    /// Pool overrides are deployment knobs and are not part of it.
+    /// `parse(spec_string())` round-trips the identity fields.
+    pub fn spec_string(&self) -> String {
+        let mut s = format!("{}@{}", self.model, self.setting.label());
+        if self.precision == Precision::Int16 {
+            s.push_str("@int16");
+        }
+        if self.seed != DEFAULT_SPEC_SEED {
+            s.push_str(&format!("@seed={}", self.seed));
+        }
+        s
+    }
+
+    /// Input f32s per image, known without building the model (so cold
+    /// registry entries can still report their shape on `/healthz`).
+    pub fn input_elems_per_image(&self) -> usize {
+        self.dims.image_size * self.dims.image_size * self.dims.in_channels
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.dims.num_classes
+    }
+}
+
+impl std::fmt::Display for ModelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let s = ModelSpec::parse("test-tiny@b8_rb0.5_rt0.7@int16@seed=9@replicas=2@queue=128@batch=4")
+            .expect("full spec parses");
+        assert_eq!(s.model, "test-tiny");
+        assert_eq!((s.setting.block_size, s.setting.r_b, s.setting.r_t), (8, 0.5, 0.7));
+        assert_eq!(s.precision, Precision::Int16);
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.replicas, Some(2));
+        assert_eq!(s.queue_capacity, Some(128));
+        assert_eq!(s.max_batch, Some(4));
+        assert_eq!(s.spec_string(), "test-tiny@b8_rb0.5_rt0.7@int16@seed=9");
+    }
+
+    #[test]
+    fn minimal_spec_is_dense_f32() {
+        let s = ModelSpec::parse("deit-tiny").expect("bare model name parses");
+        assert_eq!(s.setting, PruningSetting::dense(16));
+        assert_eq!(s.precision, Precision::F32);
+        assert_eq!(s.seed, DEFAULT_SPEC_SEED);
+        assert_eq!(s.spec_string(), "deit-tiny@b16_rb1_rt1");
+        assert_eq!(s.input_elems_per_image(), 224 * 224 * 3);
+    }
+
+    #[test]
+    fn spec_string_round_trips_identity() {
+        for spec in [
+            "test-tiny@b8_rb0.7_rt0.7",
+            "deit-small@b16_rb0.5_rt0.5@int16",
+            "test-tiny@b8_rb0.5_rt0.9@seed=7",
+        ] {
+            let a = ModelSpec::parse(spec).expect(spec);
+            let b = ModelSpec::parse(&a.spec_string()).expect("canonical re-parses");
+            assert_eq!(a, b, "{} must round-trip", spec);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "no-such-model@b8",
+            "test-tiny@rx0.5",
+            "test-tiny@b8_rb0.7@b16",           // two settings
+            "test-tiny@seed=x",
+            "test-tiny@replicas=0",
+            "test-tiny@queue=0",
+            "test-tiny@batch=0",
+            "test-tiny@@int16",
+        ] {
+            assert!(ModelSpec::parse(bad).is_err(), "'{}' must be rejected", bad);
+        }
+    }
+}

@@ -12,13 +12,22 @@
 //!   server backlog shows up as latency instead of silently throttling
 //!   the offered load (the coordinated-omission-free discipline).
 //!
-//! The generator probes `GET /healthz` first to learn the model shape,
-//! then drives `POST /v1/infer` (or `/v1/infer_batch` with
+//! The generator probes `GET /healthz` first to learn the model
+//! shape(s), then drives `POST /v1/infer` (or `/v1/infer_batch` with
 //! `batch > 1`), classifying responses: 200 ok, 429 shed, 504
 //! deadline, other 5xx server error. Results aggregate into a
 //! [`LoadgenReport`] with exact percentiles plus a log2-bucketed
 //! latency histogram. [`HttpClient`] is public — the integration tests
 //! and bench H10 reuse it as their loopback client.
+//!
+//! **Mixed-model traffic** — [`LoadgenConfig::models`] carries weighted
+//! `(name, weight)` targets (the CLI's `--model NAME` /
+//! `--model-mix NAME:W,...`): every request picks one target by a
+//! deterministic weighted draw, stamps its `"model"` field, and is
+//! tallied per model in [`LoadgenReport::per_model`]. Each target's
+//! image shape is probed individually from `/healthz`'s `models`
+//! object, so differently-shaped variants mix in one run. An empty
+//! list keeps the unnamed single-model behaviour.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -288,6 +297,10 @@ pub struct LoadgenConfig {
     /// Client-side give-up bound per request.
     pub timeout: Duration,
     pub seed: u64,
+    /// Weighted model targets for mixed-model traffic. Empty -> every
+    /// request is unnamed (the server's default model). One entry with
+    /// any weight -> all requests name that model.
+    pub models: Vec<(String, f64)>,
 }
 
 impl Default for LoadgenConfig {
@@ -300,6 +313,7 @@ impl Default for LoadgenConfig {
             batch: 1,
             timeout: Duration::from_secs(30),
             seed: 7,
+            models: Vec::new(),
         }
     }
 }
@@ -378,6 +392,8 @@ pub struct LoadgenReport {
     pub p99_ms: f64,
     pub max_ms: f64,
     pub histogram: LatencyHistogram,
+    /// OK responses per named model target (empty for unnamed runs).
+    pub per_model: Vec<(String, u64)>,
 }
 
 impl LoadgenReport {
@@ -412,6 +428,13 @@ impl LoadgenReport {
         num("p90_ms", self.p90_ms);
         num("p99_ms", self.p99_ms);
         num("max_ms", self.max_ms);
+        if !self.per_model.is_empty() {
+            let mut pm = std::collections::BTreeMap::new();
+            for (name, ok) in &self.per_model {
+                pm.insert(name.clone(), Json::Num(*ok as f64));
+            }
+            m.insert("ok_per_model".to_string(), Json::Obj(pm));
+        }
         Json::Obj(m)
     }
 }
@@ -439,6 +462,13 @@ impl std::fmt::Display for LoadgenReport {
             self.wall_s, self.achieved_rps, self.mean_ms, self.p50_ms, self.p90_ms,
             self.p99_ms, self.max_ms
         )?;
+        if !self.per_model.is_empty() {
+            write!(f, "ok per model:")?;
+            for (name, ok) in &self.per_model {
+                write!(f, " {}={}", name, ok)?;
+            }
+            writeln!(f)?;
+        }
         write!(f, "{}", self.histogram.render())
     }
 }
@@ -454,35 +484,76 @@ struct WorkerTally {
     client_errors: u64,
     latencies_us: Vec<u64>,
     histogram: LatencyHistogram,
+    /// OK responses per traffic target (index-aligned with the run's
+    /// target list).
+    ok_by_target: Vec<u64>,
 }
 
-/// Probe `/healthz` for the served model's shape.
-fn probe_shape(addr: &str, timeout: Duration) -> Result<(usize, usize)> {
-    let mut probe = HttpClient::connect(addr, timeout)?;
+/// One traffic target: a (possibly unnamed) model plus its probed
+/// image shape and mix weight.
+#[derive(Debug, Clone)]
+struct Target {
+    /// `None` -> requests carry no `"model"` field (default model).
+    model: Option<String>,
+    weight: f64,
+    elems: usize,
+}
+
+/// Probe `/healthz` once and resolve every traffic target's image
+/// shape: the top-level `input_elems_per_image` for unnamed traffic,
+/// the per-model `models` object for named targets (failing fast with
+/// the registered names when a target is unknown).
+fn probe_targets(cfg: &LoadgenConfig) -> Result<Vec<Target>> {
+    let mut probe = HttpClient::connect(&cfg.addr, cfg.timeout)?;
     let resp = probe.get("/healthz").context("probing /healthz")?;
     if resp.status != 200 {
         bail!("/healthz answered {} — server unhealthy", resp.status);
     }
     let j = resp.json()?;
-    let elems = j
-        .get("input_elems_per_image")
-        .and_then(|v| v.as_usize())
-        .ok_or_else(|| anyhow!("/healthz reports no input_elems_per_image"))?;
-    let classes = j
-        .get("num_classes")
-        .and_then(|v| v.as_usize())
-        .unwrap_or(0);
-    Ok((elems, classes))
+    if cfg.models.is_empty() {
+        let elems = j
+            .get("input_elems_per_image")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("/healthz reports no input_elems_per_image"))?;
+        return Ok(vec![Target { model: None, weight: 1.0, elems }]);
+    }
+    let models = j
+        .get("models")
+        .and_then(|m| m.as_obj())
+        .ok_or_else(|| anyhow!("/healthz reports no per-model shapes (old server?)"))?;
+    let mut targets = Vec::with_capacity(cfg.models.len());
+    for (name, weight) in &cfg.models {
+        if !(weight.is_finite() && *weight > 0.0) {
+            bail!("model '{}' needs a finite weight > 0, got {}", name, weight);
+        }
+        let elems = models
+            .get(name)
+            .and_then(|m| m.get("input_elems_per_image"))
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| {
+                anyhow!(
+                    "model '{}' not served here (registered: {})",
+                    name,
+                    models.keys().cloned().collect::<Vec<_>>().join(", ")
+                )
+            })?;
+        targets.push(Target { model: Some(name.clone()), weight: *weight, elems });
+    }
+    Ok(targets)
 }
 
-/// Build the (reused) request body for one worker: synthetic normal
-/// pixels, compact JSON.
-fn request_body(elems: usize, batch: usize, seed: u64) -> Vec<u8> {
+/// Build the (reused) request body for one worker and target:
+/// synthetic normal pixels, compact JSON, `"model"` stamped for named
+/// targets.
+fn request_body(elems: usize, batch: usize, seed: u64, model: Option<&str>) -> Vec<u8> {
     let mut rng = Rng::new(seed);
     let image = |rng: &mut Rng| {
         Json::Arr((0..elems).map(|_| Json::Num(rng.normal() as f64)).collect())
     };
     let mut m = std::collections::BTreeMap::new();
+    if let Some(name) = model {
+        m.insert("model".to_string(), Json::Str(name.to_string()));
+    }
     if batch <= 1 {
         m.insert("image".to_string(), image(&mut rng));
     } else {
@@ -492,6 +563,22 @@ fn request_body(elems: usize, batch: usize, seed: u64) -> Vec<u8> {
         );
     }
     Json::Obj(m).to_string().into_bytes()
+}
+
+/// Weighted target pick for one request: deterministic (worker rng),
+/// skipping the draw entirely for single-target runs.
+fn pick_target(rng: &mut Rng, targets: &[Target], total_weight: f64) -> usize {
+    if targets.len() == 1 {
+        return 0;
+    }
+    let mut r = rng.f64() * total_weight;
+    for (i, t) in targets.iter().enumerate() {
+        r -= t.weight;
+        if r < 0.0 {
+            return i;
+        }
+    }
+    targets.len() - 1
 }
 
 /// Drive one load-generation run to completion.
@@ -504,7 +591,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             bail!("open-loop load needs a finite --qps > 0");
         }
     }
-    let (elems, _classes) = probe_shape(&cfg.addr, cfg.timeout)?;
+    let targets = probe_targets(cfg)?;
+    let total_weight: f64 = targets.iter().map(|t| t.weight).sum();
     let path = if cfg.batch <= 1 { "/v1/infer" } else { "/v1/infer_batch" };
 
     let workers = cfg.concurrency.min(cfg.requests);
@@ -513,10 +601,17 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let cfg = cfg.clone();
+            let targets = targets.clone();
             handles.push(scope.spawn(move || -> Result<WorkerTally> {
-                let body = request_body(elems, cfg.batch, cfg.seed.wrapping_add(w as u64));
+                let seed = cfg.seed.wrapping_add(w as u64);
+                let bodies: Vec<Vec<u8>> = targets
+                    .iter()
+                    .map(|t| request_body(t.elems, cfg.batch, seed, t.model.as_deref()))
+                    .collect();
+                let mut mix_rng = Rng::new(seed ^ 0x4D49_5845); // "MIXE"
                 let mut client = HttpClient::connect(&cfg.addr, cfg.timeout)?;
-                let mut tally = WorkerTally::default();
+                let mut tally =
+                    WorkerTally { ok_by_target: vec![0; targets.len()], ..Default::default() };
                 // Worker w owns global request indices w, w+C, w+2C, ...
                 let mut k = w;
                 while k < cfg.requests {
@@ -534,13 +629,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                             scheduled
                         }
                     };
+                    let ti = pick_target(&mut mix_rng, &targets, total_weight);
                     tally.sent += 1;
-                    match client.post(path, &body) {
+                    match client.post(path, &bodies[ti]) {
                         Ok(resp) => {
                             let us = anchor.elapsed().as_micros() as u64;
                             match resp.status {
                                 200..=299 => {
                                     tally.ok += 1;
+                                    tally.ok_by_target[ti] += 1;
                                     tally.latencies_us.push(us);
                                     tally.histogram.record(us);
                                 }
@@ -563,7 +660,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     });
     let wall_s = start.elapsed().as_secs_f64();
 
-    let mut merged = WorkerTally::default();
+    let mut merged =
+        WorkerTally { ok_by_target: vec![0; targets.len()], ..Default::default() };
     for t in tallies {
         let t = t?;
         merged.sent += t.sent;
@@ -574,6 +672,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         merged.client_errors += t.client_errors;
         merged.latencies_us.extend_from_slice(&t.latencies_us);
         merged.histogram.merge(&t.histogram);
+        for (a, b) in merged.ok_by_target.iter_mut().zip(&t.ok_by_target) {
+            *a += b;
+        }
     }
     merged.latencies_us.sort_unstable();
     let n = merged.latencies_us.len();
@@ -607,5 +708,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         p99_ms: pct(0.99),
         max_ms: merged.latencies_us.last().copied().unwrap_or(0) as f64 / 1e3,
         histogram: merged.histogram,
+        per_model: targets
+            .iter()
+            .zip(&merged.ok_by_target)
+            .filter_map(|(t, ok)| t.model.clone().map(|name| (name, *ok)))
+            .collect(),
     })
 }

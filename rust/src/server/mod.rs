@@ -1,19 +1,23 @@
 //! Network serving edge (L3's front door): HTTP/1.1 in front of the
-//! replicated [`BackendPool`](crate::coordinator::BackendPool).
+//! model [`Registry`](crate::registry::Registry) — one replicated
+//! [`BackendPool`](crate::coordinator::BackendPool) per registered
+//! pruning variant.
 //!
 //! ```text
 //!  clients --TCP--> server::http (listener, keep-alive workers,
 //!      |            bounded bodies, shutdown drain)
 //!      |                |  HttpRequest
 //!      |                v
-//!      |            server::routes (JSON <-> pool, error mapping,
-//!      |            /healthz, /metrics Prometheus exposition)
-//!      |                |  submit / infer_deadline
+//!      |            server::routes (JSON <-> registry, "model" field
+//!      |            routing, error mapping, /v1/models, /healthz,
+//!      |            /metrics with per-model labels)
+//!      |                |  resolve(model) -> pool, submit/infer_deadline
 //!      |                v
-//!      |            coordinator::BackendPool (admission, dispatch,
-//!      |            batching, replicas)
+//!      |            registry::Registry -> coordinator::BackendPool per
+//!      |            model (admission, dispatch, batching, replicas)
 //!      |
-//!  server::loadgen (open/closed-loop client, the measurement side)
+//!  server::loadgen (open/closed-loop client incl. --model-mix traffic,
+//!                   the measurement side)
 //! ```
 //!
 //! Everything is `std`-only — the crate's `anyhow`-only dependency

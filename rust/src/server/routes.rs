@@ -1,5 +1,6 @@
 //! Routing layer of the serving edge: JSON request/response bodies over
-//! the replicated [`BackendPool`], plus health and Prometheus metrics.
+//! the model [`Registry`] (one replicated [`BackendPool`] per
+//! registered pruning variant), plus health and Prometheus metrics.
 //!
 //! Routes:
 //!
@@ -7,26 +8,43 @@
 //! |--------|-------------------|-------------------------------------------|
 //! | POST   | `/v1/infer`       | one image -> logits + argmax + metadata   |
 //! | POST   | `/v1/infer_batch` | N images, pipelined through the batcher   |
-//! | GET    | `/healthz`        | liveness + model shape (loadgen probes it)|
-//! | GET    | `/metrics`        | Prometheus text exposition                |
+//! | GET    | `/v1/models`      | registered models, specs, readiness       |
+//! | GET    | `/healthz`        | liveness + per-model shape (loadgen probes)|
+//! | GET    | `/metrics`        | Prometheus text, per-model `model=` labels|
 //!
-//! Error mapping (the typed pool errors become status codes here):
+//! `/v1/infer` and `/v1/infer_batch` accept an optional `"model"` field
+//! naming a registered variant; requests without one go to the
+//! registry's default model, so single-model clients never change.
+//!
+//! Error mapping (the typed registry/pool errors become status codes
+//! here):
 //!
 //! | condition                                  | status                     |
 //! |--------------------------------------------|----------------------------|
 //! | malformed JSON / wrong shape / bad types   | 400                        |
-//! | admission shed ([`Overloaded`])            | 429 + `Retry-After`        |
+//! | unknown model name ([`UnknownModel`])      | 404 + registered names     |
+//! | admission shed ([`Overloaded`])            | 429 + computed `Retry-After`|
 //! | unknown path / wrong method                | 404 / 405                  |
-//! | all replicas dead, engine gone             | 503                        |
+//! | model failed to build, all replicas dead   | 503                        |
 //! | per-request deadline ([`DeadlineExceeded`])| 504                        |
+//!
+//! The 429 `Retry-After` is computed from the shedding pool's live
+//! queue depth, replica count and observed mean latency — a deep
+//! backlog on a slow model tells clients to stay away longer than a
+//! blip on a fast one.
 //!
 //! Transport-level rejections (408/411/413/431/505) are produced below
 //! this layer in `server::http` and do not pass through these counters.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::{BackendPool, DeadlineExceeded, InferenceResponse, Overloaded};
+use crate::coordinator::{
+    BackendPool, DeadlineExceeded, InferenceResponse, Overloaded, PoolMetricsReport, PoolStats,
+};
+use crate::registry::{Registry, UnknownModel};
 use crate::util::json::Json;
 
 use super::http::{HttpRequest, HttpResponse};
@@ -39,6 +57,7 @@ pub struct HttpCounters {
     pub requests_total: AtomicU64,
     pub infer_total: AtomicU64,
     pub infer_batch_total: AtomicU64,
+    pub models_total: AtomicU64,
     pub healthz_total: AtomicU64,
     pub metrics_total: AtomicU64,
     pub status_2xx: AtomicU64,
@@ -46,29 +65,79 @@ pub struct HttpCounters {
     pub status_5xx: AtomicU64,
     /// 429 responses (a subset of `status_4xx`).
     pub shed_total: AtomicU64,
+    /// 404s for a named-but-unregistered model (subset of `status_4xx`).
+    pub unknown_model_total: AtomicU64,
     /// 504 responses (a subset of `status_5xx`).
     pub deadline_total: AtomicU64,
 }
 
-/// Everything a request handler needs: the pool plus edge policy.
-/// Shared across connection workers behind an `Arc`.
+/// Edge-observed successful request latencies for one model (sum in
+/// us + count): the latency scale behind that model's computed 429
+/// `Retry-After`. Kept at the edge, per model, because asking the pool
+/// for its metrics round-trips through the engine thread — which under
+/// overload (exactly when 429s happen) queues behind the whole batch
+/// backlog — and a global mean would let a fast model's traffic mask a
+/// slow model's true drain time.
+#[derive(Debug, Default)]
+pub struct LatencyScale {
+    pub sum_us: AtomicU64,
+    pub count: AtomicU64,
+}
+
+impl LatencyScale {
+    /// Observed mean latency in ms, if any samples exist.
+    fn mean_ms(&self) -> Option<f64> {
+        let count = self.count.load(Ordering::Relaxed);
+        (count > 0)
+            .then(|| self.sum_us.load(Ordering::Relaxed) as f64 / count as f64 / 1e3)
+    }
+}
+
+/// Everything a request handler needs: the model registry plus edge
+/// policy. Shared across connection workers behind an `Arc`.
 pub struct AppState {
-    pub pool: BackendPool,
+    pub registry: Registry,
     /// Per-request deadline applied at this edge (`--request-timeout-ms`);
     /// `None` waits forever.
     pub request_timeout: Option<std::time::Duration>,
     pub counters: HttpCounters,
+    /// Per-model Retry-After latency scales (keys fixed at startup —
+    /// the registry's model set is immutable once built).
+    latency: std::collections::BTreeMap<String, LatencyScale>,
     started: Instant,
 }
 
 impl AppState {
+    /// Single-model back-compat constructor: wrap `pool` as the
+    /// registry's `"default"` model. Existing single-pool callers (the
+    /// bench, the legacy CLI path) keep working unchanged.
     pub fn new(pool: BackendPool, request_timeout: Option<std::time::Duration>) -> AppState {
+        Self::with_registry(Registry::single(pool), request_timeout)
+    }
+
+    /// Serve every model `registry` knows about.
+    pub fn with_registry(
+        registry: Registry,
+        request_timeout: Option<std::time::Duration>,
+    ) -> AppState {
+        let latency = registry
+            .names()
+            .iter()
+            .map(|n| (n.clone(), LatencyScale::default()))
+            .collect();
         AppState {
-            pool,
+            registry,
             request_timeout,
             counters: HttpCounters::default(),
+            latency,
             started: Instant::now(),
         }
+    }
+
+    /// The default model's pool (built if cold) — the handle tests and
+    /// the CLI use for direct (non-HTTP) access.
+    pub fn default_pool(&self) -> anyhow::Result<Arc<BackendPool>> {
+        self.registry.default_pool()
     }
 }
 
@@ -86,6 +155,10 @@ pub fn route(state: &AppState, req: &HttpRequest) -> HttpResponse {
             c.infer_batch_total.fetch_add(1, Ordering::Relaxed);
             infer_batch(state, req)
         }
+        ("GET", "/v1/models") => {
+            c.models_total.fetch_add(1, Ordering::Relaxed);
+            models(state)
+        }
         ("GET", "/healthz") => {
             c.healthz_total.fetch_add(1, Ordering::Relaxed);
             healthz(state)
@@ -94,7 +167,7 @@ pub fn route(state: &AppState, req: &HttpRequest) -> HttpResponse {
             c.metrics_total.fetch_add(1, Ordering::Relaxed);
             metrics(state)
         }
-        (_, "/v1/infer" | "/v1/infer_batch" | "/healthz" | "/metrics") => {
+        (_, "/v1/infer" | "/v1/infer_batch" | "/v1/models" | "/healthz" | "/metrics") => {
             error_response(405, "method not allowed for this path")
         }
         _ => error_response(404, "no such route"),
@@ -122,32 +195,78 @@ fn json_response(status: u16, j: &Json) -> HttpResponse {
 }
 
 fn error_response(status: u16, msg: &str) -> HttpResponse {
-    let mut m = std::collections::BTreeMap::new();
+    let mut m = BTreeMap::new();
     m.insert("error".to_string(), Json::Str(msg.to_string()));
     json_response(status, &Json::Obj(m))
 }
 
+/// Seconds a shed (429) client should back off before retrying,
+/// computed from the shedding pool's state instead of a constant: the
+/// backlog each replica must drain (`queue_depth / replicas`) times
+/// that model's edge-observed mean request latency, clamped to
+/// [1, 60] s. Uses only lock-free gauges — the shed path must never
+/// block on the engine thread it is shedding for. With no latency
+/// samples for the model yet, assumes 50 ms per request.
+fn retry_after_secs(state: &AppState, pool: &BackendPool, shed: &Overloaded) -> u64 {
+    let replicas = pool.replicas().max(1);
+    let backlog_per_replica = (shed.queue_depth as f64 / replicas as f64).ceil();
+    let mean_ms = state
+        .latency
+        .get(pool.model.as_str())
+        .and_then(|scale| scale.mean_ms())
+        .unwrap_or(50.0);
+    let est_s = backlog_per_replica * mean_ms.max(0.1) / 1e3;
+    (est_s.ceil() as u64).clamp(1, 60)
+}
+
 /// Map a failed pool inference to a status + body. Typed errors first
 /// (shed, deadline); anything else means the engine side is unhealthy.
-fn pool_error_response(state: &AppState, err: &anyhow::Error) -> HttpResponse {
+fn pool_error_response(state: &AppState, pool: &BackendPool, err: &anyhow::Error) -> HttpResponse {
     if let Some(o) = err.downcast_ref::<Overloaded>() {
-        let mut m = std::collections::BTreeMap::new();
+        let retry_after = retry_after_secs(state, pool, o);
+        let mut m = BTreeMap::new();
         m.insert("error".into(), Json::Str("pool overloaded; retry later".into()));
+        m.insert("model".into(), Json::Str(pool.model.as_str().to_string()));
         m.insert("queue_depth".into(), Json::Num(o.queue_depth as f64));
         m.insert("queue_capacity".into(), Json::Num(o.capacity as f64));
-        return json_response(429, &Json::Obj(m)).with_header("Retry-After", "1");
+        m.insert("retry_after_s".into(), Json::Num(retry_after as f64));
+        return json_response(429, &Json::Obj(m))
+            .with_header("Retry-After", &retry_after.to_string());
     }
     if err.downcast_ref::<DeadlineExceeded>().is_some() {
         let waited_ms = state
             .request_timeout
             .map(|d| d.as_secs_f64() * 1e3)
             .unwrap_or(0.0);
-        let mut m = std::collections::BTreeMap::new();
+        let mut m = BTreeMap::new();
         m.insert("error".into(), Json::Str("request deadline exceeded".into()));
         m.insert("deadline_ms".into(), Json::Num(waited_ms));
         return json_response(504, &Json::Obj(m));
     }
     error_response(503, &format!("inference unavailable: {:#}", err))
+}
+
+/// Map a model-resolution failure: a typed [`UnknownModel`] becomes a
+/// 404 listing the registered names; anything else (a spec whose pool
+/// failed to construct) is a 503.
+fn model_error_response(state: &AppState, err: &anyhow::Error) -> HttpResponse {
+    if let Some(u) = err.downcast_ref::<UnknownModel>() {
+        state
+            .counters
+            .unknown_model_total
+            .fetch_add(1, Ordering::Relaxed);
+        let mut m = BTreeMap::new();
+        m.insert(
+            "error".into(),
+            Json::Str(format!("unknown model '{}'", u.requested)),
+        );
+        m.insert(
+            "models".into(),
+            Json::Arr(u.known.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        return json_response(404, &Json::Obj(m));
+    }
+    error_response(503, &format!("model unavailable: {:#}", err))
 }
 
 fn parse_json_body(req: &HttpRequest) -> Result<Json, HttpResponse> {
@@ -156,9 +275,30 @@ fn parse_json_body(req: &HttpRequest) -> Result<Json, HttpResponse> {
     Json::parse(text).map_err(|e| error_response(400, &format!("malformed JSON: {}", e)))
 }
 
+/// Resolve the request body's optional `"model"` field to a registered
+/// name and its (lazily built) pool.
+fn resolve_pool(
+    state: &AppState,
+    body: &Json,
+) -> Result<(String, Arc<BackendPool>), HttpResponse> {
+    let requested = match body.get("model") {
+        None => None,
+        Some(Json::Str(s)) => Some(s.as_str()),
+        Some(_) => return Err(error_response(400, "\"model\" must be a string")),
+    };
+    let name = match state.registry.resolve(requested) {
+        Ok(n) => n.to_string(),
+        Err(e) => return Err(model_error_response(state, &e)),
+    };
+    match state.registry.pool(&name) {
+        Ok(pool) => Ok((name, pool)),
+        Err(e) => Err(model_error_response(state, &e)),
+    }
+}
+
 /// Extract one image (a JSON array of numbers) and validate its length
-/// against the pool's model shape.
-fn image_from(state: &AppState, j: &Json, what: &str) -> Result<Vec<f32>, HttpResponse> {
+/// against the target model's shape.
+fn image_from(want: usize, j: &Json, what: &str) -> Result<Vec<f32>, HttpResponse> {
     let arr = j
         .as_arr()
         .ok_or_else(|| error_response(400, &format!("{} must be an array of numbers", what)))?;
@@ -174,7 +314,6 @@ fn image_from(state: &AppState, j: &Json, what: &str) -> Result<Vec<f32>, HttpRe
             }
         }
     }
-    let want = state.pool.input_elems_per_image;
     if out.len() != want {
         return Err(error_response(
             400,
@@ -184,11 +323,12 @@ fn image_from(state: &AppState, j: &Json, what: &str) -> Result<Vec<f32>, HttpRe
     Ok(out)
 }
 
-/// One response object: logits, argmax, queue/latency metadata.
+/// One response object: model, logits, argmax, queue/latency metadata.
 /// `queue_depth` is sampled once by the caller (one snapshot per HTTP
 /// request, shared by every item of a batch).
-fn response_json(resp: &InferenceResponse, queue_depth: usize) -> Json {
-    let mut m = std::collections::BTreeMap::new();
+fn response_json(model: &str, resp: &InferenceResponse, queue_depth: usize) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("model".into(), Json::Str(model.to_string()));
     m.insert("predicted_class".into(), Json::Num(resp.predicted_class as f64));
     m.insert(
         "logits".into(),
@@ -205,26 +345,48 @@ fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
         Ok(j) => j,
         Err(resp) => return resp,
     };
+    let (model, pool) = match resolve_pool(state, &body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
     let image_json = match body.get("image") {
         Some(j) => j,
         None => return error_response(400, "missing \"image\" field"),
     };
-    let image = match image_from(state, image_json, "\"image\"") {
+    let image = match image_from(pool.input_elems_per_image, image_json, "\"image\"") {
         Ok(v) => v,
         Err(resp) => return resp,
     };
-    match state.pool.infer_deadline(image, state.request_timeout) {
+    match pool.infer_deadline(image, state.request_timeout) {
         Ok(resp) => {
-            let depth = state.pool.stats().queue_depth;
-            json_response(200, &response_json(&resp, depth))
+            record_latency(state, &resp);
+            let depth = pool.stats().queue_depth;
+            json_response(200, &response_json(&model, &resp, depth))
         }
-        Err(e) => pool_error_response(state, &e),
+        Err(e) => pool_error_response(state, &pool, &e),
+    }
+}
+
+/// Feed one successful response's engine-measured latency into its
+/// model's Retry-After scale.
+fn record_latency(state: &AppState, resp: &InferenceResponse) {
+    if let Some(scale) = state.latency.get(resp.model.as_str()) {
+        scale
+            .sum_us
+            .fetch_add(resp.latency.as_micros() as u64, Ordering::Relaxed);
+        scale.count.fetch_add(1, Ordering::Relaxed);
     }
 }
 
 fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
     let body = match parse_json_body(req) {
         Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    // One model per batch request: the whole batch routes to one pool
+    // (mixed-model batches would defeat the per-replica batcher).
+    let (model, pool) = match resolve_pool(state, &body) {
+        Ok(v) => v,
         Err(resp) => return resp,
     };
     let images_json = match body.get("images").and_then(|j| j.as_arr()) {
@@ -234,7 +396,7 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
     };
     let mut images = Vec::with_capacity(images_json.len());
     for (i, j) in images_json.iter().enumerate() {
-        match image_from(state, j, &format!("images[{}]", i)) {
+        match image_from(pool.input_elems_per_image, j, &format!("images[{}]", i)) {
             Ok(v) => images.push(v),
             Err(resp) => return resp,
         }
@@ -244,19 +406,19 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
     // them as one dispatch instead of N serialized singletons.
     let mut rxs = Vec::with_capacity(images.len());
     for image in images {
-        match state.pool.submit(image) {
+        match pool.submit(image) {
             Ok(rx) => rxs.push(rx),
             // All-or-nothing shed: answering 429 for the whole request
             // keeps retry semantics simple. Receivers already submitted
             // are dropped; the engine completes them and releases their
             // admission slots.
-            Err(e) => return pool_error_response(state, &e),
+            Err(e) => return pool_error_response(state, &pool, &e),
         }
     }
     // One deadline for the whole batch, shared across the collects, and
     // one queue-depth snapshot shared by every item's metadata.
     let deadline = state.request_timeout.map(|d| Instant::now() + d);
-    let queue_depth = state.pool.stats().queue_depth;
+    let queue_depth = pool.stats().queue_depth;
     let mut results = Vec::with_capacity(rxs.len());
     for rx in rxs {
         let received = match deadline {
@@ -273,38 +435,141 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
             }
         };
         match received {
-            Ok(resp) => results.push(response_json(&resp, queue_depth)),
-            Err(e) => return pool_error_response(state, &e),
+            Ok(resp) => {
+                record_latency(state, &resp);
+                results.push(response_json(&model, &resp, queue_depth));
+            }
+            Err(e) => return pool_error_response(state, &pool, &e),
         }
     }
-    let mut m = std::collections::BTreeMap::new();
+    let mut m = BTreeMap::new();
+    m.insert("model".into(), Json::Str(model));
     m.insert("count".into(), Json::Num(results.len() as f64));
     m.insert("results".into(), Json::Arr(results));
     json_response(200, &Json::Obj(m))
 }
 
+/// `GET /v1/models`: every registered variant, its spec, readiness and
+/// pool policy, in registration order.
+fn models(state: &AppState) -> HttpResponse {
+    let default = state.registry.default_model();
+    let list: Vec<Json> = state
+        .registry
+        .describe_all()
+        .into_iter()
+        .map(|info| {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(info.name.clone()));
+            m.insert(
+                "spec".into(),
+                match &info.spec {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            );
+            m.insert(
+                "backend".into(),
+                match &info.backend_name {
+                    Some(b) => Json::Str(b.clone()),
+                    None => Json::Null,
+                },
+            );
+            m.insert("ready".into(), Json::Bool(info.ready));
+            m.insert("default".into(), Json::Bool(info.name == default));
+            m.insert("replicas".into(), Json::Num(info.replicas as f64));
+            m.insert("queue_capacity".into(), Json::Num(info.queue_capacity as f64));
+            m.insert("batch_capacity".into(), Json::Num(info.batch_capacity as f64));
+            m.insert(
+                "input_elems_per_image".into(),
+                Json::Num(info.input_elems_per_image as f64),
+            );
+            m.insert("num_classes".into(), Json::Num(info.num_classes as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut m = BTreeMap::new();
+    m.insert("default".into(), Json::Str(default.to_string()));
+    m.insert("models".into(), Json::Arr(list));
+    json_response(200, &Json::Obj(m))
+}
+
 fn healthz(state: &AppState) -> HttpResponse {
-    let replicas = state.pool.replicas();
-    let dead = state.pool.metrics().map(|m| m.dead_replicas).unwrap_or(replicas);
-    let mut m = std::collections::BTreeMap::new();
+    let default = state.registry.default_model().to_string();
+    let mut models_obj = BTreeMap::new();
+    let mut default_dead = 0usize;
+    for info in state.registry.describe_all() {
+        let dead = state
+            .registry
+            .ready_pool(&info.name)
+            .map(|p| p.metrics().map(|m| m.dead_replicas).unwrap_or(info.replicas))
+            .unwrap_or(0);
+        let status = if !info.ready {
+            "cold"
+        } else if dead >= info.replicas {
+            "dead"
+        } else {
+            "ok"
+        };
+        if info.name == default {
+            default_dead = if info.ready { dead } else { 0 };
+        }
+        let mut m = BTreeMap::new();
+        m.insert("status".into(), Json::Str(status.to_string()));
+        m.insert(
+            "spec".into(),
+            match &info.spec {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        );
+        m.insert("ready".into(), Json::Bool(info.ready));
+        m.insert("replicas".into(), Json::Num(info.replicas as f64));
+        m.insert("dead_replicas".into(), Json::Num(dead as f64));
+        m.insert(
+            "input_elems_per_image".into(),
+            Json::Num(info.input_elems_per_image as f64),
+        );
+        m.insert("num_classes".into(), Json::Num(info.num_classes as f64));
+        m.insert("batch_capacity".into(), Json::Num(info.batch_capacity as f64));
+        models_obj.insert(info.name.clone(), Json::Obj(m));
+    }
+
+    // Top-level fields describe the default model — the shape probe
+    // single-model clients (and `loadgen` without --model) rely on.
+    let info = state
+        .registry
+        .describe(&default)
+        .expect("default model is always registered");
+    let all_dead = info.ready && default_dead >= info.replicas;
+    let mut m = BTreeMap::new();
     m.insert(
         "status".into(),
-        Json::Str(if dead >= replicas { "dead" } else { "ok" }.into()),
+        Json::Str(if all_dead { "dead" } else { "ok" }.into()),
     );
-    m.insert("backend".into(), Json::Str(state.pool.backend_name.clone()));
-    m.insert("replicas".into(), Json::Num(replicas as f64));
-    m.insert("dead_replicas".into(), Json::Num(dead as f64));
+    m.insert("default_model".into(), Json::Str(default));
+    m.insert(
+        "backend".into(),
+        Json::Str(
+            info.backend_name
+                .clone()
+                .or_else(|| info.spec.clone())
+                .unwrap_or_else(|| "unknown".into()),
+        ),
+    );
+    m.insert("replicas".into(), Json::Num(info.replicas as f64));
+    m.insert("dead_replicas".into(), Json::Num(default_dead as f64));
     m.insert(
         "input_elems_per_image".into(),
-        Json::Num(state.pool.input_elems_per_image as f64),
+        Json::Num(info.input_elems_per_image as f64),
     );
-    m.insert("num_classes".into(), Json::Num(state.pool.num_classes as f64));
-    m.insert("batch_capacity".into(), Json::Num(state.pool.batch_capacity as f64));
+    m.insert("num_classes".into(), Json::Num(info.num_classes as f64));
+    m.insert("batch_capacity".into(), Json::Num(info.batch_capacity as f64));
     m.insert(
         "uptime_s".into(),
         Json::Num(state.started.elapsed().as_secs_f64()),
     );
-    let status = if dead >= replicas { 503 } else { 200 };
+    m.insert("models".into(), Json::Obj(models_obj));
+    let status = if all_dead { 503 } else { 200 };
     json_response(status, &Json::Obj(m))
 }
 
@@ -319,13 +584,47 @@ fn prom_scalar(out: &mut String, name: &str, kind: &str, help: &str, value: f64)
     ));
 }
 
-/// Prometheus text exposition (format 0.0.4) rendered from
-/// `PoolMetricsReport` + `PoolStats` + the HTTP edge counters.
+/// One HELP/TYPE preamble followed by a labelled sample per row
+/// (`rows` = `(label_list, value)`). Skipped entirely when empty so the
+/// exposition never carries a preamble without samples.
+fn prom_block(out: &mut String, name: &str, kind: &str, help: &str, rows: &[(String, f64)]) {
+    if rows.is_empty() {
+        return;
+    }
+    out.push_str(&format!("# HELP {n} {h}\n# TYPE {n} {k}\n", n = name, h = help, k = kind));
+    for (labels, value) in rows {
+        out.push_str(&format!("{}{{{}}} {}\n", name, labels, value));
+    }
+}
+
+/// Everything `/metrics` scrapes from one registered model. Cold models
+/// contribute only their `vitfpga_model_ready 0` sample — a scrape must
+/// never cold-start a pool.
+struct ModelScrape {
+    name: String,
+    stats: Option<PoolStats>,
+    report: Option<PoolMetricsReport>,
+}
+
+/// Prometheus text exposition (format 0.0.4): per-model pool gauges
+/// under `model="..."` labels, plus the HTTP edge counters.
 fn metrics(state: &AppState) -> HttpResponse {
-    let stats = state.pool.stats();
-    let report = state.pool.metrics().ok();
+    let scrapes: Vec<ModelScrape> = state
+        .registry
+        .names()
+        .iter()
+        .map(|name| match state.registry.ready_pool(name) {
+            Some(pool) => ModelScrape {
+                name: name.clone(),
+                stats: Some(pool.stats()),
+                report: pool.metrics().ok(),
+            },
+            None => ModelScrape { name: name.clone(), stats: None, report: None },
+        })
+        .collect();
     let c = &state.counters;
-    let mut out = String::with_capacity(2048);
+    let mut out = String::with_capacity(4096);
+    let label = |name: &str| format!("model=\"{}\"", name);
 
     prom_scalar(
         &mut out,
@@ -334,90 +633,146 @@ fn metrics(state: &AppState) -> HttpResponse {
         "Seconds since the serving edge started.",
         state.started.elapsed().as_secs_f64(),
     );
-    prom_scalar(
+    prom_block(
+        &mut out,
+        "vitfpga_model_ready",
+        "gauge",
+        "1 once the model's pool is constructed (0 = registered, cold).",
+        &scrapes
+            .iter()
+            .map(|s| (label(&s.name), if s.stats.is_some() { 1.0 } else { 0.0 }))
+            .collect::<Vec<_>>(),
+    );
+
+    let stat_rows = |f: &dyn Fn(&PoolStats) -> f64| -> Vec<(String, f64)> {
+        scrapes
+            .iter()
+            .filter_map(|s| s.stats.as_ref().map(|st| (label(&s.name), f(st))))
+            .collect()
+    };
+    prom_block(
         &mut out,
         "vitfpga_pool_queue_depth",
         "gauge",
         "Admitted-but-unanswered requests right now.",
-        stats.queue_depth as f64,
+        &stat_rows(&|st| st.queue_depth as f64),
     );
-    prom_scalar(
+    prom_block(
         &mut out,
         "vitfpga_pool_queue_capacity",
         "gauge",
         "Hard bound on admitted in-flight requests.",
-        stats.queue_capacity as f64,
+        &stat_rows(&|st| st.queue_capacity as f64),
     );
-    prom_scalar(
+    prom_block(
         &mut out,
         "vitfpga_pool_shed_total",
         "counter",
         "Submits rejected with Overloaded since start.",
-        stats.shed_count as f64,
+        &stat_rows(&|st| st.shed_count as f64),
     );
 
-    if let Some(r) = &report {
-        prom_scalar(
-            &mut out,
-            "vitfpga_pool_requests_total",
-            "counter",
-            "Requests answered by the pool.",
-            r.pool.requests as f64,
-        );
-        prom_scalar(
-            &mut out,
-            "vitfpga_pool_batches_total",
-            "counter",
-            "Batches dispatched across all replicas.",
-            r.pool.batches as f64,
-        );
-        prom_scalar(
-            &mut out,
-            "vitfpga_pool_mean_batch_occupancy",
-            "gauge",
-            "Mean requests per dispatched batch.",
-            r.pool.mean_batch_occupancy,
-        );
-        prom_scalar(
-            &mut out,
-            "vitfpga_pool_dead_replicas",
-            "gauge",
-            "Replicas whose engine no longer answers.",
-            r.dead_replicas as f64,
-        );
+    let report_rows = |f: &dyn Fn(&PoolMetricsReport) -> f64| -> Vec<(String, f64)> {
+        scrapes
+            .iter()
+            .filter_map(|s| s.report.as_ref().map(|r| (label(&s.name), f(r))))
+            .collect()
+    };
+    prom_block(
+        &mut out,
+        "vitfpga_pool_requests_total",
+        "counter",
+        "Requests answered by the model's pool.",
+        &report_rows(&|r| r.pool.requests as f64),
+    );
+    prom_block(
+        &mut out,
+        "vitfpga_pool_batches_total",
+        "counter",
+        "Batches dispatched across the model's replicas.",
+        &report_rows(&|r| r.pool.batches as f64),
+    );
+    prom_block(
+        &mut out,
+        "vitfpga_pool_mean_batch_occupancy",
+        "gauge",
+        "Mean requests per dispatched batch.",
+        &report_rows(&|r| r.pool.mean_batch_occupancy),
+    );
+    prom_block(
+        &mut out,
+        "vitfpga_pool_dead_replicas",
+        "gauge",
+        "Replicas whose engine no longer answers.",
+        &report_rows(&|r| r.dead_replicas as f64),
+    );
+
+    // Latency summary: per-model quantiles + _sum/_count.
+    if scrapes.iter().any(|s| s.report.is_some()) {
         out.push_str(
             "# HELP vitfpga_pool_latency_ms Request latency (queue+batch+execute), pooled \
-             across replicas.\n# TYPE vitfpga_pool_latency_ms summary\n",
+             across the model's replicas.\n# TYPE vitfpga_pool_latency_ms summary\n",
         );
-        for (q, v) in [(0.5, r.pool.p50_ms), (0.95, r.pool.p95_ms), (0.99, r.pool.p99_ms)] {
+        for s in &scrapes {
+            let r = match &s.report {
+                Some(r) => r,
+                None => continue,
+            };
+            for (q, v) in [(0.5, r.pool.p50_ms), (0.95, r.pool.p95_ms), (0.99, r.pool.p99_ms)] {
+                out.push_str(&format!(
+                    "vitfpga_pool_latency_ms{{{},quantile=\"{}\"}} {}\n",
+                    label(&s.name),
+                    q,
+                    v
+                ));
+            }
             out.push_str(&format!(
-                "vitfpga_pool_latency_ms{{quantile=\"{}\"}} {}\n",
-                q, v
+                "vitfpga_pool_latency_ms_sum{{{}}} {}\n",
+                label(&s.name),
+                r.pool.sum_ms
             ));
-        }
-        out.push_str(&format!("vitfpga_pool_latency_ms_sum {}\n", r.pool.sum_ms));
-        out.push_str(&format!("vitfpga_pool_latency_ms_count {}\n", r.pool.requests));
-        out.push_str(
-            "# HELP vitfpga_pool_replica_requests_total Requests answered per replica.\n\
-             # TYPE vitfpga_pool_replica_requests_total counter\n",
-        );
-        for (i, rep) in r.per_replica.iter().enumerate() {
             out.push_str(&format!(
-                "vitfpga_pool_replica_requests_total{{replica=\"{}\"}} {}\n",
-                i, rep.requests
+                "vitfpga_pool_latency_ms_count{{{}}} {}\n",
+                label(&s.name),
+                r.pool.requests
             ));
         }
     }
-    out.push_str(
-        "# HELP vitfpga_pool_replica_inflight In-flight requests per replica (dispatch \
-         gauge).\n# TYPE vitfpga_pool_replica_inflight gauge\n",
+
+    let mut replica_requests = Vec::new();
+    let mut replica_inflight = Vec::new();
+    for s in &scrapes {
+        if let Some(r) = &s.report {
+            for (i, rep) in r.per_replica.iter().enumerate() {
+                replica_requests.push((
+                    format!("{},replica=\"{}\"", label(&s.name), i),
+                    rep.requests as f64,
+                ));
+            }
+        }
+        if let Some(st) = &s.stats {
+            for (i, n) in st.per_replica_inflight.iter().enumerate() {
+                replica_inflight.push((
+                    format!("{},replica=\"{}\"", label(&s.name), i),
+                    *n as f64,
+                ));
+            }
+        }
+    }
+    prom_block(
+        &mut out,
+        "vitfpga_pool_replica_requests_total",
+        "counter",
+        "Requests answered per replica.",
+        &replica_requests,
     );
-    for (i, n) in stats.per_replica_inflight.iter().enumerate() {
-        out.push_str(&format!(
-            "vitfpga_pool_replica_inflight{{replica=\"{}\"}} {}\n",
-            i, n
-        ));
-    }
+    prom_block(
+        &mut out,
+        "vitfpga_pool_replica_inflight",
+        "gauge",
+        "In-flight requests per replica (dispatch gauge).",
+        &replica_inflight,
+    );
 
     prom_scalar(
         &mut out,
@@ -426,41 +781,46 @@ fn metrics(state: &AppState) -> HttpResponse {
         "HTTP requests routed (parse-level rejects excluded).",
         c.requests_total.load(Ordering::Relaxed) as f64,
     );
-    out.push_str(
-        "# HELP vitfpga_http_route_requests_total HTTP requests per route.\n\
-         # TYPE vitfpga_http_route_requests_total counter\n",
+    prom_block(
+        &mut out,
+        "vitfpga_http_route_requests_total",
+        "counter",
+        "HTTP requests per route.",
+        &[
+            ("route=\"infer\"".to_string(), c.infer_total.load(Ordering::Relaxed) as f64),
+            (
+                "route=\"infer_batch\"".to_string(),
+                c.infer_batch_total.load(Ordering::Relaxed) as f64,
+            ),
+            ("route=\"models\"".to_string(), c.models_total.load(Ordering::Relaxed) as f64),
+            ("route=\"healthz\"".to_string(), c.healthz_total.load(Ordering::Relaxed) as f64),
+            ("route=\"metrics\"".to_string(), c.metrics_total.load(Ordering::Relaxed) as f64),
+        ],
     );
-    for (route, n) in [
-        ("infer", c.infer_total.load(Ordering::Relaxed)),
-        ("infer_batch", c.infer_batch_total.load(Ordering::Relaxed)),
-        ("healthz", c.healthz_total.load(Ordering::Relaxed)),
-        ("metrics", c.metrics_total.load(Ordering::Relaxed)),
-    ] {
-        out.push_str(&format!(
-            "vitfpga_http_route_requests_total{{route=\"{}\"}} {}\n",
-            route, n
-        ));
-    }
-    out.push_str(
-        "# HELP vitfpga_http_responses_total HTTP responses by status class.\n\
-         # TYPE vitfpga_http_responses_total counter\n",
+    prom_block(
+        &mut out,
+        "vitfpga_http_responses_total",
+        "counter",
+        "HTTP responses by status class.",
+        &[
+            ("class=\"2xx\"".to_string(), c.status_2xx.load(Ordering::Relaxed) as f64),
+            ("class=\"4xx\"".to_string(), c.status_4xx.load(Ordering::Relaxed) as f64),
+            ("class=\"5xx\"".to_string(), c.status_5xx.load(Ordering::Relaxed) as f64),
+        ],
     );
-    for (class, n) in [
-        ("2xx", c.status_2xx.load(Ordering::Relaxed)),
-        ("4xx", c.status_4xx.load(Ordering::Relaxed)),
-        ("5xx", c.status_5xx.load(Ordering::Relaxed)),
-    ] {
-        out.push_str(&format!(
-            "vitfpga_http_responses_total{{class=\"{}\"}} {}\n",
-            class, n
-        ));
-    }
     prom_scalar(
         &mut out,
         "vitfpga_http_shed_total",
         "counter",
         "429 responses (admission shed mapped to HTTP).",
         c.shed_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_scalar(
+        &mut out,
+        "vitfpga_http_unknown_model_total",
+        "counter",
+        "404 responses for a named-but-unregistered model.",
+        c.unknown_model_total.load(Ordering::Relaxed) as f64,
     );
     prom_scalar(
         &mut out,

@@ -9,6 +9,11 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    /// Every `--key value` occurrence in command-line order. `options`
+    /// keeps only the last value per key; repeatable options (e.g.
+    /// `serve --model a=SPEC --model b=SPEC`) read all of them via
+    /// [`Args::get_all`].
+    pub repeated: Vec<(String, String)>,
 }
 
 impl Args {
@@ -18,6 +23,7 @@ impl Args {
         while let Some(a) = argv.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
+                    out.repeated.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else if argv
                     .peek()
@@ -25,6 +31,7 @@ impl Args {
                     .unwrap_or(false)
                 {
                     let v = argv.next().unwrap();
+                    out.repeated.push((rest.to_string(), v.clone()));
                     out.options.insert(rest.to_string(), v);
                 } else {
                     out.flags.push(rest.to_string());
@@ -42,6 +49,16 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value given for a repeatable `--key`, in command-line
+    /// order ([`Args::get`] sees only the last one).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.repeated
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -97,6 +114,18 @@ mod tests {
         let a = parse("--dry-run --n 3");
         assert!(a.has_flag("dry-run"));
         assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn repeated_options_all_kept_in_order() {
+        let a = parse("serve --model a=x@y --model b=z@w --replicas 2 --model=c=q");
+        // `get` keeps the last-wins behaviour existing callers rely on...
+        assert_eq!(a.get("model"), Some("c=q"));
+        // ...while `get_all` sees every occurrence, in order, in both
+        // `--key value` and `--key=value` spellings.
+        assert_eq!(a.get_all("model"), vec!["a=x@y", "b=z@w", "c=q"]);
+        assert_eq!(a.get_all("replicas"), vec!["2"]);
+        assert!(a.get_all("absent").is_empty());
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Integration battery for the HTTP serving edge, driven over real
 //! loopback sockets: response parity with direct `BackendPool::infer`,
-//! typed-error -> status-code mapping (429 shed with `Retry-After`,
-//! 504 deadline), malformed/oversized body rejection, Prometheus
-//! scrape well-formedness with advancing counters, keep-alive reuse,
-//! and graceful drain-on-shutdown. Runs with the default feature set —
-//! no artifacts, no XLA toolchain, no non-std dependencies.
+//! typed-error -> status-code mapping (429 shed with a computed
+//! `Retry-After`, 504 deadline, 404 unknown model), mixed-model
+//! routing through the registry (per-model parity with dedicated
+//! pools, `model="..."` metric labels, `--model-mix` loadgen),
+//! malformed/oversized body rejection, Prometheus scrape
+//! well-formedness with advancing counters, keep-alive reuse, and
+//! graceful drain-on-shutdown. Runs with the default feature set — no
+//! artifacts, no XLA toolchain, no non-std dependencies.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -16,6 +19,7 @@ use vitfpga::backend::{Backend, NativeBackend};
 use vitfpga::config::{PruningSetting, TEST_TINY};
 use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
 use vitfpga::funcsim::Precision;
+use vitfpga::registry::{ModelSpec, Registry};
 use vitfpga::server::{route, AppState, HttpClient, HttpConfig, HttpRequest, HttpServer};
 use vitfpga::util::json::Json;
 use vitfpga::util::rng::Rng;
@@ -96,13 +100,27 @@ fn serve(
     timeout: Option<Duration>,
     config: HttpConfig,
 ) -> (HttpServer, Arc<AppState>) {
-    let state = Arc::new(AppState::new(pool, timeout));
+    serve_registry(Registry::single(pool), timeout, config)
+}
+
+/// Boot a server over a full model registry.
+fn serve_registry(
+    registry: Registry,
+    timeout: Option<Duration>,
+    config: HttpConfig,
+) -> (HttpServer, Arc<AppState>) {
+    let state = Arc::new(AppState::with_registry(registry, timeout));
     let handler_state = Arc::clone(&state);
     let server = HttpServer::start("127.0.0.1:0", config, move |req: &HttpRequest| {
         route(&handler_state, req)
     })
     .expect("http server start");
     (server, state)
+}
+
+/// The state's default-model pool (always prebuilt in these tests).
+fn pool_of(state: &AppState) -> Arc<BackendPool> {
+    state.default_pool().expect("default pool")
 }
 
 fn client_for(server: &HttpServer) -> HttpClient {
@@ -155,7 +173,8 @@ fn infer_parity_with_direct_pool() {
     // The same pool answers over HTTP and in-process; logits must match
     // bit-for-bit (f32 -> JSON f64 shortest-repr -> f32 is lossless).
     let (server, state) = serve(native_pool(1), None, HttpConfig::default());
-    let per = state.pool.input_elems_per_image;
+    let pool = pool_of(&state);
+    let per = pool.input_elems_per_image;
     let mut client = client_for(&server);
     for (i, img) in synthetic_images(3, per, 7).into_iter().enumerate() {
         let resp = client
@@ -163,7 +182,7 @@ fn infer_parity_with_direct_pool() {
             .expect("http infer");
         assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
         let j = resp.json().expect("response is JSON");
-        let want = state.pool.infer(img).expect("direct pool infer");
+        let want = pool.infer(img).expect("direct pool infer");
         assert_eq!(logits_of(&j), want.logits, "image {}: HTTP logits != pool logits", i);
         assert_eq!(
             j.get("predicted_class").and_then(|v| v.as_usize()),
@@ -181,7 +200,8 @@ fn infer_parity_with_direct_pool() {
 #[test]
 fn batch_parity_with_direct_pool() {
     let (server, state) = serve(native_pool(2), None, HttpConfig::default());
-    let per = state.pool.input_elems_per_image;
+    let pool = pool_of(&state);
+    let per = pool.input_elems_per_image;
     let imgs = synthetic_images(3, per, 11);
     let mut client = client_for(&server);
     let resp = client
@@ -193,7 +213,7 @@ fn batch_parity_with_direct_pool() {
     let results = j.get("results").and_then(|r| r.as_arr()).expect("results array");
     assert_eq!(results.len(), 3);
     for (i, (r, img)) in results.iter().zip(&imgs).enumerate() {
-        let want = state.pool.infer(img.clone()).expect("direct pool infer");
+        let want = pool.infer(img.clone()).expect("direct pool infer");
         assert_eq!(logits_of(r), want.logits, "batch item {} logits mismatch", i);
     }
 }
@@ -206,18 +226,33 @@ fn shed_maps_to_429_with_retry_after() {
     )
     .expect("slow pool start");
     let (server, state) = serve(pool, None, HttpConfig::default());
+    let direct = pool_of(&state);
     // Fill both admission slots directly at the pool...
-    let a = state.pool.submit(vec![1.0, 0.0]).expect("slot 1");
-    let b = state.pool.submit(vec![2.0, 0.0]).expect("slot 2");
+    let a = direct.submit(vec![1.0, 0.0]).expect("slot 1");
+    let b = direct.submit(vec![2.0, 0.0]).expect("slot 2");
     // ...then the HTTP request must shed.
     let mut client = client_for(&server);
     let resp = client
         .post("/v1/infer", &image_body(&[3.0, 0.0]))
         .expect("http exchange");
     assert_eq!(resp.status, 429);
-    assert_eq!(resp.header("retry-after"), Some("1"), "429 must carry Retry-After");
+    // Retry-After is computed from the shedding pool's queue depth,
+    // replica count and observed latency — not a constant. It must be
+    // a positive integer within the clamp, and the JSON body must echo
+    // the same value.
+    let retry: u64 = resp
+        .header("retry-after")
+        .expect("429 must carry Retry-After")
+        .parse()
+        .expect("Retry-After is an integer");
+    assert!((1..=60).contains(&retry), "Retry-After {} outside [1, 60]", retry);
     let j = resp.json().expect("shed body is JSON");
     assert_eq!(j.get("queue_capacity").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(
+        j.get("retry_after_s").and_then(|v| v.as_usize()),
+        Some(retry as usize),
+        "body retry_after_s must match the header"
+    );
     drop(a);
     drop(b);
 }
@@ -325,7 +360,7 @@ fn chunked_transfer_encoding_maps_to_411() {
 #[test]
 fn keep_alive_serves_sequential_requests_on_one_connection() {
     let (server, state) = serve(native_pool(1), None, HttpConfig::default());
-    let per = state.pool.input_elems_per_image;
+    let per = pool_of(&state).input_elems_per_image;
     let mut client = client_for(&server);
     let img = synthetic_images(1, per, 3).remove(0);
     for round in 0..3 {
@@ -351,7 +386,7 @@ fn prom_value(text: &str, name_with_labels: &str) -> Option<f64> {
 #[test]
 fn metrics_scrape_parses_and_counters_advance() {
     let (server, state) = serve(native_pool(2), None, HttpConfig::default());
-    let per = state.pool.input_elems_per_image;
+    let per = pool_of(&state).input_elems_per_image;
     let mut client = client_for(&server);
 
     let scrape = |client: &mut HttpClient| -> String {
@@ -397,6 +432,279 @@ fn metrics_scrape_parses_and_counters_advance() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// model registry over HTTP
+// ---------------------------------------------------------------------------
+
+const FAST_SPEC: &str = "test-tiny@b8_rb0.5_rt0.5@seed=5";
+const ACCURATE_SPEC: &str = "test-tiny@b8_rb0.7_rt0.9@seed=6";
+
+/// Two differently-pruned synth variants in one registry: "fast"
+/// (heavier pruning) and "accurate" (lighter). One intra-layer worker
+/// keeps the battery lean; results are thread-count independent.
+fn two_variant_registry() -> Registry {
+    let defaults = PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 };
+    Registry::builder(defaults)
+        .register("fast", ModelSpec::parse(FAST_SPEC).expect("fast spec"), Some(1))
+        .expect("register fast")
+        .register("accurate", ModelSpec::parse(ACCURATE_SPEC).expect("accurate spec"), Some(1))
+        .expect("register accurate")
+        .finish()
+        .expect("two-variant registry")
+}
+
+/// A dedicated single-model pool built from the same spec a registry
+/// entry uses — the bit-exact parity reference.
+fn dedicated_pool(spec: &str) -> BackendPool {
+    let spec = ModelSpec::parse(spec).expect("parity spec");
+    BackendPool::start(
+        move |_i| NativeBackend::from_spec(&spec).map(|nb| nb.with_threads(1)),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 },
+    )
+    .expect("dedicated pool start")
+}
+
+fn image_body_for(model: &str, img: &[f32]) -> Vec<u8> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("model".to_string(), Json::Str(model.to_string()));
+    m.insert(
+        "image".to_string(),
+        Json::Arr(img.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(m).to_string().into_bytes()
+}
+
+#[test]
+fn mixed_models_route_by_name_with_parity_and_labels() {
+    // The acceptance bar: one server, two differently-pruned variants;
+    // /v1/infer routes by name with bit-exact parity against a
+    // dedicated single-model pool for each, and /metrics reports them
+    // under distinct model labels.
+    let (server, state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let addr = server.local_addr().to_string();
+    let fast_ref = dedicated_pool(FAST_SPEC);
+    let accurate_ref = dedicated_pool(ACCURATE_SPEC);
+    let per = fast_ref.input_elems_per_image;
+    assert_eq!(per, accurate_ref.input_elems_per_image);
+
+    // Concurrent clients, each pinned to one variant, interleaving on
+    // the wire.
+    let handles: Vec<_> = [("fast", 0u64), ("accurate", 1), ("fast", 2), ("accurate", 3)]
+        .into_iter()
+        .map(|(model, seed)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Vec<(Vec<f32>, Vec<f32>, usize)> {
+                let mut client =
+                    HttpClient::connect(&addr, Duration::from_secs(10)).expect("client");
+                synthetic_images(3, per, 100 + seed)
+                    .into_iter()
+                    .map(|img| {
+                        let resp = client
+                            .post("/v1/infer", &image_body_for(model, &img))
+                            .expect("mixed infer");
+                        assert_eq!(resp.status, 200, "model {} must answer", model);
+                        let j = resp.json().expect("json");
+                        assert_eq!(
+                            j.get("model").and_then(|v| v.as_str()),
+                            Some(model),
+                            "response must echo the routed model"
+                        );
+                        let argmax = j
+                            .get("predicted_class")
+                            .and_then(|v| v.as_usize())
+                            .expect("argmax");
+                        (img, logits_of(&j), argmax)
+                    })
+                    .collect()
+            })
+        })
+        .collect();
+    for (w, h) in handles.into_iter().enumerate() {
+        let reference = if w % 2 == 0 { &fast_ref } else { &accurate_ref };
+        for (i, (img, got, argmax)) in h.join().expect("client thread").into_iter().enumerate()
+        {
+            let want = reference.infer(img).expect("dedicated pool infer");
+            assert_eq!(
+                got, want.logits,
+                "client {} image {}: HTTP logits != dedicated pool logits",
+                w, i
+            );
+            assert_eq!(argmax, want.predicted_class);
+        }
+    }
+    // The two variants are genuinely different models.
+    let probe = synthetic_images(1, per, 999).remove(0);
+    let a = fast_ref.infer(probe.clone()).expect("fast ref").logits;
+    let b = accurate_ref.infer(probe).expect("accurate ref").logits;
+    assert_ne!(a, b, "differently-pruned variants must disagree somewhere");
+
+    // Per-model metric labels, with the right per-model request counts.
+    let mut client = client_for(&server);
+    let scrape = String::from_utf8(client.get("/metrics").expect("scrape").body)
+        .expect("exposition is UTF-8");
+    for model in ["fast", "accurate"] {
+        let line = format!("vitfpga_pool_requests_total{{model=\"{}\"}}", model);
+        let v = prom_value(&scrape, &line)
+            .unwrap_or_else(|| panic!("missing {} in scrape:\n{}", line, scrape));
+        assert_eq!(v, 6.0, "each variant answered 2 clients x 3 requests");
+        assert_eq!(
+            prom_value(&scrape, &format!("vitfpga_model_ready{{model=\"{}\"}}", model)),
+            Some(1.0),
+            "{} must be ready after traffic",
+            model
+        );
+    }
+    drop(state);
+}
+
+#[test]
+fn unknown_model_maps_to_404_and_models_route_lists_variants() {
+    let (server, _state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let mut client = client_for(&server);
+
+    // Unknown model: 404 with the registered names in the body.
+    let resp = client
+        .post("/v1/infer", &image_body_for("nope", &[0.0; 4]))
+        .expect("http exchange");
+    assert_eq!(resp.status, 404, "unknown model must 404, not 400/503");
+    let j = resp.json().expect("404 body is JSON");
+    let known: Vec<&str> = j
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .expect("404 lists registered models")
+        .iter()
+        .filter_map(|v| v.as_str())
+        .collect();
+    assert_eq!(known, vec!["fast", "accurate"], "registration order preserved");
+    // A non-string model field is a 400, not a 404.
+    assert_eq!(
+        client
+            .post("/v1/infer", b"{\"model\": 3, \"image\": [0]}")
+            .expect("http exchange")
+            .status,
+        400
+    );
+
+    // /v1/models enumerates both variants with specs and readiness.
+    let resp = client.get("/v1/models").expect("models route");
+    assert_eq!(resp.status, 200);
+    let j = resp.json().expect("models body is JSON");
+    assert_eq!(j.get("default").and_then(|v| v.as_str()), Some("fast"));
+    let models = j.get("models").and_then(|m| m.as_arr()).expect("models array");
+    assert_eq!(models.len(), 2);
+    assert_eq!(models[0].get("name").and_then(|v| v.as_str()), Some("fast"));
+    assert_eq!(models[0].get("spec").and_then(|v| v.as_str()), Some(FAST_SPEC));
+    assert_eq!(models[0].get("default").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(models[1].get("name").and_then(|v| v.as_str()), Some("accurate"));
+    assert_eq!(models[1].get("default").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(
+        models[1].get("input_elems_per_image").and_then(|v| v.as_usize()),
+        Some(32 * 32 * 3),
+        "shape known even for cold models"
+    );
+    // Wrong method on the new route.
+    assert_eq!(client.post("/v1/models", b"{}").expect("405").status, 405);
+}
+
+#[test]
+fn models_build_lazily_on_first_request() {
+    let (server, state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let mut client = client_for(&server);
+
+    // Registration alone must not construct pools: healthz says cold,
+    // metrics carries ready=0 and no pool samples yet.
+    let health = client.get("/healthz").expect("healthz").json().expect("json");
+    assert_eq!(
+        health.at(&["models", "fast", "status"]).and_then(|v| v.as_str()),
+        Some("cold")
+    );
+    assert_eq!(health.get("status").and_then(|v| v.as_str()), Some("ok"),
+               "cold models are healthy, not dead");
+    let scrape = String::from_utf8(client.get("/metrics").expect("scrape").body).unwrap();
+    assert_eq!(
+        prom_value(&scrape, "vitfpga_model_ready{model=\"fast\"}"),
+        Some(0.0),
+        "scrapes must not cold-start models"
+    );
+    assert!(!state.registry.is_ready("fast"));
+
+    // First request for one variant builds exactly that variant.
+    let img = synthetic_images(1, 32 * 32 * 3, 4).remove(0);
+    let resp = client
+        .post("/v1/infer", &image_body_for("fast", &img))
+        .expect("first fast request");
+    assert_eq!(resp.status, 200);
+    assert!(state.registry.is_ready("fast"), "first request constructs the pool");
+    assert!(!state.registry.is_ready("accurate"), "the other variant stays cold");
+    let health = client.get("/healthz").expect("healthz").json().expect("json");
+    assert_eq!(
+        health.at(&["models", "fast", "status"]).and_then(|v| v.as_str()),
+        Some("ok")
+    );
+    assert_eq!(
+        health.at(&["models", "accurate", "status"]).and_then(|v| v.as_str()),
+        Some("cold")
+    );
+}
+
+#[test]
+fn loadgen_model_mix_drives_both_models() {
+    // The CI registry smoke, in-process: two synth variants served,
+    // weighted mixed-model loadgen traffic, both models visible in the
+    // scrape afterwards.
+    use vitfpga::server::{loadgen, LoadMode, LoadgenConfig};
+    let (server, state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        mode: LoadMode::Closed,
+        concurrency: 4,
+        requests: 48,
+        batch: 1,
+        timeout: Duration::from_secs(10),
+        seed: 11,
+        models: vec![("fast".to_string(), 3.0), ("accurate".to_string(), 1.0)],
+    };
+    let report = loadgen::run(&cfg).expect("mixed loadgen run");
+    assert_eq!(report.sent, 48);
+    assert_eq!(report.ok, 48, "no sheds/errors at queue 64: {}", report);
+    let per: std::collections::BTreeMap<_, _> = report.per_model.iter().cloned().collect();
+    let fast_ok = per.get("fast").copied().unwrap_or(0);
+    let accurate_ok = per.get("accurate").copied().unwrap_or(0);
+    assert_eq!(fast_ok + accurate_ok, 48, "per-model tallies partition the run");
+    assert!(fast_ok > 0 && accurate_ok > 0, "both variants must see traffic");
+    assert!(
+        fast_ok > accurate_ok,
+        "3:1 weights over 48 requests should favour 'fast' ({} vs {})",
+        fast_ok,
+        accurate_ok
+    );
+
+    // Both models answered real inferences, attributed separately.
+    let mut client = client_for(&server);
+    let scrape =
+        String::from_utf8(client.get("/metrics").expect("scrape").body).expect("UTF-8");
+    for (model, ok) in [("fast", fast_ok), ("accurate", accurate_ok)] {
+        let v = prom_value(
+            &scrape,
+            &format!("vitfpga_pool_requests_total{{model=\"{}\"}}", model),
+        )
+        .unwrap_or_else(|| panic!("no labelled counter for {}:\n{}", model, scrape));
+        assert_eq!(v, ok as f64, "pool counter for {} matches the client tally", model);
+    }
+    // Loadgen answered an unknown mix target with a clean error.
+    let bad = LoadgenConfig {
+        models: vec![("nope".to_string(), 1.0)],
+        ..cfg
+    };
+    let err = loadgen::run(&bad).expect_err("unknown model target must fail fast");
+    assert!(
+        format!("{:#}", err).contains("nope"),
+        "error should name the unknown model: {:#}",
+        err
+    );
+    drop(state);
+}
+
 #[test]
 fn graceful_shutdown_drains_in_flight_before_socket_closes() {
     let pool = BackendPool::start(
@@ -438,10 +746,10 @@ fn concurrent_keep_alive_clients_all_answered() {
     // The acceptance-bar smoke: N concurrent keep-alive clients, each
     // issuing several requests, all answered correctly by the pool.
     let (server, state) = serve(native_pool(2), None, HttpConfig::default());
-    let per = state.pool.input_elems_per_image;
+    let pool = pool_of(&state);
+    let per = pool.input_elems_per_image;
     let addr = server.local_addr().to_string();
-    let want = state
-        .pool
+    let want = pool
         .infer(synthetic_images(1, per, 21).remove(0))
         .expect("reference infer")
         .logits;
@@ -471,6 +779,6 @@ fn concurrent_keep_alive_clients_all_answered() {
     for h in handles {
         h.join().expect("client thread");
     }
-    let m = state.pool.metrics().expect("pool metrics");
+    let m = pool.metrics().expect("pool metrics");
     assert!(m.pool.requests >= 24, "all 6x4 HTTP requests reached the pool");
 }

@@ -1,0 +1,246 @@
+//! Integration battery for the model registry: lazy per-model pool
+//! construction (once, even under racing first requests), routing with
+//! typed `UnknownModel` errors, per-model admission isolation (one
+//! overloaded variant never sheds another), bit-exact parity between a
+//! registry-served model and a dedicated pool built from the same
+//! spec, and the shared CLI construction path (`registry::from_cli`)
+//! in both legacy and registry modes. Default feature set only.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use vitfpga::backend::NativeBackend;
+use vitfpga::coordinator::{BackendPool, BatchPolicy, Overloaded, PoolPolicy};
+use vitfpga::registry::{self, ModelSpec, Registry, UnknownModel};
+use vitfpga::util::cli::Args;
+use vitfpga::util::rng::Rng;
+
+const FAST_SPEC: &str = "test-tiny@b8_rb0.5_rt0.5@seed=5";
+const ACCURATE_SPEC: &str = "test-tiny@b8_rb0.7_rt0.9@seed=6";
+
+fn batch_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }
+}
+
+fn registry() -> Registry {
+    let defaults = PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 };
+    Registry::builder(defaults)
+        .register("fast", ModelSpec::parse(FAST_SPEC).unwrap(), Some(1))
+        .unwrap()
+        .register("accurate", ModelSpec::parse(ACCURATE_SPEC).unwrap(), Some(1))
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
+fn images(n: usize, per: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..per).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+#[test]
+fn racing_first_requests_build_one_pool() {
+    // 8 threads all fire the first request for the same cold model; the
+    // entry mutex must build exactly one pool, and every request must
+    // answer through it.
+    let reg = Arc::new(registry());
+    assert!(!reg.is_ready("fast"), "registration must not construct");
+    let per = reg.describe("fast").unwrap().input_elems_per_image;
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                let img = images(1, per, t).remove(0);
+                reg.infer(Some("fast"), img).expect("racing first infer")
+            })
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().expect("client thread");
+        assert_eq!(resp.model.as_str(), "fast", "responses carry the model id");
+    }
+    assert!(reg.is_ready("fast"));
+    assert!(!reg.is_ready("accurate"), "untouched model stays cold");
+    let pool = reg.ready_pool("fast").expect("built pool");
+    assert_eq!(
+        pool.metrics().expect("pool metrics").pool.requests,
+        8,
+        "one pool answered all racing requests"
+    );
+    // The second lookup must hand back the same pool, not rebuild.
+    assert!(Arc::ptr_eq(&pool, &reg.pool("fast").expect("pool")));
+}
+
+#[test]
+fn registry_parity_with_dedicated_pool_per_variant() {
+    // Acceptance bar (in-process half): for each registered variant,
+    // routing through the registry is bit-exact against a dedicated
+    // single-model pool built from the same spec.
+    let reg = registry();
+    for spec_str in [FAST_SPEC, ACCURATE_SPEC] {
+        let name = if spec_str == FAST_SPEC { "fast" } else { "accurate" };
+        let spec = ModelSpec::parse(spec_str).unwrap();
+        let dedicated = BackendPool::start(
+            move |_i| NativeBackend::from_spec(&spec).map(|nb| nb.with_threads(1)),
+            PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 },
+        )
+        .expect("dedicated pool");
+        for img in images(4, dedicated.input_elems_per_image, 31) {
+            let got = reg.infer(Some(name), img.clone()).expect("registry infer");
+            let want = dedicated.infer(img).expect("dedicated infer");
+            assert_eq!(got.logits, want.logits, "{} logits diverge", name);
+            assert_eq!(got.predicted_class, want.predicted_class);
+        }
+    }
+}
+
+#[test]
+fn unknown_model_is_typed_and_infer_deadline_routes() {
+    let reg = registry();
+    let per = reg.describe("fast").unwrap().input_elems_per_image;
+    let err = reg
+        .infer(Some("nope"), vec![0.0; per])
+        .expect_err("unknown model must fail");
+    let u = err.downcast_ref::<UnknownModel>().expect("typed UnknownModel");
+    assert_eq!(u.requested, "nope");
+    assert_eq!(u.known, vec!["fast".to_string(), "accurate".to_string()]);
+    assert!(!reg.is_ready("fast"), "a failed resolve must not build anything");
+
+    // None routes to the default (first-registered) model, with the
+    // pool's deadline semantics intact.
+    let resp = reg
+        .infer_deadline(None, images(1, per, 3).remove(0), Some(Duration::from_secs(30)))
+        .expect("default-model infer");
+    assert_eq!(resp.model.as_str(), "fast");
+}
+
+/// Deterministic slow stand-in backend (logits[j] = image[0] + j) to
+/// hold a request in flight for a known window.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl vitfpga::backend::Backend for SlowBackend {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn batch_capacity(&self) -> usize {
+        4
+    }
+    fn num_classes(&self) -> usize {
+        4
+    }
+    fn input_elems_per_image(&self) -> usize {
+        2
+    }
+    fn infer_batch_into(
+        &mut self,
+        flat: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        for i in 0..batch {
+            for j in 0..4 {
+                out[i * 4 + j] = flat[i * 2] + j as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn per_model_queue_capacity_isolates_admission() {
+    // "tight" is a capacity-1 pool over a deliberately slow backend;
+    // "roomy" is a spec variant with the 64-slot default. Saturating
+    // "tight" must shed it — and only it.
+    let defaults = PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 };
+    let tight_raw = BackendPool::start(
+        |_i| Ok(SlowBackend { delay: Duration::from_millis(200) }),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 1 },
+    )
+    .expect("tight pool start");
+    let reg = Arc::new(
+        Registry::builder(defaults)
+            .register_pool("tight", tight_raw)
+            .unwrap()
+            .register("roomy", ModelSpec::parse(ACCURATE_SPEC).unwrap(), Some(1))
+            .unwrap()
+            .finish()
+            .unwrap(),
+    );
+    let tight = reg.describe("tight").unwrap();
+    assert_eq!(tight.queue_capacity, 1, "per-model queue capacity is honoured");
+    assert_eq!(reg.describe("roomy").unwrap().queue_capacity, 64);
+
+    // Occupy tight's only admission slot for >= 200 ms...
+    let tight_pool = reg.pool("tight").expect("tight pool");
+    let held = tight_pool.submit(vec![1.0, 0.0]).expect("first submit fills the slot");
+    let shed = tight_pool
+        .submit(vec![2.0, 0.0])
+        .expect_err("second submit over capacity 1");
+    assert!(shed.downcast_ref::<Overloaded>().is_some(), "typed shed: {:#}", shed);
+    // ...while the other model is untouched by tight's backpressure.
+    let roomy_per = reg.describe("roomy").unwrap().input_elems_per_image;
+    reg.infer(Some("roomy"), images(1, roomy_per, 9).remove(0))
+        .expect("roomy model serves while tight sheds");
+    assert_eq!(reg.ready_pool("roomy").unwrap().stats().shed_count, 0);
+    held.recv()
+        .expect("engine answers the held request")
+        .expect("held request infers");
+}
+
+#[test]
+fn from_cli_registry_mode_round_trips_specs() {
+    let argv = [
+        "serve",
+        "--replicas", "1",
+        "--queue-capacity", "32",
+        "--max-batch", "4",
+        "--threads", "1",
+        "--model", "fast=test-tiny@b8_rb0.5_rt0.5@seed=5",
+        "--model", "accurate=test-tiny@b8_rb0.7_rt0.9@seed=6@queue=16",
+        "--default-model", "accurate",
+    ];
+    let args = Args::parse(argv.iter().map(|s| s.to_string()));
+    let reg = registry::from_cli(&args, registry::pool_policy_from_cli(&args))
+        .expect("registry mode from cli");
+    assert_eq!(reg.names(), ["fast".to_string(), "accurate".to_string()]);
+    assert_eq!(reg.default_model(), "accurate", "--default-model wins over first");
+    assert_eq!(reg.spec_of("fast").unwrap().spec_string(), FAST_SPEC);
+    let accurate = reg.describe("accurate").unwrap();
+    assert_eq!(accurate.queue_capacity, 16, "spec override");
+    assert_eq!(reg.describe("fast").unwrap().queue_capacity, 32, "cli default");
+    // End to end through the CLI-built registry.
+    let per = accurate.input_elems_per_image;
+    let resp = reg.infer(None, images(1, per, 13).remove(0)).expect("default infer");
+    assert_eq!(resp.model.as_str(), "accurate");
+}
+
+#[test]
+fn from_cli_legacy_mode_registers_default_pool() {
+    // No NAME=SPEC values: the legacy flag set builds one prebuilt pool
+    // under the "default" name — the pre-registry CLI contract.
+    let argv = [
+        "serve",
+        "--model", "test-tiny",
+        "--setting", "b8_rb0.7_rt0.7",
+        "--threads", "1",
+        "--max-batch", "4",
+    ];
+    let args = Args::parse(argv.iter().map(|s| s.to_string()));
+    let reg = registry::from_cli(&args, registry::pool_policy_from_cli(&args))
+        .expect("legacy mode from cli");
+    assert_eq!(reg.names(), [registry::DEFAULT_MODEL.to_string()]);
+    assert!(reg.is_ready(registry::DEFAULT_MODEL), "legacy pools are prebuilt");
+    let info = reg.describe(registry::DEFAULT_MODEL).unwrap();
+    assert!(info.spec.is_none(), "prebuilt entries carry no spec");
+    assert_eq!(info.input_elems_per_image, 32 * 32 * 3);
+    let resp = reg
+        .infer(None, images(1, info.input_elems_per_image, 17).remove(0))
+        .expect("legacy default infer");
+    assert_eq!(resp.model.as_str(), registry::DEFAULT_MODEL);
+    assert_eq!(resp.logits.len(), info.num_classes);
+}
