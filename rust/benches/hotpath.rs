@@ -15,7 +15,9 @@
 //!       replica, so scaling is replication-driven) — written to
 //!       BENCH_pool_throughput.json;
 //!   H9. token-parallel kernel engine microbench on the DeiT-shaped
-//!       synthetic config: panel SpMM vs the scalar header walk,
+//!       synthetic config: panel SpMM vs the scalar header walk, the
+//!       CSR-of-panels layout vs the old Vec-of-columns layout, the
+//!       int16 integer SpMM + fused forward vs their f32 twins,
 //!       head-major repacked vs strided attention, and fused-batch
 //!       forward vs the per-image span baseline at batch {1,8,32} —
 //!       written to BENCH_kernels.json;
@@ -416,6 +418,8 @@ fn pool_throughput_bench(rng: &mut Rng) {
 /// PR-2 scalar kernels — the kernel-level rows (panel vs scalar walk,
 /// repacked vs strided) capture that remaining delta.
 fn kernel_bench(rng: &mut Rng) {
+    use vitfpga::formats::quant;
+    use vitfpga::formats::StageRequant;
     use vitfpga::funcsim::kernels::{self, AttnLane, ColumnSchedule};
 
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -444,6 +448,74 @@ fn kernel_bench(rng: &mut Rng) {
          panel({}t) {:>8.4} ms ({:.2}x)",
         spmm_scalar_ms, spmm_panel_1t_ms, spmm_scalar_ms / spmm_panel_1t_ms,
         threads, spmm_panel_mt_ms, spmm_scalar_ms / spmm_panel_mt_ms
+    );
+
+    // --- layout level: CSR-of-panels vs the old Vec-of-columns layout -
+    // The pre-CSR layout boxed each block column in its own pair of
+    // heap allocations; rebuild it here and run the same header walk
+    // over it, so the delta isolates pure layout/prefetch effects.
+    struct OldCol {
+        rows: Vec<u32>,
+        vals: Vec<f32>,
+    }
+    let old_cols: Vec<OldCol> = (0..sp.col_blocks())
+        .map(|j| OldCol { rows: sp.col_rows(j).to_vec(), vals: sp.col_values(j).to_vec() })
+        .collect();
+    let (m2, n) = sp.shape;
+    let b = sp.b;
+    let bb = b * b;
+    let mut acc = vec![0.0f32; b];
+    let spmm_old_layout_ms = median_ms(it_k, || {
+        for (j, col) in old_cols.iter().enumerate() {
+            let c0 = j * b;
+            let cw = b.min(n - c0);
+            for xr in 0..197usize {
+                let xrow = &x[xr * m2..(xr + 1) * m2];
+                acc[..cw].fill(0.0);
+                for (t, &ib) in col.rows.iter().enumerate() {
+                    let blk = &col.vals[t * bb..(t + 1) * bb];
+                    let r0 = ib as usize * b;
+                    let rw = b.min(m2 - r0);
+                    for bi in 0..rw {
+                        let xv = xrow[r0 + bi];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (a, w) in acc[..cw].iter_mut().zip(&blk[bi * b..bi * b + cw]) {
+                            *a += xv * w;
+                        }
+                    }
+                }
+                y[xr * n + c0..xr * n + c0 + cw].copy_from_slice(&acc[..cw]);
+            }
+        }
+        std::hint::black_box(&y);
+    });
+    println!(
+        "[bench] H9 layout qkv-shape old {:>8.4} ms   csr-scalar {:>8.4} ms ({:.2}x)   \
+         csr-panel(1t) {:>8.4} ms ({:.2}x)",
+        spmm_old_layout_ms,
+        spmm_scalar_ms,
+        spmm_old_layout_ms / spmm_scalar_ms,
+        spmm_panel_1t_ms,
+        spmm_old_layout_ms / spmm_panel_1t_ms
+    );
+
+    // --- datapath level: int16 integer SpMM vs the f32 panel walk -----
+    // Same QKV shape; one "image" of 197 rows quantized with one scale.
+    let wq = sp.quantize_int16();
+    let mut xq = vec![0i16; 197 * m2];
+    let (xquant, row_l2) = quant::quantize_activations(&x, m2, &mut xq);
+    let rq = [StageRequant::new(xquant, wq.quant, row_l2, wq.max_col_l2)];
+    let spmm_i16_1t_ms = median_ms(it_k, || {
+        kernels::spmm_i16_bias_into(&sp, &wq, &sched, &xq, 197, 197, &rq, None, None, &mut y, 1);
+        std::hint::black_box(&y);
+    });
+    println!(
+        "[bench] H9 int16 spmm qkv-shape   f32(1t) {:>8.4} ms   i16(1t) {:>8.4} ms ({:.2}x)",
+        spmm_panel_1t_ms,
+        spmm_i16_1t_ms,
+        spmm_panel_1t_ms / spmm_i16_1t_ms
     );
 
     // --- kernel level: repacked vs strided attention ------------------
@@ -518,10 +590,14 @@ fn kernel_bench(rng: &mut Rng) {
     );
 
     let mut rows = Vec::new();
+    let mut fused_mt_b8_ms = f64::NAN;
     for &batch in batches {
         let ms = median_ms(it_f, || {
             std::hint::black_box(nb.infer_batch(&flat[..batch * per], batch).unwrap());
         });
+        if batch == 8 {
+            fused_mt_b8_ms = ms;
+        }
         let ips = batch as f64 / (ms / 1e3);
         println!(
             "[bench] H9 fused forward ({}t, batch {:>2})       p50 {:>9.3} ms   {:>8.1} img/s",
@@ -533,11 +609,30 @@ fn kernel_bench(rng: &mut Rng) {
         ));
     }
 
+    // --- datapath level: int16 fused forward vs f32 (same threads) ----
+    let mut nbq = NativeBackend::synthetic(&DEIT_SMALL, &setting, 42, Precision::Int16)
+        .expect("deit-small int16 backend")
+        .with_batch_capacity(max_batch)
+        .with_threads(threads);
+    let fused_i16_b8_ms = median_ms(it_f, || {
+        std::hint::black_box(nbq.infer_batch(&flat[..8 * per], 8).unwrap());
+    });
+    println!(
+        "[bench] H9 forward deit-small batch 8 ({}t)  f32 {:>9.3} ms   int16 {:>9.3} ms ({:.2}x)",
+        threads, fused_mt_b8_ms, fused_i16_b8_ms, fused_mt_b8_ms / fused_i16_b8_ms
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"kernels\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
          \"threads\": {},\n  \"smoke\": {},\n  \
          \"spmm\": {{\"scalar_ms\": {:.4}, \"panel_1t_ms\": {:.4}, \"panel_mt_ms\": {:.4}, \
          \"panel_speedup_1t\": {:.2}, \"panel_speedup_mt\": {:.2}}},\n  \
+         \"layout\": {{\"old_layout_ms\": {:.4}, \"csr_scalar_ms\": {:.4}, \
+         \"csr_panel_1t_ms\": {:.4}, \"csr_scalar_speedup\": {:.2}, \
+         \"csr_panel_speedup\": {:.2}}},\n  \
+         \"int16\": {{\"spmm_f32_1t_ms\": {:.4}, \"spmm_i16_1t_ms\": {:.4}, \
+         \"spmm_i16_speedup\": {:.2}, \"forward_f32_batch8_ms\": {:.4}, \
+         \"forward_i16_batch8_ms\": {:.4}, \"forward_i16_speedup\": {:.2}}},\n  \
          \"attention\": {{\"strided_ms\": {:.4}, \"repacked_1t_ms\": {:.4}, \
          \"repacked_mt_ms\": {:.4}, \"repacked_speedup_1t\": {:.2}}},\n  \
          \"forward\": {{\n    \"spans_1t_batch8_ms\": {:.4},\n    \"fused_1t_batch8_ms\": {:.4},\n    \
@@ -553,6 +648,17 @@ fn kernel_bench(rng: &mut Rng) {
         spmm_panel_mt_ms,
         spmm_scalar_ms / spmm_panel_1t_ms,
         spmm_scalar_ms / spmm_panel_mt_ms,
+        spmm_old_layout_ms,
+        spmm_scalar_ms,
+        spmm_panel_1t_ms,
+        spmm_old_layout_ms / spmm_scalar_ms,
+        spmm_old_layout_ms / spmm_panel_1t_ms,
+        spmm_panel_1t_ms,
+        spmm_i16_1t_ms,
+        spmm_panel_1t_ms / spmm_i16_1t_ms,
+        fused_mt_b8_ms,
+        fused_i16_b8_ms,
+        fused_mt_b8_ms / fused_i16_b8_ms,
         attn_strided_ms,
         attn_repack_1t_ms,
         attn_repack_mt_ms,

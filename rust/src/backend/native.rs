@@ -20,6 +20,12 @@
 //! Scratch arenas (`scratches` for span/single paths, `batch_scratch`
 //! for the fused path) and the caller's logits buffer are reused across
 //! calls, so the steady-state hot path performs no allocation.
+//!
+//! All three shapes carry the selected [`Precision`] through unchanged:
+//! with `--int16` (or an `@int16` spec) every shape runs the true
+//! integer datapath — i16 weights/activations, integer MACs, per-stage
+//! requantization (DESIGN.md *Fixed-point datapath*) — and the
+//! bit-identical-per-image guarantee holds within that precision.
 
 use std::path::Path;
 

@@ -1,28 +1,38 @@
-//! Block-sparse weight format (Section V-A, Fig. 5).
+//! Block-sparse weight format (Section V-A, Fig. 5) — CSR-of-panels.
 //!
 //! A pruned weight matrix W (M2 x D) with square b x b blocks is stored
-//! *column-major at block granularity*: for each column of blocks, only
-//! the surviving blocks are stored contiguously, preceded by a header
-//! encoding the row indices of the present blocks and the column length.
-//! Dense (feature/token) matrices are stored block-wise *row-major*.
+//! *column-major at block granularity* in three contiguous arrays:
+//!
+//! ```text
+//! row_idx : u32   per retained block, its block-row index (ascending
+//!                 within each column) — the Fig. 5 column headers,
+//!                 concatenated.
+//! col_ptr : usize col_blocks + 1 offsets into row_idx; column j owns
+//!                 blocks col_ptr[j]..col_ptr[j+1].
+//! values  : f32   panel payload; block t (global, in header order)
+//!                 occupies values[t*b*b .. (t+1)*b*b], row-major
+//!                 inside the panel.
+//! ```
+//!
+//! Compared to the earlier Vec-of-`BlockColumn` layout this is the same
+//! logical format with all payload in ONE allocation: walking a column's
+//! panels is a single forward stream through `values`, which is what the
+//! prefetcher (and the FPGA's burst reads) want, and what lets the
+//! kernel inner loops run fixed-width lane iterations the compiler can
+//! vectorize. Dense (feature/token) matrices remain block-wise
+//! *row-major*.
 //!
 //! This module is the exact software mirror of the FPGA layout: the
 //! simulator uses the per-column populations for cycle-accurate load
 //! imbalance, and `spmm`/`spmm_into` execute the same header-walk the PE
-//! columns perform (also serving as the L3 software hot path).
+//! columns perform (also serving as the scalar bit-exactness reference
+//! for the panel kernels in `funcsim::kernels`).
 
+use crate::formats::quant::Int16Quant;
 use crate::util::rng::Rng;
 
-/// One column of blocks: header (row indices) + packed block data.
-#[derive(Debug, Clone, PartialEq)]
-pub struct BlockColumn {
-    /// Row indices (block granularity) of the retained blocks, ascending.
-    pub rows: Vec<u32>,
-    /// Packed block payload, `rows.len() * b * b` values, block-major.
-    pub data: Vec<f32>,
-}
-
-/// Block-sparse matrix in the Fig. 5 layout.
+/// Block-sparse matrix in the Fig. 5 layout (CSR at block granularity,
+/// transposed: indexed by block *column*).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockSparseMatrix {
     /// Element dimensions of the logical dense matrix.
@@ -31,8 +41,12 @@ pub struct BlockSparseMatrix {
     pub b: usize,
     /// ceil(M1/b) row blocks.
     pub row_blocks: usize,
-    /// Columns of blocks, each with its header.
-    pub cols: Vec<BlockColumn>,
+    /// Block-row indices of retained blocks, per column, ascending.
+    pub row_idx: Vec<u32>,
+    /// `col_blocks + 1` offsets into `row_idx` / (x b*b) into `values`.
+    pub col_ptr: Vec<usize>,
+    /// Contiguous panel-major payload, `row_idx.len() * b * b` values.
+    pub values: Vec<f32>,
 }
 
 impl BlockSparseMatrix {
@@ -45,26 +59,27 @@ impl BlockSparseMatrix {
         let col_blocks = n.div_ceil(b);
         assert_eq!(block_mask.len(), row_blocks * col_blocks);
         assert_eq!(mask_cols, col_blocks);
-        let mut cols = Vec::with_capacity(col_blocks);
+        let mut row_idx = Vec::new();
+        let mut col_ptr = Vec::with_capacity(col_blocks + 1);
+        let mut values = Vec::new();
+        col_ptr.push(0);
         for j in 0..col_blocks {
-            let mut rows = Vec::new();
-            let mut data = Vec::new();
             for i in 0..row_blocks {
                 if !block_mask[i * col_blocks + j] {
                     continue;
                 }
-                rows.push(i as u32);
+                row_idx.push(i as u32);
                 for bi in 0..b {
                     for bj in 0..b {
                         let r = i * b + bi;
                         let c = j * b + bj;
-                        data.push(if r < m && c < n { dense[r * n + c] } else { 0.0 });
+                        values.push(if r < m && c < n { dense[r * n + c] } else { 0.0 });
                     }
                 }
             }
-            cols.push(BlockColumn { rows, data });
+            col_ptr.push(row_idx.len());
         }
-        BlockSparseMatrix { shape, b, row_blocks, cols }
+        BlockSparseMatrix { shape, b, row_blocks, row_idx, col_ptr, values }
     }
 
     /// Synthesize a random block-sparse matrix at keep rate `r_b`
@@ -84,16 +99,29 @@ impl BlockSparseMatrix {
     }
 
     pub fn col_blocks(&self) -> usize {
-        self.cols.len()
+        self.col_ptr.len() - 1
+    }
+
+    /// Block-row indices of column j's retained blocks (the header).
+    #[inline]
+    pub fn col_rows(&self, j: usize) -> &[u32] {
+        &self.row_idx[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Column j's packed panel payload, `col_rows(j).len() * b * b`.
+    #[inline]
+    pub fn col_values(&self, j: usize) -> &[f32] {
+        let bb = self.b * self.b;
+        &self.values[self.col_ptr[j] * bb..self.col_ptr[j + 1] * bb]
     }
 
     /// Retained blocks per column — the load-imbalance profile.
     pub fn column_populations(&self) -> Vec<usize> {
-        self.cols.iter().map(|c| c.rows.len()).collect()
+        self.col_ptr.windows(2).map(|w| w[1] - w[0]).collect()
     }
 
     pub fn total_blocks(&self) -> usize {
-        self.cols.iter().map(|c| c.rows.len()).sum()
+        self.row_idx.len()
     }
 
     /// Fraction of blocks retained.
@@ -104,7 +132,7 @@ impl BlockSparseMatrix {
     /// Storage bytes: headers (u32 row index per block + u32 length per
     /// column) + payload at `elem_bytes` per element.
     pub fn storage_bytes(&self, elem_bytes: usize) -> usize {
-        let header: usize = self.cols.iter().map(|c| 4 + 4 * c.rows.len()).sum();
+        let header = 4 * self.col_blocks() + 4 * self.total_blocks();
         header + self.total_blocks() * self.b * self.b * elem_bytes
     }
 
@@ -112,10 +140,12 @@ impl BlockSparseMatrix {
     pub fn to_dense(&self) -> Vec<f32> {
         let (m, n) = self.shape;
         let b = self.b;
+        let bb = b * b;
         let mut out = vec![0.0f32; m * n];
-        for (j, col) in self.cols.iter().enumerate() {
-            for (t, &i) in col.rows.iter().enumerate() {
-                let blk = &col.data[t * b * b..(t + 1) * b * b];
+        for j in 0..self.col_blocks() {
+            let vals = self.col_values(j);
+            for (t, &i) in self.col_rows(j).iter().enumerate() {
+                let blk = &vals[t * bb..(t + 1) * bb];
                 for bi in 0..b {
                     for bj in 0..b {
                         let r = i as usize * b + bi;
@@ -128,6 +158,38 @@ impl BlockSparseMatrix {
             }
         }
         out
+    }
+
+    /// Quantize the payload to an i16 sidecar in the same panel layout.
+    /// See [`Int16Panels`].
+    pub fn quantize_int16(&self) -> Int16Panels {
+        let quant = Int16Quant::fit(&self.values);
+        let (_, n) = self.shape;
+        let b = self.b;
+        let bb = b * b;
+        let mut values = vec![0i16; self.values.len()];
+        // Per element-column L2 norms (integer units) feed the
+        // Cauchy-Schwarz requantization bound; padding columns (>= n)
+        // hold zeros and are skipped.
+        let mut col_sumsq = vec![0.0f64; n];
+        for j in 0..self.col_blocks() {
+            let c0 = j * b;
+            let src = self.col_values(j);
+            let dst = &mut values[self.col_ptr[j] * bb..self.col_ptr[j + 1] * bb];
+            for (qblk, blk) in dst.chunks_exact_mut(bb).zip(src.chunks_exact(bb)) {
+                for bi in 0..b {
+                    for bj in 0..b {
+                        let v = quant.quantize(blk[bi * b + bj]);
+                        qblk[bi * b + bj] = v;
+                        if c0 + bj < n {
+                            col_sumsq[c0 + bj] += v as f64 * v as f64;
+                        }
+                    }
+                }
+            }
+        }
+        let max_col_l2 = col_sumsq.iter().fold(0.0f64, |m, &s| m.max(s)).sqrt();
+        Int16Panels { quant, values, max_col_l2 }
     }
 
     /// Y = X * W where X is (rows x M2) dense row-major and W is self.
@@ -147,6 +209,7 @@ impl BlockSparseMatrix {
     pub fn spmm_into(&self, x: &[f32], x_rows: usize, y: &mut [f32]) {
         let (m2, n) = self.shape;
         let b = self.b;
+        let bb = b * b;
         debug_assert_eq!(y.len(), x_rows * n);
         // No y.fill(0.0) here: every element of y is overwritten by the
         // per-(column, row) copy_from_slice below — the columns cover
@@ -157,14 +220,16 @@ impl BlockSparseMatrix {
         // per retained block — the §Perf change that took this kernel
         // from 22 ms to ~8 ms on the DeiT QKV shape.
         let mut acc = vec![0.0f32; b];
-        for (j, col) in self.cols.iter().enumerate() {
+        for j in 0..self.col_blocks() {
+            let rows = self.col_rows(j);
+            let vals = self.col_values(j);
             let c0 = j * b;
             let cw = b.min(n - c0);
             for xr in 0..x_rows {
                 let xrow = &x[xr * m2..(xr + 1) * m2];
                 acc[..cw].fill(0.0);
-                for (t, &ib) in col.rows.iter().enumerate() {
-                    let blk = &col.data[t * b * b..(t + 1) * b * b];
+                for (t, &ib) in rows.iter().enumerate() {
+                    let blk = &vals[t * bb..(t + 1) * bb];
                     let r0 = ib as usize * b;
                     let rw = b.min(m2 - r0);
                     for bi in 0..rw {
@@ -181,6 +246,30 @@ impl BlockSparseMatrix {
                 y[xr * n + c0..xr * n + c0 + cw].copy_from_slice(&acc[..cw]);
             }
         }
+    }
+}
+
+/// i16 sidecar of a [`BlockSparseMatrix`]: identical CSR-of-panels
+/// ordering (share the owner's `row_idx`/`col_ptr`), payload quantized
+/// with one per-tensor scale. `max_col_l2` is the largest L2 norm over
+/// element columns of the *quantized* weights, in integer units — the
+/// weight half of the `|acc| <= ||x_row|| * ||w_col||` requantization
+/// bound (`formats::quant::requant_shift`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int16Panels {
+    pub quant: Int16Quant,
+    /// Same length/order as the owner's `values`.
+    pub values: Vec<i16>,
+    pub max_col_l2: f64,
+}
+
+impl Int16Panels {
+    /// Column j's quantized panel payload (layout of the owner's
+    /// `col_values`).
+    #[inline]
+    pub fn col_values(&self, owner: &BlockSparseMatrix, j: usize) -> &[i16] {
+        let bb = owner.b * owner.b;
+        &self.values[owner.col_ptr[j] * bb..owner.col_ptr[j + 1] * bb]
     }
 }
 
@@ -254,7 +343,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let sp = BlockSparseMatrix::random((32, 32), 8, 0.5, &mut rng);
         let blocks = sp.total_blocks();
-        let expect = sp.cols.len() * 4 + blocks * 4 + blocks * 64 * 2;
+        let expect = sp.col_blocks() * 4 + blocks * 4 + blocks * 64 * 2;
         assert_eq!(sp.storage_bytes(2), expect);
     }
 
@@ -265,5 +354,47 @@ mod tests {
         let mask = vec![true; 4];
         let sp = BlockSparseMatrix::from_dense(&dense, (m, n), b, &mask, 2);
         assert_eq!(sp.to_dense(), dense);
+    }
+
+    #[test]
+    fn csr_offsets_are_consistent() {
+        let mut rng = Rng::new(3);
+        let sp = BlockSparseMatrix::random((48, 40), 8, 0.4, &mut rng);
+        assert_eq!(sp.col_ptr.len(), sp.col_blocks() + 1);
+        assert_eq!(*sp.col_ptr.last().unwrap(), sp.total_blocks());
+        assert_eq!(sp.values.len(), sp.total_blocks() * sp.b * sp.b);
+        let pops = sp.column_populations();
+        for j in 0..sp.col_blocks() {
+            assert_eq!(sp.col_rows(j).len(), pops[j]);
+            assert_eq!(sp.col_values(j).len(), pops[j] * sp.b * sp.b);
+            // headers ascend within each column
+            for w in sp.col_rows(j).windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_int16_roundtrips_and_bounds_columns() {
+        let mut rng = Rng::new(4);
+        let sp = BlockSparseMatrix::random((32, 24), 8, 0.7, &mut rng);
+        let q = sp.quantize_int16();
+        assert_eq!(q.values.len(), sp.values.len());
+        // dequantized panels approximate the f32 panels within one scale step
+        for (f, &i) in sp.values.iter().zip(&q.values) {
+            assert!((f - q.quant.dequantize(i)).abs() <= q.quant.scale * 0.5 + 1e-12);
+        }
+        // max_col_l2 really bounds every element column of the dense view
+        let (m, n) = sp.shape;
+        let dense = sp.to_dense();
+        for c in 0..n {
+            let sumsq: f64 = (0..m)
+                .map(|r| {
+                    let v = q.quant.quantize(dense[r * n + c]) as f64;
+                    v * v
+                })
+                .sum();
+            assert!(sumsq.sqrt() <= q.max_col_l2 + 1e-9, "column {}", c);
+        }
     }
 }

@@ -1,8 +1,9 @@
 //! Data formats of the accelerator (Section V-A): block-sparse column-major
-//! weight layout with per-column headers, and the int16 datapath model.
+//! weight layout with per-column headers (CSR-of-panels), and the int16
+//! datapath model (quantizers, integer weight forms, requantization).
 
 pub mod block_sparse;
 pub mod quant;
 
-pub use block_sparse::{BlockColumn, BlockSparseMatrix};
-pub use quant::{Int16Quant, QuantError};
+pub use block_sparse::{BlockSparseMatrix, Int16Panels};
+pub use quant::{Int16Matrix, Int16Quant, QuantError, StageRequant};

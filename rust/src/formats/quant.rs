@@ -2,8 +2,15 @@
 //!
 //! The functional PJRT path runs f32; the accelerator datapath is int16
 //! with per-tensor symmetric scaling. This module provides the
-//! quantize/dequantize pair and error statistics so the accuracy impact
-//! of the datapath width can be characterized in tests and EXPERIMENTS.md.
+//! quantize/dequantize pair, the dense [`Int16Matrix`] weight form, and
+//! the requantization machinery ([`requantize`], [`requant_shift`],
+//! [`StageRequant`]) the true-integer kernels in `funcsim::kernels` use:
+//! i16 x i16 products accumulate in wide integers and are brought back
+//! to the i16 grid with a per-stage power-of-two shift, mirroring the
+//! DSP-slice accumulate-then-shift datapath (a software stand-in for
+//! the DSP48's 48-bit accumulator). Error statistics live here too so
+//! the accuracy impact of the datapath width can be characterized in
+//! tests and EXPERIMENTS.md.
 
 /// Per-tensor symmetric int16 quantizer.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -12,10 +19,24 @@ pub struct Int16Quant {
 }
 
 impl Int16Quant {
-    /// Fit the scale to the tensor's max magnitude.
+    /// Fit the scale to the tensor's max finite magnitude.
+    ///
+    /// Guarded against degenerate inputs: non-finite values are ignored
+    /// when fitting, and the scale is floored at `f32::MIN_POSITIVE` so
+    /// it is never 0, subnormal, NaN, or infinite — `quantize` divides
+    /// by it. All-zero / empty / all-non-finite tensors therefore get a
+    /// harmless positive scale under which everything quantizes to 0.
     pub fn fit(data: &[f32]) -> Self {
-        let max = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let scale = if max == 0.0 { 1.0 } else { max / i16::MAX as f32 };
+        let mut max = 0.0f32;
+        for &x in data {
+            let a = x.abs();
+            if a.is_finite() && a > max {
+                max = a;
+            }
+        }
+        // max is finite here, so the division cannot produce inf/NaN;
+        // the floor guards the underflow-to-zero/subnormal corner.
+        let scale = (max / i16::MAX as f32).max(f32::MIN_POSITIVE);
         Int16Quant { scale }
     }
 
@@ -35,6 +56,114 @@ impl Int16Quant {
     pub fn dequantize_vec(&self, data: &[i16]) -> Vec<f32> {
         data.iter().map(|&q| self.dequantize(q)).collect()
     }
+}
+
+/// Dense row-major i16 weight matrix (shape `(k, n)`): the integer form
+/// of the MLP matmul weights. `max_col_l2` is the largest L2 norm over
+/// the n quantized columns, in integer units — the weight half of the
+/// requantization bound (see [`requant_shift`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int16Matrix {
+    pub shape: (usize, usize),
+    pub quant: Int16Quant,
+    pub data: Vec<i16>,
+    pub max_col_l2: f64,
+}
+
+impl Int16Matrix {
+    pub fn from_f32(w: &[f32], shape: (usize, usize)) -> Self {
+        let (k, n) = shape;
+        assert_eq!(w.len(), k * n);
+        let quant = Int16Quant::fit(w);
+        let mut data = vec![0i16; k * n];
+        let mut col_sumsq = vec![0.0f64; n];
+        for r in 0..k {
+            for c in 0..n {
+                let v = quant.quantize(w[r * n + c]);
+                data[r * n + c] = v;
+                col_sumsq[c] += v as f64 * v as f64;
+            }
+        }
+        let max_col_l2 = col_sumsq.iter().fold(0.0f64, |m, &s| m.max(s)).sqrt();
+        Int16Matrix { shape, quant, data, max_col_l2 }
+    }
+}
+
+/// Bring a wide integer accumulator back to the i16 grid: round-to-
+/// nearest arithmetic right shift, then saturate. The saturation makes
+/// correctness unconditional — the shift chosen by [`requant_shift`]
+/// already bounds `|acc >> shift| <= i16::MAX`, but floating-point
+/// rounding in the bound itself must never turn into wraparound.
+#[inline]
+pub fn requantize(acc: i64, shift: u32) -> i16 {
+    let r = if shift == 0 {
+        acc
+    } else {
+        (acc + (1i64 << (shift - 1))) >> shift
+    };
+    r.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+}
+
+/// Smallest power-of-two shift mapping every possible stage accumulator
+/// into i16 range, from the Cauchy-Schwarz bound
+/// `|acc_rj| <= ||x_row_r||_2 * ||w_col_j||_2` (both in integer units).
+/// This is the per-tensor requantization shift of the paper's fixed-
+/// point scheme: one shared shift per (stage, image), no per-element
+/// rescaling in the inner loop.
+pub fn requant_shift(max_row_l2: f64, max_col_l2: f64) -> u32 {
+    let mut bound = max_row_l2 * max_col_l2;
+    if !bound.is_finite() {
+        return 63;
+    }
+    let mut shift = 0u32;
+    while bound > i16::MAX as f64 && shift < 63 {
+        bound /= 2.0;
+        shift += 1;
+    }
+    shift
+}
+
+/// Everything an integer stage's epilogue needs: requantize the i64
+/// accumulator by `shift`, then one f32 multiply by `scale` rejoins the
+/// f32 graph (`y ~= requantize(acc, shift) as f32 * scale`), where
+/// `scale = s_x * s_w * 2^shift` undoes both quantizers and the shift.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageRequant {
+    pub shift: u32,
+    pub scale: f32,
+}
+
+impl StageRequant {
+    pub fn new(xq: Int16Quant, wq: Int16Quant, max_row_l2: f64, max_col_l2: f64) -> Self {
+        let shift = requant_shift(max_row_l2, max_col_l2);
+        let scale = (xq.scale as f64 * wq.scale as f64 * 2f64.powi(shift as i32)) as f32;
+        StageRequant { shift, scale }
+    }
+}
+
+/// Quantize one image's activation matrix for an integer stage: fit a
+/// per-image scale, write i16 into `out`, and return the quantizer plus
+/// the max row L2 norm in integer units (the activation half of the
+/// [`requant_shift`] bound), all in one pass.
+pub fn quantize_activations(data: &[f32], cols: usize, out: &mut [i16]) -> (Int16Quant, f64) {
+    assert_eq!(data.len(), out.len());
+    let q = Int16Quant::fit(data);
+    let mut max_sumsq = 0.0f64;
+    if cols == 0 {
+        return (q, 0.0);
+    }
+    for (row, orow) in data.chunks(cols).zip(out.chunks_mut(cols)) {
+        let mut sumsq = 0.0f64;
+        for (&x, o) in row.iter().zip(orow.iter_mut()) {
+            let v = q.quantize(x);
+            *o = v;
+            sumsq += v as f64 * v as f64;
+        }
+        if sumsq > max_sumsq {
+            max_sumsq = sumsq;
+        }
+    }
+    (q, max_sumsq.sqrt())
 }
 
 /// Quantization error statistics.
@@ -71,7 +200,38 @@ mod tests {
     #[test]
     fn zero_tensor_safe() {
         let q = Int16Quant::fit(&[0.0, 0.0]);
+        assert!(q.scale > 0.0 && q.scale.is_finite());
         assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+    }
+
+    #[test]
+    fn degenerate_fits_never_yield_bad_scales() {
+        for data in [
+            &[][..],
+            &[0.0, -0.0][..],
+            &[f32::INFINITY][..],
+            &[f32::NEG_INFINITY, f32::NAN][..],
+            &[f32::NAN, 0.0, f32::INFINITY][..],
+            &[1.0e-45][..], // subnormal max: scale must not underflow to 0
+        ] {
+            let q = Int16Quant::fit(data);
+            assert!(
+                q.scale > 0.0 && q.scale.is_finite(),
+                "fit({:?}) gave scale {}",
+                data,
+                q.scale
+            );
+            // quantize/dequantize stay finite on finite input
+            assert!(q.dequantize(q.quantize(0.5)).is_finite());
+        }
+    }
+
+    #[test]
+    fn fit_ignores_non_finite_values() {
+        // the finite values should set the scale, as if inf/NaN were absent
+        let with = Int16Quant::fit(&[1.5, f32::INFINITY, -0.25, f32::NAN]);
+        let without = Int16Quant::fit(&[1.5, -0.25]);
+        assert_eq!(with.scale, without.scale);
     }
 
     #[test]
@@ -99,5 +259,76 @@ mod tests {
         for (a, b) in back.iter().zip(&data) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn requantize_rounds_and_saturates() {
+        assert_eq!(requantize(100, 0), 100);
+        assert_eq!(requantize(5, 1), 3); // 2.5 rounds up
+        assert_eq!(requantize(-5, 1), -2); // -2.5 rounds toward +inf (offset rounding)
+        assert_eq!(requantize(1 << 20, 4), 1 << 16);
+        assert_eq!(requantize(i64::MAX / 4, 2), i16::MAX);
+        assert_eq!(requantize(i64::MIN / 4, 2), i16::MIN);
+    }
+
+    #[test]
+    fn requant_shift_bounds_accumulator() {
+        for &(rl2, cl2) in &[(1.0f64, 1.0f64), (32767.0, 32767.0), (1.0e6, 3.2e4), (0.0, 5.0)] {
+            let s = requant_shift(rl2, cl2);
+            let bound = rl2 * cl2;
+            assert!(bound / 2f64.powi(s as i32) <= i16::MAX as f64 + 1e-9,
+                    "shift {} too small for bound {}", s, bound);
+            if s > 0 {
+                // minimal: one less shift would overflow
+                assert!(bound / 2f64.powi(s as i32 - 1) > i16::MAX as f64);
+            }
+        }
+        assert_eq!(requant_shift(f64::INFINITY, 1.0), 63);
+    }
+
+    #[test]
+    fn stage_requant_recovers_f32_products() {
+        // quantize x and w, integer-multiply-accumulate, requantize,
+        // rescale: the result must approximate the f32 dot product.
+        let mut rng = Rng::new(5);
+        let n = 256;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        let xq = Int16Quant::fit(&x);
+        let wq = Int16Quant::fit(&w);
+        let xi = xq.quantize_vec(&x);
+        let wi = wq.quantize_vec(&w);
+        let row_l2 = xi.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        let col_l2 = wi.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        let rq = StageRequant::new(xq, wq, row_l2, col_l2);
+        let acc: i64 = xi.iter().zip(&wi).map(|(&a, &b)| a as i64 * b as i64).sum();
+        let got = requantize(acc, rq.shift) as f32 * rq.scale;
+        let want: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        // quantization error ~ n * (E|x| * s_w + E|w| * s_x) / 2 plus one
+        // requantization rounding step — a few 1e-3 here; 0.02 is safe.
+        assert!((got - want).abs() < 0.02, "{} vs {}", got, want);
+    }
+
+    #[test]
+    fn quantize_activations_reports_row_l2() {
+        let data = vec![3.0, 4.0, 0.0, 0.0, 1.0, 1.0];
+        let mut out = vec![0i16; 6];
+        let (q, l2) = quantize_activations(&data, 2, &mut out);
+        // row (3,4) dominates: its integer L2 is ||(q3,q4)||
+        let q3 = q.quantize(3.0) as f64;
+        let q4 = q.quantize(4.0) as f64;
+        assert!((l2 - (q3 * q3 + q4 * q4).sqrt()).abs() < 1e-9);
+        assert_eq!(out[0], q.quantize(3.0));
+        assert_eq!(out[5], q.quantize(1.0));
+    }
+
+    #[test]
+    fn int16_matrix_from_f32_column_norms() {
+        let w = vec![1.0f32, 0.0, -1.0, 2.0]; // 2x2, columns (1,-1) and (0,2)
+        let m = Int16Matrix::from_f32(&w, (2, 2));
+        assert_eq!(m.data.len(), 4);
+        let c0 = ((m.data[0] as f64).powi(2) + (m.data[2] as f64).powi(2)).sqrt();
+        let c1 = ((m.data[1] as f64).powi(2) + (m.data[3] as f64).powi(2)).sqrt();
+        assert!((m.max_col_l2 - c0.max(c1)).abs() < 1e-9);
     }
 }

@@ -11,7 +11,7 @@
 //! the Section VI datapath precision).
 //!
 //! Since the token-parallel kernel engine landed there is exactly **one**
-//! numeric path: every forward — single image or fused batch, one worker
+//! control path: every forward — single image or fused batch, one worker
 //! or many — runs [`FuncSim::forward_batch_into`] over a [`BatchScratch`]
 //! arena and the kernels in [`super::kernels`]. The TDHM schedule makes
 //! per-layer token *counts* input-independent (only the routing differs
@@ -20,12 +20,21 @@
 //! work only across independent output regions (block columns, token
 //! rows, heads), so per-image results are bit-identical at any batch
 //! size and worker count.
+//!
+//! Numerically there are two datapaths sharing that control path, keyed
+//! by [`Precision`]: f32 (the bit-exactness reference), and the true
+//! int16 path in which the SpMM and MLP matmul stages run *integer*
+//! MACs over i16 weights and per-image-quantized i16 activations with a
+//! per-(stage, image) requantization shift — attention, softmax,
+//! LayerNorm, the TDM and the head stay f32, as in the paper's
+//! accelerator (Section VI). See DESIGN.md "Fixed-point datapath".
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::formats::{BlockSparseMatrix, Int16Quant};
+use crate::formats::quant::quantize_activations;
+use crate::formats::{BlockSparseMatrix, Int16Matrix, Int16Panels, Int16Quant, StageRequant};
 use crate::funcsim::bitonic;
 use crate::funcsim::kernels::{self, AttnLane, ColumnSchedule};
 use crate::runtime::weights::{read_weights, Tensor};
@@ -57,6 +66,13 @@ struct EncoderWeights {
     b_int: Vec<f32>,
     w_out: Vec<f32>,
     b_out: Vec<f32>,
+    // Integer sidecars, present iff precision == Int16: the i16 weight
+    // forms the true fixed-point datapath computes with (the f32 copies
+    // above then only provide structure/schedules and the f32 stages).
+    w_qkv_q: Option<Int16Panels>,
+    w_proj_q: Option<Int16Panels>,
+    w_int_q: Option<Int16Matrix>,
+    w_out_q: Option<Int16Matrix>,
 }
 
 #[derive(Debug)]
@@ -140,6 +156,13 @@ pub struct BatchScratch {
     /// Per-worker attention lanes (K/V head planes + softmax row), grown
     /// on first threaded use and reused thereafter.
     lanes: Vec<AttnLane>,
+    /// Quantized activation staging for the int16 datapath: every
+    /// integer stage quantizes its f32 input here per image before the
+    /// integer kernel runs. Sized `c * n_max * max(d, qkv_dim, mlp_dim)`
+    /// (one stage is in flight at a time); empty for f32 models.
+    xq: Vec<i16>,
+    /// Per-image requantization parameters of the stage in flight.
+    rq: Vec<StageRequant>,
 }
 
 /// The single-image arena is just a capacity-1 [`BatchScratch`]: both the
@@ -177,6 +200,12 @@ impl BatchScratch {
             mlp_out: vec![0.0; c * n_max * d],
             cls_tok: vec![0.0; c * d],
             lanes: vec![AttnLane::new(n_max, sim.st.dims.head_dim)],
+            xq: if sim.precision == Precision::Int16 {
+                vec![0; c * n_max * d.max(qkv_dim).max(dm)]
+            } else {
+                Vec::new()
+            },
+            rq: Vec::with_capacity(c),
         }
     }
 
@@ -234,7 +263,9 @@ impl FuncSim {
                         precision: Precision) -> Result<FuncSim> {
         let d = st.dims.dim;
         let qkv_dim = st.dims.num_heads * st.dims.head_dim;
+        let dm = st.dims.mlp_dim;
         let b = st.block_size;
+        let int16 = precision == Precision::Int16;
         let maybe_quant = |mut v: Vec<f32>| -> Vec<f32> {
             if precision == Precision::Int16 {
                 quantize_roundtrip(&mut v);
@@ -277,6 +308,10 @@ impl FuncSim {
                 &w_proj_dense, (qkv_dim, d), b, &mask_proj, cb_proj);
             let qkv_sched = ColumnSchedule::new(&w_qkv);
             let proj_sched = ColumnSchedule::new(&w_proj);
+            let w_qkv_q = int16.then(|| w_qkv.quantize_int16());
+            let w_proj_q = int16.then(|| w_proj.quantize_int16());
+            let w_int_q = int16.then(|| Int16Matrix::from_f32(&w_int, (d, dm)));
+            let w_out_q = int16.then(|| Int16Matrix::from_f32(&w_out, (dm, d)));
             encoders.push(EncoderWeights {
                 ln1_g,
                 ln1_b,
@@ -292,6 +327,10 @@ impl FuncSim {
                 b_int,
                 w_out,
                 b_out,
+                w_qkv_q,
+                w_proj_q,
+                w_int_q,
+                w_out_q,
             });
         }
         let ln_g = next("ln_g")?;
@@ -343,12 +382,6 @@ impl FuncSim {
     /// Allocate a fused-batch arena carrying up to `capacity` images.
     pub fn batch_scratch(&self, capacity: usize) -> BatchScratch {
         BatchScratch::build(self, capacity)
-    }
-
-    fn maybe_quant_act(&self, x: &mut [f32]) {
-        if self.precision == Precision::Int16 {
-            quantize_roundtrip(x);
-        }
     }
 
     /// Forward one image (H*W*C f32, NHWC) -> logits. Allocates a fresh
@@ -421,6 +454,11 @@ impl FuncSim {
             || scratch.z.len() != scratch.capacity * scratch.n_max * d
             || scratch.patches.len() != scratch.capacity * pe
             || scratch.cls_rows.len() != scratch.capacity * self.st.dims.num_heads * scratch.n_max
+            || (self.precision == Precision::Int16
+                && scratch.xq.len()
+                    != scratch.capacity
+                        * scratch.n_max
+                        * d.max(qkv_dim).max(self.st.dims.mlp_dim))
         {
             bail!("scratch arena does not fit this model/batch (build it with \
                    FuncSim::scratch or FuncSim::batch_scratch)");
@@ -544,17 +582,32 @@ impl FuncSim {
         // Destructure for disjoint borrows of the arena's buffers.
         let BatchScratch {
             z, zn, qkv, sa, cls_rows, cls_attn_mean, zp, tdm_out, fused,
-            zn2, h, mlp_out, lanes, ..
+            zn2, h, mlp_out, lanes, xq, rq, ..
         } = scratch;
 
         // LN1 -> QKV via the fused panel SpMM (stage i), bias epilogue in
-        // the column walk.
+        // the column walk. In int16 mode the stage input is quantized per
+        // image and the SpMM runs integer MACs with a per-image
+        // requantization shift (weights were quantized at load).
         kernels::layer_norm_tokens(&z[..rows * d], zn, &w.ln1_g, &w.ln1_b, d, threads);
         let qkv = &mut qkv[..rows * 3 * qkv_dim];
-        kernels::spmm_bias_into(&w.w_qkv, &w.qkv_sched, &zn[..rows * d], rows,
-                                Some(&w.b_qkv[..]), None, qkv, threads);
-        for img_qkv in qkv.chunks_mut(n * 3 * qkv_dim) {
-            self.maybe_quant_act(img_qkv);
+        match &w.w_qkv_q {
+            Some(wq) => {
+                let xq = &mut xq[..rows * d];
+                rq.clear();
+                for img in 0..batch {
+                    let (q, row_l2) = quantize_activations(
+                        &zn[img * n * d..(img + 1) * n * d],
+                        d,
+                        &mut xq[img * n * d..(img + 1) * n * d],
+                    );
+                    rq.push(StageRequant::new(q, wq.quant, row_l2, wq.max_col_l2));
+                }
+                kernels::spmm_i16_bias_into(&w.w_qkv, wq, &w.qkv_sched, xq, rows, n, rq,
+                                            Some(&w.b_qkv[..]), None, qkv, threads);
+            }
+            None => kernels::spmm_bias_into(&w.w_qkv, &w.qkv_sched, &zn[..rows * d], rows,
+                                            Some(&w.b_qkv[..]), None, qkv, threads),
         }
 
         // Head-major repacked attention (stages ii-iii): (image, head)
@@ -576,15 +629,29 @@ impl FuncSim {
                 *c = sum * inv_nh;
             }
         }
-        for img_sa in sa.chunks_mut(n * qkv_dim) {
-            self.maybe_quant_act(img_sa);
-        }
-
         // Projection SpMM (stage iv) with bias + residual fused into the
-        // column-walk epilogue.
+        // column-walk epilogue; integer MACs in int16 mode.
         let zp = &mut zp[..rows * d];
-        kernels::spmm_bias_into(&w.w_proj, &w.proj_sched, sa, rows,
-                                Some(&w.b_proj[..]), Some(&z[..rows * d]), zp, threads);
+        match &w.w_proj_q {
+            Some(wq) => {
+                let xq = &mut xq[..rows * qkv_dim];
+                rq.clear();
+                for img in 0..batch {
+                    let (q, row_l2) = quantize_activations(
+                        &sa[img * n * qkv_dim..(img + 1) * n * qkv_dim],
+                        qkv_dim,
+                        &mut xq[img * n * qkv_dim..(img + 1) * n * qkv_dim],
+                    );
+                    rq.push(StageRequant::new(q, wq.quant, row_l2, wq.max_col_l2));
+                }
+                kernels::spmm_i16_bias_into(&w.w_proj, wq, &w.proj_sched, xq, rows, n, rq,
+                                            Some(&w.b_proj[..]), Some(&z[..rows * d]), zp,
+                                            threads);
+            }
+            None => kernels::spmm_bias_into(&w.w_proj, &w.proj_sched, sa, rows,
+                                            Some(&w.b_proj[..]), Some(&z[..rows * d]), zp,
+                                            threads),
+        }
 
         // TDM between MSA and MLP: per-image bitonic routing over the
         // non-CLS scores. Token counts are input-independent, so every
@@ -628,18 +695,48 @@ impl FuncSim {
         };
 
         // LN2 -> MLP with bias+GELU and bias+residual epilogues fused
-        // into the matmuls (dense, neuron-pruned columns are zero).
+        // into the matmuls (dense, neuron-pruned columns are zero). In
+        // int16 mode both matmuls run integer MACs; GELU stays f32
+        // between them, so the intermediate h is re-quantized for the
+        // output stage.
         let rows_out = batch * n_out;
         kernels::layer_norm_tokens(zcur, zn2, &w.ln2_g, &w.ln2_b, d, threads);
         let h = &mut h[..rows_out * dm];
-        kernels::matmul_bias_gelu_into(&zn2[..rows_out * d], &w.w_int, &w.b_int,
-                                       rows_out, d, dm, h, threads);
-        for img_h in h.chunks_mut(n_out * dm) {
-            self.maybe_quant_act(img_h);
-        }
         let mlp_out = &mut mlp_out[..rows_out * d];
-        kernels::matmul_bias_residual_into(h, &w.w_out, &w.b_out, zcur,
-                                           rows_out, dm, d, mlp_out, threads);
+        match (&w.w_int_q, &w.w_out_q) {
+            (Some(wi), Some(wo)) => {
+                let xq_in = &mut xq[..rows_out * d];
+                rq.clear();
+                for img in 0..batch {
+                    let (q, row_l2) = quantize_activations(
+                        &zn2[img * n_out * d..(img + 1) * n_out * d],
+                        d,
+                        &mut xq_in[img * n_out * d..(img + 1) * n_out * d],
+                    );
+                    rq.push(StageRequant::new(q, wi.quant, row_l2, wi.max_col_l2));
+                }
+                kernels::matmul_i16_bias_gelu_into(xq_in, wi, n_out, rq, &w.b_int,
+                                                   rows_out, h, threads);
+                let xq_h = &mut xq[..rows_out * dm];
+                rq.clear();
+                for img in 0..batch {
+                    let (q, row_l2) = quantize_activations(
+                        &h[img * n_out * dm..(img + 1) * n_out * dm],
+                        dm,
+                        &mut xq_h[img * n_out * dm..(img + 1) * n_out * dm],
+                    );
+                    rq.push(StageRequant::new(q, wo.quant, row_l2, wo.max_col_l2));
+                }
+                kernels::matmul_i16_bias_residual_into(xq_h, wo, n_out, rq, &w.b_out, zcur,
+                                                       rows_out, mlp_out, threads);
+            }
+            _ => {
+                kernels::matmul_bias_gelu_into(&zn2[..rows_out * d], &w.w_int, &w.b_int,
+                                               rows_out, d, dm, h, threads);
+                kernels::matmul_bias_residual_into(h, &w.w_out, &w.b_out, zcur,
+                                                   rows_out, dm, d, mlp_out, threads);
+            }
+        }
         // Layer output becomes next layer's input.
         z[..rows_out * d].copy_from_slice(mlp_out);
         n_out
@@ -717,6 +814,38 @@ mod tests {
             let mut got1 = vec![0.0f32; classes];
             sim.forward_into_threads(&flat[..per], &mut s1, &mut got1, 4).unwrap();
             assert_eq!(got1.as_slice(), &want[..classes]);
+        }
+    }
+
+    #[test]
+    fn int16_batched_forward_matches_serial_and_stays_finite() {
+        // The integer datapath quantizes activations per image, so fused
+        // batches must reproduce the serial per-image forward exactly at
+        // any thread count (integer accumulation is order-independent,
+        // and partitioning never splits a reduction).
+        use crate::config::{PruningSetting, TEST_TINY};
+        use crate::util::rng::Rng;
+        let setting = PruningSetting::new(8, 0.7, 0.7);
+        let sim = FuncSim::synthesize(&TEST_TINY, &setting, 11, Precision::Int16).unwrap();
+        assert!(sim.encoders.iter().all(|e| e.w_qkv_q.is_some()
+            && e.w_proj_q.is_some()
+            && e.w_int_q.is_some()
+            && e.w_out_q.is_some()));
+        let per = sim.input_elems();
+        let classes = sim.num_classes();
+        let batch = 3usize;
+        let mut rng = Rng::new(29);
+        let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+        let want: Vec<f32> = (0..batch)
+            .flat_map(|i| sim.forward(&flat[i * per..(i + 1) * per]).unwrap())
+            .collect();
+        assert!(want.iter().all(|x| x.is_finite()));
+        let mut scratch = sim.batch_scratch(batch);
+        for threads in [1usize, 3] {
+            let mut got = vec![0.0f32; batch * classes];
+            sim.forward_batch_into(&flat, batch, &mut scratch, &mut got, threads)
+                .unwrap();
+            assert_eq!(got, want, "threads={}", threads);
         }
     }
 }

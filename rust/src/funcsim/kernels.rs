@@ -23,17 +23,34 @@
 //! independent output regions (block columns, token rows, heads), never
 //! across a reduction. Results are therefore bit-identical to the
 //! one-token-at-a-time reference at any worker count — the invariant the
-//! backend tests pin.
+//! backend tests pin. The SpMM/matmul inner loops run as fixed-width
+//! [`LANE`] iterations over the CSR-of-panels payload so rustc emits
+//! vector code; the optional `simd` crate feature swaps in an AVX
+//! accumulator panel (separate mul + add, **not** FMA — per-element IEEE
+//! order is unchanged, so the bit-exactness invariant survives).
+//!
+//! The `*_i16_*` kernels are the true integer datapath (Section VI):
+//! i16 weights x i16 activations with pure integer MACs (i32 products,
+//! i64 accumulation — the software stand-in for the DSP slice's 48-bit
+//! accumulator) and a per-(stage, image) requantization shift; the only
+//! f32 arithmetic is the one rescale per *output element* in the fused
+//! epilogue. See `formats::quant` for the shift/bound machinery.
 //!
 //! Threading uses `std::thread::scope` per kernel invocation; workers
 //! write disjoint regions of the shared output through a raw-pointer
 //! wrapper (`RawMat`), the one `unsafe` pattern in this module.
 
-use crate::formats::BlockSparseMatrix;
+use crate::formats::quant::requantize;
+use crate::formats::{BlockSparseMatrix, Int16Matrix, Int16Panels, StageRequant};
 use crate::sim::load_balance::balanced_order;
 
 /// Token rows amortizing one header walk in the panel-blocked SpMM.
 pub const PANEL: usize = 4;
+
+/// Fixed lane width of the accumulator inner loops (f32/i16 elements
+/// per step): chunks of exactly `LANE` give the compiler a known trip
+/// count to vectorize, and match one AVX ymm register of f32.
+pub const LANE: usize = 8;
 
 /// Largest block size the stack-allocated SpMM accumulator panel covers.
 pub const MAX_B: usize = 64;
@@ -104,6 +121,102 @@ fn par_workers(workers: usize, units: usize, macs: usize) -> usize {
 fn span_bounds(rows: usize, workers: usize) -> Vec<(usize, usize)> {
     let k = if rows == 0 { 1 } else { workers.min(rows) };
     (0..k).map(|w| (rows * w / k, rows * (w + 1) / k)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Lane-width inner loops (autovectorized; AVX under the `simd` feature)
+// ---------------------------------------------------------------------------
+
+/// `acc[i] += xv * w[i]` over one stripe, in fixed [`LANE`]-wide chunks
+/// so the loop body has a known trip count the compiler vectorizes.
+/// Bit-exact vs the naive zip loop: every `acc` element keeps its own
+/// accumulation chain and per-element operation order is unchanged —
+/// chunking only regroups *independent* chains.
+#[inline]
+fn axpy_lanes(acc: &mut [f32], w: &[f32], xv: f32) {
+    debug_assert_eq!(acc.len(), w.len());
+    let mut ac = acc.chunks_exact_mut(LANE);
+    let mut wc = w.chunks_exact(LANE);
+    for (a, wv) in ac.by_ref().zip(wc.by_ref()) {
+        for i in 0..LANE {
+            a[i] += xv * wv[i];
+        }
+    }
+    for (a, wv) in ac.into_remainder().iter_mut().zip(wc.remainder()) {
+        *a += xv * wv;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    //! Explicit AVX accumulator panel. Runtime-dispatched: the `simd`
+    //! feature compiles this in, `avx::available()` gates per process.
+
+    /// AVX availability, detected once per process.
+    pub fn available() -> bool {
+        static AVX: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVX.get_or_init(|| is_x86_feature_detected!("avx"))
+    }
+
+    /// 8-lane f32 axpy. Separate `mul` + `add`, deliberately **not**
+    /// FMA: fused multiply-add skips the intermediate rounding and
+    /// would break bit-exactness against the scalar reference walk;
+    /// per-lane IEEE mul-then-add is bit-identical to the scalar loop.
+    ///
+    /// # Safety
+    /// Caller must have checked [`available`].
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy(acc: &mut [f32], w: &[f32], xv: f32) {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(acc.len(), w.len());
+        let n = acc.len();
+        let xvv = _mm256_set1_ps(xv);
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let s = _mm256_add_ps(a, _mm256_mul_ps(xvv, wv));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), s);
+            i += 8;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) += xv * *w.get_unchecked(i);
+            i += 1;
+        }
+    }
+}
+
+/// The axpy every f32 SpMM/panel loop routes through: AVX when the
+/// `simd` feature is on and the CPU has it, the lane-chunked scalar
+/// loop otherwise. Both orders are bit-identical.
+#[inline]
+fn axpy(acc: &mut [f32], w: &[f32], xv: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx::available() {
+        // Safety: availability checked on this line.
+        unsafe { avx::axpy(acc, w, xv) };
+        return;
+    }
+    axpy_lanes(acc, w, xv);
+}
+
+/// Integer axpy: `acc[i] += xv * w[i]` with i16 operands, i32 products
+/// (cannot overflow: |i16*i16| <= 2^30) and i64 accumulation. This is
+/// the int16 datapath's entire inner loop — no floating point.
+#[inline]
+fn iaxpy(acc: &mut [i64], w: &[i16], xv: i16) {
+    debug_assert_eq!(acc.len(), w.len());
+    let xv = xv as i32;
+    let mut ac = acc.chunks_exact_mut(LANE);
+    let mut wc = w.chunks_exact(LANE);
+    for (a, wv) in ac.by_ref().zip(wc.by_ref()) {
+        for i in 0..LANE {
+            a[i] += (xv * wv[i] as i32) as i64;
+        }
+    }
+    for (a, &wv) in ac.into_remainder().iter_mut().zip(wc.remainder()) {
+        *a += (xv * wv as i32) as i64;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -218,9 +331,11 @@ fn spmm_cols(
 ) {
     let (m2, n) = w.shape;
     let b = w.b;
+    let bb = b * b;
     let mut acc = [[0.0f32; MAX_B]; PANEL];
     for &j in cols {
-        let col = &w.cols[j];
+        let rows = w.col_rows(j);
+        let vals = w.col_values(j);
         let c0 = j * b;
         let cw = b.min(n - c0);
         let bias_s = bias.map(|bv| &bv[c0..c0 + cw]);
@@ -229,8 +344,8 @@ fn spmm_cols(
             for a in acc.iter_mut() {
                 a[..cw].fill(0.0);
             }
-            for (t, &ib) in col.rows.iter().enumerate() {
-                let blk = &col.data[t * b * b..(t + 1) * b * b];
+            for (t, &ib) in rows.iter().enumerate() {
+                let blk = &vals[t * bb..(t + 1) * bb];
                 let r0 = ib as usize * b;
                 let rw = b.min(m2 - r0);
                 for bi in 0..rw {
@@ -240,9 +355,7 @@ fn spmm_cols(
                         if xv == 0.0 {
                             continue;
                         }
-                        for (av, wv) in a[..cw].iter_mut().zip(brow) {
-                            *av += xv * wv;
-                        }
+                        axpy(&mut a[..cw], brow, xv);
                     }
                 }
             }
@@ -257,8 +370,8 @@ fn spmm_cols(
         while r < x_rows {
             let a = &mut acc[0];
             a[..cw].fill(0.0);
-            for (t, &ib) in col.rows.iter().enumerate() {
-                let blk = &col.data[t * b * b..(t + 1) * b * b];
+            for (t, &ib) in rows.iter().enumerate() {
+                let blk = &vals[t * bb..(t + 1) * bb];
                 let r0 = ib as usize * b;
                 let rw = b.min(m2 - r0);
                 for bi in 0..rw {
@@ -266,16 +379,59 @@ fn spmm_cols(
                     if xv == 0.0 {
                         continue;
                     }
-                    let brow = &blk[bi * b..bi * b + cw];
-                    for (av, wv) in a[..cw].iter_mut().zip(brow) {
-                        *av += xv * wv;
-                    }
+                    axpy(&mut a[..cw], &blk[bi * b..bi * b + cw], xv);
                 }
             }
             // Safety: same disjoint column ownership as the panel path.
             let dst = unsafe { y.slice(r * n + c0, cw) };
             store_stripe(dst, &a[..cw], bias_s, res.map(|rv| &rv[r * n + c0..r * n + c0 + cw]));
             r += 1;
+        }
+    }
+}
+
+/// Scalar header walk over one column set with a heap accumulator — the
+/// fallback for block sizes beyond [`MAX_B`], where the stack panel
+/// doesn't fit. Same per-element accumulation order as
+/// [`BlockSparseMatrix::spmm_into`], so results stay bit-exact; only
+/// the header amortization is lost.
+fn spmm_cols_scalar(
+    w: &BlockSparseMatrix,
+    x: &[f32],
+    x_rows: usize,
+    cols: &[usize],
+    bias: Option<&[f32]>,
+    res: Option<&[f32]>,
+    y: RawMat,
+) {
+    let (m2, n) = w.shape;
+    let b = w.b;
+    let bb = b * b;
+    let mut acc = vec![0.0f32; b];
+    for &j in cols {
+        let rows = w.col_rows(j);
+        let vals = w.col_values(j);
+        let c0 = j * b;
+        let cw = b.min(n - c0);
+        let bias_s = bias.map(|bv| &bv[c0..c0 + cw]);
+        for xr in 0..x_rows {
+            let xrow = &x[xr * m2..(xr + 1) * m2];
+            acc[..cw].fill(0.0);
+            for (t, &ib) in rows.iter().enumerate() {
+                let blk = &vals[t * bb..(t + 1) * bb];
+                let r0 = ib as usize * b;
+                let rw = b.min(m2 - r0);
+                for bi in 0..rw {
+                    let xv = xrow[r0 + bi];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    axpy(&mut acc[..cw], &blk[bi * b..bi * b + cw], xv);
+                }
+            }
+            // Safety: disjoint column ownership, as in the panel path.
+            let dst = unsafe { y.slice(xr * n + c0, cw) };
+            store_stripe(dst, &acc[..cw], bias_s, res.map(|rv| &rv[xr * n + c0..xr * n + c0 + cw]));
         }
     }
 }
@@ -298,8 +454,187 @@ pub fn spmm_bias_into(
     let (m2, n) = w.shape;
     assert_eq!(x.len(), x_rows * m2);
     assert_eq!(y.len(), x_rows * n);
-    assert_eq!(sched.pops.len(), w.cols.len(), "schedule built for another matrix");
-    assert!(w.b <= MAX_B, "panel SpMM supports b <= {}", MAX_B);
+    assert_eq!(sched.pops.len(), w.col_blocks(), "schedule built for another matrix");
+    if let Some(bv) = bias {
+        assert_eq!(bv.len(), n);
+    }
+    if let Some(rv) = res {
+        assert_eq!(rv.len(), x_rows * n);
+    }
+    // Block sizes beyond the stack panel fall back to the heap-
+    // accumulator scalar walk instead of aborting; results stay
+    // bit-exact either way.
+    let walk: fn(&BlockSparseMatrix, &[f32], usize, &[usize], Option<&[f32]>, Option<&[f32]>, RawMat) =
+        if w.b <= MAX_B { spmm_cols } else { spmm_cols_scalar };
+    let yraw = RawMat(y.as_mut_ptr());
+    let workers = par_workers(workers, sched.order.len(), x_rows * sched.row_macs);
+    if workers == 1 {
+        walk(w, x, x_rows, &sched.order, bias, res, yraw);
+        return;
+    }
+    let parts = sched.partition(workers);
+    std::thread::scope(|s| {
+        for part in &parts[1..] {
+            s.spawn(move || walk(w, x, x_rows, part, bias, res, yraw));
+        }
+        walk(w, x, x_rows, &parts[0], bias, res, yraw);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Integer (int16) SpMM — the true fixed-point datapath stage
+// ---------------------------------------------------------------------------
+
+/// Requantize + rescale one finished integer stripe and fuse the f32
+/// epilogue: `y = requantize(acc, shift) as f32 * scale [+ (bias [+
+/// res])]`. The one f32 multiply per output element that rejoins the
+/// f32 graph — the accumulation itself never touched floating point.
+#[inline]
+fn store_stripe_i64(
+    dst: &mut [f32],
+    acc: &[i64],
+    rq: StageRequant,
+    bias: Option<&[f32]>,
+    res: Option<&[f32]>,
+) {
+    match (bias, res) {
+        (None, None) => {
+            for (d, &a) in dst.iter_mut().zip(acc) {
+                *d = requantize(a, rq.shift) as f32 * rq.scale;
+            }
+        }
+        (Some(bv), None) => {
+            for ((d, &a), b) in dst.iter_mut().zip(acc).zip(bv) {
+                *d = requantize(a, rq.shift) as f32 * rq.scale + b;
+            }
+        }
+        (Some(bv), Some(rv)) => {
+            for (((d, &a), b), r) in dst.iter_mut().zip(acc).zip(bv).zip(rv) {
+                *d = requantize(a, rq.shift) as f32 * rq.scale + (b + r);
+            }
+        }
+        (None, Some(rv)) => {
+            for ((d, &a), r) in dst.iter_mut().zip(acc).zip(rv) {
+                *d = requantize(a, rq.shift) as f32 * rq.scale + r;
+            }
+        }
+    }
+}
+
+/// Integer panel walk over one column set. The accumulator panel lives
+/// on the heap (`PANEL * b` i64s, allocated once per worker dispatch)
+/// so any block size works without a separate wide fallback.
+#[allow(clippy::too_many_arguments)]
+fn spmm_i16_cols(
+    w: &BlockSparseMatrix,
+    wq: &Int16Panels,
+    xq: &[i16],
+    x_rows: usize,
+    rows_per_img: usize,
+    rq: &[StageRequant],
+    cols: &[usize],
+    bias: Option<&[f32]>,
+    res: Option<&[f32]>,
+    y: RawMat,
+) {
+    let (m2, n) = w.shape;
+    let b = w.b;
+    let bb = b * b;
+    let mut acc = vec![0i64; PANEL * b];
+    for &j in cols {
+        let rows = w.col_rows(j);
+        let vals = wq.col_values(w, j);
+        let c0 = j * b;
+        let cw = b.min(n - c0);
+        let bias_s = bias.map(|bv| &bv[c0..c0 + cw]);
+        let mut r = 0;
+        while r + PANEL <= x_rows {
+            acc.fill(0);
+            for (t, &ib) in rows.iter().enumerate() {
+                let blk = &vals[t * bb..(t + 1) * bb];
+                let r0 = ib as usize * b;
+                let rw = b.min(m2 - r0);
+                for bi in 0..rw {
+                    let brow = &blk[bi * b..bi * b + cw];
+                    for p in 0..PANEL {
+                        let xv = xq[(r + p) * m2 + r0 + bi];
+                        if xv == 0 {
+                            continue;
+                        }
+                        iaxpy(&mut acc[p * b..p * b + cw], brow, xv);
+                    }
+                }
+            }
+            for p in 0..PANEL {
+                // Safety: this worker owns element columns c0..c0+cw of
+                // every row (cols are disjoint across workers).
+                let dst = unsafe { y.slice((r + p) * n + c0, cw) };
+                store_stripe_i64(
+                    dst,
+                    &acc[p * b..p * b + cw],
+                    rq[(r + p) / rows_per_img],
+                    bias_s,
+                    res.map(|rv| &rv[(r + p) * n + c0..(r + p) * n + c0 + cw]),
+                );
+            }
+            r += PANEL;
+        }
+        while r < x_rows {
+            acc[..cw].fill(0);
+            for (t, &ib) in rows.iter().enumerate() {
+                let blk = &vals[t * bb..(t + 1) * bb];
+                let r0 = ib as usize * b;
+                let rw = b.min(m2 - r0);
+                for bi in 0..rw {
+                    let xv = xq[r * m2 + r0 + bi];
+                    if xv == 0 {
+                        continue;
+                    }
+                    iaxpy(&mut acc[..cw], &blk[bi * b..bi * b + cw], xv);
+                }
+            }
+            // Safety: same disjoint column ownership as the panel path.
+            let dst = unsafe { y.slice(r * n + c0, cw) };
+            store_stripe_i64(
+                dst,
+                &acc[..cw],
+                rq[r / rows_per_img],
+                bias_s,
+                res.map(|rv| &rv[r * n + c0..r * n + c0 + cw]),
+            );
+            r += 1;
+        }
+    }
+}
+
+/// Y = dequant(Xq x Wq) with optional fused `+ bias` / `+ residual`:
+/// the block-sparse stage of the true int16 datapath. `xq` holds
+/// `x_rows` quantized activation rows (`rows_per_img` consecutive rows
+/// per image, each image quantized with its own scale); `rq[img]` is
+/// that image's requantization shift + rescale for this stage. Inner
+/// loops are pure integer MACs; threading follows the same
+/// load-balanced column schedule as the f32 path. Fully overwrites `y`.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_i16_bias_into(
+    w: &BlockSparseMatrix,
+    wq: &Int16Panels,
+    sched: &ColumnSchedule,
+    xq: &[i16],
+    x_rows: usize,
+    rows_per_img: usize,
+    rq: &[StageRequant],
+    bias: Option<&[f32]>,
+    res: Option<&[f32]>,
+    y: &mut [f32],
+    workers: usize,
+) {
+    let (m2, n) = w.shape;
+    assert_eq!(xq.len(), x_rows * m2);
+    assert_eq!(y.len(), x_rows * n);
+    assert_eq!(sched.pops.len(), w.col_blocks(), "schedule built for another matrix");
+    assert_eq!(wq.values.len(), w.values.len(), "quantized sidecar of another matrix");
+    assert!(rows_per_img > 0);
+    assert!(rq.len() * rows_per_img >= x_rows, "requant table does not cover all rows");
     if let Some(bv) = bias {
         assert_eq!(bv.len(), n);
     }
@@ -309,15 +644,17 @@ pub fn spmm_bias_into(
     let yraw = RawMat(y.as_mut_ptr());
     let workers = par_workers(workers, sched.order.len(), x_rows * sched.row_macs);
     if workers == 1 {
-        spmm_cols(w, x, x_rows, &sched.order, bias, res, yraw);
+        spmm_i16_cols(w, wq, xq, x_rows, rows_per_img, rq, &sched.order, bias, res, yraw);
         return;
     }
     let parts = sched.partition(workers);
     std::thread::scope(|s| {
         for part in &parts[1..] {
-            s.spawn(move || spmm_cols(w, x, x_rows, part, bias, res, yraw));
+            s.spawn(move || {
+                spmm_i16_cols(w, wq, xq, x_rows, rows_per_img, rq, part, bias, res, yraw)
+            });
         }
-        spmm_cols(w, x, x_rows, &parts[0], bias, res, yraw);
+        spmm_i16_cols(w, wq, xq, x_rows, rows_per_img, rq, &parts[0], bias, res, yraw);
     });
 }
 
@@ -683,6 +1020,90 @@ pub fn matmul_bias_residual_into(
     });
 }
 
+/// y = GELU(dequant(xq x wq) + bias): the MLP intermediate stage of the
+/// int16 datapath. Per output row the whole k-reduction runs as integer
+/// MACs into an i64 row accumulator; requantize + rescale + bias + GELU
+/// fuse into one epilogue pass. `rows_per_img` consecutive rows share
+/// `rq[img]`. Fully overwrites `y` (`m x n`, `(k, n) = w.shape`).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i16_bias_gelu_into(
+    xq: &[i16],
+    w: &Int16Matrix,
+    rows_per_img: usize,
+    rq: &[StageRequant],
+    bias: &[f32],
+    m: usize,
+    y: &mut [f32],
+    workers: usize,
+) {
+    let (k, n) = w.shape;
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(bias.len(), n);
+    assert_eq!(y.len(), m * n);
+    assert!(rows_per_img > 0);
+    assert!(rq.len() * rows_per_img >= m, "requant table does not cover all rows");
+    let workers = par_workers(workers, m, m * k * n);
+    parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
+        let mut acc = vec![0i64; n];
+        for (ri, yrow) in (r0..r1).zip(ys.chunks_mut(n)) {
+            acc.fill(0);
+            for (kk, &xv) in xq[ri * k..(ri + 1) * k].iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                iaxpy(&mut acc, &w.data[kk * n..(kk + 1) * n], xv);
+            }
+            let rqv = rq[ri / rows_per_img];
+            for ((v, &a), b) in yrow.iter_mut().zip(&acc).zip(bias) {
+                *v = gelu(requantize(a, rqv.shift) as f32 * rqv.scale + b);
+            }
+        }
+    });
+}
+
+/// y = dequant(xq x wq) + bias + res: the MLP output stage of the int16
+/// datapath, integer accumulation with the bias+residual epilogue fused
+/// after requantization (same `sum + (bias + res)` order as the f32
+/// kernel). Fully overwrites `y`.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i16_bias_residual_into(
+    xq: &[i16],
+    w: &Int16Matrix,
+    rows_per_img: usize,
+    rq: &[StageRequant],
+    bias: &[f32],
+    res: &[f32],
+    m: usize,
+    y: &mut [f32],
+    workers: usize,
+) {
+    let (k, n) = w.shape;
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(bias.len(), n);
+    assert_eq!(res.len(), m * n);
+    assert_eq!(y.len(), m * n);
+    assert!(rows_per_img > 0);
+    assert!(rq.len() * rows_per_img >= m, "requant table does not cover all rows");
+    let workers = par_workers(workers, m, m * k * n);
+    parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
+        let mut acc = vec![0i64; n];
+        for (ri, yrow) in (r0..r1).zip(ys.chunks_mut(n)) {
+            acc.fill(0);
+            for (kk, &xv) in xq[ri * k..(ri + 1) * k].iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                iaxpy(&mut acc, &w.data[kk * n..(kk + 1) * n], xv);
+            }
+            let rqv = rq[ri / rows_per_img];
+            let rrow = &res[ri * n..(ri + 1) * n];
+            for (((v, &a), b), r) in yrow.iter_mut().zip(&acc).zip(bias).zip(rrow) {
+                *v = requantize(a, rqv.shift) as f32 * rqv.scale + (b + r);
+            }
+        }
+    });
+}
+
 /// The pre-repack attention loop — strided K/V reads straight out of the
 /// interleaved QKV buffer, one head at a time. **Not** a hot-path kernel:
 /// kept as the single shared oracle for the bit-exactness tests and the
@@ -911,6 +1332,124 @@ mod tests {
             let mut got = vec![f32::NAN; m * n];
             matmul_bias_residual_into(&x, &w, &bias, &res, m, k, n, &mut got, workers);
             assert_eq!(got, want_res, "residual workers={}", workers);
+        }
+    }
+
+    #[test]
+    fn wide_block_spmm_falls_back_bitexact() {
+        // b > MAX_B used to abort via assert!; it must now route to the
+        // scalar header walk and still match the reference bit-for-bit.
+        let mut rng = Rng::new(23);
+        let (rows, m2, n, b) = (5usize, 192usize, 192usize, 96usize);
+        assert!(b > MAX_B);
+        let sp = random_sparse(&mut rng, m2, n, b, 0.75);
+        let sched = ColumnSchedule::new(&sp);
+        let x: Vec<f32> = (0..rows * m2).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0f32; rows * n];
+        sp.spmm_into(&x, rows, &mut want);
+        for t in 0..rows {
+            for j in 0..n {
+                want[t * n + j] += bias[j];
+            }
+        }
+        for workers in [1usize, 2] {
+            let mut got = vec![f32::NAN; rows * n];
+            spmm_bias_into(&sp, &sched, &x, rows, Some(&bias[..]), None, &mut got, workers);
+            for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(), "workers={} idx={}", workers, i);
+            }
+        }
+    }
+
+    #[test]
+    fn integer_spmm_matches_integer_reference() {
+        // Integer addition is associative, so the panel kernel's i64
+        // accumulator must equal a naive dense integer reference fed
+        // the same quantized operands exactly — and the f32 epilogue is
+        // then the same ops in the same order: bit-identical output.
+        let mut rng = Rng::new(29);
+        for &(batch, nrows, m2, n, b) in
+            &[(1usize, 3usize, 16usize, 24usize, 8usize), (2, 5, 24, 32, 8), (1, 6, 32, 32, 16)]
+        {
+            let sp = random_sparse(&mut rng, m2, n, b, 0.6);
+            let sched = ColumnSchedule::new(&sp);
+            let wq = sp.quantize_int16();
+            let rows = batch * nrows;
+            let x: Vec<f32> = (0..rows * m2).map(|_| rng.normal()).collect();
+            let mut xq = vec![0i16; rows * m2];
+            let mut rq = Vec::new();
+            for img in 0..batch {
+                let sl = img * nrows * m2..(img + 1) * nrows * m2;
+                let (q, row_l2) = crate::formats::quant::quantize_activations(
+                    &x[sl.clone()], m2, &mut xq[sl]);
+                rq.push(StageRequant::new(q, wq.quant, row_l2, wq.max_col_l2));
+            }
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let res: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+            let wdq: Vec<i16> = sp.to_dense().iter().map(|&v| wq.quant.quantize(v)).collect();
+            let mut want = vec![0.0f32; rows * n];
+            for r in 0..rows {
+                let rqv = rq[r / nrows];
+                for c in 0..n {
+                    let mut acc = 0i64;
+                    for kk in 0..m2 {
+                        acc += xq[r * m2 + kk] as i64 * wdq[kk * n + c] as i64;
+                    }
+                    want[r * n + c] =
+                        requantize(acc, rqv.shift) as f32 * rqv.scale + (bias[c] + res[r * n + c]);
+                }
+            }
+            for workers in [1usize, 3] {
+                let mut got = vec![f32::NAN; rows * n];
+                spmm_i16_bias_into(&sp, &wq, &sched, &xq, rows, nrows, &rq,
+                                   Some(&bias[..]), Some(&res[..]), &mut got, workers);
+                for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), w.to_bits(), "workers={} idx={}", workers, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn integer_mlp_matmuls_match_integer_reference() {
+        let mut rng = Rng::new(31);
+        let (batch, nrows, k, n) = (2usize, 4usize, 12usize, 20usize);
+        let m = batch * nrows;
+        let wf: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let w = Int16Matrix::from_f32(&wf, (k, n));
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut xq = vec![0i16; m * k];
+        let mut rq = Vec::new();
+        for img in 0..batch {
+            let sl = img * nrows * k..(img + 1) * nrows * k;
+            let (q, row_l2) =
+                crate::formats::quant::quantize_activations(&x[sl.clone()], k, &mut xq[sl]);
+            rq.push(StageRequant::new(q, w.quant, row_l2, w.max_col_l2));
+        }
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let res: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut want_g = vec![0.0f32; m * n];
+        let mut want_r = vec![0.0f32; m * n];
+        for r in 0..m {
+            let rqv = rq[r / nrows];
+            for c in 0..n {
+                let mut acc = 0i64;
+                for kk in 0..k {
+                    acc += xq[r * k + kk] as i64 * w.data[kk * n + c] as i64;
+                }
+                let v = requantize(acc, rqv.shift) as f32 * rqv.scale;
+                want_g[r * n + c] = gelu(v + bias[c]);
+                want_r[r * n + c] = v + (bias[c] + res[r * n + c]);
+            }
+        }
+        for workers in [1usize, 3] {
+            let mut got = vec![f32::NAN; m * n];
+            matmul_i16_bias_gelu_into(&xq, &w, nrows, &rq, &bias, m, &mut got, workers);
+            assert_eq!(got, want_g, "gelu workers={}", workers);
+            let mut got = vec![f32::NAN; m * n];
+            matmul_i16_bias_residual_into(&xq, &w, nrows, &rq, &bias, &res, m, &mut got, workers);
+            assert_eq!(got, want_r, "residual workers={}", workers);
         }
     }
 

@@ -10,7 +10,11 @@
 //! SPEC    := MODEL ('@' PART)*
 //! MODEL   := deit-small | deit-tiny | test-tiny        (config.rs names)
 //! PART    := SETTING                                    b8_rb0.7_rt0.5
-//!          | int16 | f32                                datapath precision
+//!          | int16 | f32                                datapath precision:
+//!                                                       `int16` selects the
+//!                                                       true integer-MAC path
+//!                                                       (DESIGN.md
+//!                                                       *Fixed-point datapath*)
 //!          | seed=N                                     synthesis seed
 //!          | replicas=N                                 pool override
 //!          | queue=N                                    pool override

@@ -376,6 +376,173 @@ fn batched_fused_forward_matches_serial_per_image() {
 }
 
 #[test]
+fn csr_panel_layout_bit_exact_vs_boxed_column_walk() {
+    // The CSR-of-panels storage must be a pure layout change: the same
+    // header walk over the old boxed per-column layout (each block
+    // column in its own pair of heap allocations, what `BlockColumn`
+    // used to be) yields bit-identical products.
+    use vitfpga::formats::BlockSparseMatrix;
+    forall(
+        11,
+        80,
+        |r: &mut Rng| {
+            let b = [2usize, 4, 8, 16][r.range(0, 3)];
+            let m1 = r.range(1, 5);
+            let m2 = r.range(1, 48);
+            let n = r.range(1, 48);
+            let (rb, cb) = (m2.div_ceil(b), n.div_ceil(b));
+            let keep_p = r.f64();
+            let mask: Vec<bool> = (0..rb * cb).map(|_| r.bool(keep_p)).collect();
+            let dense: Vec<f32> = (0..m2 * n).map(|_| r.normal()).collect();
+            let x: Vec<f32> = (0..m1 * m2).map(|_| r.normal()).collect();
+            (m1, m2, n, b, mask, dense, x)
+        },
+        |(m1, m2, n, b, mask, dense, x)| {
+            let (m1, m2, n, b) = (*m1, *m2, *n, *b);
+            let cb = n.div_ceil(b);
+            let sp = BlockSparseMatrix::from_dense(dense, (m2, n), b, mask, cb);
+            let old: Vec<(Vec<u32>, Vec<f32>)> = (0..sp.col_blocks())
+                .map(|j| (sp.col_rows(j).to_vec(), sp.col_values(j).to_vec()))
+                .collect();
+            let bb = b * b;
+            let mut want = vec![0.0f32; m1 * n];
+            let mut acc = vec![0.0f32; b];
+            for (j, (rows, vals)) in old.iter().enumerate() {
+                let c0 = j * b;
+                let cw = b.min(n - c0);
+                for xr in 0..m1 {
+                    let xrow = &x[xr * m2..(xr + 1) * m2];
+                    acc[..cw].fill(0.0);
+                    for (t, &ib) in rows.iter().enumerate() {
+                        let blk = &vals[t * bb..(t + 1) * bb];
+                        let r0 = ib as usize * b;
+                        let rw = b.min(m2 - r0);
+                        for bi in 0..rw {
+                            let xv = xrow[r0 + bi];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            for (a, w) in acc[..cw].iter_mut().zip(&blk[bi * b..bi * b + cw]) {
+                                *a += xv * w;
+                            }
+                        }
+                    }
+                    want[xr * n + c0..xr * n + c0 + cw].copy_from_slice(&acc[..cw]);
+                }
+            }
+            let got = sp.spmm(x, m1);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!("[{}] csr {} vs boxed {}", i, g, w));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn integer_spmm_tracks_f32_within_quant_bound() {
+    // The true-integer SpMM against the f32 panel walk: the only error
+    // sources are the three quantizations (weights, activations,
+    // requantized accumulator), each bounded by half a quantization
+    // step — a kernel bug (wrong shift, wrong column, dropped block)
+    // shows up orders of magnitude above this envelope.
+    use vitfpga::formats::quant::quantize_activations;
+    use vitfpga::formats::{BlockSparseMatrix, StageRequant};
+    use vitfpga::funcsim::kernels::{self, ColumnSchedule};
+    forall(
+        12,
+        60,
+        |r: &mut Rng| {
+            let b = [4usize, 8, 16][r.range(0, 2)];
+            let imgs = r.range(1, 3);
+            let rows_per_img = r.range(1, 6);
+            let m2 = r.range(4, 40);
+            let n = r.range(4, 40);
+            let (rb, cb) = (m2.div_ceil(b), n.div_ceil(b));
+            let keep_p = 0.3 + 0.7 * r.f64();
+            let mask: Vec<bool> = (0..rb * cb).map(|_| r.bool(keep_p)).collect();
+            let dense: Vec<f32> = (0..m2 * n).map(|_| r.normal()).collect();
+            let x: Vec<f32> = (0..imgs * rows_per_img * m2).map(|_| r.normal()).collect();
+            let bias: Option<Vec<f32>> =
+                r.bool(0.5).then(|| (0..n).map(|_| r.normal()).collect());
+            (imgs, rows_per_img, m2, n, b, mask, dense, x, bias)
+        },
+        |(imgs, rows_per_img, m2, n, b, mask, dense, x, bias)| {
+            let (imgs, rows_per_img, m2, n, b) = (*imgs, *rows_per_img, *m2, *n, *b);
+            let cb = n.div_ceil(b);
+            let sp = BlockSparseMatrix::from_dense(dense, (m2, n), b, mask, cb);
+            let sched = ColumnSchedule::new(&sp);
+            let wq = sp.quantize_int16();
+            let rows = imgs * rows_per_img;
+            let mut want = vec![0.0f32; rows * n];
+            kernels::spmm_bias_into(&sp, &sched, x, rows, bias.as_deref(), None, &mut want, 1);
+            // Per-image activation quantization, as the datapath does it.
+            let mut xq = vec![0i16; rows * m2];
+            let mut rq = Vec::with_capacity(imgs);
+            for img in 0..imgs {
+                let span = img * rows_per_img * m2..(img + 1) * rows_per_img * m2;
+                let (q, l2) =
+                    quantize_activations(&x[span.clone()], m2, &mut xq[span]);
+                rq.push(StageRequant::new(q, wq.quant, l2, wq.max_col_l2));
+            }
+            let mut got = vec![f32::NAN; rows * n];
+            kernels::spmm_i16_bias_into(
+                &sp, &wq, &sched, &xq, rows, rows_per_img, &rq, bias.as_deref(), None,
+                &mut got, 2,
+            );
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                if !g.is_finite() || (g - w).abs() > 0.1 * (1.0 + w.abs()) {
+                    return Err(format!("[{}] int16 {} vs f32 {}", i, g, w));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn int16_forward_tracks_f32_forward() {
+    // End-to-end: the integer datapath's logits stay within a
+    // characterized envelope of the f32 path across random prunings and
+    // synthetic weights (the per-stage quantization error is ~1e-3
+    // relative; 0.25 max-norm relative leaves propagation headroom
+    // through four layers while still catching any broken stage).
+    use vitfpga::funcsim::{FuncSim, Precision};
+    forall(
+        13,
+        8,
+        |r: &mut Rng| {
+            let mut s = PruningSetting::new(
+                if r.bool(0.5) { 8 } else { 16 },
+                ((0.4 + 0.6 * r.f64()) * 10.0).round() / 10.0,
+                ((0.4 + 0.6 * r.f64()) * 10.0).round() / 10.0,
+            );
+            s.tdm_layers = (0..4).filter(|_| r.bool(0.5)).collect();
+            (s, r.next_u64())
+        },
+        |(setting, seed)| {
+            let f = FuncSim::synthesize(&TEST_TINY, setting, *seed, Precision::F32)
+                .map_err(|e| e.to_string())?;
+            let q = FuncSim::synthesize(&TEST_TINY, setting, *seed, Precision::Int16)
+                .map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(seed ^ 0x1616);
+            let img: Vec<f32> = (0..f.input_elems()).map(|_| rng.normal()).collect();
+            let a = f.forward(&img).map_err(|e| e.to_string())?;
+            let b = q.forward(&img).map_err(|e| e.to_string())?;
+            let mag = a.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-6);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if !y.is_finite() || (x - y).abs() / mag > 0.25 {
+                    return Err(format!("logit {}: f32 {} vs int16 {} (mag {})", i, x, y, mag));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn structure_storage_matches_block_sparse_bytes() {
     // memory model vs the actual packed format: encoder weight bytes from
     // the structure must equal the BlockSparseMatrix storage computed from
