@@ -508,7 +508,7 @@ fn kernel_bench(rng: &mut Rng) {
     let (xquant, row_l2) = quant::quantize_activations(&x, m2, &mut xq);
     let rq = [StageRequant::new(xquant, wq.quant, row_l2, wq.max_col_l2)];
     let spmm_i16_1t_ms = median_ms(it_k, || {
-        kernels::spmm_i16_bias_into(&sp, &wq, &sched, &xq, 197, 197, &rq, None, None, &mut y, 1);
+        kernels::spmm_i16_bias_into(&sp, &wq, &sched, &xq, 197, &[0, 197], &rq, None, None, &mut y, 1);
         std::hint::black_box(&y);
     });
     println!(
@@ -533,11 +533,11 @@ fn kernel_bench(rng: &mut Rng) {
     });
     let mut lanes: Vec<AttnLane> = Vec::new();
     let attn_repack_1t_ms = median_ms(it_k, || {
-        kernels::attention_batch_into(&qkv, 1, n, nh, hd, &mut lanes, &mut cls, &mut sa, 1);
+        kernels::attention_batch_into(&qkv, &[0, n], nh, hd, &mut lanes, &mut cls, &mut sa, 1);
         std::hint::black_box(&sa);
     });
     let attn_repack_mt_ms = median_ms(it_k, || {
-        kernels::attention_batch_into(&qkv, 1, n, nh, hd, &mut lanes, &mut cls, &mut sa, threads);
+        kernels::attention_batch_into(&qkv, &[0, n], nh, hd, &mut lanes, &mut cls, &mut sa, threads);
         std::hint::black_box(&sa);
     });
     println!(
@@ -622,6 +622,42 @@ fn kernel_bench(rng: &mut Rng) {
         threads, fused_mt_b8_ms, fused_i16_b8_ms, fused_mt_b8_ms / fused_i16_b8_ms
     );
 
+    // --- datapath level: adaptive TDM vs the fixed schedule -----------
+    // Same model, same weights, keep counts derived per image from the
+    // CLS-attention scores (capped by the schedule), so the fused batch
+    // goes ragged. The TokenStats gauge is the same plumbing /metrics
+    // scrapes.
+    use std::sync::Arc;
+    use vitfpga::backend::TokenStats;
+    let stats = Arc::new(TokenStats::default());
+    let mut nba = NativeBackend::synthetic(&DEIT_SMALL, &setting, 42, Precision::F32)
+        .expect("deit-small adaptive backend")
+        .with_batch_capacity(max_batch)
+        .with_threads(threads)
+        .with_adaptive_tdm(true)
+        .with_token_stats(Arc::clone(&stats));
+    let fused_adaptive_b8_ms = median_ms(it_f, || {
+        std::hint::black_box(nba.infer_batch(&flat[..8 * per], 8).unwrap());
+    });
+    let mean_kept = stats.mean_kept().unwrap_or(0.0);
+    // Fixed-schedule exit count for comparison: fold the keep rule.
+    let mut sched_kept = DEIT_SMALL.num_tokens();
+    for l in 0..DEIT_SMALL.num_layers {
+        if setting.tdm_layers.contains(&l) && setting.r_t < 1.0 {
+            sched_kept = setting.tokens_after_tdm(sched_kept);
+        }
+    }
+    println!(
+        "[bench] H9 adaptive deit-small batch 8 ({}t)  fixed {:>9.3} ms   adaptive {:>9.3} ms \
+         ({:.2}x)   kept {:.1} vs {} tokens",
+        threads,
+        fused_mt_b8_ms,
+        fused_adaptive_b8_ms,
+        fused_mt_b8_ms / fused_adaptive_b8_ms,
+        mean_kept,
+        sched_kept
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"kernels\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
          \"threads\": {},\n  \"smoke\": {},\n  \
@@ -633,6 +669,9 @@ fn kernel_bench(rng: &mut Rng) {
          \"int16\": {{\"spmm_f32_1t_ms\": {:.4}, \"spmm_i16_1t_ms\": {:.4}, \
          \"spmm_i16_speedup\": {:.2}, \"forward_f32_batch8_ms\": {:.4}, \
          \"forward_i16_batch8_ms\": {:.4}, \"forward_i16_speedup\": {:.2}}},\n  \
+         \"adaptive\": {{\"fused_fixed_batch8_ms\": {:.4}, \
+         \"fused_adaptive_batch8_ms\": {:.4}, \"adaptive_speedup\": {:.2}, \
+         \"mean_kept_tokens\": {:.2}, \"schedule_kept_tokens\": {}}},\n  \
          \"attention\": {{\"strided_ms\": {:.4}, \"repacked_1t_ms\": {:.4}, \
          \"repacked_mt_ms\": {:.4}, \"repacked_speedup_1t\": {:.2}}},\n  \
          \"forward\": {{\n    \"spans_1t_batch8_ms\": {:.4},\n    \"fused_1t_batch8_ms\": {:.4},\n    \
@@ -659,6 +698,11 @@ fn kernel_bench(rng: &mut Rng) {
         fused_mt_b8_ms,
         fused_i16_b8_ms,
         fused_mt_b8_ms / fused_i16_b8_ms,
+        fused_mt_b8_ms,
+        fused_adaptive_b8_ms,
+        fused_mt_b8_ms / fused_adaptive_b8_ms,
+        mean_kept,
+        sched_kept,
         attn_strided_ms,
         attn_repack_1t_ms,
         attn_repack_mt_ms,

@@ -25,7 +25,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use native::NativeBackend;
+pub use native::{NativeBackend, TokenStats};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 

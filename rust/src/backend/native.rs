@@ -7,9 +7,10 @@
 //!   block columns fan across worker threads *inside* each layer, so
 //!   single-image latency scales with cores, not just batch throughput.
 //! * **batch > 1, fused (default)** — `FuncSim::forward_batch_into`: the
-//!   whole batch marches through the layers together as packed
-//!   `[batch * n, ...]` matrices (the TDHM schedule keeps per-layer token
-//!   counts input-independent, so batches stay rectangular); every SpMM
+//!   whole batch marches through the layers together as one ragged
+//!   packed matrix (a per-image row-offset table says which token rows
+//!   belong to which image; schedule-fixed mode keeps the offsets
+//!   uniform, adaptive TDM lets per-image counts diverge); every SpMM
 //!   header walk and MLP weight stream is amortized over all images, and
 //!   the same intra-layer threading applies on top.
 //! * **batch > 1, spans** (`with_fused(false)`) — the PR-2 shape: the
@@ -28,6 +29,8 @@
 //! bit-identical-per-image guarantee holds within that precision.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -43,6 +46,38 @@ use crate::util::cli::Args;
 /// baked into the model.
 pub const DEFAULT_BATCH_CAPACITY: usize = 64;
 
+/// Lock-free counters behind the serving layer's mean-kept-tokens
+/// gauge: images inferred through the fused datapath and their summed
+/// encoder-exit token counts. One instance is shared (`Arc`) between a
+/// registry entry and every replica of its pool, so the gauge
+/// aggregates across replicas. In schedule-fixed mode the mean is the
+/// schedule's constant final count; under adaptive TDM it tracks how
+/// many tokens the inputs actually kept.
+#[derive(Debug, Default)]
+pub struct TokenStats {
+    images: AtomicU64,
+    kept_tokens: AtomicU64,
+}
+
+impl TokenStats {
+    /// Fold one fused forward into the counters: `images` inferred,
+    /// `kept_tokens` total encoder-exit rows across them.
+    pub fn record(&self, images: u64, kept_tokens: u64) {
+        self.images.fetch_add(images, Ordering::Relaxed);
+        self.kept_tokens.fetch_add(kept_tokens, Ordering::Relaxed);
+    }
+
+    /// Mean encoder-exit token count per image; `None` before any
+    /// fused inference.
+    pub fn mean_kept(&self) -> Option<f64> {
+        let images = self.images.load(Ordering::Relaxed);
+        if images == 0 {
+            return None;
+        }
+        Some(self.kept_tokens.load(Ordering::Relaxed) as f64 / images as f64)
+    }
+}
+
 pub struct NativeBackend {
     sim: FuncSim,
     name: String,
@@ -56,6 +91,9 @@ pub struct NativeBackend {
     scratches: Vec<ForwardScratch>,
     /// Fused-batch arena, grown to the largest batch seen, then reused.
     batch_scratch: Option<BatchScratch>,
+    /// Shared kept-token counters (fused paths only); None when nothing
+    /// is observing.
+    token_stats: Option<Arc<TokenStats>>,
 }
 
 impl NativeBackend {
@@ -77,6 +115,7 @@ impl NativeBackend {
             fused: true,
             scratches: Vec::new(),
             batch_scratch: None,
+            token_stats: None,
         }
     }
 
@@ -152,6 +191,11 @@ impl NativeBackend {
             Self::synthetic(&dims, &setting, args.get_usize("seed", 42) as u64, precision)
                 .context("synthesizing native model")?
         };
+        let nb = if args.has_flag("adaptive-tdm") {
+            nb.with_adaptive_tdm(true)
+        } else {
+            nb
+        };
         Ok(match args.get("threads") {
             Some(_) => nb.with_threads(args.get_usize("threads", 1)),
             None => nb,
@@ -209,6 +253,28 @@ impl NativeBackend {
     /// the kernel bench compares against.
     pub fn with_fused(mut self, fused: bool) -> NativeBackend {
         self.fused = fused;
+        self
+    }
+
+    /// Toggle input-adaptive TDM keep counts on the underlying model
+    /// (`--adaptive-tdm` / an `@adaptive` spec): per-image counts from
+    /// the real CLS-attention scores, schedule count as cap.
+    pub fn with_adaptive_tdm(mut self, adaptive: bool) -> NativeBackend {
+        self.sim.set_adaptive_tdm(adaptive);
+        self
+    }
+
+    /// Whether the served model runs input-adaptive TDM.
+    pub fn adaptive(&self) -> bool {
+        self.sim.adaptive_tdm()
+    }
+
+    /// Attach shared kept-token counters: every *fused* inference adds
+    /// its encoder-exit token counts (the spans baseline path is
+    /// bench-only and does not record). Feeds the `/metrics`
+    /// mean-kept-tokens gauge.
+    pub fn with_token_stats(mut self, stats: Arc<TokenStats>) -> NativeBackend {
+        self.token_stats = Some(stats);
         self
     }
 
@@ -328,8 +394,12 @@ impl Backend for NativeBackend {
             if self.scratches.is_empty() {
                 self.scratches.push(self.sim.scratch());
             }
-            return self.sim.forward_into_threads(
-                flat, &mut self.scratches[0], out, self.threads);
+            let rows = self.sim.forward_batch_counted_into(
+                flat, 1, &mut self.scratches[0], out, self.threads)?;
+            if let Some(stats) = &self.token_stats {
+                stats.record(1, rows as u64);
+            }
+            return Ok(());
         }
 
         if self.fused {
@@ -343,9 +413,15 @@ impl Backend for NativeBackend {
                 self.batch_scratch = Some(self.sim.batch_scratch(batch));
             }
             let bs = self.batch_scratch.as_mut().expect("just built");
-            return self.sim.forward_batch_into(flat, batch, bs, out, self.threads);
+            let rows =
+                self.sim.forward_batch_counted_into(flat, batch, bs, out, self.threads)?;
+            if let Some(stats) = &self.token_stats {
+                stats.record(batch as u64, rows as u64);
+            }
+            return Ok(());
         }
 
+        // Spans path: the bench-only comparison baseline — no stats.
         self.infer_spans_into(flat, batch, out)
     }
 }

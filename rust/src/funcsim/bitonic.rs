@@ -75,6 +75,11 @@ pub fn expected_stages(n: usize) -> u64 {
 
 /// Full TDHM routing: sort by score descending, keep the top `k_keep`,
 /// emit (id_old, id_new, flag) for every input token.
+///
+/// `k_keep` is per call, not per model: the datapath passes the fixed
+/// schedule count in schedule-fixed mode and a per-image count from
+/// [`datapath::adaptive_keep_count`](super::datapath::adaptive_keep_count)
+/// in adaptive mode — the network itself is identical either way.
 pub fn routing(scores: &[f32], k_keep: usize) -> Vec<Route> {
     let sorted = bitonic_sort_desc(scores);
     let mut routes: Vec<Route> = vec![

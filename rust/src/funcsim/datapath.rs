@@ -13,13 +13,21 @@
 //! Since the token-parallel kernel engine landed there is exactly **one**
 //! control path: every forward — single image or fused batch, one worker
 //! or many — runs [`FuncSim::forward_batch_into`] over a [`BatchScratch`]
-//! arena and the kernels in [`super::kernels`]. The TDHM schedule makes
-//! per-layer token *counts* input-independent (only the routing differs
-//! per image), so a batch stays rectangular at every layer and cross-image
-//! fusion is just more rows through the same kernels. Kernels partition
-//! work only across independent output regions (block columns, token
-//! rows, heads), so per-image results are bit-identical at any batch
-//! size and worker count.
+//! arena and the kernels in [`super::kernels`]. Fused batches are
+//! *ragged*: a per-image row-offset table (prefix sums held in the
+//! arena) threads through every layer, and each TDM repacks the
+//! activation matrix to the next layer's offsets continuous-batching
+//! style, so images in one batch may carry different token counts. In
+//! the default schedule-fixed mode `tokens_after_tdm` makes per-layer
+//! counts input-independent, the offsets stay uniform, and the batch is
+//! a packed rectangle — bit-identical to the pre-ragged engine. Opt-in
+//! adaptive TDM ([`FuncSim::with_adaptive_tdm`]) instead derives each
+//! image's keep count from its real CLS-attention scores (the schedule
+//! count as cap — see [`adaptive_keep_count`]), so counts diverge per
+//! image mid-batch. Either way kernels partition work only across
+//! independent output regions (block columns, token rows, heads), so
+//! per-image results are bit-identical at any batch size and worker
+//! count.
 //!
 //! Numerically there are two datapaths sharing that control path, keyed
 //! by [`Precision`]: f32 (the bit-exactness reference), and the true
@@ -97,6 +105,11 @@ pub struct FuncSim {
     /// Precomputed max token count over the layer schedule (scratch
     /// sizing bound; constant per model, so not derived per image).
     max_tokens: usize,
+    /// Input-adaptive TDM keep counts (off by default): per-image keep
+    /// sets derived from the real CLS-attention scores, with the
+    /// schedule count as cap (see [`adaptive_keep_count`]). When false,
+    /// schedule-fixed mode is bit-identical to the pre-adaptive engine.
+    adaptive_tdm: bool,
 }
 
 /// Max token count any layer sees. The TDM maps n to
@@ -116,10 +129,29 @@ fn schedule_max_tokens(st: &ModelStructure) -> usize {
     n_max
 }
 
+/// Input-adaptive TDM keep count: keep the tokens whose CLS-attention
+/// score reaches the mean score (a score-mass threshold — attention
+/// concentrated on few tokens keeps few), clamped to `[1, k_sched]`.
+/// The schedule count `k_sched` is a hard cap because every scratch
+/// buffer is sized from the schedule, and the floor of one keeps the
+/// TDHM invariant that at least one non-CLS token survives. An empty
+/// score set (n = 1: CLS only) falls back to the schedule count.
+pub fn adaptive_keep_count(scores: &[f32], k_sched: usize) -> usize {
+    let cap = k_sched.max(1);
+    if scores.is_empty() {
+        return cap;
+    }
+    let mean = scores.iter().sum::<f32>() / scores.len() as f32;
+    scores.iter().filter(|&&s| s >= mean).count().clamp(1, cap)
+}
+
 /// Preallocated intermediate buffers for a fused batch of in-flight
-/// images, laid out image-major: at a layer with `n` tokens the live
-/// region of each activation buffer is a packed `[batch * n, ...]`
-/// matrix, so the fused kernels see one rectangular operand.
+/// images, laid out image-major and packed by the ragged row-offset
+/// table `offs`: at each layer image `i` owns token rows
+/// `offs[i]..offs[i+1]` of every activation buffer, so the fused
+/// kernels see one packed operand with no padding rows. Schedule-fixed
+/// mode keeps the offsets uniform (`offs[i] = i * n`) — the packed
+/// matrix is then exactly the old rectangular layout.
 ///
 /// Sized for the model's *maximum* token count across layers (a TDM can
 /// transiently grow very small token counts by the fused token), so every
@@ -163,6 +195,12 @@ pub struct BatchScratch {
     xq: Vec<i16>,
     /// Per-image requantization parameters of the stage in flight.
     rq: Vec<StageRequant>,
+    /// Ragged row-offset table of the layer in flight (`capacity + 1`
+    /// prefix sums): image `i` owns token rows `offs[i]..offs[i+1]` of
+    /// every packed activation buffer.
+    offs: Vec<usize>,
+    /// Staging for the next layer's offsets while the TDM repacks.
+    offs_next: Vec<usize>,
 }
 
 /// The single-image arena is just a capacity-1 [`BatchScratch`]: both the
@@ -206,12 +244,21 @@ impl BatchScratch {
                 Vec::new()
             },
             rq: Vec::with_capacity(c),
+            offs: vec![0; c + 1],
+            offs_next: vec![0; c + 1],
         }
     }
 
     /// Max images one `forward_batch_into` call may carry.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Row-offset table left by the last forward pass: image `i` exited
+    /// the encoder with `offsets(batch)[i + 1] - offsets(batch)[i]`
+    /// token rows. Meaningful only for the `batch` the pass ran with.
+    pub fn offsets(&self, batch: usize) -> &[usize] {
+        &self.offs[..=batch.min(self.capacity)]
     }
 }
 
@@ -239,14 +286,6 @@ fn detect_block_mask(w: &[f32], shape: (usize, usize), b: usize) -> (Vec<bool>, 
     (mask, cb)
 }
 
-fn tensor<'a>(ts: &'a [Tensor], idx: usize, want: &str) -> Result<&'a Tensor> {
-    let t = ts.get(idx).with_context(|| format!("missing tensor {}", idx))?;
-    if !t.name.ends_with(want) {
-        bail!("tensor {} is '{}', expected *{}", idx, t.name, want);
-    }
-    Ok(t)
-}
-
 impl FuncSim {
     /// Build from an artifact pair (weights + structure). `image_geom`
     /// is (image_size, patch_size, in_channels).
@@ -255,10 +294,14 @@ impl FuncSim {
                 precision: Precision) -> Result<FuncSim> {
         let ts = read_weights(weights_path)?;
         let st = ModelStructure::load(structure_path)?;
-        Self::from_tensors(&ts, st, image_geom, precision)
+        Self::from_tensors(ts, st, image_geom, precision)
     }
 
-    pub fn from_tensors(ts: &[Tensor], st: ModelStructure,
+    /// Build from owned weight tensors. Takes the tensors by value so
+    /// each payload *moves* into the model — cloning here would
+    /// transiently double resident weight memory per replica during
+    /// pool construction.
+    pub fn from_tensors(ts: Vec<Tensor>, st: ModelStructure,
                         image_geom: (usize, usize, usize),
                         precision: Precision) -> Result<FuncSim> {
         let d = st.dims.dim;
@@ -274,10 +317,14 @@ impl FuncSim {
         };
 
         let mut idx = 0;
+        let mut iter = ts.into_iter();
         let mut next = |want: &str| -> Result<Vec<f32>> {
-            let t = tensor(ts, idx, want)?;
+            let t = iter.next().with_context(|| format!("missing tensor {}", idx))?;
+            if !t.name.ends_with(want) {
+                bail!("tensor {} is '{}', expected *{}", idx, t.name, want);
+            }
             idx += 1;
-            Ok(t.data.clone())
+            Ok(t.data)
         };
 
         let w_embed = maybe_quant(next("w_embed")?);
@@ -355,7 +402,26 @@ impl FuncSim {
             patch_size: image_geom.1,
             in_channels: image_geom.2,
             max_tokens,
+            adaptive_tdm: false,
         })
+    }
+
+    /// Builder toggle for input-adaptive TDM keep counts (see
+    /// [`adaptive_keep_count`]). Off by default; schedule-fixed mode
+    /// stays bit-identical to the pre-adaptive engine.
+    pub fn with_adaptive_tdm(mut self, adaptive: bool) -> FuncSim {
+        self.adaptive_tdm = adaptive;
+        self
+    }
+
+    /// In-place form of [`FuncSim::with_adaptive_tdm`].
+    pub fn set_adaptive_tdm(&mut self, adaptive: bool) {
+        self.adaptive_tdm = adaptive;
+    }
+
+    /// Whether TDM keep counts adapt to the input.
+    pub fn adaptive_tdm(&self) -> bool {
+        self.adaptive_tdm
     }
 
     pub fn num_classes(&self) -> usize {
@@ -419,15 +485,28 @@ impl FuncSim {
     /// Forward a fused batch: `flat` holds `batch` images back to back,
     /// `logits` receives `batch * num_classes` values image-major.
     ///
-    /// All images march through the layers together: per-layer token
-    /// counts are input-independent (the TDHM schedule fixes them), so
-    /// activations stay packed `[batch * n, ...]` matrices and every
-    /// matmul/SpMM amortizes its weight traffic over the whole batch.
-    /// Attention, TDM routing and int16 activation scaling remain
-    /// strictly per-image, so each image's logits are bit-identical to a
-    /// serial [`FuncSim::forward`] of that image alone.
+    /// All images march through the layers together as one ragged
+    /// packed matrix (the arena's row-offset table says which rows
+    /// belong to which image), so every matmul/SpMM amortizes its
+    /// weight traffic over the whole batch. Attention, TDM routing and
+    /// int16 activation scaling remain strictly per-image, so each
+    /// image's logits are bit-identical to a serial
+    /// [`FuncSim::forward`] of that image alone — in adaptive-TDM mode
+    /// too, where per-image token counts diverge mid-batch.
     pub fn forward_batch_into(&self, flat: &[f32], batch: usize, scratch: &mut BatchScratch,
                               logits: &mut [f32], threads: usize) -> Result<()> {
+        self.forward_batch_counted_into(flat, batch, scratch, logits, threads)
+            .map(|_| ())
+    }
+
+    /// [`FuncSim::forward_batch_into`] that also reports the total
+    /// encoder-exit token rows across the batch (the sum of per-image
+    /// final token counts) — the serving layer's mean-kept-tokens gauge
+    /// feeds on this. Schedule-fixed mode returns the same total for
+    /// every batch of a given size; adaptive mode varies per input.
+    pub fn forward_batch_counted_into(&self, flat: &[f32], batch: usize,
+                                      scratch: &mut BatchScratch,
+                                      logits: &mut [f32], threads: usize) -> Result<usize> {
         let d = self.st.dims.dim;
         let per = self.input_elems();
         let classes = self.st.dims.num_classes;
@@ -454,6 +533,8 @@ impl FuncSim {
             || scratch.z.len() != scratch.capacity * scratch.n_max * d
             || scratch.patches.len() != scratch.capacity * pe
             || scratch.cls_rows.len() != scratch.capacity * self.st.dims.num_heads * scratch.n_max
+            || scratch.offs.len() != scratch.capacity + 1
+            || scratch.offs_next.len() != scratch.capacity + 1
             || (self.precision == Precision::Int16
                 && scratch.xq.len()
                     != scratch.capacity
@@ -502,19 +583,28 @@ impl FuncSim {
             });
         }
 
-        // Encoders: each layer reads the packed [batch * n, d] region of
-        // scratch.z and leaves its output packed [batch * n_out, d].
-        let mut n = n0;
+        // Encoders: each layer reads the packed region of scratch.z laid
+        // out by scratch.offs and leaves its output packed at the
+        // updated offsets (a TDM layer repacks; counts may diverge per
+        // image in adaptive mode). The batch enters uniform: n0 tokens
+        // per image.
+        for (i, o) in scratch.offs[..=batch].iter_mut().enumerate() {
+            *o = i * n0;
+        }
         for (l, enc) in self.encoders.iter().enumerate() {
             let has_tdm = self.st.tdm_layers.contains(&l) && self.st.r_t < 1.0;
-            n = self.encoder_batch_into(scratch, batch, n, enc, has_tdm, threads);
+            self.encoder_batch_into(scratch, batch, enc, has_tdm, threads);
         }
 
-        // Head on each image's CLS token.
-        let cls_tok = &mut scratch.cls_tok[..batch * d];
+        // Head on each image's CLS token (row offs[img] of the packed
+        // output).
+        let total_rows = scratch.offs[batch];
+        let BatchScratch { offs, z, cls_tok, .. } = scratch;
+        let cls_tok = &mut cls_tok[..batch * d];
         for img in 0..batch {
             let ct = &mut cls_tok[img * d..(img + 1) * d];
-            ct.copy_from_slice(&scratch.z[img * n * d..img * n * d + d]);
+            let r0 = offs[img];
+            ct.copy_from_slice(&z[r0 * d..r0 * d + d]);
             kernels::layer_norm(ct, &self.ln_g, &self.ln_b, d);
             let lrow = &mut logits[img * classes..(img + 1) * classes];
             lrow.fill(0.0);
@@ -523,7 +613,7 @@ impl FuncSim {
                 *o += b;
             }
         }
-        Ok(())
+        Ok(total_rows)
     }
 
     /// Patchify + linear embed + CLS + positions for one image into its
@@ -568,22 +658,24 @@ impl FuncSim {
         }
     }
 
-    /// One encoder layer over the packed batch `scratch.z[..batch*n*d]`;
-    /// returns the output token count (result left packed in
-    /// `scratch.z[..batch*n_out*d]`).
-    fn encoder_batch_into(&self, scratch: &mut BatchScratch, batch: usize, n: usize,
-                          w: &EncoderWeights, has_tdm: bool, threads: usize) -> usize {
+    /// One encoder layer over the ragged packed batch: reads the token
+    /// rows laid out by `scratch.offs[..=batch]`, leaves its output
+    /// packed in `scratch.z` at the updated offsets (a TDM layer
+    /// repacks the batch to its new per-image counts and rewrites
+    /// `scratch.offs`).
+    fn encoder_batch_into(&self, scratch: &mut BatchScratch, batch: usize,
+                          w: &EncoderWeights, has_tdm: bool, threads: usize) {
         let d = self.st.dims.dim;
         let nh = self.st.dims.num_heads;
         let hd = self.st.dims.head_dim;
         let qkv_dim = nh * hd;
         let dm = self.st.dims.mlp_dim;
-        let rows = batch * n;
         // Destructure for disjoint borrows of the arena's buffers.
         let BatchScratch {
             z, zn, qkv, sa, cls_rows, cls_attn_mean, zp, tdm_out, fused,
-            zn2, h, mlp_out, lanes, xq, rq, ..
+            zn2, h, mlp_out, lanes, xq, rq, offs, offs_next, ..
         } = scratch;
+        let rows = offs[batch];
 
         // LN1 -> QKV via the fused panel SpMM (stage i), bias epilogue in
         // the column walk. In int16 mode the stage input is quantized per
@@ -597,13 +689,14 @@ impl FuncSim {
                 rq.clear();
                 for img in 0..batch {
                     let (q, row_l2) = quantize_activations(
-                        &zn[img * n * d..(img + 1) * n * d],
+                        &zn[offs[img] * d..offs[img + 1] * d],
                         d,
-                        &mut xq[img * n * d..(img + 1) * n * d],
+                        &mut xq[offs[img] * d..offs[img + 1] * d],
                     );
                     rq.push(StageRequant::new(q, wq.quant, row_l2, wq.max_col_l2));
                 }
-                kernels::spmm_i16_bias_into(&w.w_qkv, wq, &w.qkv_sched, xq, rows, n, rq,
+                kernels::spmm_i16_bias_into(&w.w_qkv, wq, &w.qkv_sched, xq, rows,
+                                            &offs[..=batch], rq,
                                             Some(&w.b_qkv[..]), None, qkv, threads);
             }
             None => kernels::spmm_bias_into(&w.w_qkv, &w.qkv_sched, &zn[..rows * d], rows,
@@ -613,18 +706,21 @@ impl FuncSim {
         // Head-major repacked attention (stages ii-iii): (image, head)
         // items fan across workers; per-head CLS rows captured for the TDM.
         let sa = &mut sa[..rows * qkv_dim];
-        let cls_rows = &mut cls_rows[..batch * nh * n];
-        kernels::attention_batch_into(qkv, batch, n, nh, hd, lanes, cls_rows, sa, threads);
+        let cls_rows = &mut cls_rows[..nh * rows];
+        kernels::attention_batch_into(qkv, &offs[..=batch], nh, hd, lanes, cls_rows, sa,
+                                      threads);
         // Mean CLS attention over heads — the division is hoisted out of
         // the accumulation (one multiply per token, not nh divisions).
-        let cls = &mut cls_attn_mean[..batch * n];
+        let cls = &mut cls_attn_mean[..rows];
         let inv_nh = 1.0 / nh as f32;
         for img in 0..batch {
-            let rows_img = &cls_rows[img * nh * n..(img + 1) * nh * n];
-            for (jt, c) in cls[img * n..(img + 1) * n].iter_mut().enumerate() {
+            let (r0, r1) = (offs[img], offs[img + 1]);
+            let n_i = r1 - r0;
+            let rows_img = &cls_rows[nh * r0..nh * r1];
+            for (jt, c) in cls[r0..r1].iter_mut().enumerate() {
                 let mut sum = 0.0f32;
                 for hh in 0..nh {
-                    sum += rows_img[hh * n + jt];
+                    sum += rows_img[hh * n_i + jt];
                 }
                 *c = sum * inv_nh;
             }
@@ -638,13 +734,14 @@ impl FuncSim {
                 rq.clear();
                 for img in 0..batch {
                     let (q, row_l2) = quantize_activations(
-                        &sa[img * n * qkv_dim..(img + 1) * n * qkv_dim],
+                        &sa[offs[img] * qkv_dim..offs[img + 1] * qkv_dim],
                         qkv_dim,
-                        &mut xq[img * n * qkv_dim..(img + 1) * n * qkv_dim],
+                        &mut xq[offs[img] * qkv_dim..offs[img + 1] * qkv_dim],
                     );
                     rq.push(StageRequant::new(q, wq.quant, row_l2, wq.max_col_l2));
                 }
-                kernels::spmm_i16_bias_into(&w.w_proj, wq, &w.proj_sched, xq, rows, n, rq,
+                kernels::spmm_i16_bias_into(&w.w_proj, wq, &w.proj_sched, xq, rows,
+                                            &offs[..=batch], rq,
                                             Some(&w.b_proj[..]), Some(&z[..rows * d]), zp,
                                             threads);
             }
@@ -654,16 +751,35 @@ impl FuncSim {
         }
 
         // TDM between MSA and MLP: per-image bitonic routing over the
-        // non-CLS scores. Token counts are input-independent, so every
-        // image lands on the same n_out and the batch stays rectangular.
-        let (n_out, zcur): (usize, &[f32]) = if has_tdm {
-            let k = (((n - 1) as f64) * self.st.r_t).ceil().max(1.0) as usize;
-            let n_out = 1 + k + 1;
+        // non-CLS scores. The keep count comes from
+        // PruningSetting::tokens_after_tdm — the same single source of
+        // truth scratch sizing and tokens_per_layer use, so runtime
+        // counts can never drift from the schedule's slice bounds. In
+        // adaptive mode the image's real score distribution picks the
+        // count (schedule as cap), so per-image counts diverge and the
+        // batch goes ragged; the output is written compacted at the new
+        // offsets — the continuous-batching-style repack.
+        offs_next[0] = 0;
+        let zcur: &[f32] = if has_tdm {
+            let setting = self.st.setting();
             for img in 0..batch {
-                let scores = &cls[img * n + 1..(img + 1) * n];
+                let (r0, r1) = (offs[img], offs[img + 1]);
+                let n_i = r1 - r0;
+                // has_tdm implies r_t < 1.0, so tokens_after_tdm is
+                // 1 + max(ceil((n_i - 1) * r_t), 1) + 1 and k_sched >= 1.
+                let k_sched = setting.tokens_after_tdm(n_i) - 2;
+                let scores = &cls[r0 + 1..r1];
+                let k = if self.adaptive_tdm {
+                    adaptive_keep_count(scores, k_sched)
+                } else {
+                    k_sched
+                };
+                let n_out_i = 1 + k + 1;
+                let o0 = offs_next[img];
+                offs_next[img + 1] = o0 + n_out_i;
                 let routes = bitonic::routing(scores, k);
-                let zp_img = &zp[img * n * d..(img + 1) * n * d];
-                let out = &mut tdm_out[img * n_out * d..(img + 1) * n_out * d];
+                let zp_img = &zp[r0 * d..r1 * d];
+                let out = &mut tdm_out[o0 * d..(o0 + n_out_i) * d];
                 // Zero first (parity with a freshly-allocated buffer):
                 // with fewer than k kept tokens (n=1 edge) some kept-slot
                 // rows are never written.
@@ -685,13 +801,14 @@ impl FuncSim {
                     }
                 }
                 let inv = 1.0 / (wsum + 1e-6);
-                for (o, f) in out[(n_out - 1) * d..].iter_mut().zip(fused_img.iter()) {
+                for (o, f) in out[(n_out_i - 1) * d..].iter_mut().zip(fused_img.iter()) {
                     *o = f * inv;
                 }
             }
-            (n_out, &tdm_out[..batch * n_out * d])
+            &tdm_out[..offs_next[batch] * d]
         } else {
-            (n, &zp[..rows * d])
+            offs_next[..=batch].copy_from_slice(&offs[..=batch]);
+            &zp[..rows * d]
         };
 
         // LN2 -> MLP with bias+GELU and bias+residual epilogues fused
@@ -699,7 +816,7 @@ impl FuncSim {
         // int16 mode both matmuls run integer MACs; GELU stays f32
         // between them, so the intermediate h is re-quantized for the
         // output stage.
-        let rows_out = batch * n_out;
+        let rows_out = offs_next[batch];
         kernels::layer_norm_tokens(zcur, zn2, &w.ln2_g, &w.ln2_b, d, threads);
         let h = &mut h[..rows_out * dm];
         let mlp_out = &mut mlp_out[..rows_out * d];
@@ -708,27 +825,30 @@ impl FuncSim {
                 let xq_in = &mut xq[..rows_out * d];
                 rq.clear();
                 for img in 0..batch {
+                    let (r0, r1) = (offs_next[img], offs_next[img + 1]);
                     let (q, row_l2) = quantize_activations(
-                        &zn2[img * n_out * d..(img + 1) * n_out * d],
+                        &zn2[r0 * d..r1 * d],
                         d,
-                        &mut xq_in[img * n_out * d..(img + 1) * n_out * d],
+                        &mut xq_in[r0 * d..r1 * d],
                     );
                     rq.push(StageRequant::new(q, wi.quant, row_l2, wi.max_col_l2));
                 }
-                kernels::matmul_i16_bias_gelu_into(xq_in, wi, n_out, rq, &w.b_int,
-                                                   rows_out, h, threads);
+                kernels::matmul_i16_bias_gelu_into(xq_in, wi, &offs_next[..=batch], rq,
+                                                   &w.b_int, rows_out, h, threads);
                 let xq_h = &mut xq[..rows_out * dm];
                 rq.clear();
                 for img in 0..batch {
+                    let (r0, r1) = (offs_next[img], offs_next[img + 1]);
                     let (q, row_l2) = quantize_activations(
-                        &h[img * n_out * dm..(img + 1) * n_out * dm],
+                        &h[r0 * dm..r1 * dm],
                         dm,
-                        &mut xq_h[img * n_out * dm..(img + 1) * n_out * dm],
+                        &mut xq_h[r0 * dm..r1 * dm],
                     );
                     rq.push(StageRequant::new(q, wo.quant, row_l2, wo.max_col_l2));
                 }
-                kernels::matmul_i16_bias_residual_into(xq_h, wo, n_out, rq, &w.b_out, zcur,
-                                                       rows_out, mlp_out, threads);
+                kernels::matmul_i16_bias_residual_into(xq_h, wo, &offs_next[..=batch], rq,
+                                                       &w.b_out, zcur, rows_out, mlp_out,
+                                                       threads);
             }
             _ => {
                 kernels::matmul_bias_gelu_into(&zn2[..rows_out * d], &w.w_int, &w.b_int,
@@ -737,9 +857,10 @@ impl FuncSim {
                                                    rows_out, dm, d, mlp_out, threads);
             }
         }
-        // Layer output becomes next layer's input.
+        // Layer output becomes next layer's input; its offsets become
+        // current.
         z[..rows_out * d].copy_from_slice(mlp_out);
-        n_out
+        offs[..=batch].copy_from_slice(&offs_next[..=batch]);
     }
 }
 
@@ -770,7 +891,7 @@ mod tests {
             &TEST_TINY, &PruningSetting { block_size: 8, r_b: 1.0, r_t: 0.95,
                                           tdm_layers: vec![0, 1, 2, 3] }, 5);
         let ts = crate::funcsim::synth::synthesize_tensors(&st, 5);
-        let sim = FuncSim::from_tensors(&ts, st, (32, 8, 3), Precision::F32).unwrap();
+        let sim = FuncSim::from_tensors(ts, st, (32, 8, 3), Precision::F32).unwrap();
         let scratch = sim.scratch();
         assert!(scratch.n_max >= sim.st.dims.num_tokens);
         let img = vec![0.25f32; sim.input_elems()];
@@ -780,6 +901,69 @@ mod tests {
         let mut s2 = sim.scratch();
         let again = sim.forward_with(&img, &mut s2).unwrap();
         assert_eq!(logits, again);
+    }
+
+    #[test]
+    fn adaptive_keep_count_rules() {
+        // Empty scores (n = 1: CLS only) fall back to the schedule cap.
+        assert_eq!(adaptive_keep_count(&[], 5), 5);
+        assert_eq!(adaptive_keep_count(&[], 0), 1);
+        // Uniform scores: every token reaches the mean, the cap binds.
+        assert_eq!(adaptive_keep_count(&[0.25; 8], 4), 4);
+        assert_eq!(adaptive_keep_count(&[0.25; 8], 100), 8);
+        // Concentrated attention: only the heavy token clears the mean.
+        assert_eq!(adaptive_keep_count(&[0.9, 0.01, 0.02, 0.03], 3), 1);
+        // The floor: at least one non-CLS token always survives.
+        assert_eq!(adaptive_keep_count(&[f32::NAN; 3], 4), 1);
+    }
+
+    #[test]
+    fn runtime_token_counts_follow_tokens_after_tdm_schedule() {
+        // Regression: the runtime TDM path must derive its keep count
+        // from PruningSetting::tokens_after_tdm — the same single
+        // source of truth tokens_per_layer and scratch sizing use — so
+        // stepping the encoder stack by hand must reproduce the
+        // schedule's per-layer input counts exactly, for randomized
+        // settings.
+        use crate::config::{PruningSetting, TEST_TINY};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(37);
+        for case in 0..6u64 {
+            let mut setting = PruningSetting::new(8, 1.0, 0.3 + 0.65 * rng.f64());
+            setting.tdm_layers =
+                (0..TEST_TINY.num_layers).filter(|_| rng.bool(0.5)).collect();
+            let sim =
+                FuncSim::synthesize(&TEST_TINY, &setting, 7 + case, Precision::F32).unwrap();
+            let want = setting.tokens_per_layer(TEST_TINY.num_tokens(), TEST_TINY.num_layers);
+            let batch = 2usize;
+            let per = sim.input_elems();
+            let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+            let mut scratch = sim.batch_scratch(batch);
+            let d = sim.st.dims.dim;
+            let n0 = sim.st.dims.num_tokens;
+            let pe = (n0 - 1) * sim.st.dims.patch_dim;
+            for i in 0..batch {
+                sim.embed_one(
+                    &flat[i * per..(i + 1) * per],
+                    &mut scratch.patches[i * pe..(i + 1) * pe],
+                    &mut scratch.z[i * n0 * d..(i + 1) * n0 * d],
+                );
+            }
+            for (i, o) in scratch.offs[..=batch].iter_mut().enumerate() {
+                *o = i * n0;
+            }
+            for (l, enc) in sim.encoders.iter().enumerate() {
+                let per_img: Vec<usize> =
+                    scratch.offs[..=batch].windows(2).map(|p| p[1] - p[0]).collect();
+                assert!(
+                    per_img.iter().all(|&n| n == want[l]),
+                    "layer {} counts {:?} != schedule {} ({:?})",
+                    l, per_img, want[l], setting
+                );
+                let has_tdm = sim.st.tdm_layers.contains(&l) && sim.st.r_t < 1.0;
+                sim.encoder_batch_into(&mut scratch, batch, enc, has_tdm, 1);
+            }
+        }
     }
 
     #[test]

@@ -36,6 +36,13 @@
 //! f32 arithmetic is the one rescale per *output element* in the fused
 //! epilogue. See `formats::quant` for the shift/bound machinery.
 //!
+//! Fused batches are *ragged*: the per-image kernels (attention, the
+//! int16 stages) take a row-offset table `offs` (prefix sums — image
+//! `i` owns token rows `offs[i]..offs[i+1]`), so adaptive TDM can leave
+//! images in one batch with different token counts. Schedule-fixed
+//! batches pass uniform offsets (`offs[i] = i * n`), which reproduce
+//! the rectangular indexing exactly — bit-identical by construction.
+//!
 //! Threading uses `std::thread::scope` per kernel invocation; workers
 //! write disjoint regions of the shared output through a raw-pointer
 //! wrapper (`RawMat`), the one `unsafe` pattern in this module.
@@ -521,6 +528,15 @@ fn store_stripe_i64(
     }
 }
 
+/// Image index owning row `r` under the ragged row-offset table `offs`
+/// (prefix sums: image `i` owns rows `offs[i]..offs[i+1]`). Epilogue-
+/// only cost — one binary search over at most batch+1 entries per
+/// finished output stripe, never inside a MAC loop.
+#[inline]
+fn row_image(offs: &[usize], r: usize) -> usize {
+    offs.partition_point(|&o| o <= r) - 1
+}
+
 /// Integer panel walk over one column set. The accumulator panel lives
 /// on the heap (`PANEL * b` i64s, allocated once per worker dispatch)
 /// so any block size works without a separate wide fallback.
@@ -530,7 +546,7 @@ fn spmm_i16_cols(
     wq: &Int16Panels,
     xq: &[i16],
     x_rows: usize,
-    rows_per_img: usize,
+    offs: &[usize],
     rq: &[StageRequant],
     cols: &[usize],
     bias: Option<&[f32]>,
@@ -572,7 +588,7 @@ fn spmm_i16_cols(
                 store_stripe_i64(
                     dst,
                     &acc[p * b..p * b + cw],
-                    rq[(r + p) / rows_per_img],
+                    rq[row_image(offs, r + p)],
                     bias_s,
                     res.map(|rv| &rv[(r + p) * n + c0..(r + p) * n + c0 + cw]),
                 );
@@ -598,7 +614,7 @@ fn spmm_i16_cols(
             store_stripe_i64(
                 dst,
                 &acc[..cw],
-                rq[r / rows_per_img],
+                rq[row_image(offs, r)],
                 bias_s,
                 res.map(|rv| &rv[r * n + c0..r * n + c0 + cw]),
             );
@@ -609,10 +625,11 @@ fn spmm_i16_cols(
 
 /// Y = dequant(Xq x Wq) with optional fused `+ bias` / `+ residual`:
 /// the block-sparse stage of the true int16 datapath. `xq` holds
-/// `x_rows` quantized activation rows (`rows_per_img` consecutive rows
-/// per image, each image quantized with its own scale); `rq[img]` is
-/// that image's requantization shift + rescale for this stage. Inner
-/// loops are pure integer MACs; threading follows the same
+/// `x_rows` quantized activation rows, split across images by the
+/// ragged row-offset table `offs` (prefix sums; image `i` owns rows
+/// `offs[i]..offs[i+1]`, each image quantized with its own scale);
+/// `rq[img]` is that image's requantization shift + rescale for this
+/// stage. Inner loops are pure integer MACs; threading follows the same
 /// load-balanced column schedule as the f32 path. Fully overwrites `y`.
 #[allow(clippy::too_many_arguments)]
 pub fn spmm_i16_bias_into(
@@ -621,7 +638,7 @@ pub fn spmm_i16_bias_into(
     sched: &ColumnSchedule,
     xq: &[i16],
     x_rows: usize,
-    rows_per_img: usize,
+    offs: &[usize],
     rq: &[StageRequant],
     bias: Option<&[f32]>,
     res: Option<&[f32]>,
@@ -633,8 +650,10 @@ pub fn spmm_i16_bias_into(
     assert_eq!(y.len(), x_rows * n);
     assert_eq!(sched.pops.len(), w.col_blocks(), "schedule built for another matrix");
     assert_eq!(wq.values.len(), w.values.len(), "quantized sidecar of another matrix");
-    assert!(rows_per_img > 0);
-    assert!(rq.len() * rows_per_img >= x_rows, "requant table does not cover all rows");
+    assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
+    debug_assert!(offs.windows(2).all(|p| p[0] <= p[1]), "offs must be nondecreasing");
+    assert_eq!(*offs.last().unwrap(), x_rows, "offs must cover all rows");
+    assert!(rq.len() >= offs.len() - 1, "requant table does not cover all images");
     if let Some(bv) = bias {
         assert_eq!(bv.len(), n);
     }
@@ -644,17 +663,17 @@ pub fn spmm_i16_bias_into(
     let yraw = RawMat(y.as_mut_ptr());
     let workers = par_workers(workers, sched.order.len(), x_rows * sched.row_macs);
     if workers == 1 {
-        spmm_i16_cols(w, wq, xq, x_rows, rows_per_img, rq, &sched.order, bias, res, yraw);
+        spmm_i16_cols(w, wq, xq, x_rows, offs, rq, &sched.order, bias, res, yraw);
         return;
     }
     let parts = sched.partition(workers);
     std::thread::scope(|s| {
         for part in &parts[1..] {
             s.spawn(move || {
-                spmm_i16_cols(w, wq, xq, x_rows, rows_per_img, rq, part, bias, res, yraw)
+                spmm_i16_cols(w, wq, xq, x_rows, offs, rq, part, bias, res, yraw)
             });
         }
-        spmm_i16_cols(w, wq, xq, x_rows, rows_per_img, rq, &parts[0], bias, res, yraw);
+        spmm_i16_cols(w, wq, xq, x_rows, offs, rq, &parts[0], bias, res, yraw);
     });
 }
 
@@ -706,12 +725,13 @@ fn ensure_lanes(lanes: &mut Vec<AttnLane>, count: usize, n_cap: usize, hd: usize
 /// For each item, K and V are gathered once into the lane's head-major
 /// planes (unit-stride inner loops thereafter), then each query row runs
 /// the streaming softmax and AV accumulation of the serial datapath in
-/// the same element order. Writes: `sa` stripe `[img, i, hh*hd..]` and
-/// the per-head CLS row `cls_rows[img*nh + hh]` — both unique per item.
+/// the same element order. The batch is ragged: image `img` owns token
+/// rows `offs[img]..offs[img + 1]`. Writes: `sa` stripe
+/// `[offs[img] + i, hh*hd..]` and the per-head CLS row at
+/// `cls_rows[nh*offs[img] + hh*n_img..]` — both unique per item.
 fn attn_items(
     qkv: &[f32],
-    batch: usize,
-    n: usize,
+    offs: &[usize],
     nh: usize,
     hd: usize,
     lane: &mut AttnLane,
@@ -720,6 +740,7 @@ fn attn_items(
     sa: RawMat,
     cls_rows: RawMat,
 ) {
+    let batch = offs.len() - 1;
     let qkv_dim = nh * hd;
     let stride = 3 * qkv_dim;
     let scale = 1.0 / (hd as f32).sqrt();
@@ -727,7 +748,9 @@ fn attn_items(
     while item < batch * nh {
         let img = item / nh;
         let hh = item % nh;
-        let base = img * n * stride;
+        let r0 = offs[img];
+        let n = offs[img + 1] - r0;
+        let base = r0 * stride;
         let qo = hh * hd;
         let ko = qkv_dim + hh * hd;
         let vo = 2 * qkv_dim + hh * hd;
@@ -756,8 +779,10 @@ fn attn_items(
                 *a *= inv;
             }
             if i == 0 {
-                // Safety: CLS row (img, hh) belongs to this item alone.
-                let dst = unsafe { cls_rows.slice((img * nh + hh) * n, n) };
+                // Safety: CLS row (img, hh) belongs to this item alone
+                // (image img's block is nh*offs[img]..nh*offs[img+1],
+                // head hh at offset hh*n inside it).
+                let dst = unsafe { cls_rows.slice(nh * r0 + hh * n, n) };
                 dst.copy_from_slice(&lane.attn[..n]);
             }
             let mut out = [0.0f32; MAX_HD];
@@ -773,29 +798,33 @@ fn attn_items(
                 }
             }
             // Safety: sa stripe (img, i, head hh) belongs to this item.
-            let dst = unsafe { sa.slice(img * n * qkv_dim + i * qkv_dim + hh * hd, hd) };
+            let dst = unsafe { sa.slice((r0 + i) * qkv_dim + hh * hd, hd) };
             dst.copy_from_slice(out);
         }
         item += step;
     }
 }
 
-/// Multi-head self-attention over a batch of images sharing one token
-/// count `n` (the TDHM schedule makes per-layer counts input-independent,
-/// so fused batches are always rectangular).
+/// Multi-head self-attention over a *ragged* batch of images: `offs` is
+/// the per-image row-offset table (prefix sums — image `i` owns token
+/// rows `offs[i]..offs[i+1]`), so images in one fused batch may carry
+/// different token counts (adaptive TDM). Schedule-fixed batches pass
+/// uniform offsets `offs[i] = i * n` and reproduce the rectangular
+/// indexing exactly.
 ///
-/// * `qkv`: `batch * n * 3*nh*hd`, image-major, the serial layout;
-/// * `sa`: `batch * n * nh*hd`, fully overwritten;
-/// * `cls_rows`: `batch * nh * n` per-head CLS attention rows (the TDM
-///   score inputs), fully overwritten — callers reduce heads themselves
-///   with the division hoisted out of the accumulation.
+/// * `qkv`: `offs.last() * 3*nh*hd`, image-major, the serial layout;
+/// * `sa`: `offs.last() * nh*hd`, fully overwritten;
+/// * `cls_rows`: `nh * offs.last()` per-head CLS attention rows (the
+///   TDM score inputs), fully overwritten: image `i`'s block is
+///   `nh*offs[i]..nh*offs[i+1]`, head `hh` at offset `hh * n_i` inside
+///   it — callers reduce heads themselves with the division hoisted out
+///   of the accumulation.
 ///
 /// (image, head) items fan across `workers` threads; per-image results
 /// are bit-identical to the serial per-head loop at any worker count.
 pub fn attention_batch_into(
     qkv: &[f32],
-    batch: usize,
-    n: usize,
+    offs: &[usize],
     nh: usize,
     hd: usize,
     lanes: &mut Vec<AttnLane>,
@@ -803,26 +832,38 @@ pub fn attention_batch_into(
     sa: &mut [f32],
     workers: usize,
 ) {
+    assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
+    debug_assert!(offs.windows(2).all(|p| p[0] <= p[1]), "offs must be nondecreasing");
+    let batch = offs.len() - 1;
+    let rows = offs[batch];
     let qkv_dim = nh * hd;
-    assert_eq!(qkv.len(), batch * n * 3 * qkv_dim);
-    assert_eq!(sa.len(), batch * n * qkv_dim);
-    assert_eq!(cls_rows.len(), batch * nh * n);
+    assert_eq!(qkv.len(), rows * 3 * qkv_dim);
+    assert_eq!(sa.len(), rows * qkv_dim);
+    assert_eq!(cls_rows.len(), nh * rows);
     assert!(hd <= MAX_HD, "attention kernel supports head_dim <= {}", MAX_HD);
+    let n_max = offs.windows(2).map(|p| p[1] - p[0]).max().unwrap_or(0);
+    let macs: usize = offs
+        .windows(2)
+        .map(|p| {
+            let n = p[1] - p[0];
+            nh * n * n * 2 * hd
+        })
+        .sum();
     let items = batch * nh;
-    let workers = par_workers(workers, items, items * n * n * 2 * hd);
-    ensure_lanes(lanes, workers.max(1), n, hd);
+    let workers = par_workers(workers, items, macs);
+    ensure_lanes(lanes, workers.max(1), n_max, hd);
     let sa_raw = RawMat(sa.as_mut_ptr());
     let cls_raw = RawMat(cls_rows.as_mut_ptr());
     if workers == 1 {
-        attn_items(qkv, batch, n, nh, hd, &mut lanes[0], 0, 1, sa_raw, cls_raw);
+        attn_items(qkv, offs, nh, hd, &mut lanes[0], 0, 1, sa_raw, cls_raw);
         return;
     }
     let (lane0, rest) = lanes.split_at_mut(1);
     std::thread::scope(|s| {
         for (w, lane) in rest[..workers - 1].iter_mut().enumerate() {
-            s.spawn(move || attn_items(qkv, batch, n, nh, hd, lane, w + 1, workers, sa_raw, cls_raw));
+            s.spawn(move || attn_items(qkv, offs, nh, hd, lane, w + 1, workers, sa_raw, cls_raw));
         }
-        attn_items(qkv, batch, n, nh, hd, &mut lane0[0], 0, workers, sa_raw, cls_raw);
+        attn_items(qkv, offs, nh, hd, &mut lane0[0], 0, workers, sa_raw, cls_raw);
     });
 }
 
@@ -1023,13 +1064,15 @@ pub fn matmul_bias_residual_into(
 /// y = GELU(dequant(xq x wq) + bias): the MLP intermediate stage of the
 /// int16 datapath. Per output row the whole k-reduction runs as integer
 /// MACs into an i64 row accumulator; requantize + rescale + bias + GELU
-/// fuse into one epilogue pass. `rows_per_img` consecutive rows share
-/// `rq[img]`. Fully overwrites `y` (`m x n`, `(k, n) = w.shape`).
+/// fuse into one epilogue pass. Rows are split across images by the
+/// ragged row-offset table `offs` (image `i` owns rows
+/// `offs[i]..offs[i+1]` and shares `rq[i]`). Fully overwrites `y`
+/// (`m x n`, `(k, n) = w.shape`).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_i16_bias_gelu_into(
     xq: &[i16],
     w: &Int16Matrix,
-    rows_per_img: usize,
+    offs: &[usize],
     rq: &[StageRequant],
     bias: &[f32],
     m: usize,
@@ -1040,8 +1083,9 @@ pub fn matmul_i16_bias_gelu_into(
     assert_eq!(xq.len(), m * k);
     assert_eq!(bias.len(), n);
     assert_eq!(y.len(), m * n);
-    assert!(rows_per_img > 0);
-    assert!(rq.len() * rows_per_img >= m, "requant table does not cover all rows");
+    assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
+    assert_eq!(*offs.last().unwrap(), m, "offs must cover all rows");
+    assert!(rq.len() >= offs.len() - 1, "requant table does not cover all images");
     let workers = par_workers(workers, m, m * k * n);
     parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
         let mut acc = vec![0i64; n];
@@ -1053,7 +1097,7 @@ pub fn matmul_i16_bias_gelu_into(
                 }
                 iaxpy(&mut acc, &w.data[kk * n..(kk + 1) * n], xv);
             }
-            let rqv = rq[ri / rows_per_img];
+            let rqv = rq[row_image(offs, ri)];
             for ((v, &a), b) in yrow.iter_mut().zip(&acc).zip(bias) {
                 *v = gelu(requantize(a, rqv.shift) as f32 * rqv.scale + b);
             }
@@ -1064,12 +1108,13 @@ pub fn matmul_i16_bias_gelu_into(
 /// y = dequant(xq x wq) + bias + res: the MLP output stage of the int16
 /// datapath, integer accumulation with the bias+residual epilogue fused
 /// after requantization (same `sum + (bias + res)` order as the f32
-/// kernel). Fully overwrites `y`.
+/// kernel). `offs` splits rows across images as in
+/// [`matmul_i16_bias_gelu_into`]. Fully overwrites `y`.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_i16_bias_residual_into(
     xq: &[i16],
     w: &Int16Matrix,
-    rows_per_img: usize,
+    offs: &[usize],
     rq: &[StageRequant],
     bias: &[f32],
     res: &[f32],
@@ -1082,8 +1127,9 @@ pub fn matmul_i16_bias_residual_into(
     assert_eq!(bias.len(), n);
     assert_eq!(res.len(), m * n);
     assert_eq!(y.len(), m * n);
-    assert!(rows_per_img > 0);
-    assert!(rq.len() * rows_per_img >= m, "requant table does not cover all rows");
+    assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
+    assert_eq!(*offs.last().unwrap(), m, "offs must cover all rows");
+    assert!(rq.len() >= offs.len() - 1, "requant table does not cover all images");
     let workers = par_workers(workers, m, m * k * n);
     parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
         let mut acc = vec![0i64; n];
@@ -1095,7 +1141,7 @@ pub fn matmul_i16_bias_residual_into(
                 }
                 iaxpy(&mut acc, &w.data[kk * n..(kk + 1) * n], xv);
             }
-            let rqv = rq[ri / rows_per_img];
+            let rqv = rq[row_image(offs, ri)];
             let rrow = &res[ri * n..(ri + 1) * n];
             for (((v, &a), b), r) in yrow.iter_mut().zip(&acc).zip(bias).zip(rrow) {
                 *v = requantize(a, rqv.shift) as f32 * rqv.scale + (b + r);
@@ -1285,7 +1331,7 @@ mod tests {
                 let mut lanes = Vec::new();
                 let mut sa = vec![f32::NAN; n * qkv_dim];
                 let mut cls = vec![f32::NAN; nh * n];
-                attention_batch_into(&qkv, 1, n, nh, hd, &mut lanes, &mut cls, &mut sa, workers);
+                attention_batch_into(&qkv, &[0, n], nh, hd, &mut lanes, &mut cls, &mut sa, workers);
                 assert_eq!(sa, want_sa, "sa n={} workers={}", n, workers);
                 assert_eq!(cls, want_cls, "cls n={} workers={}", n, workers);
             }
@@ -1295,10 +1341,65 @@ mod tests {
             let mut lanes = Vec::new();
             let mut sa = vec![f32::NAN; 2 * n * qkv_dim];
             let mut cls = vec![f32::NAN; 2 * nh * n];
-            attention_batch_into(&qkv2, 2, n, nh, hd, &mut lanes, &mut cls, &mut sa, 3);
+            attention_batch_into(&qkv2, &[0, n, 2 * n], nh, hd, &mut lanes, &mut cls, &mut sa, 3);
             assert_eq!(&sa[..n * qkv_dim], want_sa.as_slice());
             assert_eq!(&sa[n * qkv_dim..], want_sa.as_slice());
             assert_eq!(&cls[nh * n..], want_cls.as_slice());
+        }
+    }
+
+    #[test]
+    fn row_image_maps_rows_to_images() {
+        // Includes an empty image (offs[1] == offs[2]): its rows are
+        // skipped, rows after it still map to the right owner.
+        let offs = [0usize, 3, 3, 7, 8];
+        let want = [0usize, 0, 0, 2, 2, 2, 2, 3];
+        for (r, &w) in want.iter().enumerate() {
+            assert_eq!(row_image(&offs, r), w, "r={}", r);
+        }
+    }
+
+    #[test]
+    fn ragged_attention_bitexact_vs_strided_per_image() {
+        // Adaptive TDM leaves images in one fused batch with different
+        // token counts; each image must still match its own
+        // single-image strided reference bit-for-bit at any worker
+        // count (covers an n=1 image, where attention is the identity
+        // softmax over one token).
+        let mut rng = Rng::new(41);
+        let (nh, hd) = (2usize, 8usize);
+        let qkv_dim = nh * hd;
+        let ns = [7usize, 3, 12, 1];
+        let mut offs = vec![0usize];
+        for &n in &ns {
+            offs.push(offs.last().unwrap() + n);
+        }
+        let rows = *offs.last().unwrap();
+        let qkv: Vec<f32> = (0..rows * 3 * qkv_dim).map(|_| rng.normal()).collect();
+        let mut want_sa = vec![0.0f32; rows * qkv_dim];
+        let mut want_cls = vec![0.0f32; nh * rows];
+        for (i, &n) in ns.iter().enumerate() {
+            let r0 = offs[i];
+            attention_strided_reference(
+                &qkv[r0 * 3 * qkv_dim..(r0 + n) * 3 * qkv_dim],
+                n,
+                nh,
+                hd,
+                &mut want_sa[r0 * qkv_dim..(r0 + n) * qkv_dim],
+                &mut want_cls[nh * r0..nh * (r0 + n)],
+            );
+        }
+        for workers in [1usize, 3, 8] {
+            let mut lanes = Vec::new();
+            let mut sa = vec![f32::NAN; rows * qkv_dim];
+            let mut cls = vec![f32::NAN; nh * rows];
+            attention_batch_into(&qkv, &offs, nh, hd, &mut lanes, &mut cls, &mut sa, workers);
+            for (i, (a, w)) in sa.iter().zip(&want_sa).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(), "sa workers={} idx={}", workers, i);
+            }
+            for (i, (a, w)) in cls.iter().zip(&want_cls).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(), "cls workers={} idx={}", workers, i);
+            }
         }
     }
 
@@ -1369,18 +1470,29 @@ mod tests {
         // the same quantized operands exactly — and the f32 epilogue is
         // then the same ops in the same order: bit-identical output.
         let mut rng = Rng::new(29);
-        for &(batch, nrows, m2, n, b) in
-            &[(1usize, 3usize, 16usize, 24usize, 8usize), (2, 5, 24, 32, 8), (1, 6, 32, 32, 16)]
-        {
+        // Per-image row counts: uniform batches plus genuinely ragged
+        // ones (the adaptive-TDM shape).
+        let shapes: &[(&[usize], usize, usize, usize)] = &[
+            (&[3], 16, 24, 8),
+            (&[5, 5], 24, 32, 8),
+            (&[6], 32, 32, 16),
+            (&[1, 4, 2], 16, 24, 8),
+        ];
+        for &(img_rows, m2, n, b) in shapes {
             let sp = random_sparse(&mut rng, m2, n, b, 0.6);
             let sched = ColumnSchedule::new(&sp);
             let wq = sp.quantize_int16();
-            let rows = batch * nrows;
+            let batch = img_rows.len();
+            let mut offs = vec![0usize];
+            for &nr in img_rows {
+                offs.push(offs.last().unwrap() + nr);
+            }
+            let rows = offs[batch];
             let x: Vec<f32> = (0..rows * m2).map(|_| rng.normal()).collect();
             let mut xq = vec![0i16; rows * m2];
             let mut rq = Vec::new();
             for img in 0..batch {
-                let sl = img * nrows * m2..(img + 1) * nrows * m2;
+                let sl = offs[img] * m2..offs[img + 1] * m2;
                 let (q, row_l2) = crate::formats::quant::quantize_activations(
                     &x[sl.clone()], m2, &mut xq[sl]);
                 rq.push(StageRequant::new(q, wq.quant, row_l2, wq.max_col_l2));
@@ -1390,7 +1502,9 @@ mod tests {
             let wdq: Vec<i16> = sp.to_dense().iter().map(|&v| wq.quant.quantize(v)).collect();
             let mut want = vec![0.0f32; rows * n];
             for r in 0..rows {
-                let rqv = rq[r / nrows];
+                // Independent owner scan (not row_image).
+                let img = (0..batch).find(|&i| r < offs[i + 1]).unwrap();
+                let rqv = rq[img];
                 for c in 0..n {
                     let mut acc = 0i64;
                     for kk in 0..m2 {
@@ -1402,7 +1516,7 @@ mod tests {
             }
             for workers in [1usize, 3] {
                 let mut got = vec![f32::NAN; rows * n];
-                spmm_i16_bias_into(&sp, &wq, &sched, &xq, rows, nrows, &rq,
+                spmm_i16_bias_into(&sp, &wq, &sched, &xq, rows, &offs, &rq,
                                    Some(&bias[..]), Some(&res[..]), &mut got, workers);
                 for (i, (a, w)) in got.iter().zip(&want).enumerate() {
                     assert_eq!(a.to_bits(), w.to_bits(), "workers={} idx={}", workers, i);
@@ -1414,15 +1528,18 @@ mod tests {
     #[test]
     fn integer_mlp_matmuls_match_integer_reference() {
         let mut rng = Rng::new(31);
-        let (batch, nrows, k, n) = (2usize, 4usize, 12usize, 20usize);
-        let m = batch * nrows;
+        // Ragged: image 0 keeps 4 rows, image 1 keeps 2.
+        let offs = [0usize, 4, 6];
+        let batch = offs.len() - 1;
+        let (k, n) = (12usize, 20usize);
+        let m = offs[batch];
         let wf: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         let w = Int16Matrix::from_f32(&wf, (k, n));
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
         let mut xq = vec![0i16; m * k];
         let mut rq = Vec::new();
         for img in 0..batch {
-            let sl = img * nrows * k..(img + 1) * nrows * k;
+            let sl = offs[img] * k..offs[img + 1] * k;
             let (q, row_l2) =
                 crate::formats::quant::quantize_activations(&x[sl.clone()], k, &mut xq[sl]);
             rq.push(StageRequant::new(q, w.quant, row_l2, w.max_col_l2));
@@ -1432,7 +1549,8 @@ mod tests {
         let mut want_g = vec![0.0f32; m * n];
         let mut want_r = vec![0.0f32; m * n];
         for r in 0..m {
-            let rqv = rq[r / nrows];
+            let img = (0..batch).find(|&i| r < offs[i + 1]).unwrap();
+            let rqv = rq[img];
             for c in 0..n {
                 let mut acc = 0i64;
                 for kk in 0..k {
@@ -1445,10 +1563,10 @@ mod tests {
         }
         for workers in [1usize, 3] {
             let mut got = vec![f32::NAN; m * n];
-            matmul_i16_bias_gelu_into(&xq, &w, nrows, &rq, &bias, m, &mut got, workers);
+            matmul_i16_bias_gelu_into(&xq, &w, &offs, &rq, &bias, m, &mut got, workers);
             assert_eq!(got, want_g, "gelu workers={}", workers);
             let mut got = vec![f32::NAN; m * n];
-            matmul_i16_bias_residual_into(&xq, &w, nrows, &rq, &bias, &res, m, &mut got, workers);
+            matmul_i16_bias_residual_into(&xq, &w, &offs, &rq, &bias, &res, m, &mut got, workers);
             assert_eq!(got, want_r, "residual workers={}", workers);
         }
     }

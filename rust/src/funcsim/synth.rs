@@ -146,7 +146,7 @@ impl FuncSim {
         let st = ModelStructure::synthesize(dims, setting, seed);
         let ts = synthesize_tensors(&st, seed);
         FuncSim::from_tensors(
-            &ts,
+            ts,
             st,
             (dims.image_size, dims.patch_size, dims.in_channels),
             precision,
@@ -158,8 +158,11 @@ impl FuncSim {
     /// fields (model, setting, precision, seed) give bit-identical
     /// models, which is what lets the registry's per-model pools match
     /// a dedicated pool exactly — the serving parity tests rely on it.
+    /// The spec's `@adaptive` part toggles input-adaptive TDM (a serving
+    /// mode, not a weight change — the weights are identical either way).
     pub fn synthesize_spec(spec: &crate::registry::ModelSpec) -> Result<FuncSim> {
         Self::synthesize(&spec.dims, &spec.setting, spec.seed, spec.precision)
+            .map(|sim| sim.with_adaptive_tdm(spec.adaptive))
     }
 }
 
@@ -187,7 +190,8 @@ mod tests {
         let setting = PruningSetting::new(8, 0.5, 1.0);
         let st = ModelStructure::synthesize(&TEST_TINY, &setting, 7);
         let ts = synthesize_tensors(&st, 7);
-        let sim = FuncSim::from_tensors(&ts, st.clone(), (32, 8, 3), Precision::F32).unwrap();
+        let sim = FuncSim::from_tensors(ts.clone(), st.clone(), (32, 8, 3), Precision::F32)
+            .unwrap();
         // The loader re-detects the block mask; its per-column populations
         // must match what the structure prescribed.
         for (l, enc) in st.encoders.iter().enumerate() {

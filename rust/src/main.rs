@@ -10,15 +10,19 @@
 //!                           one inference on a synthetic image
 //!   serve [--backend native|pjrt] [--variant NAME] [--requests N]
 //!         [--concurrency C] [--model M] [--setting L] [--int16]
-//!         [--replicas N] [--queue-capacity Q] [--threads T]
+//!         [--adaptive-tdm] [--replicas N] [--queue-capacity Q]
+//!         [--threads T]
 //!                           run the coordinator (or, with --replicas > 1,
 //!                           the replicated pool with least-loaded dispatch
-//!                           and bounded admission) against synthetic load
+//!                           and bounded admission) against synthetic load.
+//!                           --adaptive-tdm derives per-image TDM keep
+//!                           counts from the CLS-attention scores instead
+//!                           of the fixed schedule (native backend)
 //!   serve --model NAME=SPEC [--model NAME=SPEC ...] [--default-model NAME]
 //!                           registry mode: serve several named pruning
 //!                           variants from one process. SPEC grammar:
-//!                           model@setting[@int16][@seed=N][@replicas=N]
-//!                           [@queue=N][@batch=N], e.g.
+//!                           model@setting[@int16][@adaptive][@seed=N]
+//!                           [@replicas=N][@queue=N][@batch=N], e.g.
 //!                           small=deit-small@b16_rb0.5_rt0.5. Each model
 //!                           gets its own lazily-built replica pool;
 //!                           requests route by name (default: the first).

@@ -43,7 +43,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::NativeBackend;
+use crate::backend::{NativeBackend, TokenStats};
 use crate::coordinator::pool::DEFAULT_QUEUE_CAPACITY;
 use crate::coordinator::{
     BackendPool, BatchPolicy, InferenceResponse, ModelId, PoolPolicy,
@@ -98,6 +98,9 @@ pub struct ModelInfo {
     pub batch_capacity: usize,
     pub input_elems_per_image: usize,
     pub num_classes: usize,
+    /// Whether the model runs input-adaptive TDM keep counts
+    /// (`@adaptive` spec part); false for prebuilt pools.
+    pub adaptive: bool,
 }
 
 /// One registered model: its spec (None for prebuilt pools), the
@@ -118,6 +121,10 @@ struct ModelEntry {
     /// Serializes first-construction only (never held while the slot
     /// lock is held, and never taken by readers).
     build: Mutex<()>,
+    /// Kept-token counters shared with every replica of the pool (the
+    /// `/metrics` mean-kept-tokens gauge). Prebuilt pools never record
+    /// into it, so their gauge simply stays absent.
+    token_stats: Arc<TokenStats>,
 }
 
 impl ModelEntry {
@@ -196,6 +203,7 @@ impl RegistryBuilder {
                 threads,
                 pool: RwLock::new(None),
                 build: Mutex::new(()),
+                token_stats: Arc::new(TokenStats::default()),
             },
         );
         self.order.push(name.to_string());
@@ -225,6 +233,7 @@ impl RegistryBuilder {
                 threads: None,
                 pool: RwLock::new(Some(Arc::new(pool))),
                 build: Mutex::new(()),
+                token_stats: Arc::new(TokenStats::default()),
             },
         );
         self.order.push(name.to_string());
@@ -313,6 +322,13 @@ impl Registry {
         self.models.get(name).and_then(|e| e.spec.as_ref())
     }
 
+    /// `name`'s kept-token counters (shared with its pool replicas);
+    /// None for unknown names. The counters exist even while the pool
+    /// is cold — they just read as empty.
+    pub fn token_stats(&self, name: &str) -> Option<&TokenStats> {
+        self.models.get(name).map(|e| &*e.token_stats)
+    }
+
     /// Whether `name`'s pool has been constructed.
     pub fn is_ready(&self, name: &str) -> bool {
         self.models
@@ -354,10 +370,12 @@ impl Registry {
             .expect("cold registry entries always carry a spec")
             .clone();
         let threads = entry.threads;
+        let stats = Arc::clone(&entry.token_stats);
         let pool = BackendPool::start_named(
             ModelId::new(name),
             move |_i| {
-                let nb = NativeBackend::from_spec(&spec)?;
+                let nb = NativeBackend::from_spec(&spec)?
+                    .with_token_stats(Arc::clone(&stats));
                 Ok(match threads {
                     Some(t) => nb.with_threads(t),
                     None => nb,
@@ -427,6 +445,7 @@ impl Registry {
             batch_capacity,
             input_elems_per_image: input_elems,
             num_classes: classes,
+            adaptive: entry.spec.as_ref().map(|s| s.adaptive).unwrap_or(false),
         })
     }
 

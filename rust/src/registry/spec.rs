@@ -15,6 +15,11 @@
 //!                                                       true integer-MAC path
 //!                                                       (DESIGN.md
 //!                                                       *Fixed-point datapath*)
+//!          | adaptive                                   input-adaptive TDM keep
+//!                                                       counts (per-image, from
+//!                                                       the CLS-attention
+//!                                                       scores; schedule-fixed
+//!                                                       when absent)
 //!          | seed=N                                     synthesis seed
 //!          | replicas=N                                 pool override
 //!          | queue=N                                    pool override
@@ -55,6 +60,10 @@ pub struct ModelSpec {
     pub dims: ModelDims,
     pub setting: PruningSetting,
     pub precision: Precision,
+    /// Input-adaptive TDM keep counts (`@adaptive`): per-image counts
+    /// derived from the CLS-attention scores at serve time. Part of the
+    /// model identity — the same weights route tokens differently.
+    pub adaptive: bool,
     pub seed: u64,
     /// Per-model replica-count override (None -> server default).
     pub replicas: Option<usize>,
@@ -80,6 +89,7 @@ impl ModelSpec {
             dims,
             setting: PruningSetting::dense(16),
             precision: Precision::F32,
+            adaptive: false,
             seed: DEFAULT_SPEC_SEED,
             replicas: None,
             queue_capacity: None,
@@ -98,6 +108,8 @@ impl ModelSpec {
                 out.precision = Precision::Int16;
             } else if part == "f32" {
                 out.precision = Precision::F32;
+            } else if part == "adaptive" {
+                out.adaptive = true;
             } else if let Some(v) = part.strip_prefix("seed=") {
                 out.seed = parse_n(part, v)? as u64;
             } else if let Some(v) = part.strip_prefix("replicas=") {
@@ -132,13 +144,17 @@ impl ModelSpec {
         Ok(out)
     }
 
-    /// Canonical identity label: `model@setting[@int16][@seed=N]`.
-    /// Pool overrides are deployment knobs and are not part of it.
-    /// `parse(spec_string())` round-trips the identity fields.
+    /// Canonical identity label:
+    /// `model@setting[@int16][@adaptive][@seed=N]`. Pool overrides are
+    /// deployment knobs and are not part of it. `parse(spec_string())`
+    /// round-trips the identity fields.
     pub fn spec_string(&self) -> String {
         let mut s = format!("{}@{}", self.model, self.setting.label());
         if self.precision == Precision::Int16 {
             s.push_str("@int16");
+        }
+        if self.adaptive {
+            s.push_str("@adaptive");
         }
         if self.seed != DEFAULT_SPEC_SEED {
             s.push_str(&format!("@seed={}", self.seed));
@@ -182,10 +198,21 @@ mod tests {
     }
 
     #[test]
+    fn parses_adaptive_part() {
+        let s = ModelSpec::parse("test-tiny@b8_rb0.7_rt0.7@adaptive").expect("parses");
+        assert!(s.adaptive);
+        assert_eq!(s.spec_string(), "test-tiny@b8_rb0.7_rt0.7@adaptive");
+        let plain = ModelSpec::parse("test-tiny@b8_rb0.7_rt0.7").expect("parses");
+        assert!(!plain.adaptive);
+        assert_ne!(s.spec_string(), plain.spec_string(), "adaptive is identity");
+    }
+
+    #[test]
     fn minimal_spec_is_dense_f32() {
         let s = ModelSpec::parse("deit-tiny").expect("bare model name parses");
         assert_eq!(s.setting, PruningSetting::dense(16));
         assert_eq!(s.precision, Precision::F32);
+        assert!(!s.adaptive);
         assert_eq!(s.seed, DEFAULT_SPEC_SEED);
         assert_eq!(s.spec_string(), "deit-tiny@b16_rb1_rt1");
         assert_eq!(s.input_elems_per_image(), 224 * 224 * 3);
@@ -197,6 +224,7 @@ mod tests {
             "test-tiny@b8_rb0.7_rt0.7",
             "deit-small@b16_rb0.5_rt0.5@int16",
             "test-tiny@b8_rb0.5_rt0.9@seed=7",
+            "test-tiny@b8_rb0.7_rt0.5@int16@adaptive@seed=3",
         ] {
             let a = ModelSpec::parse(spec).expect(spec);
             let b = ModelSpec::parse(&a.spec_string()).expect("canonical re-parses");

@@ -71,25 +71,64 @@ pub struct HttpCounters {
     pub deadline_total: AtomicU64,
 }
 
-/// Edge-observed successful request latencies for one model (sum in
-/// us + count): the latency scale behind that model's computed 429
-/// `Retry-After`. Kept at the edge, per model, because asking the pool
-/// for its metrics round-trips through the engine thread — which under
-/// overload (exactly when 429s happen) queues behind the whole batch
-/// backlog — and a global mean would let a fast model's traffic mask a
-/// slow model's true drain time.
-#[derive(Debug, Default)]
+/// Edge-observed successful request latency for one model, kept as a
+/// lock-free exponentially-weighted moving average: the latency scale
+/// behind that model's computed 429 `Retry-After`. An EWMA instead of
+/// a lifetime mean so the scale *ages* — a cold-start outlier or early
+/// spike decays after a few dozen fast samples instead of permanently
+/// skewing every future Retry-After. Kept at the edge, per model,
+/// because asking the pool for its metrics round-trips through the
+/// engine thread — which under overload (exactly when 429s happen)
+/// queues behind the whole batch backlog — and a global mean would let
+/// a fast model's traffic mask a slow model's true drain time.
+#[derive(Debug)]
 pub struct LatencyScale {
-    pub sum_us: AtomicU64,
-    pub count: AtomicU64,
+    /// f64 bit pattern of the current EWMA in microseconds;
+    /// `EWMA_UNSET` before the first sample.
+    ewma_us: AtomicU64,
+}
+
+/// "No samples yet" sentinel. Decodes to a NaN, so no finite latency
+/// EWMA can ever collide with it.
+const EWMA_UNSET: u64 = u64::MAX;
+
+/// Weight of each new sample in the moving average.
+const EWMA_ALPHA: f64 = 0.1;
+
+impl Default for LatencyScale {
+    fn default() -> LatencyScale {
+        LatencyScale { ewma_us: AtomicU64::new(EWMA_UNSET) }
+    }
 }
 
 impl LatencyScale {
-    /// Observed mean latency in ms, if any samples exist.
+    /// Fold one observed latency (µs) into the moving average. A
+    /// compare-exchange loop, no lock: the shed path reading this must
+    /// never block behind recorders.
+    pub fn record(&self, sample_us: f64) {
+        let mut cur = self.ewma_us.load(Ordering::Relaxed);
+        loop {
+            let next = if cur == EWMA_UNSET {
+                sample_us
+            } else {
+                f64::from_bits(cur) * (1.0 - EWMA_ALPHA) + sample_us * EWMA_ALPHA
+            };
+            match self.ewma_us.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Moving-average latency in ms, if any samples exist.
     fn mean_ms(&self) -> Option<f64> {
-        let count = self.count.load(Ordering::Relaxed);
-        (count > 0)
-            .then(|| self.sum_us.load(Ordering::Relaxed) as f64 / count as f64 / 1e3)
+        let bits = self.ewma_us.load(Ordering::Relaxed);
+        (bits != EWMA_UNSET).then(|| f64::from_bits(bits) / 1e3)
     }
 }
 
@@ -371,10 +410,7 @@ fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
 /// model's Retry-After scale.
 fn record_latency(state: &AppState, resp: &InferenceResponse) {
     if let Some(scale) = state.latency.get(resp.model.as_str()) {
-        scale
-            .sum_us
-            .fetch_add(resp.latency.as_micros() as u64, Ordering::Relaxed);
-        scale.count.fetch_add(1, Ordering::Relaxed);
+        scale.record(resp.latency.as_micros() as f64);
     }
 }
 
@@ -475,6 +511,7 @@ fn models(state: &AppState) -> HttpResponse {
                 },
             );
             m.insert("ready".into(), Json::Bool(info.ready));
+            m.insert("adaptive".into(), Json::Bool(info.adaptive));
             m.insert("default".into(), Json::Bool(info.name == default));
             m.insert("replicas".into(), Json::Num(info.replicas as f64));
             m.insert("queue_capacity".into(), Json::Num(info.queue_capacity as f64));
@@ -523,6 +560,7 @@ fn healthz(state: &AppState) -> HttpResponse {
             },
         );
         m.insert("ready".into(), Json::Bool(info.ready));
+        m.insert("adaptive".into(), Json::Bool(info.adaptive));
         m.insert("replicas".into(), Json::Num(info.replicas as f64));
         m.insert("dead_replicas".into(), Json::Num(dead as f64));
         m.insert(
@@ -556,6 +594,7 @@ fn healthz(state: &AppState) -> HttpResponse {
                 .unwrap_or_else(|| "unknown".into()),
         ),
     );
+    m.insert("adaptive".into(), Json::Bool(info.adaptive));
     m.insert("replicas".into(), Json::Num(info.replicas as f64));
     m.insert("dead_replicas".into(), Json::Num(default_dead as f64));
     m.insert(
@@ -706,6 +745,24 @@ fn metrics(state: &AppState) -> HttpResponse {
         "Replicas whose engine no longer answers.",
         &report_rows(&|r| r.dead_replicas as f64),
     );
+    prom_block(
+        &mut out,
+        "vitfpga_model_mean_kept_tokens",
+        "gauge",
+        "Mean encoder-exit token count per inferred image (fused paths).",
+        &state
+            .registry
+            .names()
+            .iter()
+            .filter_map(|n| {
+                state
+                    .registry
+                    .token_stats(n)
+                    .and_then(|ts| ts.mean_kept())
+                    .map(|v| (label(n), v))
+            })
+            .collect::<Vec<_>>(),
+    );
 
     // Latency summary: per-model quantiles + _sum/_count.
     if scrapes.iter().any(|s| s.report.is_some()) {
@@ -832,4 +889,34 @@ fn metrics(state: &AppState) -> HttpResponse {
 
     HttpResponse::new(200, out.into_bytes())
         .with_header("Content-Type", "text/plain; version=0.0.4")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Retry-After scale must *age*: a burst of slow samples may
+    /// not permanently dominate the estimate once traffic is fast
+    /// again (the lifetime-mean bug this EWMA replaced).
+    #[test]
+    fn latency_scale_decays_old_spikes() {
+        let scale = LatencyScale::default();
+        assert_eq!(scale.mean_ms(), None, "no samples -> no estimate");
+
+        for _ in 0..10 {
+            scale.record(100_000.0); // 100 ms spikes
+        }
+        let spiked = scale.mean_ms().expect("samples recorded");
+        assert!(spiked > 50.0, "spike burst must register, got {} ms", spiked);
+
+        for _ in 0..100 {
+            scale.record(1_000.0); // 1 ms steady state
+        }
+        let settled = scale.mean_ms().expect("samples recorded");
+        assert!(
+            settled < 2.0,
+            "old spikes must decay under fast traffic, got {} ms",
+            settled
+        );
+    }
 }

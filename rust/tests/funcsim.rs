@@ -167,14 +167,16 @@ fn funcsim_detects_weight_corruption() {
     let wpath = dir.join(&entry.weights_file);
     let ts = weights::read_weights(&wpath).unwrap();
     let st = vitfpga::sim::ModelStructure::load(&dir.join(&entry.structure_file)).unwrap();
-    let clean = FuncSim::from_tensors(&ts, st.clone(), geom, Precision::F32).unwrap();
-
     let mut corrupted = ts.clone();
     // flip a weight in the first encoder's qkv
     let t = corrupted.iter_mut().find(|t| t.name.contains("w_qkv")).unwrap();
     let nz = t.data.iter().position(|&x| x != 0.0).unwrap();
     t.data[nz] += 1.0;
-    let dirty = FuncSim::from_tensors(&corrupted, st, geom, Precision::F32).unwrap();
+
+    // `from_tensors` takes the tensors by value (weight loads move the
+    // payloads instead of copying them), so clone-and-mutate first.
+    let clean = FuncSim::from_tensors(ts, st.clone(), geom, Precision::F32).unwrap();
+    let dirty = FuncSim::from_tensors(corrupted, st, geom, Precision::F32).unwrap();
 
     let mut rng = Rng::new(4);
     let img: Vec<f32> = (0..geom.0 * geom.0 * geom.2).map(|_| rng.normal()).collect();

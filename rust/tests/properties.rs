@@ -488,8 +488,11 @@ fn integer_spmm_tracks_f32_within_quant_bound() {
                 rq.push(StageRequant::new(q, wq.quant, l2, wq.max_col_l2));
             }
             let mut got = vec![f32::NAN; rows * n];
+            // Uniform row-offset table: rectangular batches are the
+            // `offs[i] = i * rows_per_img` special case of the ragged API.
+            let offs: Vec<usize> = (0..=imgs).map(|i| i * rows_per_img).collect();
             kernels::spmm_i16_bias_into(
-                &sp, &wq, &sched, &xq, rows, rows_per_img, &rq, bias.as_deref(), None,
+                &sp, &wq, &sched, &xq, rows, &offs, &rq, bias.as_deref(), None,
                 &mut got, 2,
             );
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
@@ -540,6 +543,243 @@ fn int16_forward_tracks_f32_forward() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn adaptive_fused_batch_bit_identical_per_image_to_batch1() {
+    // Tentpole invariant: with input-adaptive TDM keep counts the fused
+    // ragged batch must still be a pure packing of independent images —
+    // each image's logits AND its encoder-exit token count are
+    // bit-identical to running that image alone, at any worker count,
+    // in both precisions.
+    use vitfpga::funcsim::{FuncSim, Precision};
+    forall(
+        14,
+        8,
+        |r: &mut Rng| {
+            let mut s = PruningSetting::new(
+                if r.bool(0.5) { 8 } else { 16 },
+                ((0.4 + 0.6 * r.f64()) * 10.0).round() / 10.0,
+                ((0.3 + 0.7 * r.f64()) * 10.0).round() / 10.0,
+            );
+            s.tdm_layers = (0..4).filter(|_| r.bool(0.6)).collect();
+            let int16 = r.bool(0.5);
+            let threads = if r.bool(0.5) { 1 } else { 3 };
+            (s, int16, r.next_u64(), r.range(2, 5), threads)
+        },
+        |(setting, int16, seed, batch, threads)| {
+            let (batch, threads) = (*batch, *threads);
+            let precision = if *int16 { Precision::Int16 } else { Precision::F32 };
+            let sim = FuncSim::synthesize(&TEST_TINY, setting, *seed, precision)
+                .map_err(|e| e.to_string())?
+                .with_adaptive_tdm(true);
+            let per = sim.input_elems();
+            let classes = sim.num_classes();
+            let mut rng = Rng::new(seed ^ 0xADA7_71E5);
+            let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+            // Batch-1 adaptive reference, one image at a time.
+            let mut s1 = sim.batch_scratch(1);
+            let mut want = Vec::with_capacity(batch * classes);
+            let mut counts = Vec::with_capacity(batch);
+            for i in 0..batch {
+                let mut out = vec![0.0f32; classes];
+                let rows = sim
+                    .forward_batch_counted_into(
+                        &flat[i * per..(i + 1) * per], 1, &mut s1, &mut out, 1)
+                    .map_err(|e| e.to_string())?;
+                counts.push(rows);
+                want.extend(out);
+            }
+            // Fused adaptive batch over the ragged row-offset table.
+            let mut sn = sim.batch_scratch(batch);
+            let mut got = vec![0.0f32; batch * classes];
+            let total = sim
+                .forward_batch_counted_into(&flat, batch, &mut sn, &mut got, threads)
+                .map_err(|e| e.to_string())?;
+            if total != counts.iter().sum::<usize>() {
+                return Err(format!("total rows {} vs per-image sum {:?}", total, counts));
+            }
+            let offs = sn.offsets(batch);
+            for i in 0..batch {
+                if offs[i + 1] - offs[i] != counts[i] {
+                    return Err(format!(
+                        "image {}: fused exit count {} vs batch-1 {}",
+                        i, offs[i + 1] - offs[i], counts[i]));
+                }
+            }
+            for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                if a.to_bits() != w.to_bits() {
+                    return Err(format!("logit {}: fused {} vs batch-1 {}", i, a, w));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn schedule_fixed_fused_batch_stays_bit_identical_across_paths() {
+    // Regression pin for the ragged-batch refactor: with adaptive mode
+    // off, the row-offset table is uniform and the fused batch must be
+    // bit-identical to the batch-1 path at every worker count, with
+    // every image exiting the encoder at the schedule's fixed count.
+    use vitfpga::funcsim::{FuncSim, Precision};
+    forall(
+        15,
+        8,
+        |r: &mut Rng| {
+            let mut s = PruningSetting::new(
+                if r.bool(0.5) { 8 } else { 16 },
+                ((0.4 + 0.6 * r.f64()) * 10.0).round() / 10.0,
+                ((0.3 + 0.7 * r.f64()) * 10.0).round() / 10.0,
+            );
+            s.tdm_layers = (0..4).filter(|_| r.bool(0.5)).collect();
+            let int16 = r.bool(0.5);
+            let threads = if r.bool(0.5) { 1 } else { 3 };
+            (s, int16, r.next_u64(), r.range(2, 5), threads)
+        },
+        |(setting, int16, seed, batch, threads)| {
+            let (batch, threads) = (*batch, *threads);
+            let precision = if *int16 { Precision::Int16 } else { Precision::F32 };
+            let sim = FuncSim::synthesize(&TEST_TINY, setting, *seed, precision)
+                .map_err(|e| e.to_string())?;
+            let per = sim.input_elems();
+            let classes = sim.num_classes();
+            let mut rng = Rng::new(seed ^ 0x5C_4ED);
+            let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+            // Independent schedule reference: fold the keep rule over the
+            // TDM layers.
+            let mut n_exit = TEST_TINY.num_tokens();
+            for l in 0..TEST_TINY.num_layers {
+                if setting.tdm_layers.contains(&l) && setting.r_t < 1.0 {
+                    n_exit = setting.tokens_after_tdm(n_exit);
+                }
+            }
+            let mut s1 = sim.batch_scratch(1);
+            let mut want = Vec::with_capacity(batch * classes);
+            for i in 0..batch {
+                let mut out = vec![0.0f32; classes];
+                let rows = sim
+                    .forward_batch_counted_into(
+                        &flat[i * per..(i + 1) * per], 1, &mut s1, &mut out, 1)
+                    .map_err(|e| e.to_string())?;
+                if rows != n_exit {
+                    return Err(format!("batch-1 exit {} vs schedule {}", rows, n_exit));
+                }
+                want.extend(out);
+            }
+            let mut sn = sim.batch_scratch(batch);
+            let mut got = vec![0.0f32; batch * classes];
+            let total = sim
+                .forward_batch_counted_into(&flat, batch, &mut sn, &mut got, threads)
+                .map_err(|e| e.to_string())?;
+            if total != batch * n_exit {
+                return Err(format!("fused total {} vs {} x {}", total, batch, n_exit));
+            }
+            for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                if a.to_bits() != w.to_bits() {
+                    return Err(format!("logit {}: fused {} vs batch-1 {}", i, a, w));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn adaptive_counts_vary_per_image_within_schedule_cap() {
+    // The point of adaptive mode: two images in one fused batch can exit
+    // a TDM layer with different token counts. Across 24 random images
+    // the exit counts must not collapse to one value, and no image may
+    // exceed the schedule count (the adaptive rule's cap).
+    use std::collections::BTreeSet;
+    use vitfpga::funcsim::{FuncSim, Precision};
+    let mut setting = PruningSetting::new(8, 0.7, 0.7);
+    setting.tdm_layers = vec![0, 1, 2, 3];
+    let mut cap = TEST_TINY.num_tokens();
+    for l in 0..TEST_TINY.num_layers {
+        if setting.tdm_layers.contains(&l) {
+            cap = setting.tokens_after_tdm(cap);
+        }
+    }
+    let mut distinct = BTreeSet::new();
+    for seed in 0..3u64 {
+        let sim = FuncSim::synthesize(&TEST_TINY, &setting, 100 + seed, Precision::F32)
+            .unwrap()
+            .with_adaptive_tdm(true);
+        let (per, batch) = (sim.input_elems(), 8);
+        let mut rng = Rng::new(0xC00E5 ^ seed);
+        let flat: Vec<f32> = (0..batch * per).map(|_| rng.normal()).collect();
+        let mut scratch = sim.batch_scratch(batch);
+        let mut out = vec![0.0f32; batch * sim.num_classes()];
+        sim.forward_batch_counted_into(&flat, batch, &mut scratch, &mut out, 2)
+            .unwrap();
+        for w in scratch.offsets(batch).windows(2) {
+            let n_exit = w[1] - w[0];
+            assert!(n_exit <= cap, "adaptive exit {} exceeds schedule {}", n_exit, cap);
+            // CLS + at least one kept token + the fused package token.
+            assert!(n_exit >= 3, "adaptive exit {} below the 3-token floor", n_exit);
+            distinct.insert(n_exit);
+        }
+    }
+    assert!(
+        distinct.len() >= 2,
+        "adaptive TDM never varied across 24 random images: {:?}",
+        distinct
+    );
+}
+
+#[test]
+fn adaptive_mode_edges_match_schedule_fixed() {
+    // r_t = 1.0 disables TDM entirely, so adaptive mode must be a
+    // bit-exact no-op there; batch 1 is the degenerate ragged table and
+    // must still honour the schedule cap with active TDM.
+    use vitfpga::funcsim::{FuncSim, Precision};
+    let mut setting = PruningSetting::new(8, 0.7, 1.0);
+    setting.tdm_layers = vec![0, 1, 2, 3];
+    let plain = FuncSim::synthesize(&TEST_TINY, &setting, 5, Precision::F32).unwrap();
+    let adaptive = FuncSim::synthesize(&TEST_TINY, &setting, 5, Precision::F32)
+        .unwrap()
+        .with_adaptive_tdm(true);
+    let per = plain.input_elems();
+    let classes = plain.num_classes();
+    let mut rng = Rng::new(77);
+    let flat: Vec<f32> = (0..2 * per).map(|_| rng.normal()).collect();
+    let mut sa = plain.batch_scratch(2);
+    let mut sb = adaptive.batch_scratch(2);
+    let mut a = vec![0.0f32; 2 * classes];
+    let mut b = vec![0.0f32; 2 * classes];
+    let ra = plain.forward_batch_counted_into(&flat, 2, &mut sa, &mut a, 1).unwrap();
+    let rb = adaptive.forward_batch_counted_into(&flat, 2, &mut sb, &mut b, 1).unwrap();
+    assert_eq!(ra, rb, "r_t = 1.0 must keep every token in both modes");
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "all-kept edge must be bit-exact");
+    }
+
+    let mut s2 = PruningSetting::new(8, 0.7, 0.5);
+    s2.tdm_layers = vec![0, 2];
+    let sim = FuncSim::synthesize(&TEST_TINY, &s2, 6, Precision::Int16)
+        .unwrap()
+        .with_adaptive_tdm(true);
+    let img: Vec<f32> = (0..sim.input_elems()).map(|_| rng.normal()).collect();
+    let mut s1 = sim.batch_scratch(1);
+    let mut out = vec![0.0f32; sim.num_classes()];
+    let rows = sim
+        .forward_batch_counted_into(&img, 1, &mut s1, &mut out, 1)
+        .unwrap();
+    let mut cap = TEST_TINY.num_tokens();
+    for l in 0..TEST_TINY.num_layers {
+        if s2.tdm_layers.contains(&l) {
+            cap = s2.tokens_after_tdm(cap);
+        }
+    }
+    assert!(
+        rows >= 3 && rows <= cap,
+        "batch-1 adaptive exit {} outside [3, {}]",
+        rows,
+        cap
+    );
+    assert!(out.iter().all(|x| x.is_finite()), "batch-1 adaptive logits finite");
 }
 
 #[test]
