@@ -38,7 +38,9 @@
 //! clients become `server::loadgen` workers speaking JSON over
 //! keep-alive connections (add `--qps N` for an open-loop arrival
 //! schedule; with several registered models the load becomes an even
-//! `--model-mix` across them).
+//! `--model-mix` across them). `--edge evented` swaps the
+//! thread-per-connection transport for the nonblocking readiness loop;
+//! `--wire binary` drives raw-f32 tensor bodies instead of JSON.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -152,8 +154,21 @@ fn serve_over_http(
     requests: usize,
     concurrency: usize,
 ) -> Result<()> {
-    use vitfpga::server::{loadgen, route, AppState, HttpConfig, HttpServer, LoadMode, LoadgenConfig};
+    use vitfpga::server::{
+        loadgen, route, AppState, EdgeKind, HttpConfig, HttpServer, LoadMode, LoadgenConfig,
+        WireFormat,
+    };
 
+    let edge = match args.get("edge") {
+        Some(s) => EdgeKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--edge must be 'threaded' or 'evented'"))?,
+        None => EdgeKind::Threaded,
+    };
+    let wire = match args.get("wire") {
+        Some(s) => WireFormat::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--wire must be 'json' or 'binary'"))?,
+        None => WireFormat::Json,
+    };
     // Mixed-model traffic needs named requests; a single model keeps
     // the unnamed (default-model) wire format.
     let models: Vec<(String, f64)> = if reg.names().len() > 1 {
@@ -166,13 +181,19 @@ fn serve_over_http(
         args.get_ms_opt("request-timeout-ms", 30_000),
     ));
     let handler_state = Arc::clone(&state);
-    let mut server = HttpServer::start(addr, HttpConfig::default(), move |req| {
-        route(&handler_state, req)
-    })?;
+    let mut server = HttpServer::start_with(
+        addr,
+        HttpConfig::default(),
+        edge,
+        Arc::clone(&state.transport),
+        move |req| route(&handler_state, req),
+    )?;
     println!(
-        "registry on the network: {} model(s) at http://{}",
+        "registry on the network: {} model(s) at http://{} ({} edge, {} wire)",
         state.registry.names().len(),
-        server.local_addr()
+        server.local_addr(),
+        edge,
+        wire
     );
 
     let cfg = LoadgenConfig {
@@ -187,6 +208,7 @@ fn serve_over_http(
         timeout: Duration::from_secs(30),
         seed: 7,
         models,
+        wire,
     };
     let report = loadgen::run(&cfg)?;
     println!("{}", report);

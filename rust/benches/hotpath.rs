@@ -24,7 +24,9 @@
 //!   H10. HTTP serving edge end-to-end: a loopback `server::HttpServer`
 //!       over the pool, driven closed-loop by `server::loadgen` across
 //!       replicas {1,4} x concurrency {1,8,32} — p50/p99 wire latency,
-//!       achieved req/s and shed rate, written to
+//!       achieved req/s and shed rate — plus evented-vs-threaded edge
+//!       and binary-vs-JSON wire comparisons at high closed-loop
+//!       concurrency (256; 8 in smoke), written to
 //!       BENCH_http_serving.json.
 //!
 //! Set VITFPGA_BENCH_SMOKE=1 to run every section with tiny iteration
@@ -725,20 +727,29 @@ fn kernel_bench(rng: &mut Rng) {
 /// H10: the network serving edge end to end — a loopback HTTP server
 /// over the replicated pool, driven closed-loop by `server::loadgen`.
 /// One intra-layer worker per replica (H10 measures the wire + dispatch
-/// path, not kernel fan-out), replicas {1,4} x concurrency {1,8,32}.
+/// path, not kernel fan-out). Three series:
+///
+/// * the baseline threaded-edge sweep, replicas {1,4} x concurrency
+///   {1,8,32} (the regression series every prior run carries);
+/// * evented-vs-threaded at high closed-loop concurrency (256 full,
+///   8 in smoke) — the readiness-loop's p50/p99 against
+///   thread-per-connection on the same pool;
+/// * binary-vs-JSON wire format on the evented edge at the same
+///   concurrency — framing/parse cost deltas for identical tensors.
 fn http_serving_bench() {
     use std::sync::Arc;
     use std::time::Duration;
     use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
     use vitfpga::server::{
-        loadgen, route, AppState, HttpConfig, HttpServer, LoadMode, LoadgenConfig,
+        loadgen, route, AppState, EdgeKind, HttpConfig, HttpServer, LoadMode, LoadgenConfig,
+        WireFormat,
     };
 
     let setting = PruningSetting::new(8, 0.7, 0.7);
     let per_worker = if smoke() { 2usize } else { 16 };
+    let high_concurrency = if smoke() { 8usize } else { 256 };
 
-    let mut rows = Vec::new();
-    for &replicas in &[1usize, 4] {
+    let boot = |replicas: usize, edge: EdgeKind| -> HttpServer {
         let factory_setting = setting.clone();
         let pool = BackendPool::start(
             move |_i| {
@@ -757,25 +768,37 @@ fn http_serving_bench() {
         .expect("pool start");
         let state = Arc::new(AppState::new(pool, Some(Duration::from_secs(30))));
         let handler_state = Arc::clone(&state);
-        let mut server =
-            HttpServer::start("127.0.0.1:0", HttpConfig::default(), move |req| {
-                route(&handler_state, req)
-            })
-            .expect("http server start");
-        let addr = server.local_addr().to_string();
+        HttpServer::start_with(
+            "127.0.0.1:0",
+            HttpConfig::default(),
+            edge,
+            Arc::default(),
+            move |req| route(&handler_state, req),
+        )
+        .expect("http server start")
+    };
+    let drive = |addr: &str, concurrency: usize, wire: WireFormat| -> loadgen::LoadgenReport {
+        let cfg = LoadgenConfig {
+            addr: addr.to_string(),
+            mode: LoadMode::Closed,
+            concurrency,
+            requests: concurrency * per_worker,
+            batch: 1,
+            timeout: Duration::from_secs(30),
+            seed: 7,
+            models: Vec::new(),
+            wire,
+        };
+        loadgen::run(&cfg).expect("loadgen run")
+    };
 
+    // Baseline threaded-edge sweep (the long-lived regression series).
+    let mut rows = Vec::new();
+    for &replicas in &[1usize, 4] {
+        let mut server = boot(replicas, EdgeKind::Threaded);
+        let addr = server.local_addr().to_string();
         for &concurrency in &[1usize, 8, 32] {
-            let cfg = LoadgenConfig {
-                addr: addr.clone(),
-                mode: LoadMode::Closed,
-                concurrency,
-                requests: concurrency * per_worker,
-                batch: 1,
-                timeout: Duration::from_secs(30),
-                seed: 7,
-                models: Vec::new(),
-            };
-            let report = loadgen::run(&cfg).expect("loadgen run");
+            let report = drive(&addr, concurrency, WireFormat::Json);
             println!(
                 "[bench] H10 http replicas={} concurrency={:>2}  {:>8.1} req/s  \
                  p50 {:>8.3} ms  p99 {:>8.3} ms  shed {:.1}%",
@@ -803,14 +826,87 @@ fn http_serving_bench() {
         server.shutdown();
     }
 
+    // Evented vs threaded at high closed-loop concurrency, same pool
+    // shape: the readiness loop must hold its own on p50/p99.
+    let mut edge_rows = Vec::new();
+    for edge in [EdgeKind::Threaded, EdgeKind::Evented] {
+        let mut server = boot(4, edge);
+        let addr = server.local_addr().to_string();
+        let report = drive(&addr, high_concurrency, WireFormat::Json);
+        println!(
+            "[bench] H10 edge={} concurrency={:>3}  {:>8.1} req/s  \
+             p50 {:>8.3} ms  p99 {:>8.3} ms  reconnects {}",
+            edge,
+            high_concurrency,
+            report.achieved_rps,
+            report.p50_ms,
+            report.p99_ms,
+            report.reconnects
+        );
+        edge_rows.push(format!(
+            "    {{\"edge\": \"{}\", \"concurrency\": {}, \"requests\": {}, \
+             \"req_per_sec\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
+             \"shed_rate\": {:.4}, \"client_errors\": {}, \"reconnects\": {}}}",
+            edge,
+            high_concurrency,
+            report.sent,
+            report.achieved_rps,
+            report.p50_ms,
+            report.p99_ms,
+            report.shed_rate(),
+            report.client_errors,
+            report.reconnects
+        ));
+        server.shutdown();
+    }
+
+    // Binary vs JSON wire format on the evented edge — identical
+    // tensors (same rng stream), different framing/parse cost.
+    let mut wire_rows = Vec::new();
+    {
+        let mut server = boot(4, EdgeKind::Evented);
+        let addr = server.local_addr().to_string();
+        for wire in [WireFormat::Json, WireFormat::Binary] {
+            let report = drive(&addr, high_concurrency, wire);
+            println!(
+                "[bench] H10 wire={} concurrency={:>3}  {:>8.1} req/s  \
+                 p50 {:>8.3} ms  p99 {:>8.3} ms",
+                wire,
+                high_concurrency,
+                report.achieved_rps,
+                report.p50_ms,
+                report.p99_ms
+            );
+            wire_rows.push(format!(
+                "    {{\"wire\": \"{}\", \"edge\": \"evented\", \"concurrency\": {}, \
+                 \"requests\": {}, \"req_per_sec\": {:.1}, \"p50_ms\": {:.3}, \
+                 \"p99_ms\": {:.3}, \"shed_rate\": {:.4}, \"client_errors\": {}}}",
+                wire,
+                high_concurrency,
+                report.sent,
+                report.achieved_rps,
+                report.p50_ms,
+                report.p99_ms,
+                report.shed_rate(),
+                report.client_errors
+            ));
+        }
+        server.shutdown();
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"http_serving\",\n  \"model\": \"{}\",\n  \"setting\": \"{}\",\n  \
-         \"requests_per_worker\": {},\n  \"smoke\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+         \"requests_per_worker\": {},\n  \"high_concurrency\": {},\n  \"smoke\": {},\n  \
+         \"results\": [\n{}\n  ],\n  \"edge_comparison\": [\n{}\n  ],\n  \
+         \"wire_comparison\": [\n{}\n  ]\n}}\n",
         TEST_TINY.name,
         setting.label(),
         per_worker,
+        high_concurrency,
         smoke(),
-        rows.join(",\n")
+        rows.join(",\n"),
+        edge_rows.join(",\n"),
+        wire_rows.join(",\n")
     );
     let out = "BENCH_http_serving.json";
     match std::fs::write(out, &json) {

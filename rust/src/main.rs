@@ -27,22 +27,29 @@
 //!                           gets its own lazily-built replica pool;
 //!                           requests route by name (default: the first).
 //!                           Works with and without --http
-//!   serve --http ADDR [--request-timeout-ms MS] [--duration-s S]
-//!         [...same backend/pool/registry options]
+//!   serve --http ADDR [--edge threaded|evented] [--request-timeout-ms MS]
+//!         [--duration-s S] [...same backend/pool/registry options]
 //!                           expose the registry over HTTP/1.1 instead of
 //!                           driving synthetic load: POST /v1/infer and
-//!                           /v1/infer_batch (optional "model" field),
-//!                           GET /v1/models, /healthz and /metrics
-//!                           (Prometheus, model="..." labels). ADDR like
-//!                           127.0.0.1:8080 (port 0 picks an ephemeral
-//!                           port). Stops on Enter / stdin EOF, or after
-//!                           --duration-s, with a graceful in-flight drain
+//!                           /v1/infer_batch (optional "model" field, JSON
+//!                           or raw-f32 binary bodies), GET /v1/models,
+//!                           /healthz and /metrics (Prometheus,
+//!                           model="..." labels). --edge picks the
+//!                           transport: thread-per-connection (default) or
+//!                           the nonblocking readiness loop, where idle
+//!                           keep-alive connections cost zero threads.
+//!                           ADDR like 127.0.0.1:8080 (port 0 picks an
+//!                           ephemeral port). Stops on Enter / stdin EOF,
+//!                           or after --duration-s, with a graceful
+//!                           in-flight drain
 //!   loadgen --addr HOST:PORT [--qps Q] [--concurrency C] [--requests N]
-//!           [--batch B] [--timeout-ms MS] [--out FILE]
-//!           [--model NAME | --model-mix NAME:W,NAME:W,...]
+//!           [--batch B] [--wire json|binary] [--timeout-ms MS]
+//!           [--out FILE] [--model NAME | --model-mix NAME:W,NAME:W,...]
 //!                           drive a running serve --http edge: closed-loop
 //!                           (default) or open-loop at --qps, reporting
-//!                           latency percentiles, shed rate and a histogram.
+//!                           latency percentiles, shed rate, connection
+//!                           churn and a histogram. --wire binary drives
+//!                           the raw-f32 tensor encoding both ways.
 //!                           --model pins all traffic to one registered
 //!                           variant; --model-mix drives a weighted mix
 //!                           (per-model ok counts in the report)
@@ -420,7 +427,12 @@ fn print_registry_metrics(registry: &Registry) {
 /// until Enter / stdin EOF (or `--duration-s`), then drains in-flight
 /// requests.
 fn cmd_serve_http(args: &Args, addr: &str) -> Result<()> {
-    use vitfpga::server::{route, AppState, HttpConfig, HttpServer};
+    use vitfpga::server::{route, AppState, EdgeKind, HttpConfig, HttpServer};
+    let edge = match args.get("edge") {
+        Some(s) => EdgeKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--edge must be 'threaded' or 'evented', got '{}'", s))?,
+        None => EdgeKind::Threaded,
+    };
     let reg = registry::from_cli(args, registry::pool_policy_from_cli(args))?;
     // Warm the default model so construction errors surface at startup,
     // not on the first request; other registered variants stay lazy.
@@ -447,10 +459,14 @@ fn cmd_serve_http(args: &Args, addr: &str) -> Result<()> {
     }
     let state = Arc::new(AppState::with_registry(reg, timeout));
     let handler_state = Arc::clone(&state);
-    let mut server = HttpServer::start(addr, HttpConfig::default(), move |req| {
-        route(&handler_state, req)
-    })?;
-    println!("listening on http://{}", server.local_addr());
+    let mut server = HttpServer::start_with(
+        addr,
+        HttpConfig::default(),
+        edge,
+        Arc::clone(&state.transport),
+        move |req| route(&handler_state, req),
+    )?;
+    println!("listening on http://{} ({} edge)", server.local_addr(), edge);
     println!("  POST /v1/infer       one image -> logits+argmax+metadata (\"model\" optional)");
     println!("  POST /v1/infer_batch batched images (\"model\" optional)");
     println!("  GET  /v1/models      registered variants + readiness");
@@ -575,10 +591,15 @@ fn parse_model_mix(s: &str) -> Result<Vec<(String, f64)>> {
 /// `loadgen`: drive a running `serve --http` edge and report latency
 /// percentiles, shed rate and a histogram.
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    use vitfpga::server::loadgen::{self, LoadMode, LoadgenConfig};
+    use vitfpga::server::loadgen::{self, LoadMode, LoadgenConfig, WireFormat};
     let addr = args
         .get("addr")
         .ok_or_else(|| anyhow::anyhow!("loadgen needs --addr HOST:PORT"))?;
+    let wire = match args.get("wire") {
+        Some(s) => WireFormat::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--wire must be 'json' or 'binary', got '{}'", s))?,
+        None => WireFormat::Json,
+    };
     let mode = match args.get("qps") {
         Some(_) => LoadMode::Open { qps: args.get_f64("qps", 100.0) },
         None => LoadMode::Closed,
@@ -605,14 +626,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         })?,
         seed: args.get_usize("seed", 7) as u64,
         models,
+        wire,
     };
     println!(
-        "loadgen -> http://{}: {:?}, {} requests x {} workers, batch {}{}",
+        "loadgen -> http://{}: {:?}, {} requests x {} workers, batch {}, wire {}{}",
         cfg.addr,
         cfg.mode,
         cfg.requests,
         cfg.concurrency,
         cfg.batch,
+        cfg.wire,
         if cfg.models.is_empty() {
             String::new()
         } else {

@@ -1,4 +1,4 @@
-//! Std-only threaded HTTP/1.1 listener.
+//! Std-only HTTP/1.1 listener with two interchangeable edges.
 //!
 //! Scope is deliberately narrow — exactly what the serving edge needs
 //! and nothing the crate's `anyhow`-only dependency policy would have
@@ -13,25 +13,46 @@
 //! * keep-alive (HTTP/1.1 default; `Connection: close` honoured; 1.0
 //!   opt-in via `Connection: keep-alive`) including pipelined bytes
 //!   left over after a request's body;
-//! * one worker thread per connection, capped by
-//!   [`HttpConfig::max_connections`] (excess connections get an
-//!   immediate `503` and are closed);
-//! * cooperative shutdown: a shared flag stops the accept loop, idle
-//!   keep-alive workers notice it on their next read tick, and
+//! * a connection cap ([`HttpConfig::max_connections`]); excess
+//!   connections are answered `503` with `Retry-After` and counted in
+//!   [`TransportStats::overflow_total`] before closing;
+//! * cooperative shutdown: a shared flag stops the accept path, idle
+//!   keep-alive connections close on the next tick, and
 //!   [`HttpServer::shutdown`] waits for in-flight requests to finish
 //!   writing their responses before the listener socket is dropped.
 //!
+//! The two edges ([`EdgeKind`]) share the parser, the response encoder
+//! and every bound above, so their wire behaviour is bit-identical:
+//!
+//! * **threaded** — one worker thread per connection (the regression
+//!   baseline). Simple, and fine up to a few hundred connections.
+//! * **evented** — a single readiness-loop thread
+//!   ([`super::poll::Poller`]: epoll on linux/x86_64, portable scan
+//!   elsewhere) drives every connection through a per-connection state
+//!   machine (reading → dispatched → writing). Idle keep-alive
+//!   connections cost zero threads; a request hands its handler off to
+//!   a short-lived dispatch thread (the heavy work happens on the
+//!   `BackendPool` worker threads it blocks on) and the completion
+//!   wakes the loop through a loopback wake socket.
+//!
+//! Per-connection read/scratch buffers persist across keep-alive
+//! requests in both edges — a hot connection stops paying per-request
+//! allocations once its buffers have grown to its request size.
+//!
 //! The handler is a plain `Fn(&HttpRequest) -> HttpResponse` — routing
-//! and JSON live one layer up in `server::routes`.
+//! and body encodings live one layer up in `server::routes`.
 
+use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+
+use super::poll::{Interest, Poller};
 
 /// Tunables of the listener. Defaults are sized for the JSON inference
 /// wire: bodies can carry a batch of images (a deit-small image is
@@ -47,7 +68,8 @@ pub struct HttpConfig {
     pub read_deadline: Duration,
     /// How long an idle keep-alive connection is kept before closing.
     pub keep_alive_idle: Duration,
-    /// Max concurrently served connections; excess get an instant 503.
+    /// Max concurrently served connections; excess get an instant 503
+    /// with `Retry-After`.
     pub max_connections: usize,
     /// Upper bound `shutdown()` waits for in-flight requests to drain.
     pub drain_deadline: Duration,
@@ -64,6 +86,48 @@ impl Default for HttpConfig {
             drain_deadline: Duration::from_secs(10),
         }
     }
+}
+
+/// Which transport edge serves the connections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EdgeKind {
+    /// One worker thread per connection (the regression baseline).
+    #[default]
+    Threaded,
+    /// One readiness-loop thread over all connections; handlers run on
+    /// short-lived dispatch threads.
+    Evented,
+}
+
+impl EdgeKind {
+    /// Parse a CLI spelling (`threaded` | `evented`).
+    pub fn parse(s: &str) -> Option<EdgeKind> {
+        match s {
+            "threaded" => Some(EdgeKind::Threaded),
+            "evented" => Some(EdgeKind::Evented),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for EdgeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EdgeKind::Threaded => "threaded",
+            EdgeKind::Evented => "evented",
+        })
+    }
+}
+
+/// Transport-level gauges/counters the `/metrics` endpoint scrapes.
+/// Created by the caller (it outlives the server) and handed to
+/// [`HttpServer::start_with`]; `server::routes` renders it.
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    /// Currently open (accepted, not yet closed) connections.
+    pub open_connections: AtomicU64,
+    /// Connections answered `503` + `Retry-After` at the connection cap.
+    pub overflow_total: AtomicU64,
 }
 
 /// One parsed request. Header names are lowercased at parse time;
@@ -83,6 +147,15 @@ impl HttpRequest {
     /// Target with any `?query` suffix stripped.
     pub fn path(&self) -> &str {
         self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// First value of the named `?key=value` query parameter, if any.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        let query = self.target.split_once('?')?.1;
+        query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (k == key).then_some(v)
+        })
     }
 
     /// First header with this (case-insensitive) name.
@@ -122,9 +195,11 @@ pub fn status_text(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        406 => "Not Acceptable",
         408 => "Request Timeout",
         411 => "Length Required",
         413 => "Payload Too Large",
+        415 => "Unsupported Media Type",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
@@ -135,12 +210,30 @@ pub fn status_text(status: u16) -> &'static str {
     }
 }
 
-/// Why a connection's request could not be parsed. Carries the status
-/// the worker answers with before closing (framing is unrecoverable
-/// after any of these).
+/// Which part of a request the parser is still waiting for — selects
+/// the 408 message, nothing else.
+#[derive(Debug, Clone, Copy)]
+enum NeedPhase {
+    Head,
+    Body,
+}
+
+/// Outcome of one incremental parse attempt over a connection's buffer.
+#[derive(Debug)]
+enum Parsed {
+    /// Not enough bytes yet for the phase given.
+    NeedMore(NeedPhase),
+    /// A complete request plus the byte count it consumed from the
+    /// buffer (the rest is pipelined data for the next request).
+    Request(HttpRequest, usize),
+    /// Protocol error: answer with this status + message, then close.
+    Reject(u16, &'static str),
+}
+
+/// Why a connection's request could not be produced (blocking edge).
 #[derive(Debug)]
 enum ParseOutcome {
-    /// A complete request (plus any pipelined leftover bytes).
+    /// A complete request (pipelined leftover stays in the buffer).
     Request(HttpRequest),
     /// Peer closed (or idle/shutdown tick said to stop). No response.
     Closed,
@@ -148,20 +241,21 @@ enum ParseOutcome {
     Reject(u16, &'static str),
 }
 
-/// Counters shared between the accept loop, the workers and
+/// Counters shared between the accept path, the workers/loop and
 /// `shutdown()`. All relaxed-ish orderings are fine: these gate drain
 /// waits and caps, not data handoffs.
 struct Shared {
     shutdown: AtomicBool,
-    /// Live connection worker threads.
+    /// Live served connections.
     connections: AtomicUsize,
     /// Requests fully parsed whose response has not been written yet —
     /// the drain gauge.
     in_flight: AtomicUsize,
+    transport: Arc<TransportStats>,
 }
 
 /// A running HTTP server. Dropping it (or calling
-/// [`HttpServer::shutdown`]) stops the accept loop, lets in-flight
+/// [`HttpServer::shutdown`]) stops the accept path, lets in-flight
 /// requests finish, and closes the listener.
 pub struct HttpServer {
     addr: SocketAddr,
@@ -171,9 +265,26 @@ pub struct HttpServer {
 }
 
 impl HttpServer {
-    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
-    /// `handler` on per-connection worker threads until shutdown.
+    /// Bind `addr` and serve `handler` on the default threaded edge
+    /// with private transport stats (back-compat convenience).
     pub fn start<A, H>(addr: A, config: HttpConfig, handler: H) -> Result<HttpServer>
+    where
+        A: ToSocketAddrs + std::fmt::Debug,
+        H: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        Self::start_with(addr, config, EdgeKind::Threaded, Arc::default(), handler)
+    }
+
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// `handler` on the chosen edge until shutdown. `transport` is the
+    /// caller's stats block (hand the same `Arc` to the metrics route).
+    pub fn start_with<A, H>(
+        addr: A,
+        config: HttpConfig,
+        edge: EdgeKind,
+        transport: Arc<TransportStats>,
+        handler: H,
+    ) -> Result<HttpServer>
     where
         A: ToSocketAddrs + std::fmt::Debug,
         H: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
@@ -188,14 +299,21 @@ impl HttpServer {
             shutdown: AtomicBool::new(false),
             connections: AtomicUsize::new(0),
             in_flight: AtomicUsize::new(0),
+            transport,
         });
         let handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync> = Arc::new(handler);
 
-        let accept_shared = Arc::clone(&shared);
-        let accept_thread = std::thread::Builder::new()
-            .name("vitfpga-http-accept".into())
-            .spawn(move || accept_loop(listener, config, accept_shared, handler))
-            .context("spawning http accept thread")?;
+        let loop_shared = Arc::clone(&shared);
+        let accept_thread = match edge {
+            EdgeKind::Threaded => std::thread::Builder::new()
+                .name("vitfpga-http-accept".into())
+                .spawn(move || accept_loop(listener, config, loop_shared, handler))
+                .context("spawning http accept thread")?,
+            EdgeKind::Evented => std::thread::Builder::new()
+                .name("vitfpga-http-loop".into())
+                .spawn(move || event_loop(listener, config, loop_shared, handler))
+                .context("spawning http event loop thread")?,
+        };
 
         Ok(HttpServer {
             addr: local,
@@ -227,12 +345,12 @@ impl HttpServer {
         while self.shared.in_flight.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(2));
         }
-        // Drain phase 2: workers notice the flag on their next read tick
-        // and close their sockets; give them a bounded window too.
+        // Drain phase 2: workers/the loop notice the flag on their next
+        // tick and close their sockets; give them a bounded window too.
         while self.shared.connections.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(2));
         }
-        // Joining the accept thread drops the listener: the port is
+        // Joining the serving thread drops the listener: the port is
         // released only after the drain above.
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
@@ -245,6 +363,17 @@ impl Drop for HttpServer {
         self.shutdown();
     }
 }
+
+/// The `503 Retry-After` answered to connections over the cap —
+/// identical bytes on both edges.
+fn overflow_response() -> HttpResponse {
+    HttpResponse::new(503, b"{\"error\":\"connection limit\"}".to_vec())
+        .with_header("Retry-After", "1")
+}
+
+// ---------------------------------------------------------------------------
+// threaded edge
+// ---------------------------------------------------------------------------
 
 fn accept_loop(
     listener: TcpListener,
@@ -259,15 +388,17 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 if shared.connections.load(Ordering::Acquire) >= config.max_connections {
-                    // Over the connection cap: answer 503 inline (the
-                    // accept thread pays the tiny write) and move on.
+                    // Over the connection cap: answer 503 + Retry-After
+                    // inline (the accept thread pays the tiny write),
+                    // count it, and move on.
+                    shared.transport.overflow_total.fetch_add(1, Ordering::Relaxed);
                     let _ = stream.set_nonblocking(false);
-                    let resp = HttpResponse::new(503, b"{\"error\":\"connection limit\"}".to_vec());
                     let mut stream = stream;
-                    let _ = write_response(&mut stream, &resp, false);
+                    let _ = write_response(&mut stream, &overflow_response(), false);
                     continue;
                 }
                 shared.connections.fetch_add(1, Ordering::AcqRel);
+                shared.transport.open_connections.fetch_add(1, Ordering::Relaxed);
                 let conn_shared = Arc::clone(&shared);
                 let conn_handler = Arc::clone(&handler);
                 let spawned = std::thread::Builder::new()
@@ -275,9 +406,14 @@ fn accept_loop(
                     .spawn(move || {
                         serve_connection(stream, config, &conn_shared, conn_handler.as_ref());
                         conn_shared.connections.fetch_sub(1, Ordering::AcqRel);
+                        conn_shared
+                            .transport
+                            .open_connections
+                            .fetch_sub(1, Ordering::Relaxed);
                     });
                 if spawned.is_err() {
                     shared.connections.fetch_sub(1, Ordering::AcqRel);
+                    shared.transport.open_connections.fetch_sub(1, Ordering::Relaxed);
                 }
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -310,16 +446,16 @@ fn serve_connection(
         return;
     }
     let _ = stream.set_nodelay(true);
-    // Bytes read past the previous request's body (pipelining).
-    let mut leftover: Vec<u8> = Vec::new();
+    // Persistent per-connection read buffer: holds pipelined leftover
+    // bytes between requests and keeps its capacity across them.
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        match read_request(&mut stream, &mut leftover, &config, shared) {
+        match read_request(&mut stream, &mut buf, &config, shared) {
             ParseOutcome::Closed => return,
             ParseOutcome::Reject(status, msg) => {
                 // Framing is unknown after a parse failure: answer and
                 // close regardless of keep-alive.
-                let body = format!("{{\"error\":{}}}", crate::util::json::Json::Str(msg.into()));
-                let resp = HttpResponse::new(status, body.into_bytes());
+                let resp = HttpResponse::new(status, reject_body(msg));
                 let _ = write_response(&mut stream, &resp, false);
                 return;
             }
@@ -349,16 +485,20 @@ fn wants_keep_alive(req: &HttpRequest) -> bool {
     true
 }
 
-/// Read one request from `stream`, consuming from/into `leftover` for
-/// pipelined bytes. Returns a reject status instead of erroring so the
-/// caller can answer before closing.
+fn reject_body(msg: &str) -> Vec<u8> {
+    format!("{{\"error\":{}}}", crate::util::json::Json::Str(msg.into())).into_bytes()
+}
+
+/// Read one request from `stream` into/through `buf` (which carries
+/// pipelined leftover bytes between calls and keeps its capacity).
+/// Returns a reject status instead of erroring so the caller can answer
+/// before closing.
 fn read_request(
     stream: &mut TcpStream,
-    leftover: &mut Vec<u8>,
+    buf: &mut Vec<u8>,
     config: &HttpConfig,
     shared: &Shared,
 ) -> ParseOutcome {
-    let mut buf = std::mem::take(leftover);
     let idle_deadline = Instant::now() + config.keep_alive_idle;
     // Set once the first byte of this request exists.
     let mut read_deadline: Option<Instant> = if buf.is_empty() {
@@ -368,65 +508,95 @@ fn read_request(
     };
     let mut chunk = [0u8; 8192];
 
-    // Phase 1: accumulate the header block (ending "\r\n\r\n").
-    let header_end = loop {
-        if let Some(pos) = find_header_end(&buf) {
-            break pos;
-        }
-        if buf.len() > config.max_header_bytes {
-            return ParseOutcome::Reject(431, "header block too large");
-        }
-        match stream.read(&mut chunk) {
-            Ok(0) => return ParseOutcome::Closed,
-            Ok(n) => {
-                if read_deadline.is_none() {
-                    read_deadline = Some(Instant::now() + config.read_deadline);
-                }
-                buf.extend_from_slice(&chunk[..n]);
+    loop {
+        match try_parse(buf, config) {
+            Parsed::Request(req, consumed) => {
+                // Keep pipelined bytes (and the buffer's capacity) for
+                // the next request on this connection.
+                buf.drain(..consumed);
+                return ParseOutcome::Request(req);
             }
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                match read_deadline {
-                    // Mid-request: enforce the read deadline.
-                    Some(d) if Instant::now() >= d => {
-                        return ParseOutcome::Reject(408, "request read deadline exceeded");
+            Parsed::Reject(status, msg) => return ParseOutcome::Reject(status, msg),
+            Parsed::NeedMore(phase) => match stream.read(&mut chunk) {
+                Ok(0) => return ParseOutcome::Closed,
+                Ok(n) => {
+                    if read_deadline.is_none() {
+                        read_deadline = Some(Instant::now() + config.read_deadline);
                     }
-                    Some(_) => continue,
-                    // Idle between requests: close on shutdown or after
-                    // the keep-alive idle window.
-                    None => {
-                        if shared.shutdown.load(Ordering::Acquire)
-                            || Instant::now() >= idle_deadline
-                        {
-                            return ParseOutcome::Closed;
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    match read_deadline {
+                        // Mid-request: enforce the read deadline.
+                        Some(d) if Instant::now() >= d => {
+                            return ParseOutcome::Reject(408, deadline_msg(phase));
                         }
-                        continue;
+                        Some(_) => continue,
+                        // Idle between requests: close on shutdown or
+                        // after the keep-alive idle window.
+                        None => {
+                            if shared.shutdown.load(Ordering::Acquire)
+                                || Instant::now() >= idle_deadline
+                            {
+                                return ParseOutcome::Closed;
+                            }
+                            continue;
+                        }
                     }
                 }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return ParseOutcome::Closed,
+            },
+        }
+    }
+}
+
+fn deadline_msg(phase: NeedPhase) -> &'static str {
+    match phase {
+        NeedPhase::Head => "request read deadline exceeded",
+        NeedPhase::Body => "body read deadline exceeded",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared parser + response encoder (both edges)
+// ---------------------------------------------------------------------------
+
+/// One incremental parse attempt over the bytes buffered so far. Pure:
+/// consumes nothing (the caller drains `consumed` bytes on success), so
+/// both the blocking reader and the evented state machine can call it
+/// after every read.
+fn try_parse(buf: &[u8], config: &HttpConfig) -> Parsed {
+    // Phase 1: the header block must end "\r\n\r\n" within the bound.
+    let header_end = match find_header_end(buf) {
+        Some(pos) => pos,
+        None => {
+            if buf.len() > config.max_header_bytes {
+                return Parsed::Reject(431, "header block too large");
             }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => return ParseOutcome::Closed,
+            return Parsed::NeedMore(NeedPhase::Head);
         }
     };
 
     // Phase 2: parse the header block.
     let head = match std::str::from_utf8(&buf[..header_end]) {
         Ok(s) => s,
-        Err(_) => return ParseOutcome::Reject(400, "header block is not valid UTF-8"),
+        Err(_) => return Parsed::Reject(400, "header block is not valid UTF-8"),
     };
     let mut lines = head.split("\r\n").filter(|l| !l.is_empty());
     let request_line = match lines.next() {
         Some(l) => l,
-        None => return ParseOutcome::Reject(400, "empty request line"),
+        None => return Parsed::Reject(400, "empty request line"),
     };
     let parts: Vec<&str> = request_line.split(' ').collect();
     let (method, target, version) = match parts.as_slice() {
         [m, t, v] => (*m, *t, *v),
-        _ => return ParseOutcome::Reject(400, "malformed request line"),
+        _ => return Parsed::Reject(400, "malformed request line"),
     };
     let http10 = match version {
         "HTTP/1.1" => false,
         "HTTP/1.0" => true,
-        _ => return ParseOutcome::Reject(505, "unsupported HTTP version"),
+        _ => return Parsed::Reject(505, "unsupported HTTP version"),
     };
     let mut headers: Vec<(String, String)> = Vec::new();
     for line in lines {
@@ -435,9 +605,10 @@ fn read_request(
                 name.trim().to_ascii_lowercase(),
                 value.trim().to_string(),
             )),
-            None => return ParseOutcome::Reject(400, "malformed header line"),
+            None => return Parsed::Reject(400, "malformed header line"),
         }
     }
+
     // Phase 3: body framing. Chunked is rejected; Content-Length is
     // bounded before a single body byte is buffered.
     let lookup = |name: &str| -> Option<&str> {
@@ -448,58 +619,45 @@ fn read_request(
     };
     if let Some(te) = lookup("transfer-encoding") {
         if !te.eq_ignore_ascii_case("identity") {
-            return ParseOutcome::Reject(411, "chunked bodies unsupported; send Content-Length");
+            return Parsed::Reject(411, "chunked bodies unsupported; send Content-Length");
         }
     }
     let body_len = match lookup("content-length") {
         None => 0usize,
         Some(v) => match v.parse::<usize>() {
             Ok(n) => n,
-            Err(_) => return ParseOutcome::Reject(400, "unparseable Content-Length"),
+            Err(_) => return Parsed::Reject(400, "unparseable Content-Length"),
         },
     };
     if body_len > config.max_body_bytes {
-        return ParseOutcome::Reject(413, "body exceeds the configured size bound");
+        return Parsed::Reject(413, "body exceeds the configured size bound");
     }
 
-    // Phase 4: read the body (some of it may already be in `buf`).
+    // Phase 4: the body (some of it may already be buffered).
     let body_start = header_end + 4;
-    let deadline = read_deadline.unwrap_or_else(|| Instant::now() + config.read_deadline);
-    while buf.len() < body_start + body_len {
-        match stream.read(&mut chunk) {
-            Ok(0) => return ParseOutcome::Closed,
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                if Instant::now() >= deadline {
-                    return ParseOutcome::Reject(408, "body read deadline exceeded");
-                }
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => return ParseOutcome::Closed,
-        }
+    if buf.len() < body_start + body_len {
+        return Parsed::NeedMore(NeedPhase::Body);
     }
     let body = buf[body_start..body_start + body_len].to_vec();
-    // Preserve pipelined bytes for the next request on this connection.
-    *leftover = buf.split_off(body_start + body_len);
-
-    ParseOutcome::Request(HttpRequest {
-        method: method.to_string(),
-        target: target.to_string(),
-        headers,
-        body,
-        http10,
-    })
+    Parsed::Request(
+        HttpRequest {
+            method: method.to_string(),
+            target: target.to_string(),
+            headers,
+            body,
+            http10,
+        },
+        body_start + body_len,
+    )
 }
 
 fn find_header_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-fn write_response(
-    stream: &mut TcpStream,
-    resp: &HttpResponse,
-    keep_alive: bool,
-) -> std::io::Result<()> {
+/// Serialize status line + managed headers + body into `out`. Both
+/// edges emit responses through this, so the byte stream is identical.
+fn encode_response(resp: &HttpResponse, keep_alive: bool, out: &mut Vec<u8>) {
     let mut head = format!(
         "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
@@ -521,7 +679,541 @@ fn write_response(
         head.push_str("Content-Type: application/json\r\n");
     }
     head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(&resp.body)?;
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(&resp.body);
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(resp.body.len() + 256);
+    encode_response(resp, keep_alive, &mut out);
+    stream.write_all(&out)?;
     stream.flush()
+}
+
+// ---------------------------------------------------------------------------
+// evented edge
+// ---------------------------------------------------------------------------
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKE: usize = 1;
+const TOKEN_FIRST_CONN: usize = 2;
+
+/// How long the loop sleeps in `Poller::wait` with nothing ready —
+/// bounds how quickly deadlines and the shutdown flag are observed.
+const LOOP_TICK: Duration = Duration::from_millis(20);
+
+/// Per-event cap on consecutive socket reads so one fast sender cannot
+/// monopolize the loop (level-triggered readiness re-arms the rest).
+const MAX_READS_PER_EVENT: usize = 64;
+
+/// Connection state machine phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConnPhase {
+    /// Accumulating request bytes (or idle between requests).
+    Reading,
+    /// A request is with a dispatch thread; the socket is parked.
+    Dispatched,
+    /// Draining the encoded response to the socket.
+    Writing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Read accumulation — persists (with its capacity) across
+    /// keep-alive requests; holds pipelined leftover after each one.
+    buf: Vec<u8>,
+    /// Encoded response bytes pending write, and the write cursor.
+    out: Vec<u8>,
+    out_pos: usize,
+    phase: ConnPhase,
+    /// What the poller currently watches this socket for.
+    interest: Interest,
+    idle_deadline: Instant,
+    /// Set while a partial request is buffered; enforces the 408.
+    read_deadline: Option<Instant>,
+    close_after_write: bool,
+    /// True between dispatch and response-written (the in_flight span).
+    counts_in_flight: bool,
+}
+
+/// What a drive step decided about the connection, applied after its
+/// mutable borrow ends.
+enum Step {
+    /// Stay in the current phase (waiting on readiness).
+    Park,
+    /// Close and forget the connection.
+    Close,
+    /// The connection just entered `Writing`; try to flush now.
+    StartWrite,
+    /// A write finished on a keep-alive connection; parse leftover.
+    StartRead,
+    /// A request was dispatched; nothing more until its completion.
+    Dispatched,
+}
+
+/// Finished handler runs: (token, response, request wanted keep-alive).
+/// Dispatch threads push; the loop drains.
+type Completions = Arc<Mutex<Vec<(usize, HttpResponse, bool)>>>;
+
+struct EvLoop {
+    listener: TcpListener,
+    config: HttpConfig,
+    shared: Arc<Shared>,
+    handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>,
+    poller: Poller,
+    conns: HashMap<usize, Conn>,
+    next_token: usize,
+    completions: Completions,
+    /// Write side of the wake socket (shared with dispatch threads).
+    waker: Arc<TcpStream>,
+    /// Read side of the wake socket, registered as `TOKEN_WAKE`.
+    wake_rx: TcpStream,
+}
+
+/// A loopback socket pair used as a readiness token: dispatch threads
+/// write one byte to the tx side; the loop sees the rx side readable
+/// and drains it. (A pipe without needing a pipe syscall.)
+fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let tx = TcpStream::connect(addr)?;
+    let local = tx.local_addr()?;
+    // Accept until we see our own connection (paranoia against a
+    // stranger racing onto the ephemeral port).
+    for _ in 0..16 {
+        let (rx, peer) = listener.accept()?;
+        if peer == local {
+            rx.set_nonblocking(true)?;
+            tx.set_nonblocking(true)?;
+            return Ok((rx, tx));
+        }
+    }
+    Err(std::io::Error::other(
+        "wake socket pair could not be established",
+    ))
+}
+
+fn wake(tx: &TcpStream) {
+    // Non-blocking 1-byte nudge. WouldBlock means the buffer is full of
+    // pending wakes — the loop is getting woken regardless.
+    let mut w = tx;
+    let _ = w.write(&[1u8]);
+}
+
+fn event_loop(
+    listener: TcpListener,
+    config: HttpConfig,
+    shared: Arc<Shared>,
+    handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>,
+) {
+    let (wake_rx, wake_tx) = match wake_pair() {
+        Ok(pair) => pair,
+        Err(_) => return,
+    };
+    let mut poller = Poller::new();
+    if poller
+        .register(&listener, TOKEN_LISTENER, Interest::Read)
+        .is_err()
+        || poller.register(&wake_rx, TOKEN_WAKE, Interest::Read).is_err()
+    {
+        return;
+    }
+    let mut lp = EvLoop {
+        listener,
+        config,
+        shared,
+        handler,
+        poller,
+        conns: HashMap::new(),
+        next_token: TOKEN_FIRST_CONN,
+        completions: Arc::new(Mutex::new(Vec::new())),
+        waker: Arc::new(wake_tx),
+        wake_rx,
+    };
+    lp.run();
+    // Close whatever is left (partial requests abandoned at shutdown).
+    let tokens: Vec<usize> = lp.conns.keys().copied().collect();
+    for t in tokens {
+        lp.close_conn(t);
+    }
+}
+
+impl EvLoop {
+    fn run(&mut self) {
+        let mut events = Vec::new();
+        loop {
+            self.drain_completions();
+            self.sweep_deadlines();
+            if self.shared.shutdown.load(Ordering::Acquire)
+                && self.shared.in_flight.load(Ordering::Acquire) == 0
+                && self
+                    .conns
+                    .values()
+                    .all(|c| c.phase == ConnPhase::Reading)
+            {
+                // Quiet: nothing dispatched, nothing writing. Remaining
+                // connections are idle or mid-read; the outer cleanup
+                // drops them.
+                return;
+            }
+            if self.poller.wait(&mut events, LOOP_TICK).is_err() {
+                return;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.drain_wake(),
+                    token => self.conn_ready(token, ev.readable, ev.writable),
+                }
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.conns.len() >= self.config.max_connections {
+                        self.shared
+                            .transport
+                            .overflow_total
+                            .fetch_add(1, Ordering::Relaxed);
+                        // Tiny inline blocking write, as on the
+                        // threaded edge's accept thread.
+                        let _ = stream.set_nonblocking(false);
+                        let mut stream = stream;
+                        let _ = write_response(&mut stream, &overflow_response(), false);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .register(&stream, token, Interest::Read)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.shared.connections.fetch_add(1, Ordering::AcqRel);
+                    self.shared
+                        .transport
+                        .open_connections
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            buf: Vec::new(),
+                            out: Vec::new(),
+                            out_pos: 0,
+                            phase: ConnPhase::Reading,
+                            interest: Interest::Read,
+                            idle_deadline: Instant::now() + self.config.keep_alive_idle,
+                            read_deadline: None,
+                            close_after_write: false,
+                            counts_in_flight: false,
+                        },
+                    );
+                    // The client may have sent its request already.
+                    self.drive_read(token);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 64];
+        let mut rx = &self.wake_rx;
+        loop {
+            match rx.read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, token: usize, readable: bool, writable: bool) {
+        let phase = match self.conns.get(&token) {
+            Some(c) => c.phase,
+            None => return,
+        };
+        match phase {
+            ConnPhase::Reading if readable => self.drive_read(token),
+            ConnPhase::Writing if writable => self.drive_write(token),
+            // Parked while dispatched: any error surfaces when the
+            // response write is attempted.
+            _ => {}
+        }
+    }
+
+    /// Parse-and-read until a request dispatches, the buffer runs dry,
+    /// or the connection dies.
+    fn drive_read(&mut self, token: usize) {
+        let step = {
+            let EvLoop {
+                config,
+                shared,
+                handler,
+                poller,
+                conns,
+                completions,
+                waker,
+                ..
+            } = self;
+            let conn = match conns.get_mut(&token) {
+                Some(c) => c,
+                None => return,
+            };
+            let mut chunk = [0u8; 8192];
+            let mut reads = 0usize;
+            loop {
+                match try_parse(&conn.buf, config) {
+                    Parsed::Request(req, consumed) => {
+                        conn.buf.drain(..consumed);
+                        conn.read_deadline = None;
+                        shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                        conn.counts_in_flight = true;
+                        conn.phase = ConnPhase::Dispatched;
+                        set_interest(poller, conn, token, Interest::None);
+                        let ka = wants_keep_alive(&req);
+                        let h = Arc::clone(handler);
+                        let comps = Arc::clone(completions);
+                        let wk = Arc::clone(waker);
+                        let spawned = std::thread::Builder::new()
+                            .name("vitfpga-http-dispatch".into())
+                            .spawn(move || {
+                                let resp = h(&req);
+                                comps
+                                    .lock()
+                                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                                    .push((token, resp, ka));
+                                wake(&wk);
+                            });
+                        match spawned {
+                            Ok(_) => break Step::Dispatched,
+                            Err(_) => {
+                                // Could not dispatch: answer 503 inline
+                                // and close (in_flight span ends when
+                                // the write completes).
+                                let resp = HttpResponse::new(
+                                    503,
+                                    reject_body("request dispatch failed"),
+                                );
+                                queue_response(conn, &resp, false);
+                                break Step::StartWrite;
+                            }
+                        }
+                    }
+                    Parsed::Reject(status, msg) => {
+                        // Framing is unknown after a parse failure:
+                        // answer and close regardless of keep-alive.
+                        let resp = HttpResponse::new(status, reject_body(msg));
+                        queue_response(conn, &resp, false);
+                        break Step::StartWrite;
+                    }
+                    Parsed::NeedMore(_) => {
+                        if reads >= MAX_READS_PER_EVENT {
+                            // Level-triggered readiness re-arms; yield
+                            // to the other connections.
+                            break Step::Park;
+                        }
+                        match conn.stream.read(&mut chunk) {
+                            Ok(0) => break Step::Close,
+                            Ok(n) => {
+                                if conn.read_deadline.is_none() {
+                                    conn.read_deadline =
+                                        Some(Instant::now() + config.read_deadline);
+                                }
+                                conn.buf.extend_from_slice(&chunk[..n]);
+                                reads += 1;
+                            }
+                            Err(e)
+                                if e.kind() == ErrorKind::WouldBlock
+                                    || e.kind() == ErrorKind::TimedOut =>
+                            {
+                                break Step::Park;
+                            }
+                            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                            Err(_) => break Step::Close,
+                        }
+                    }
+                }
+            }
+        };
+        self.apply(token, step);
+    }
+
+    /// Flush the pending response; on completion either close or swing
+    /// back to reading (pipelined bytes may already be buffered).
+    fn drive_write(&mut self, token: usize) {
+        let step = {
+            let EvLoop { config, shared, poller, conns, .. } = self;
+            let conn = match conns.get_mut(&token) {
+                Some(c) => c,
+                None => return,
+            };
+            loop {
+                if conn.out_pos == conn.out.len() {
+                    // Response fully written: the in_flight span ends
+                    // here, exactly like the threaded edge.
+                    if conn.counts_in_flight {
+                        shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                        conn.counts_in_flight = false;
+                    }
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                    if conn.close_after_write {
+                        break Step::Close;
+                    }
+                    conn.phase = ConnPhase::Reading;
+                    conn.idle_deadline = Instant::now() + config.keep_alive_idle;
+                    conn.read_deadline = if conn.buf.is_empty() {
+                        None
+                    } else {
+                        Some(Instant::now() + config.read_deadline)
+                    };
+                    set_interest(poller, conn, token, Interest::Read);
+                    break Step::StartRead;
+                }
+                match conn.stream.write(&conn.out[conn.out_pos..]) {
+                    Ok(0) => break Step::Close,
+                    Ok(n) => conn.out_pos += n,
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        set_interest(poller, conn, token, Interest::Write);
+                        break Step::Park;
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break Step::Close,
+                }
+            }
+        };
+        self.apply(token, step);
+    }
+
+    fn apply(&mut self, token: usize, step: Step) {
+        match step {
+            Step::Park | Step::Dispatched => {}
+            Step::Close => self.close_conn(token),
+            Step::StartWrite => self.drive_write(token),
+            Step::StartRead => self.drive_read(token),
+        }
+    }
+
+    /// Pick up finished handler runs and turn them into writes.
+    fn drain_completions(&mut self) {
+        let done = {
+            let mut guard = self
+                .completions
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            std::mem::take(&mut *guard)
+        };
+        for (token, resp, ka_req) in done {
+            let keep_alive = ka_req && !self.shared.shutdown.load(Ordering::Acquire);
+            let found = match self.conns.get_mut(&token) {
+                Some(conn) => {
+                    queue_response(conn, &resp, keep_alive);
+                    true
+                }
+                None => false,
+            };
+            if found {
+                self.drive_write(token);
+            }
+        }
+    }
+
+    /// Enforce read deadlines (408) and idle/shutdown closes, mirroring
+    /// the threaded worker's read-tick checks.
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let shutting = self.shared.shutdown.load(Ordering::Acquire);
+        enum Due {
+            Timeout(usize, NeedPhase),
+            Idle(usize),
+        }
+        let mut due: Vec<Due> = Vec::new();
+        for (token, conn) in &self.conns {
+            if conn.phase != ConnPhase::Reading {
+                continue;
+            }
+            match conn.read_deadline {
+                Some(d) if now >= d => {
+                    let phase = if find_header_end(&conn.buf).is_some() {
+                        NeedPhase::Body
+                    } else {
+                        NeedPhase::Head
+                    };
+                    due.push(Due::Timeout(*token, phase));
+                }
+                Some(_) => {}
+                None => {
+                    if shutting || now >= conn.idle_deadline {
+                        due.push(Due::Idle(*token));
+                    }
+                }
+            }
+        }
+        for d in due {
+            match d {
+                Due::Timeout(token, phase) => {
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        let resp = HttpResponse::new(408, reject_body(deadline_msg(phase)));
+                        queue_response(conn, &resp, false);
+                    }
+                    self.drive_write(token);
+                }
+                Due::Idle(token) => self.close_conn(token),
+            }
+        }
+    }
+
+    fn close_conn(&mut self, token: usize) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poller.deregister(&conn.stream, token);
+            if conn.counts_in_flight {
+                self.shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+            }
+            self.shared.connections.fetch_sub(1, Ordering::AcqRel);
+            self.shared
+                .transport
+                .open_connections
+                .fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Stage `resp` for writing on `conn` (phase and flags included).
+fn queue_response(conn: &mut Conn, resp: &HttpResponse, keep_alive: bool) {
+    conn.out.clear();
+    conn.out_pos = 0;
+    encode_response(resp, keep_alive, &mut conn.out);
+    conn.phase = ConnPhase::Writing;
+    conn.close_after_write = !keep_alive;
+}
+
+/// Change the poller registration only when it actually differs.
+fn set_interest(poller: &mut Poller, conn: &mut Conn, token: usize, want: Interest) {
+    if conn.interest != want {
+        let _ = poller.modify(&conn.stream, token, want);
+        conn.interest = want;
+    }
 }

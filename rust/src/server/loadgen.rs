@@ -28,6 +28,16 @@
 //! image shape is probed individually from `/healthz`'s `models`
 //! object, so differently-shaped variants mix in one run. An empty
 //! list keeps the unnamed single-model behaviour.
+//!
+//! **Wire formats** — [`LoadgenConfig::wire`] picks the body encoding
+//! (`--wire json|binary`): compact JSON, or the serving edge's raw
+//! little-endian f32 tensor encoding both ways. The binary bodies
+//! serialise the same rng stream as the JSON ones, so the two
+//! encodings submit bit-identical tensors for a given seed. The report
+//! also carries transport health: achieved TCP `connections` and the
+//! `reconnects` the server forced by closing keep-alive connections
+//! mid-run (most interesting open-loop, where overload shows up as
+//! churn rather than back-pressure).
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -35,8 +45,40 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::routes::BINARY_CONTENT_TYPE;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Body encoding the generator drives (`--wire json|binary`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// JSON bodies both ways (the default, and the compatibility path).
+    #[default]
+    Json,
+    /// Raw little-endian f32 tensors both ways
+    /// (`application/x-vitfpga-tensor`); model named via `?model=`.
+    Binary,
+}
+
+impl WireFormat {
+    /// Parse a CLI spelling (`json` | `binary`).
+    pub fn parse(s: &str) -> Option<WireFormat> {
+        match s {
+            "json" => Some(WireFormat::Json),
+            "binary" => Some(WireFormat::Binary),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            WireFormat::Json => "json",
+            WireFormat::Binary => "binary",
+        })
+    }
+}
 
 /// A minimal blocking HTTP/1.1 client over one keep-alive connection,
 /// reconnecting once per request if the pooled connection went away.
@@ -46,6 +88,8 @@ pub struct HttpClient {
     stream: Option<TcpStream>,
     /// Bytes read past the previous response's body.
     leftover: Vec<u8>,
+    /// TCP connections established over this client's lifetime.
+    connects: u64,
 }
 
 /// Marker for failures where the server provably never started
@@ -96,15 +140,41 @@ impl HttpClient {
             .with_context(|| format!("resolving {}", addr))?
             .next()
             .ok_or_else(|| anyhow!("{} resolves to no address", addr))?;
-        Ok(HttpClient { addr: sockaddr, timeout, stream: None, leftover: Vec::new() })
+        Ok(HttpClient {
+            addr: sockaddr,
+            timeout,
+            stream: None,
+            leftover: Vec::new(),
+            connects: 0,
+        })
+    }
+
+    /// TCP connections this client has established so far. The first
+    /// request costs one; every value above the worker count in a run
+    /// is a reconnect (server closed the keep-alive connection).
+    pub fn connections(&self) -> u64 {
+        self.connects
     }
 
     pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
         self.request("GET", path, None)
     }
 
+    /// `POST` with a JSON body (the default wire format).
     pub fn post(&mut self, path: &str, body: &[u8]) -> Result<ClientResponse> {
-        self.request("POST", path, Some(body))
+        self.post_with(path, body, "application/json", None)
+    }
+
+    /// `POST` with an explicit `Content-Type` and optional `Accept` —
+    /// the entry point for the raw-f32 binary wire format.
+    pub fn post_with(
+        &mut self,
+        path: &str,
+        body: &[u8],
+        content_type: &str,
+        accept: Option<&str>,
+    ) -> Result<ClientResponse> {
+        self.request_with("POST", path, Some(body), content_type, accept)
     }
 
     /// One request/response exchange. Only a [`StaleConnection`]
@@ -120,14 +190,25 @@ impl HttpClient {
         path: &str,
         body: Option<&[u8]>,
     ) -> Result<ClientResponse> {
+        self.request_with(method, path, body, "application/json", None)
+    }
+
+    fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+        content_type: &str,
+        accept: Option<&str>,
+    ) -> Result<ClientResponse> {
         let reused = self.stream.is_some();
-        match self.exchange(method, path, body) {
+        match self.exchange(method, path, body, content_type, accept) {
             Ok(resp) => Ok(resp),
             Err(e) => {
                 self.stream = None;
                 self.leftover.clear();
                 if reused && e.downcast_ref::<StaleConnection>().is_some() {
-                    self.exchange(method, path, body)
+                    self.exchange(method, path, body, content_type, accept)
                 } else {
                     Err(e)
                 }
@@ -140,6 +221,8 @@ impl HttpClient {
         method: &str,
         path: &str,
         body: Option<&[u8]>,
+        content_type: &str,
+        accept: Option<&str>,
     ) -> Result<ClientResponse> {
         if self.stream.is_none() {
             let s = TcpStream::connect_timeout(&self.addr, self.timeout)
@@ -151,6 +234,7 @@ impl HttpClient {
             let _ = s.set_nodelay(true);
             self.stream = Some(s);
             self.leftover.clear();
+            self.connects += 1;
         }
         let stream = self.stream.as_mut().expect("stream just ensured");
 
@@ -158,9 +242,13 @@ impl HttpClient {
             "{} {} HTTP/1.1\r\nHost: {}\r\nConnection: keep-alive\r\n",
             method, path, self.addr
         );
+        if let Some(a) = accept {
+            head.push_str(&format!("Accept: {}\r\n", a));
+        }
         if let Some(b) = body {
             head.push_str(&format!(
-                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                "Content-Type: {}\r\nContent-Length: {}\r\n",
+                content_type,
                 b.len()
             ));
         }
@@ -301,6 +389,8 @@ pub struct LoadgenConfig {
     /// request is unnamed (the server's default model). One entry with
     /// any weight -> all requests name that model.
     pub models: Vec<(String, f64)>,
+    /// Body encoding both ways: JSON or raw little-endian f32 tensors.
+    pub wire: WireFormat,
 }
 
 impl Default for LoadgenConfig {
@@ -314,6 +404,7 @@ impl Default for LoadgenConfig {
             timeout: Duration::from_secs(30),
             seed: 7,
             models: Vec::new(),
+            wire: WireFormat::Json,
         }
     }
 }
@@ -394,6 +485,15 @@ pub struct LoadgenReport {
     pub histogram: LatencyHistogram,
     /// OK responses per named model target (empty for unnamed runs).
     pub per_model: Vec<(String, u64)>,
+    /// TCP connections established across all workers (>= worker count;
+    /// the first connection per worker is free, the rest are
+    /// reconnects after the server closed a keep-alive connection).
+    pub connections: u64,
+    /// `connections - workers`: keep-alive connections the server
+    /// closed mid-run, forcing a re-dial.
+    pub reconnects: u64,
+    /// Reconnects per wall second.
+    pub reconnect_rate_per_s: f64,
 }
 
 impl LoadgenReport {
@@ -428,6 +528,9 @@ impl LoadgenReport {
         num("p90_ms", self.p90_ms);
         num("p99_ms", self.p99_ms);
         num("max_ms", self.max_ms);
+        num("connections", self.connections as f64);
+        num("reconnects", self.reconnects as f64);
+        num("reconnect_rate_per_s", self.reconnect_rate_per_s);
         if !self.per_model.is_empty() {
             let mut pm = std::collections::BTreeMap::new();
             for (name, ok) in &self.per_model {
@@ -455,6 +558,11 @@ impl std::fmt::Display for LoadgenReport {
         if let Some(q) = self.offered_qps {
             writeln!(f, "offered {:.1} req/s (open loop)", q)?;
         }
+        writeln!(
+            f,
+            "connections={} reconnects={} ({:.2}/s)",
+            self.connections, self.reconnects, self.reconnect_rate_per_s
+        )?;
         writeln!(
             f,
             "wall {:.2}s -> {:.1} req/s ok; latency mean={:.3}ms p50={:.3}ms p90={:.3}ms \
@@ -487,6 +595,8 @@ struct WorkerTally {
     /// OK responses per traffic target (index-aligned with the run's
     /// target list).
     ok_by_target: Vec<u64>,
+    /// TCP connections this worker's client established.
+    connections: u64,
 }
 
 /// One traffic target: a (possibly unnamed) model plus its probed
@@ -543,10 +653,26 @@ fn probe_targets(cfg: &LoadgenConfig) -> Result<Vec<Target>> {
 }
 
 /// Build the (reused) request body for one worker and target:
-/// synthetic normal pixels, compact JSON, `"model"` stamped for named
-/// targets.
-fn request_body(elems: usize, batch: usize, seed: u64, model: Option<&str>) -> Vec<u8> {
+/// synthetic normal pixels, `"model"` stamped for named JSON targets.
+/// Binary bodies serialise the *same* rng stream as raw little-endian
+/// f32s, so a JSON and a binary run with one seed submit bit-identical
+/// tensors (JSON's f32 -> f64 -> f32 trip is lossless).
+fn request_body(
+    elems: usize,
+    batch: usize,
+    seed: u64,
+    model: Option<&str>,
+    wire: WireFormat,
+) -> Vec<u8> {
     let mut rng = Rng::new(seed);
+    let n_images = batch.max(1);
+    if wire == WireFormat::Binary {
+        let mut out = Vec::with_capacity(elems * n_images * 4);
+        for _ in 0..elems * n_images {
+            out.extend_from_slice(&rng.normal().to_le_bytes());
+        }
+        return out;
+    }
     let image = |rng: &mut Rng| {
         Json::Arr((0..elems).map(|_| Json::Num(rng.normal() as f64)).collect())
     };
@@ -594,6 +720,19 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let targets = probe_targets(cfg)?;
     let total_weight: f64 = targets.iter().map(|t| t.weight).sum();
     let path = if cfg.batch <= 1 { "/v1/infer" } else { "/v1/infer_batch" };
+    // Binary bodies cannot carry a "model" field; named targets route
+    // via the query string instead.
+    let paths: Vec<String> = targets
+        .iter()
+        .map(|t| match (cfg.wire, &t.model) {
+            (WireFormat::Binary, Some(name)) => format!("{}?model={}", path, name),
+            _ => path.to_string(),
+        })
+        .collect();
+    let (content_type, accept) = match cfg.wire {
+        WireFormat::Json => ("application/json", None),
+        WireFormat::Binary => (BINARY_CONTENT_TYPE, Some(BINARY_CONTENT_TYPE)),
+    };
 
     let workers = cfg.concurrency.min(cfg.requests);
     let start = Instant::now();
@@ -602,11 +741,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         for w in 0..workers {
             let cfg = cfg.clone();
             let targets = targets.clone();
+            let paths = &paths;
             handles.push(scope.spawn(move || -> Result<WorkerTally> {
                 let seed = cfg.seed.wrapping_add(w as u64);
                 let bodies: Vec<Vec<u8>> = targets
                     .iter()
-                    .map(|t| request_body(t.elems, cfg.batch, seed, t.model.as_deref()))
+                    .map(|t| {
+                        request_body(t.elems, cfg.batch, seed, t.model.as_deref(), cfg.wire)
+                    })
                     .collect();
                 let mut mix_rng = Rng::new(seed ^ 0x4D49_5845); // "MIXE"
                 let mut client = HttpClient::connect(&cfg.addr, cfg.timeout)?;
@@ -631,7 +773,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     };
                     let ti = pick_target(&mut mix_rng, &targets, total_weight);
                     tally.sent += 1;
-                    match client.post(path, &bodies[ti]) {
+                    match client.post_with(&paths[ti], &bodies[ti], content_type, accept) {
                         Ok(resp) => {
                             let us = anchor.elapsed().as_micros() as u64;
                             match resp.status {
@@ -650,6 +792,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     }
                     k += workers;
                 }
+                tally.connections = client.connections();
                 Ok(tally)
             }));
         }
@@ -672,6 +815,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         merged.client_errors += t.client_errors;
         merged.latencies_us.extend_from_slice(&t.latencies_us);
         merged.histogram.merge(&t.histogram);
+        merged.connections += t.connections;
         for (a, b) in merged.ok_by_target.iter_mut().zip(&t.ok_by_target) {
             *a += b;
         }
@@ -713,5 +857,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             .zip(&merged.ok_by_target)
             .filter_map(|(t, ok)| t.model.clone().map(|name| (name, *ok)))
             .collect(),
+        connections: merged.connections,
+        reconnects: merged.connections.saturating_sub(workers as u64),
+        reconnect_rate_per_s: if wall_s > 0.0 {
+            merged.connections.saturating_sub(workers as u64) as f64 / wall_s
+        } else {
+            0.0
+        },
     })
 }

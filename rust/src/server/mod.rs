@@ -4,37 +4,46 @@
 //! pruning variant.
 //!
 //! ```text
-//!  clients --TCP--> server::http (listener, keep-alive workers,
-//!      |            bounded bodies, shutdown drain)
+//!  clients --TCP--> server::http (threaded OR evented edge: parsing,
+//!      |            framing bounds, keep-alive, connection cap,
+//!      |            shutdown drain; server::poll readiness under the
+//!      |            evented edge)
 //!      |                |  HttpRequest
 //!      |                v
-//!      |            server::routes (JSON <-> registry, "model" field
-//!      |            routing, error mapping, /v1/models, /healthz,
-//!      |            /metrics with per-model labels)
+//!      |            server::routes (JSON *or* raw-f32 binary bodies
+//!      |            <-> registry, "model" routing, error mapping,
+//!      |            /v1/models, /healthz, /metrics per-model labels)
 //!      |                |  resolve(model) -> pool, submit/infer_deadline
 //!      |                v
 //!      |            registry::Registry -> coordinator::BackendPool per
 //!      |            model (admission, dispatch, batching, replicas)
 //!      |
-//!  server::loadgen (open/closed-loop client incl. --model-mix traffic,
-//!                   the measurement side)
+//!  server::loadgen (open/closed-loop client incl. --model-mix traffic
+//!                   and both wire encodings, the measurement side)
 //! ```
 //!
 //! Everything is `std`-only — the crate's `anyhow`-only dependency
-//! policy holds on the network edge too. The module splits three ways:
+//! policy holds on the network edge too. The module splits four ways:
 //!
+//! * [`poll`] — readiness: a `libc`-free epoll syscall shim on
+//!   linux/x86_64 with a portable scan fallback;
 //! * [`http`] — transport: parsing, framing bounds, keep-alive,
-//!   per-connection workers, graceful shutdown;
-//! * [`routes`] — semantics: the `/v1/*` JSON API, typed-error ->
-//!   status-code mapping (429 shed, 504 deadline, 503 dead engines),
-//!   health and Prometheus metrics;
+//!   graceful shutdown; two edges ([`http::EdgeKind`]) — thread-per-
+//!   connection and a nonblocking readiness loop — with bit-identical
+//!   wire behaviour;
+//! * [`routes`] — semantics: the `/v1/*` API (JSON and the raw
+//!   little-endian f32 [`routes::BINARY_CONTENT_TYPE`] encoding),
+//!   typed-error -> status-code mapping (429 shed, 504 deadline, 503
+//!   dead engines), health and Prometheus metrics;
 //! * [`loadgen`] — the client: an open-/closed-loop load generator
-//!   (and the reusable [`loadgen::HttpClient`]) driving that API.
+//!   (and the reusable [`loadgen::HttpClient`]) driving that API in
+//!   either encoding.
 
 pub mod http;
 pub mod loadgen;
+pub mod poll;
 pub mod routes;
 
-pub use http::{HttpConfig, HttpRequest, HttpResponse, HttpServer};
-pub use loadgen::{HttpClient, LoadMode, LoadgenConfig, LoadgenReport};
-pub use routes::{route, AppState, HttpCounters};
+pub use http::{EdgeKind, HttpConfig, HttpRequest, HttpResponse, HttpServer, TransportStats};
+pub use loadgen::{HttpClient, LoadMode, LoadgenConfig, LoadgenReport, WireFormat};
+pub use routes::{route, AppState, HttpCounters, BINARY_CONTENT_TYPE};

@@ -16,6 +16,30 @@
 //! naming a registered variant; requests without one go to the
 //! registry's default model, so single-model clients never change.
 //!
+//! **Binary wire format** — both inference routes also speak an opt-in
+//! binary tensor encoding ([`BINARY_CONTENT_TYPE`],
+//! `application/x-vitfpga-tensor`) that skips JSON float parsing on the
+//! hot path:
+//!
+//! * request: `Content-Type: application/x-vitfpga-tensor`, body = raw
+//!   **little-endian f32** pixels — exactly `input_elems_per_image * 4`
+//!   bytes for `/v1/infer`, an integer multiple of that for
+//!   `/v1/infer_batch` (image count inferred from the length). The
+//!   model is named by the `?model=NAME` query parameter (binary bodies
+//!   have no `"model"` field); absent means the default model. A length
+//!   mismatch is a 400; the transport's body bound still yields 413.
+//! * response: chosen by the `Accept` header — any listed
+//!   `application/x-vitfpga-tensor` media type selects a raw LE f32
+//!   logits body (concatenated per image for batches), with the JSON
+//!   path's metadata carried in `X-Vitfpga-*` headers
+//!   (`Model`, `Predicted-Class`/`Predicted-Classes`, `Latency-Ms`,
+//!   `Batch-Size`, `Count`, `Queue-Depth`). Anything else keeps JSON.
+//! * the two sides negotiate independently: a JSON request may ask for
+//!   a binary response and vice versa. Errors are always JSON.
+//! * round-trip parity is exact: an f32 crosses JSON (f64 shortest
+//!   representation) and the binary encoding with identical bits, so
+//!   both paths produce bit-identical logits for the same image.
+//!
 //! Error mapping (the typed registry/pool errors become status codes
 //! here):
 //!
@@ -47,7 +71,53 @@ use crate::coordinator::{
 use crate::registry::{Registry, UnknownModel};
 use crate::util::json::Json;
 
-use super::http::{HttpRequest, HttpResponse};
+use super::http::{HttpRequest, HttpResponse, TransportStats};
+
+/// Media type of the opt-in binary tensor encoding: raw little-endian
+/// f32 values, no framing beyond `Content-Length`.
+pub const BINARY_CONTENT_TYPE: &str = "application/x-vitfpga-tensor";
+
+/// Media type of a header value, parameters stripped (`a/b; q=1` ->
+/// `a/b`), whitespace trimmed.
+fn media_type(value: &str) -> &str {
+    value.split(';').next().unwrap_or(value).trim()
+}
+
+/// True when the request body is the binary tensor encoding.
+fn binary_request(req: &HttpRequest) -> bool {
+    req.header("content-type")
+        .map(|v| media_type(v).eq_ignore_ascii_case(BINARY_CONTENT_TYPE))
+        .unwrap_or(false)
+}
+
+/// True when the client's `Accept` header lists the binary tensor
+/// media type (any position, parameters ignored).
+fn accepts_binary(req: &HttpRequest) -> bool {
+    req.header("accept")
+        .map(|v| {
+            v.split(',')
+                .any(|part| media_type(part).eq_ignore_ascii_case(BINARY_CONTENT_TYPE))
+        })
+        .unwrap_or(false)
+}
+
+/// Decode a raw little-endian f32 body. The length must be a multiple
+/// of 4 (callers validate the element count separately).
+pub fn decode_f32_le(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Encode f32 values as the raw little-endian binary body.
+pub fn encode_f32_le(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
 
 /// Monotonic request/response counters of the HTTP edge, exported on
 /// `/metrics`. Relaxed ordering throughout: these are statistics, not
@@ -140,6 +210,11 @@ pub struct AppState {
     /// `None` waits forever.
     pub request_timeout: Option<std::time::Duration>,
     pub counters: HttpCounters,
+    /// Transport-level gauges (open connections, cap overflows). Hand
+    /// a clone of this `Arc` to
+    /// [`HttpServer::start_with`](super::http::HttpServer::start_with)
+    /// so `/metrics` sees the live values.
+    pub transport: Arc<TransportStats>,
     /// Per-model Retry-After latency scales (keys fixed at startup —
     /// the registry's model set is immutable once built).
     latency: std::collections::BTreeMap<String, LatencyScale>,
@@ -168,6 +243,7 @@ impl AppState {
             registry,
             request_timeout,
             counters: HttpCounters::default(),
+            transport: Arc::default(),
             latency,
             started: Instant::now(),
         }
@@ -314,6 +390,22 @@ fn parse_json_body(req: &HttpRequest) -> Result<Json, HttpResponse> {
     Json::parse(text).map_err(|e| error_response(400, &format!("malformed JSON: {}", e)))
 }
 
+/// Resolve an optional requested model name to a registered name and
+/// its (lazily built) pool.
+fn resolve_pool_by_name(
+    state: &AppState,
+    requested: Option<&str>,
+) -> Result<(String, Arc<BackendPool>), HttpResponse> {
+    let name = match state.registry.resolve(requested) {
+        Ok(n) => n.to_string(),
+        Err(e) => return Err(model_error_response(state, &e)),
+    };
+    match state.registry.pool(&name) {
+        Ok(pool) => Ok((name, pool)),
+        Err(e) => Err(model_error_response(state, &e)),
+    }
+}
+
 /// Resolve the request body's optional `"model"` field to a registered
 /// name and its (lazily built) pool.
 fn resolve_pool(
@@ -325,14 +417,44 @@ fn resolve_pool(
         Some(Json::Str(s)) => Some(s.as_str()),
         Some(_) => return Err(error_response(400, "\"model\" must be a string")),
     };
-    let name = match state.registry.resolve(requested) {
-        Ok(n) => n.to_string(),
-        Err(e) => return Err(model_error_response(state, &e)),
-    };
-    match state.registry.pool(&name) {
-        Ok(pool) => Ok((name, pool)),
-        Err(e) => Err(model_error_response(state, &e)),
+    resolve_pool_by_name(state, requested)
+}
+
+/// Validate and decode one binary image body: exactly `want` raw LE
+/// f32 values.
+fn binary_image(body: &[u8], want: usize) -> Result<Vec<f32>, HttpResponse> {
+    if body.len() != want * 4 {
+        return Err(error_response(
+            400,
+            &format!(
+                "binary image body must hold {} f32 values ({} bytes), got {} bytes",
+                want,
+                want * 4,
+                body.len()
+            ),
+        ));
     }
+    Ok(decode_f32_le(body))
+}
+
+/// Validate and decode a binary batch body: a positive integer number
+/// of images, each `want` raw LE f32 values.
+fn binary_images(body: &[u8], want: usize) -> Result<Vec<Vec<f32>>, HttpResponse> {
+    let per_image = want * 4;
+    if body.is_empty() {
+        return Err(error_response(400, "binary images body must not be empty"));
+    }
+    if body.len() % per_image != 0 {
+        return Err(error_response(
+            400,
+            &format!(
+                "binary images body length {} is not a multiple of {} bytes per image",
+                body.len(),
+                per_image
+            ),
+        ));
+    }
+    Ok(body.chunks_exact(per_image).map(decode_f32_le).collect())
 }
 
 /// Extract one image (a JSON array of numbers) and validate its length
@@ -379,28 +501,88 @@ fn response_json(model: &str, resp: &InferenceResponse, queue_depth: usize) -> J
     Json::Obj(m)
 }
 
+/// Binary-encoded `/v1/infer` success: raw LE f32 logits, metadata in
+/// `X-Vitfpga-*` headers.
+fn binary_infer_response(model: &str, resp: &InferenceResponse, queue_depth: usize) -> HttpResponse {
+    HttpResponse::new(200, encode_f32_le(&resp.logits))
+        .with_header("Content-Type", BINARY_CONTENT_TYPE)
+        .with_header("X-Vitfpga-Model", model)
+        .with_header("X-Vitfpga-Predicted-Class", &resp.predicted_class.to_string())
+        .with_header(
+            "X-Vitfpga-Latency-Ms",
+            &format!("{:.3}", resp.latency.as_secs_f64() * 1e3),
+        )
+        .with_header("X-Vitfpga-Batch-Size", &resp.batch_size.to_string())
+        .with_header("X-Vitfpga-Queue-Depth", &queue_depth.to_string())
+}
+
+/// Binary-encoded `/v1/infer_batch` success: per-image logits
+/// concatenated in request order.
+fn binary_batch_response(
+    model: &str,
+    resps: &[InferenceResponse],
+    queue_depth: usize,
+) -> HttpResponse {
+    let logits_len: usize = resps.iter().map(|r| r.logits.len()).sum();
+    let mut body = Vec::with_capacity(logits_len * 4);
+    for r in resps {
+        body.extend_from_slice(&encode_f32_le(&r.logits));
+    }
+    let classes = resps
+        .iter()
+        .map(|r| r.predicted_class.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    HttpResponse::new(200, body)
+        .with_header("Content-Type", BINARY_CONTENT_TYPE)
+        .with_header("X-Vitfpga-Model", model)
+        .with_header("X-Vitfpga-Count", &resps.len().to_string())
+        .with_header("X-Vitfpga-Predicted-Classes", &classes)
+        .with_header("X-Vitfpga-Queue-Depth", &queue_depth.to_string())
+}
+
 fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
-    let body = match parse_json_body(req) {
-        Ok(j) => j,
-        Err(resp) => return resp,
-    };
-    let (model, pool) = match resolve_pool(state, &body) {
-        Ok(v) => v,
-        Err(resp) => return resp,
-    };
-    let image_json = match body.get("image") {
-        Some(j) => j,
-        None => return error_response(400, "missing \"image\" field"),
-    };
-    let image = match image_from(pool.input_elems_per_image, image_json, "\"image\"") {
-        Ok(v) => v,
-        Err(resp) => return resp,
+    // Request encoding is keyed on Content-Type (binary bodies carry
+    // the model in ?model=), response encoding on Accept — the two
+    // negotiate independently.
+    let (model, pool, image) = if binary_request(req) {
+        let (model, pool) = match resolve_pool_by_name(state, req.query_param("model")) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let image = match binary_image(&req.body, pool.input_elems_per_image) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        (model, pool, image)
+    } else {
+        let body = match parse_json_body(req) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let (model, pool) = match resolve_pool(state, &body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let image_json = match body.get("image") {
+            Some(j) => j,
+            None => return error_response(400, "missing \"image\" field"),
+        };
+        let image = match image_from(pool.input_elems_per_image, image_json, "\"image\"") {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        (model, pool, image)
     };
     match pool.infer_deadline(image, state.request_timeout) {
         Ok(resp) => {
             record_latency(state, &resp);
             let depth = pool.stats().queue_depth;
-            json_response(200, &response_json(&model, &resp, depth))
+            if accepts_binary(req) {
+                binary_infer_response(&model, &resp, depth)
+            } else {
+                json_response(200, &response_json(&model, &resp, depth))
+            }
         }
         Err(e) => pool_error_response(state, &pool, &e),
     }
@@ -415,28 +597,41 @@ fn record_latency(state: &AppState, resp: &InferenceResponse) {
 }
 
 fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
-    let body = match parse_json_body(req) {
-        Ok(j) => j,
-        Err(resp) => return resp,
-    };
     // One model per batch request: the whole batch routes to one pool
     // (mixed-model batches would defeat the per-replica batcher).
-    let (model, pool) = match resolve_pool(state, &body) {
-        Ok(v) => v,
-        Err(resp) => return resp,
-    };
-    let images_json = match body.get("images").and_then(|j| j.as_arr()) {
-        Some(a) if !a.is_empty() => a,
-        Some(_) => return error_response(400, "\"images\" must not be empty"),
-        None => return error_response(400, "missing \"images\" array"),
-    };
-    let mut images = Vec::with_capacity(images_json.len());
-    for (i, j) in images_json.iter().enumerate() {
-        match image_from(pool.input_elems_per_image, j, &format!("images[{}]", i)) {
-            Ok(v) => images.push(v),
+    let (model, pool, images) = if binary_request(req) {
+        let (model, pool) = match resolve_pool_by_name(state, req.query_param("model")) {
+            Ok(v) => v,
             Err(resp) => return resp,
+        };
+        let images = match binary_images(&req.body, pool.input_elems_per_image) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        (model, pool, images)
+    } else {
+        let body = match parse_json_body(req) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let (model, pool) = match resolve_pool(state, &body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let images_json = match body.get("images").and_then(|j| j.as_arr()) {
+            Some(a) if !a.is_empty() => a,
+            Some(_) => return error_response(400, "\"images\" must not be empty"),
+            None => return error_response(400, "missing \"images\" array"),
+        };
+        let mut images = Vec::with_capacity(images_json.len());
+        for (i, j) in images_json.iter().enumerate() {
+            match image_from(pool.input_elems_per_image, j, &format!("images[{}]", i)) {
+                Ok(v) => images.push(v),
+                Err(resp) => return resp,
+            }
         }
-    }
+        (model, pool, images)
+    };
     // Submit everything before collecting anything: the requests land in
     // the replicas' batchers together, so a batch-capable backend sees
     // them as one dispatch instead of N serialized singletons.
@@ -455,7 +650,7 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
     // one queue-depth snapshot shared by every item's metadata.
     let deadline = state.request_timeout.map(|d| Instant::now() + d);
     let queue_depth = pool.stats().queue_depth;
-    let mut results = Vec::with_capacity(rxs.len());
+    let mut responses = Vec::with_capacity(rxs.len());
     for rx in rxs {
         let received = match deadline {
             None => rx.recv().map_err(anyhow::Error::new).and_then(|r| r),
@@ -473,11 +668,18 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
         match received {
             Ok(resp) => {
                 record_latency(state, &resp);
-                results.push(response_json(&model, &resp, queue_depth));
+                responses.push(resp);
             }
             Err(e) => return pool_error_response(state, &pool, &e),
         }
     }
+    if accepts_binary(req) {
+        return binary_batch_response(&model, &responses, queue_depth);
+    }
+    let results: Vec<Json> = responses
+        .iter()
+        .map(|resp| response_json(&model, resp, queue_depth))
+        .collect();
     let mut m = BTreeMap::new();
     m.insert("model".into(), Json::Str(model));
     m.insert("count".into(), Json::Num(results.len() as f64));
@@ -831,6 +1033,20 @@ fn metrics(state: &AppState) -> HttpResponse {
         &replica_inflight,
     );
 
+    prom_scalar(
+        &mut out,
+        "vitfpga_http_open_connections",
+        "gauge",
+        "Currently open HTTP connections (accepted, not yet closed).",
+        state.transport.open_connections.load(Ordering::Relaxed) as f64,
+    );
+    prom_scalar(
+        &mut out,
+        "vitfpga_http_conn_overflow_total",
+        "counter",
+        "Connections answered 503 + Retry-After at the connection cap.",
+        state.transport.overflow_total.load(Ordering::Relaxed) as f64,
+    );
     prom_scalar(
         &mut out,
         "vitfpga_http_requests_total",

@@ -5,9 +5,16 @@
 //! routing through the registry (per-model parity with dedicated
 //! pools, `model="..."` metric labels, `--model-mix` loadgen),
 //! malformed/oversized body rejection, Prometheus scrape
-//! well-formedness with advancing counters, keep-alive reuse, and
-//! graceful drain-on-shutdown. Runs with the default feature set — no
-//! artifacts, no XLA toolchain, no non-std dependencies.
+//! well-formedness with advancing counters, keep-alive reuse,
+//! pipelining, the connection cap, and graceful drain-on-shutdown.
+//! The transport battery runs against *both* edges — the
+//! thread-per-connection baseline and the nonblocking readiness loop
+//! (`*_evented` tests) — which must behave bit-identically on the
+//! wire. The binary tensor wire format (raw little-endian f32 bodies)
+//! is covered for exact round-trip parity with JSON, framing errors,
+//! `Accept` negotiation, and mixed-encoding keep-alive connections.
+//! Runs with the default feature set — no artifacts, no XLA
+//! toolchain, no non-std dependencies.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -20,7 +27,10 @@ use vitfpga::config::{PruningSetting, TEST_TINY};
 use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
 use vitfpga::funcsim::Precision;
 use vitfpga::registry::{ModelSpec, Registry};
-use vitfpga::server::{route, AppState, HttpClient, HttpConfig, HttpRequest, HttpServer};
+use vitfpga::server::{
+    route, AppState, EdgeKind, HttpClient, HttpConfig, HttpRequest, HttpServer,
+    BINARY_CONTENT_TYPE,
+};
 use vitfpga::util::json::Json;
 use vitfpga::util::rng::Rng;
 
@@ -94,26 +104,54 @@ fn native_pool(replicas: usize) -> BackendPool {
     .expect("native pool start")
 }
 
-/// Boot a server on an ephemeral loopback port over `pool`.
+/// Boot a server on an ephemeral loopback port over `pool`
+/// (thread-per-connection edge).
 fn serve(
     pool: BackendPool,
     timeout: Option<Duration>,
     config: HttpConfig,
 ) -> (HttpServer, Arc<AppState>) {
-    serve_registry(Registry::single(pool), timeout, config)
+    serve_on(EdgeKind::Threaded, pool, timeout, config)
 }
 
-/// Boot a server over a full model registry.
+/// Boot a server on an ephemeral loopback port over `pool` on the
+/// given transport edge.
+fn serve_on(
+    edge: EdgeKind,
+    pool: BackendPool,
+    timeout: Option<Duration>,
+    config: HttpConfig,
+) -> (HttpServer, Arc<AppState>) {
+    serve_registry_on(edge, Registry::single(pool), timeout, config)
+}
+
+/// Boot a server over a full model registry (threaded edge).
 fn serve_registry(
+    registry: Registry,
+    timeout: Option<Duration>,
+    config: HttpConfig,
+) -> (HttpServer, Arc<AppState>) {
+    serve_registry_on(EdgeKind::Threaded, registry, timeout, config)
+}
+
+/// Boot a server over a full model registry on the given edge, with
+/// the state's transport stats wired in (so `/metrics` sees the
+/// connection gauge and overflow counter).
+fn serve_registry_on(
+    edge: EdgeKind,
     registry: Registry,
     timeout: Option<Duration>,
     config: HttpConfig,
 ) -> (HttpServer, Arc<AppState>) {
     let state = Arc::new(AppState::with_registry(registry, timeout));
     let handler_state = Arc::clone(&state);
-    let server = HttpServer::start("127.0.0.1:0", config, move |req: &HttpRequest| {
-        route(&handler_state, req)
-    })
+    let server = HttpServer::start_with(
+        "127.0.0.1:0",
+        config,
+        edge,
+        Arc::clone(&state.transport),
+        move |req: &HttpRequest| route(&handler_state, req),
+    )
     .expect("http server start");
     (server, state)
 }
@@ -170,9 +208,18 @@ fn synthetic_images(n: usize, per: usize, seed: u64) -> Vec<Vec<f32>> {
 
 #[test]
 fn infer_parity_with_direct_pool() {
+    infer_parity_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn infer_parity_evented() {
+    infer_parity_on(EdgeKind::Evented);
+}
+
+fn infer_parity_on(edge: EdgeKind) {
     // The same pool answers over HTTP and in-process; logits must match
     // bit-for-bit (f32 -> JSON f64 shortest-repr -> f32 is lossless).
-    let (server, state) = serve(native_pool(1), None, HttpConfig::default());
+    let (server, state) = serve_on(edge, native_pool(1), None, HttpConfig::default());
     let pool = pool_of(&state);
     let per = pool.input_elems_per_image;
     let mut client = client_for(&server);
@@ -199,7 +246,16 @@ fn infer_parity_with_direct_pool() {
 
 #[test]
 fn batch_parity_with_direct_pool() {
-    let (server, state) = serve(native_pool(2), None, HttpConfig::default());
+    batch_parity_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn batch_parity_evented() {
+    batch_parity_on(EdgeKind::Evented);
+}
+
+fn batch_parity_on(edge: EdgeKind) {
+    let (server, state) = serve_on(edge, native_pool(2), None, HttpConfig::default());
     let pool = pool_of(&state);
     let per = pool.input_elems_per_image;
     let imgs = synthetic_images(3, per, 11);
@@ -220,12 +276,21 @@ fn batch_parity_with_direct_pool() {
 
 #[test]
 fn shed_maps_to_429_with_retry_after() {
+    shed_maps_to_429_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn shed_maps_to_429_evented() {
+    shed_maps_to_429_on(EdgeKind::Evented);
+}
+
+fn shed_maps_to_429_on(edge: EdgeKind) {
     let pool = BackendPool::start(
         |_i| Ok(SlowBackend { delay: Duration::from_millis(200) }),
         PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 2 },
     )
     .expect("slow pool start");
-    let (server, state) = serve(pool, None, HttpConfig::default());
+    let (server, state) = serve_on(edge, pool, None, HttpConfig::default());
     let direct = pool_of(&state);
     // Fill both admission slots directly at the pool...
     let a = direct.submit(vec![1.0, 0.0]).expect("slot 1");
@@ -259,12 +324,22 @@ fn shed_maps_to_429_with_retry_after() {
 
 #[test]
 fn request_deadline_maps_to_504() {
+    deadline_maps_to_504_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn request_deadline_evented() {
+    deadline_maps_to_504_on(EdgeKind::Evented);
+}
+
+fn deadline_maps_to_504_on(edge: EdgeKind) {
     let pool = BackendPool::start(
         |_i| Ok(SlowBackend { delay: Duration::from_millis(500) }),
         PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
     )
     .expect("slow pool start");
-    let (server, _state) = serve(pool, Some(Duration::from_millis(30)), HttpConfig::default());
+    let (server, _state) =
+        serve_on(edge, pool, Some(Duration::from_millis(30)), HttpConfig::default());
     let mut client = client_for(&server);
     let resp = client
         .post("/v1/infer", &image_body(&[1.0, 0.0]))
@@ -278,12 +353,21 @@ fn request_deadline_maps_to_504() {
 
 #[test]
 fn malformed_bodies_map_to_400() {
+    malformed_bodies_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn malformed_bodies_evented() {
+    malformed_bodies_on(EdgeKind::Evented);
+}
+
+fn malformed_bodies_on(edge: EdgeKind) {
     let pool = BackendPool::start(
         |_i| Ok(EchoBackend),
         PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
     )
     .expect("echo pool start");
-    let (server, _state) = serve(pool, None, HttpConfig::default());
+    let (server, _state) = serve_on(edge, pool, None, HttpConfig::default());
     let mut client = client_for(&server);
     for (what, body) in [
         ("unparseable JSON", b"{not json".to_vec()),
@@ -312,13 +396,22 @@ fn malformed_bodies_map_to_400() {
 
 #[test]
 fn oversized_body_maps_to_413() {
+    oversized_body_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn oversized_body_evented() {
+    oversized_body_on(EdgeKind::Evented);
+}
+
+fn oversized_body_on(edge: EdgeKind) {
     let pool = BackendPool::start(
         |_i| Ok(EchoBackend),
         PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
     )
     .expect("echo pool start");
     let config = HttpConfig { max_body_bytes: 128, ..HttpConfig::default() };
-    let (server, _state) = serve(pool, None, config);
+    let (server, _state) = serve_on(edge, pool, None, config);
     let mut client = client_for(&server);
     let big = image_body(&[0.123456f32; 200]);
     assert!(big.len() > 128);
@@ -332,12 +425,21 @@ fn oversized_body_maps_to_413() {
 
 #[test]
 fn chunked_transfer_encoding_maps_to_411() {
+    chunked_maps_to_411_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn chunked_transfer_encoding_evented() {
+    chunked_maps_to_411_on(EdgeKind::Evented);
+}
+
+fn chunked_maps_to_411_on(edge: EdgeKind) {
     let pool = BackendPool::start(
         |_i| Ok(EchoBackend),
         PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
     )
     .expect("echo pool start");
-    let (server, _state) = serve(pool, None, HttpConfig::default());
+    let (server, _state) = serve_on(edge, pool, None, HttpConfig::default());
     // Raw socket: the HttpClient never sends chunked bodies.
     let mut stream = TcpStream::connect(server.local_addr()).expect("raw connect");
     stream
@@ -359,7 +461,16 @@ fn chunked_transfer_encoding_maps_to_411() {
 
 #[test]
 fn keep_alive_serves_sequential_requests_on_one_connection() {
-    let (server, state) = serve(native_pool(1), None, HttpConfig::default());
+    keep_alive_sequential_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn keep_alive_sequential_evented() {
+    keep_alive_sequential_on(EdgeKind::Evented);
+}
+
+fn keep_alive_sequential_on(edge: EdgeKind) {
+    let (server, state) = serve_on(edge, native_pool(1), None, HttpConfig::default());
     let per = pool_of(&state).input_elems_per_image;
     let mut client = client_for(&server);
     let img = synthetic_images(1, per, 3).remove(0);
@@ -663,6 +774,7 @@ fn loadgen_model_mix_drives_both_models() {
         timeout: Duration::from_secs(10),
         seed: 11,
         models: vec![("fast".to_string(), 3.0), ("accurate".to_string(), 1.0)],
+        ..LoadgenConfig::default()
     };
     let report = loadgen::run(&cfg).expect("mixed loadgen run");
     assert_eq!(report.sent, 48);
@@ -707,12 +819,21 @@ fn loadgen_model_mix_drives_both_models() {
 
 #[test]
 fn graceful_shutdown_drains_in_flight_before_socket_closes() {
+    graceful_drain_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn graceful_drain_evented() {
+    graceful_drain_on(EdgeKind::Evented);
+}
+
+fn graceful_drain_on(edge: EdgeKind) {
     let pool = BackendPool::start(
         |_i| Ok(SlowBackend { delay: Duration::from_millis(300) }),
         PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
     )
     .expect("slow pool start");
-    let (mut server, _state) = serve(pool, None, HttpConfig::default());
+    let (mut server, _state) = serve_on(edge, pool, None, HttpConfig::default());
     let addr = server.local_addr();
 
     // A request that will still be executing when shutdown starts.
@@ -743,9 +864,18 @@ fn graceful_shutdown_drains_in_flight_before_socket_closes() {
 
 #[test]
 fn concurrent_keep_alive_clients_all_answered() {
+    concurrent_keep_alive_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn concurrent_keep_alive_evented() {
+    concurrent_keep_alive_on(EdgeKind::Evented);
+}
+
+fn concurrent_keep_alive_on(edge: EdgeKind) {
     // The acceptance-bar smoke: N concurrent keep-alive clients, each
     // issuing several requests, all answered correctly by the pool.
-    let (server, state) = serve(native_pool(2), None, HttpConfig::default());
+    let (server, state) = serve_on(edge, native_pool(2), None, HttpConfig::default());
     let pool = pool_of(&state);
     let per = pool.input_elems_per_image;
     let addr = server.local_addr().to_string();
@@ -781,4 +911,467 @@ fn concurrent_keep_alive_clients_all_answered() {
     }
     let m = pool.metrics().expect("pool metrics");
     assert!(m.pool.requests >= 24, "all 6x4 HTTP requests reached the pool");
+}
+
+// ---------------------------------------------------------------------------
+// transport: pipelining and the connection cap (both edges)
+// ---------------------------------------------------------------------------
+
+/// Read `n` `Content-Length`-framed responses off one raw socket.
+fn read_responses(stream: &mut TcpStream, n: usize) -> Vec<(u16, Vec<u8>)> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while out.len() < n {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..pos]).to_string();
+            let status: u16 = head
+                .lines()
+                .next()
+                .and_then(|l| l.split(' ').nth(1))
+                .and_then(|s| s.parse().ok())
+                .expect("status line");
+            let clen: usize = head
+                .lines()
+                .filter_map(|l| l.split_once(':'))
+                .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+                .and_then(|(_, v)| v.trim().parse().ok())
+                .unwrap_or(0);
+            if buf.len() >= pos + 4 + clen {
+                let body = buf[pos + 4..pos + 4 + clen].to_vec();
+                buf.drain(..pos + 4 + clen);
+                out.push((status, body));
+                continue;
+            }
+        }
+        assert!(Instant::now() < deadline, "timed out with {} of {} responses", out.len(), n);
+        match stream.read(&mut chunk) {
+            Ok(0) => panic!("connection closed with {} of {} responses", out.len(), n),
+            Ok(k) => buf.extend_from_slice(&chunk[..k]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => panic!("read error: {}", e),
+        }
+    }
+    out
+}
+
+#[test]
+fn pipelined_requests_answered_in_order() {
+    pipelined_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn pipelined_requests_evented() {
+    pipelined_on(EdgeKind::Evented);
+}
+
+fn pipelined_on(edge: EdgeKind) {
+    // Two requests written back-to-back before reading anything: both
+    // must answer, in request order, on the same connection.
+    let pool = BackendPool::start(
+        |_i| Ok(EchoBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("echo pool start");
+    let (server, _state) = serve_on(edge, pool, None, HttpConfig::default());
+    let mut stream = TcpStream::connect(server.local_addr()).expect("raw connect");
+    stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .expect("raw read timeout");
+    let mut wire = Vec::new();
+    for x in [1.0f32, 2.0] {
+        let body = image_body(&[x, 0.0]);
+        wire.extend_from_slice(
+            format!(
+                "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\n\r\n",
+                body.len()
+            )
+            .as_bytes(),
+        );
+        wire.extend_from_slice(&body);
+    }
+    stream.write_all(&wire).expect("pipelined write");
+    let responses = read_responses(&mut stream, 2);
+    for (i, ((status, body), want0)) in responses.iter().zip([1.0f32, 2.0]).enumerate() {
+        assert_eq!(*status, 200, "pipelined response {}", i);
+        let j = Json::parse(std::str::from_utf8(body).expect("UTF-8")).expect("JSON");
+        assert_eq!(
+            logits_of(&j)[0],
+            want0,
+            "response {} must come back in request order",
+            i
+        );
+    }
+}
+
+#[test]
+fn connection_cap_answers_503_with_retry_after() {
+    connection_cap_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn connection_cap_evented() {
+    connection_cap_on(EdgeKind::Evented);
+}
+
+fn connection_cap_on(edge: EdgeKind) {
+    let config = HttpConfig { max_connections: 1, ..HttpConfig::default() };
+    let (server, state) = serve_on(edge, native_pool(1), None, config);
+    let mut client = client_for(&server);
+    // This keep-alive connection holds the only slot.
+    assert_eq!(client.get("/healthz").expect("healthz").status, 200);
+
+    // An over-cap connection is answered, not silently dropped: 503
+    // with Retry-After, then closed.
+    let mut over = TcpStream::connect(server.local_addr()).expect("overflow connect");
+    over.set_read_timeout(Some(Duration::from_secs(5)))
+        .expect("overflow read timeout");
+    let mut text = String::new();
+    over.read_to_string(&mut text).expect("read 503 then EOF");
+    assert!(
+        text.starts_with("HTTP/1.1 503 "),
+        "over-cap connection must get 503, got: {}",
+        text.lines().next().unwrap_or("")
+    );
+    assert!(
+        text.to_ascii_lowercase().contains("retry-after: 1"),
+        "503 must carry Retry-After:\n{}",
+        text
+    );
+
+    // Counted in /metrics, and the in-cap connection still serves.
+    let scrape =
+        String::from_utf8(client.get("/metrics").expect("scrape").body).expect("UTF-8");
+    assert_eq!(
+        prom_value(&scrape, "vitfpga_http_open_connections"),
+        Some(1.0),
+        "exactly the keep-alive connection is open:\n{}",
+        scrape
+    );
+    assert!(
+        prom_value(&scrape, "vitfpga_http_conn_overflow_total").unwrap_or(0.0) >= 1.0,
+        "overflow counter must advance:\n{}",
+        scrape
+    );
+    drop(state);
+}
+
+// ---------------------------------------------------------------------------
+// binary tensor wire format
+// ---------------------------------------------------------------------------
+
+fn f32s_le(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn binary_image_bytes(img: &[f32]) -> Vec<u8> {
+    img.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+#[test]
+fn binary_round_trip_matches_json_bit_for_bit() {
+    binary_round_trip_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn binary_round_trip_evented() {
+    binary_round_trip_on(EdgeKind::Evented);
+}
+
+fn binary_round_trip_on(edge: EdgeKind) {
+    let (server, state) = serve_on(edge, native_pool(1), None, HttpConfig::default());
+    let per = pool_of(&state).input_elems_per_image;
+    let mut client = client_for(&server);
+    let img = synthetic_images(1, per, 31).remove(0);
+
+    // JSON reference answer for the same image.
+    let json_resp = client.post("/v1/infer", &image_body(&img)).expect("json infer");
+    assert_eq!(json_resp.status, 200);
+    let j = json_resp.json().expect("json body");
+    let want = logits_of(&j);
+
+    // Binary both ways: raw LE f32 request, Accept binary.
+    let resp = client
+        .post_with(
+            "/v1/infer",
+            &binary_image_bytes(&img),
+            BINARY_CONTENT_TYPE,
+            Some(BINARY_CONTENT_TYPE),
+        )
+        .expect("binary infer");
+    assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("content-type"), Some(BINARY_CONTENT_TYPE));
+    let got = f32s_le(&resp.body);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "logit {}: binary wire differs from JSON ({} vs {})",
+            i,
+            g,
+            w
+        );
+    }
+    // Response metadata rides in headers instead of the JSON envelope.
+    let class: usize = resp
+        .header("x-vitfpga-predicted-class")
+        .expect("class header")
+        .parse()
+        .expect("class parses");
+    assert_eq!(Some(class), j.get("predicted_class").and_then(|v| v.as_usize()));
+    let latency: f64 = resp
+        .header("x-vitfpga-latency-ms")
+        .expect("latency header")
+        .parse()
+        .expect("latency parses");
+    assert!(latency >= 0.0);
+}
+
+#[test]
+fn binary_batch_round_trip_matches_json() {
+    let (server, state) = serve(native_pool(2), None, HttpConfig::default());
+    let per = pool_of(&state).input_elems_per_image;
+    let mut client = client_for(&server);
+    let imgs = synthetic_images(3, per, 37);
+
+    let json_resp = client
+        .post("/v1/infer_batch", &images_body(&imgs))
+        .expect("json batch");
+    assert_eq!(json_resp.status, 200);
+    let j = json_resp.json().expect("json");
+    let results = j.get("results").and_then(|r| r.as_arr()).expect("results array");
+
+    let flat: Vec<u8> = imgs.iter().flat_map(|i| binary_image_bytes(i)).collect();
+    let resp = client
+        .post_with("/v1/infer_batch", &flat, BINARY_CONTENT_TYPE, Some(BINARY_CONTENT_TYPE))
+        .expect("binary batch");
+    assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("x-vitfpga-count"), Some("3"));
+    let got = f32s_le(&resp.body);
+    let want: Vec<f32> = results.iter().flat_map(logits_of).collect();
+    assert_eq!(got.len(), want.len(), "concatenated logits cover every image");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "flat logit {} differs between wire formats", i);
+    }
+    // Per-image argmaxes ride in one comma-joined header.
+    let classes: Vec<usize> = resp
+        .header("x-vitfpga-predicted-classes")
+        .expect("classes header")
+        .split(',')
+        .map(|s| s.parse().expect("class"))
+        .collect();
+    let want_classes: Vec<usize> = results
+        .iter()
+        .map(|r| r.get("predicted_class").and_then(|v| v.as_usize()).expect("argmax"))
+        .collect();
+    assert_eq!(classes, want_classes);
+}
+
+#[test]
+fn wire_format_negotiation_is_independent_per_direction() {
+    let (server, state) = serve(native_pool(1), None, HttpConfig::default());
+    let per = pool_of(&state).input_elems_per_image;
+    let mut client = client_for(&server);
+    let img = synthetic_images(1, per, 41).remove(0);
+    let want = {
+        let r = client.post("/v1/infer", &image_body(&img)).expect("reference");
+        logits_of(&r.json().expect("json"))
+    };
+
+    // Binary in, JSON out (no Accept header).
+    let resp = client
+        .post_with("/v1/infer", &binary_image_bytes(&img), BINARY_CONTENT_TYPE, None)
+        .expect("binary request, json response");
+    assert_eq!(resp.status, 200);
+    assert!(
+        resp.header("content-type").unwrap_or("").starts_with("application/json"),
+        "without Accept the response stays JSON"
+    );
+    assert_eq!(logits_of(&resp.json().expect("json")), want);
+
+    // JSON in, binary out (Accept lists binary among alternatives).
+    let accept = format!("text/html, {}", BINARY_CONTENT_TYPE);
+    let resp = client
+        .post_with("/v1/infer", &image_body(&img), "application/json", Some(&accept))
+        .expect("json request, binary response");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some(BINARY_CONTENT_TYPE));
+    let got_bits: Vec<u32> = f32s_le(&resp.body).iter().map(|v| v.to_bits()).collect();
+    let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, want_bits);
+
+    // Errors stay JSON even when the client accepts binary.
+    let resp = client
+        .post_with("/v1/infer", &[1, 2, 3], BINARY_CONTENT_TYPE, Some(BINARY_CONTENT_TYPE))
+        .expect("truncated body");
+    assert_eq!(resp.status, 400);
+    assert!(
+        resp.header("content-type").unwrap_or("").starts_with("application/json"),
+        "error bodies are always JSON"
+    );
+    resp.json().expect("error body parses as JSON");
+}
+
+#[test]
+fn binary_framing_errors_map_to_400_and_413() {
+    // EchoBackend: 2 f32 per image = 8 bytes; a tiny transport cap
+    // exercises the 400 (bad framing) vs 413 (too large) split.
+    let pool = BackendPool::start(
+        |_i| Ok(EchoBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("echo pool start");
+    let config = HttpConfig { max_body_bytes: 64, ..HttpConfig::default() };
+    let (server, _state) = serve(pool, None, config);
+    let mut client = client_for(&server);
+    let good = binary_image_bytes(&[1.0, 2.0]);
+
+    // Truncated: 7 of 8 bytes.
+    let resp = client
+        .post_with("/v1/infer", &good[..7], BINARY_CONTENT_TYPE, None)
+        .expect("truncated");
+    assert_eq!(resp.status, 400, "truncated binary body must 400");
+    // Extra trailing bytes (within the cap) are a framing error too.
+    let resp = client
+        .post_with("/v1/infer", &binary_image_bytes(&[1.0, 2.0, 3.0]), BINARY_CONTENT_TYPE, None)
+        .expect("overlong");
+    assert_eq!(resp.status, 400, "single-image body with extra bytes must 400");
+    // Batch: not a multiple of the image stride / empty.
+    let resp = client
+        .post_with("/v1/infer_batch", &good[..6], BINARY_CONTENT_TYPE, None)
+        .expect("ragged batch");
+    assert_eq!(resp.status, 400);
+    let resp = client
+        .post_with("/v1/infer_batch", b"", BINARY_CONTENT_TYPE, None)
+        .expect("empty batch");
+    assert_eq!(resp.status, 400);
+
+    // Over the transport cap: 413 before buffering.
+    let big = vec![0u8; 65 * 4];
+    let resp = client
+        .post_with("/v1/infer", &big, BINARY_CONTENT_TYPE, None)
+        .expect("oversized");
+    assert_eq!(resp.status, 413);
+    // The reject closed the connection; the client reconnects and a
+    // well-formed binary request still answers exactly.
+    let ok = client
+        .post_with("/v1/infer", &good, BINARY_CONTENT_TYPE, Some(BINARY_CONTENT_TYPE))
+        .expect("follow-up");
+    assert_eq!(ok.status, 200);
+    assert_eq!(f32s_le(&ok.body), vec![1.0, 2.0, 3.0, 4.0]);
+}
+
+#[test]
+fn mixed_encodings_share_one_keep_alive_connection() {
+    mixed_encodings_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn mixed_encodings_evented() {
+    mixed_encodings_on(EdgeKind::Evented);
+}
+
+fn mixed_encodings_on(edge: EdgeKind) {
+    let (server, state) = serve_on(edge, native_pool(1), None, HttpConfig::default());
+    let per = pool_of(&state).input_elems_per_image;
+    let mut client = client_for(&server);
+    let img = synthetic_images(1, per, 51).remove(0);
+    let mut reference: Option<Vec<u32>> = None;
+    for round in 0..3 {
+        // JSON then binary, alternating on the same connection.
+        let j = client.post("/v1/infer", &image_body(&img)).expect("json round");
+        assert_eq!(j.status, 200, "round {}", round);
+        let json_bits: Vec<u32> =
+            logits_of(&j.json().expect("json")).iter().map(|v| v.to_bits()).collect();
+        let b = client
+            .post_with(
+                "/v1/infer",
+                &binary_image_bytes(&img),
+                BINARY_CONTENT_TYPE,
+                Some(BINARY_CONTENT_TYPE),
+            )
+            .expect("binary round");
+        assert_eq!(b.status, 200, "round {}", round);
+        let bin_bits: Vec<u32> = f32s_le(&b.body).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(json_bits, bin_bits, "round {}: encodings disagree", round);
+        match &reference {
+            Some(r) => assert_eq!(r, &bin_bits, "round {}: answers drift across rounds", round),
+            None => reference = Some(bin_bits),
+        }
+    }
+    // All six requests rode one client connection.
+    assert_eq!(client.connections(), 1, "mixed encodings must not force reconnects");
+}
+
+#[test]
+fn binary_query_param_routes_named_models() {
+    let (server, _state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let fast_ref = dedicated_pool(FAST_SPEC);
+    let per = fast_ref.input_elems_per_image;
+    let mut client = client_for(&server);
+    let img = synthetic_images(1, per, 61).remove(0);
+
+    let resp = client
+        .post_with(
+            "/v1/infer?model=fast",
+            &binary_image_bytes(&img),
+            BINARY_CONTENT_TYPE,
+            Some(BINARY_CONTENT_TYPE),
+        )
+        .expect("named binary infer");
+    assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("x-vitfpga-model"), Some("fast"));
+    let want = fast_ref.infer(img).expect("dedicated pool infer").logits;
+    assert_eq!(f32s_le(&resp.body), want, "query-param routing hits the named variant");
+
+    // Unknown names still 404 with a JSON error body.
+    let other = synthetic_images(1, per, 62).remove(0);
+    let resp = client
+        .post_with("/v1/infer?model=nope", &binary_image_bytes(&other), BINARY_CONTENT_TYPE, None)
+        .expect("unknown model");
+    assert_eq!(resp.status, 404);
+    resp.json().expect("404 body is JSON");
+}
+
+#[test]
+fn loadgen_binary_wire_and_connection_accounting() {
+    use vitfpga::server::{loadgen, LoadMode, LoadgenConfig, WireFormat};
+    let (server, state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        mode: LoadMode::Closed,
+        concurrency: 3,
+        requests: 24,
+        batch: 1,
+        timeout: Duration::from_secs(10),
+        seed: 13,
+        models: vec![("fast".to_string(), 1.0), ("accurate".to_string(), 1.0)],
+        wire: WireFormat::Binary,
+    };
+    let report = loadgen::run(&cfg).expect("binary loadgen run");
+    assert_eq!(report.ok, 24, "binary wire must answer everything: {}", report);
+    let per: std::collections::BTreeMap<_, _> = report.per_model.iter().cloned().collect();
+    assert!(
+        per.get("fast").copied().unwrap_or(0) > 0
+            && per.get("accurate").copied().unwrap_or(0) > 0,
+        "both variants must see binary traffic: {}",
+        report
+    );
+    // Transport-health accounting: one keep-alive connection per
+    // worker, none forcibly reconnected.
+    assert_eq!(report.connections, 3, "one connection per worker: {}", report);
+    assert_eq!(report.reconnects, 0);
+    let j = report.to_json();
+    assert_eq!(j.get("connections").and_then(|v| v.as_f64()), Some(3.0));
+    assert_eq!(j.get("reconnects").and_then(|v| v.as_f64()), Some(0.0));
+    assert!(j.get("reconnect_rate_per_s").and_then(|v| v.as_f64()).is_some());
+    drop(state);
 }
