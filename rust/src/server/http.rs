@@ -4,9 +4,14 @@
 //! and nothing the crate's `anyhow`-only dependency policy would have
 //! to buy elsewhere:
 //!
-//! * request parsing (request line, headers, `Content-Length` bodies);
-//! * bounded everything: header bytes, body bytes, read deadlines —
-//!   a slow or malicious client can never hold unbounded memory;
+//! * request parsing (request line, headers, `Content-Length` bodies —
+//!   strict framing: lengths must be pure ASCII digits and duplicate
+//!   `Content-Length` headers must agree, closing the classic
+//!   request-smuggling vectors);
+//! * bounded everything: header bytes, body bytes, read deadlines,
+//!   write-stall deadlines (a peer that stops reading its response is
+//!   closed, not kept) — a slow or malicious client can never hold
+//!   unbounded memory or pin a connection slot forever;
 //! * **no chunked transfer encoding**: a chunked request is answered
 //!   with `411 Length Required` (bodies must be length-delimited so the
 //!   bound is enforceable before buffering);
@@ -150,11 +155,14 @@ impl HttpRequest {
     }
 
     /// First value of the named `?key=value` query parameter, if any.
-    pub fn query_param(&self, key: &str) -> Option<&str> {
+    /// Keys and values are percent-decoded (`%2B` -> `+`, `+` -> space)
+    /// after splitting on `&`/`=`, so a model name that needs URL
+    /// encoding round-trips instead of resolving to a confusing 404.
+    pub fn query_param(&self, key: &str) -> Option<String> {
         let query = self.target.split_once('?')?.1;
         query.split('&').find_map(|pair| {
             let (k, v) = pair.split_once('=')?;
-            (k == key).then_some(v)
+            (percent_decode(k) == key).then(|| percent_decode(v))
         })
     }
 
@@ -187,6 +195,42 @@ impl HttpResponse {
         self.headers.push((name.to_string(), value.to_string()));
         self
     }
+}
+
+/// Decode one `application/x-www-form-urlencoded` query component:
+/// `+` becomes a space and `%XX` its byte. Malformed escapes are kept
+/// literally; non-UTF-8 results decode lossily (the caller compares
+/// against registered names, so a mangled name is a clean 404).
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < bytes.len() => {
+                let hex = |b: u8| (b as char).to_digit(16);
+                match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                    (Some(hi), Some(lo)) => {
+                        out.push((hi * 16 + lo) as u8);
+                        i += 3;
+                    }
+                    _ => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
 }
 
 pub fn status_text(status: u16) -> &'static str {
@@ -309,10 +353,27 @@ impl HttpServer {
                 .name("vitfpga-http-accept".into())
                 .spawn(move || accept_loop(listener, config, loop_shared, handler))
                 .context("spawning http accept thread")?,
-            EdgeKind::Evented => std::thread::Builder::new()
-                .name("vitfpga-http-loop".into())
-                .spawn(move || event_loop(listener, config, loop_shared, handler))
-                .context("spawning http event loop thread")?,
+            EdgeKind::Evented => {
+                // Wake-pair setup and the initial poller registrations
+                // happen here, before the loop thread exists, so a
+                // failure is an `Err` from `start_with` rather than a
+                // server that looks up but never serves.
+                let (wake_rx, wake_tx) =
+                    wake_pair().context("establishing evented-edge wake socket pair")?;
+                let mut poller = Poller::new();
+                poller
+                    .register(&listener, TOKEN_LISTENER, Interest::Read)
+                    .context("registering listener with the poller")?;
+                poller
+                    .register(&wake_rx, TOKEN_WAKE, Interest::Read)
+                    .context("registering wake socket with the poller")?;
+                std::thread::Builder::new()
+                    .name("vitfpga-http-loop".into())
+                    .spawn(move || {
+                        event_loop(listener, config, loop_shared, handler, poller, wake_rx, wake_tx)
+                    })
+                    .context("spawning http event loop thread")?
+            }
         };
 
         Ok(HttpServer {
@@ -437,11 +498,15 @@ fn serve_connection(
     // The listener is non-blocking; make sure the accepted socket is
     // not (a non-blocking worker would spin through its read loop).
     // Short read ticks so idle keep-alive workers observe the shutdown
-    // flag promptly; per-request deadlines are enforced on top.
+    // flag promptly; per-request deadlines are enforced on top. The
+    // write timeout bounds a peer that stops reading its response —
+    // without it a stalled reader pins this worker (and its connection
+    // slot) forever, mirroring the evented edge's write-stall sweep.
     if stream.set_nonblocking(false).is_err()
         || stream
             .set_read_timeout(Some(Duration::from_millis(100)))
             .is_err()
+        || stream.set_write_timeout(Some(config.read_deadline)).is_err()
     {
         return;
     }
@@ -622,13 +687,31 @@ fn try_parse(buf: &[u8], config: &HttpConfig) -> Parsed {
             return Parsed::Reject(411, "chunked bodies unsupported; send Content-Length");
         }
     }
-    let body_len = match lookup("content-length") {
-        None => 0usize,
-        Some(v) => match v.parse::<usize>() {
+    // Strict framing: every Content-Length must be pure ASCII digits
+    // (`usize::parse` would accept a leading '+'), and duplicates must
+    // agree — a proxy that honours a different copy than we do is a
+    // request-smuggling vector.
+    let mut body_len = 0usize;
+    let mut seen_len: Option<&str> = None;
+    for (k, v) in &headers {
+        if k != "content-length" {
+            continue;
+        }
+        match seen_len {
+            Some(prev) if prev != v.as_str() => {
+                return Parsed::Reject(400, "conflicting Content-Length headers");
+            }
+            Some(_) => continue,
+            None => seen_len = Some(v.as_str()),
+        }
+        if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+            return Parsed::Reject(400, "unparseable Content-Length");
+        }
+        body_len = match v.parse::<usize>() {
             Ok(n) => n,
             Err(_) => return Parsed::Reject(400, "unparseable Content-Length"),
-        },
-    };
+        };
+    }
     if body_len > config.max_body_bytes {
         return Parsed::Reject(413, "body exceeds the configured size bound");
     }
@@ -735,6 +818,11 @@ struct Conn {
     idle_deadline: Instant,
     /// Set while a partial request is buffered; enforces the 408.
     read_deadline: Option<Instant>,
+    /// Set while a response is draining; refreshed on every written
+    /// byte. A peer that stops reading its response is closed when this
+    /// expires — otherwise it would pin a connection slot (and its
+    /// in-flight count) forever.
+    write_deadline: Option<Instant>,
     close_after_write: bool,
     /// True between dispatch and response-written (the in_flight span).
     counts_in_flight: bool,
@@ -804,24 +892,19 @@ fn wake(tx: &TcpStream) {
     let _ = w.write(&[1u8]);
 }
 
+/// The readiness-loop thread body. The poller (with the listener and
+/// wake socket already registered) and the wake pair are built by
+/// `start_with` before this thread spawns, so setup failures surface
+/// as errors to the caller instead of a silently dead loop.
 fn event_loop(
     listener: TcpListener,
     config: HttpConfig,
     shared: Arc<Shared>,
     handler: Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>,
+    poller: Poller,
+    wake_rx: TcpStream,
+    wake_tx: TcpStream,
 ) {
-    let (wake_rx, wake_tx) = match wake_pair() {
-        Ok(pair) => pair,
-        Err(_) => return,
-    };
-    let mut poller = Poller::new();
-    if poller
-        .register(&listener, TOKEN_LISTENER, Interest::Read)
-        .is_err()
-        || poller.register(&wake_rx, TOKEN_WAKE, Interest::Read).is_err()
-    {
-        return;
-    }
     let mut lp = EvLoop {
         listener,
         config,
@@ -845,20 +928,29 @@ fn event_loop(
 impl EvLoop {
     fn run(&mut self) {
         let mut events = Vec::new();
+        // Set when the loop first observes the shutdown flag; the loop
+        // exits unconditionally once the drain deadline has elapsed
+        // past it, so a stalled writer or hung handler can never wedge
+        // `shutdown()`'s join.
+        let mut shutdown_since: Option<Instant> = None;
         loop {
             self.drain_completions();
             self.sweep_deadlines();
-            if self.shared.shutdown.load(Ordering::Acquire)
-                && self.shared.in_flight.load(Ordering::Acquire) == 0
-                && self
-                    .conns
-                    .values()
-                    .all(|c| c.phase == ConnPhase::Reading)
-            {
-                // Quiet: nothing dispatched, nothing writing. Remaining
-                // connections are idle or mid-read; the outer cleanup
-                // drops them.
-                return;
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                let since = *shutdown_since.get_or_insert_with(Instant::now);
+                let quiet = self.shared.in_flight.load(Ordering::Acquire) == 0
+                    && self
+                        .conns
+                        .values()
+                        .all(|c| c.phase == ConnPhase::Reading);
+                if quiet || Instant::now() >= since + self.config.drain_deadline {
+                    // Quiet: nothing dispatched, nothing writing —
+                    // remaining connections are idle or mid-read, and
+                    // the outer cleanup drops them. Or the drain window
+                    // expired: whatever is still in flight is abandoned
+                    // (its peer stopped reading or its handler hung).
+                    return;
+                }
             }
             if self.poller.wait(&mut events, LOOP_TICK).is_err() {
                 return;
@@ -921,6 +1013,7 @@ impl EvLoop {
                             interest: Interest::Read,
                             idle_deadline: Instant::now() + self.config.keep_alive_idle,
                             read_deadline: None,
+                            write_deadline: None,
                             close_after_write: false,
                             counts_in_flight: false,
                         },
@@ -955,8 +1048,14 @@ impl EvLoop {
         match phase {
             ConnPhase::Reading if readable => self.drive_read(token),
             ConnPhase::Writing if writable => self.drive_write(token),
-            // Parked while dispatched: any error surfaces when the
-            // response write is attempted.
+            // Parked while dispatched: the interest is `None`, so the
+            // only events the kernel still reports are EPOLLERR/EPOLLHUP:
+            // the peer is fully gone and the response can never be
+            // delivered. Close now — ignoring the level-triggered
+            // condition would spin the loop at 100% CPU until the
+            // handler finished. The completion finds the token gone
+            // and is dropped; `close_conn` settles the in-flight count.
+            ConnPhase::Dispatched => self.close_conn(token),
             _ => {}
         }
     }
@@ -1067,6 +1166,11 @@ impl EvLoop {
                 Some(c) => c,
                 None => return,
             };
+            // Arm the write-stall deadline when a flush begins; every
+            // written byte below pushes it out again.
+            if conn.write_deadline.is_none() {
+                conn.write_deadline = Some(Instant::now() + config.read_deadline);
+            }
             loop {
                 if conn.out_pos == conn.out.len() {
                     // Response fully written: the in_flight span ends
@@ -1077,6 +1181,7 @@ impl EvLoop {
                     }
                     conn.out.clear();
                     conn.out_pos = 0;
+                    conn.write_deadline = None;
                     if conn.close_after_write {
                         break Step::Close;
                     }
@@ -1092,7 +1197,10 @@ impl EvLoop {
                 }
                 match conn.stream.write(&conn.out[conn.out_pos..]) {
                     Ok(0) => break Step::Close,
-                    Ok(n) => conn.out_pos += n,
+                    Ok(n) => {
+                        conn.out_pos += n;
+                        conn.write_deadline = Some(Instant::now() + config.read_deadline);
+                    }
                     Err(e)
                         if e.kind() == ErrorKind::WouldBlock
                             || e.kind() == ErrorKind::TimedOut =>
@@ -1141,35 +1249,48 @@ impl EvLoop {
         }
     }
 
-    /// Enforce read deadlines (408) and idle/shutdown closes, mirroring
-    /// the threaded worker's read-tick checks.
+    /// Enforce read deadlines (408), write-stall closes, and
+    /// idle/shutdown closes, mirroring the threaded worker's read-tick
+    /// checks. Without the write sweep, a client that sends a request
+    /// and never reads the response would park in `Writing` forever
+    /// (its socket never turns writable), pinning a connection slot
+    /// and its in-flight count.
     fn sweep_deadlines(&mut self) {
         let now = Instant::now();
         let shutting = self.shared.shutdown.load(Ordering::Acquire);
         enum Due {
             Timeout(usize, NeedPhase),
             Idle(usize),
+            WriteStalled(usize),
         }
         let mut due: Vec<Due> = Vec::new();
         for (token, conn) in &self.conns {
-            if conn.phase != ConnPhase::Reading {
-                continue;
-            }
-            match conn.read_deadline {
-                Some(d) if now >= d => {
-                    let phase = if find_header_end(&conn.buf).is_some() {
-                        NeedPhase::Body
-                    } else {
-                        NeedPhase::Head
-                    };
-                    due.push(Due::Timeout(*token, phase));
-                }
-                Some(_) => {}
-                None => {
-                    if shutting || now >= conn.idle_deadline {
-                        due.push(Due::Idle(*token));
+            match conn.phase {
+                ConnPhase::Reading => match conn.read_deadline {
+                    Some(d) if now >= d => {
+                        let phase = if find_header_end(&conn.buf).is_some() {
+                            NeedPhase::Body
+                        } else {
+                            NeedPhase::Head
+                        };
+                        due.push(Due::Timeout(*token, phase));
+                    }
+                    Some(_) => {}
+                    None => {
+                        if shutting || now >= conn.idle_deadline {
+                            due.push(Due::Idle(*token));
+                        }
+                    }
+                },
+                ConnPhase::Writing => {
+                    if matches!(conn.write_deadline, Some(d) if now >= d) {
+                        due.push(Due::WriteStalled(*token));
                     }
                 }
+                // Dispatched: the handler's own deadline (the pool's
+                // 504 path) bounds this phase; peer death surfaces as
+                // an ERR/HUP event and closes the conn in conn_ready.
+                ConnPhase::Dispatched => {}
             }
         }
         for d in due {
@@ -1182,6 +1303,8 @@ impl EvLoop {
                     self.drive_write(token);
                 }
                 Due::Idle(token) => self.close_conn(token),
+                // No 408 is possible — we already cannot write to it.
+                Due::WriteStalled(token) => self.close_conn(token),
             }
         }
     }

@@ -691,6 +691,23 @@ fn request_body(
     Json::Obj(m).to_string().into_bytes()
 }
 
+/// Percent-encode one query-string value: unreserved characters
+/// (ALPHA / DIGIT / `-._~`) pass through, everything else becomes
+/// `%XX`. The inverse of the server's `HttpRequest::query_param`
+/// decoding, so any registered model name round-trips exactly.
+fn percent_encode(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'.' | b'_' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{:02X}", b)),
+        }
+    }
+    out
+}
+
 /// Weighted target pick for one request: deterministic (worker rng),
 /// skipping the draw entirely for single-target runs.
 fn pick_target(rng: &mut Rng, targets: &[Target], total_weight: f64) -> usize {
@@ -721,11 +738,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let total_weight: f64 = targets.iter().map(|t| t.weight).sum();
     let path = if cfg.batch <= 1 { "/v1/infer" } else { "/v1/infer_batch" };
     // Binary bodies cannot carry a "model" field; named targets route
-    // via the query string instead.
+    // via the query string instead (percent-encoded — the server
+    // decodes the value before registry lookup).
     let paths: Vec<String> = targets
         .iter()
         .map(|t| match (cfg.wire, &t.model) {
-            (WireFormat::Binary, Some(name)) => format!("{}?model={}", path, name),
+            (WireFormat::Binary, Some(name)) => {
+                format!("{}?model={}", path, percent_encode(name))
+            }
             _ => path.to_string(),
         })
         .collect();

@@ -546,7 +546,8 @@ fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
     // the model in ?model=), response encoding on Accept — the two
     // negotiate independently.
     let (model, pool, image) = if binary_request(req) {
-        let (model, pool) = match resolve_pool_by_name(state, req.query_param("model")) {
+        let requested = req.query_param("model");
+        let (model, pool) = match resolve_pool_by_name(state, requested.as_deref()) {
             Ok(v) => v,
             Err(resp) => return resp,
         };
@@ -600,7 +601,8 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
     // One model per batch request: the whole batch routes to one pool
     // (mixed-model batches would defeat the per-replica batcher).
     let (model, pool, images) = if binary_request(req) {
-        let (model, pool) = match resolve_pool_by_name(state, req.query_param("model")) {
+        let requested = req.query_param("model");
+        let (model, pool) = match resolve_pool_by_name(state, requested.as_deref()) {
             Ok(v) => v,
             Err(resp) => return resp,
         };

@@ -1375,3 +1375,238 @@ fn loadgen_binary_wire_and_connection_accounting() {
     assert!(j.get("reconnect_rate_per_s").and_then(|v| v.as_f64()).is_some());
     drop(state);
 }
+
+// ---------------------------------------------------------------------------
+// strict framing + encoded query params + stalled-writer hardening
+// ---------------------------------------------------------------------------
+
+/// Send raw request bytes on a fresh connection, read until the peer
+/// closes (tolerating a reset once bytes have arrived — reject paths
+/// close immediately after answering), and return the status line.
+fn raw_status_line(addr: std::net::SocketAddr, wire: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).expect("raw connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .expect("raw read timeout");
+    stream.write_all(wire).expect("raw write");
+    let mut response = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => response.extend_from_slice(&chunk[..n]),
+            Err(_) if !response.is_empty() => break,
+            Err(e) => panic!("raw read produced nothing: {}", e),
+        }
+    }
+    String::from_utf8_lossy(&response)
+        .lines()
+        .next()
+        .unwrap_or("")
+        .to_string()
+}
+
+#[test]
+fn content_length_smuggling_vectors_rejected() {
+    content_length_strictness_on(EdgeKind::Threaded);
+}
+
+#[test]
+fn content_length_smuggling_vectors_rejected_evented() {
+    content_length_strictness_on(EdgeKind::Evented);
+}
+
+fn content_length_strictness_on(edge: EdgeKind) {
+    let pool = BackendPool::start(
+        |_i| Ok(EchoBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("echo pool start");
+    let (server, _state) = serve_on(edge, pool, None, HttpConfig::default());
+    let addr = server.local_addr();
+
+    // Conflicting duplicate Content-Length headers: a proxy that
+    // honours the other copy would smuggle a second request. No body
+    // bytes are sent — rejection happens at header parse, and unread
+    // body bytes could turn the server's close into a reset.
+    let line = raw_status_line(
+        addr,
+        b"POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Length: 2\r\nContent-Length: 4\r\n\r\n",
+    );
+    assert!(line.starts_with("HTTP/1.1 400 "), "conflicting lengths: {}", line);
+
+    // `usize::parse` alone would accept a leading '+'; strict digits
+    // only.
+    let line = raw_status_line(
+        addr,
+        b"POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Length: +2\r\n\r\n",
+    );
+    assert!(line.starts_with("HTTP/1.1 400 "), "signed length: {}", line);
+
+    // Duplicate but *agreeing* Content-Length headers stay acceptable
+    // (RFC 7230 lets them collapse to one value).
+    let line = raw_status_line(
+        addr,
+        b"GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+    );
+    assert!(line.starts_with("HTTP/1.1 200 "), "agreeing duplicates: {}", line);
+}
+
+#[test]
+fn percent_encoded_model_query_param_decodes() {
+    let (server, _state) = serve_registry(two_variant_registry(), None, HttpConfig::default());
+    let fast_ref = dedicated_pool(FAST_SPEC);
+    let per = fast_ref.input_elems_per_image;
+    let mut client = client_for(&server);
+    let img = synthetic_images(1, per, 63).remove(0);
+
+    // "fa%73t" percent-decodes to "fast" and must route identically.
+    let resp = client
+        .post_with(
+            "/v1/infer?model=fa%73t",
+            &binary_image_bytes(&img),
+            BINARY_CONTENT_TYPE,
+            Some(BINARY_CONTENT_TYPE),
+        )
+        .expect("encoded model infer");
+    assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("x-vitfpga-model"), Some("fast"));
+    let want = fast_ref.infer(img).expect("dedicated pool infer").logits;
+    assert_eq!(f32s_le(&resp.body), want, "decoded name hits the same variant");
+
+    // A '+' decodes to a space — no such model, clean 404 (not a
+    // silent fall-through to the default model).
+    let other = synthetic_images(1, per, 64).remove(0);
+    let resp = client
+        .post_with("/v1/infer?model=fa+st", &binary_image_bytes(&other), BINARY_CONTENT_TYPE, None)
+        .expect("spaced model");
+    assert_eq!(resp.status, 404);
+    resp.json().expect("404 body is JSON");
+}
+
+/// Echo-shaped backend whose responses are tens of MB (one f32 per
+/// "class"), enough to overrun loopback socket buffering so a client
+/// that never reads its response parks the connection mid-write.
+struct WideBackend;
+
+impl Backend for WideBackend {
+    fn name(&self) -> &str {
+        "wide"
+    }
+    fn batch_capacity(&self) -> usize {
+        1
+    }
+    fn num_classes(&self) -> usize {
+        6_000_000
+    }
+    fn input_elems_per_image(&self) -> usize {
+        2
+    }
+    fn infer_batch_into(&mut self, _flat: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let nc = self.num_classes();
+        for i in 0..batch {
+            for j in 0..nc {
+                out[i * nc + j] = (j % 8) as f32 + 0.5;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn evented_shutdown_survives_stalled_response_writer() {
+    // A client that sends a request and then never reads the response
+    // leaves the connection parked in its write phase (the socket never
+    // turns writable once the kernel buffers fill). Shutdown must still
+    // complete: the write-stall sweep closes the connection, and the
+    // loop exits unconditionally once the drain deadline elapses.
+    let pool = BackendPool::start(
+        |_i| Ok(WideBackend),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 4 },
+    )
+    .expect("wide pool start");
+    let config = HttpConfig {
+        read_deadline: Duration::from_millis(400),
+        drain_deadline: Duration::from_millis(700),
+        ..HttpConfig::default()
+    };
+    let (mut server, _state) = serve_on(EdgeKind::Evented, pool, None, config);
+    let addr = server.local_addr();
+
+    // Raw socket: binary request (binary Accept keeps the 24 MB
+    // response allocation-light), then stop reading entirely.
+    let mut stream = TcpStream::connect(addr).expect("stalling client connect");
+    let body = binary_image_bytes(&[5.0, 0.0]);
+    let head = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: {ct}\r\nAccept: {ct}\r\nContent-Length: {len}\r\n\r\n",
+        ct = BINARY_CONTENT_TYPE,
+        len = body.len(),
+    );
+    stream.write_all(head.as_bytes()).expect("stall head");
+    stream.write_all(&body).expect("stall body");
+
+    // Wait until the request is in flight; it stays in flight while the
+    // response write is wedged against our unread socket.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.in_flight() == 0 {
+        assert!(Instant::now() < deadline, "request never became in-flight");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Give the handler time to finish and the write to stall.
+    std::thread::sleep(Duration::from_millis(300));
+
+    let begun = Instant::now();
+    server.shutdown();
+    assert!(
+        begun.elapsed() < Duration::from_secs(8),
+        "shutdown must not hang on a peer that never reads its response"
+    );
+    drop(stream);
+}
+
+#[test]
+fn evented_survives_peer_vanishing_mid_dispatch() {
+    // A peer that disconnects while its request is still with the
+    // handler must not wedge the loop or leak in-flight counts: the
+    // ERR/HUP event closes the connection and the late completion is
+    // dropped.
+    let pool = BackendPool::start(
+        |_i| Ok(SlowBackend { delay: Duration::from_millis(300) }),
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 16 },
+    )
+    .expect("slow pool start");
+    let (server, state) = serve_on(EdgeKind::Evented, pool, None, HttpConfig::default());
+    let addr = server.local_addr();
+
+    {
+        let mut stream = TcpStream::connect(addr).expect("vanishing client connect");
+        let body = image_body(&[5.0, 0.0]);
+        let head = format!(
+            "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).expect("head");
+        stream.write_all(&body).expect("body");
+        // Wait for dispatch, then vanish.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.in_flight() == 0 {
+            assert!(Instant::now() < deadline, "request never became in-flight");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    } // stream dropped: RST/FIN while the handler is still sleeping
+
+    // The in-flight span settles (either on the hangup event or when
+    // the completed response fails to write), and the server keeps
+    // serving other clients.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.in_flight() != 0 {
+        assert!(Instant::now() < deadline, "in-flight count leaked after peer vanished");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut client = client_for(&server);
+    let resp = client.post("/v1/infer", &image_body(&[7.0, 0.0])).expect("later request");
+    assert_eq!(resp.status, 200, "server must keep serving after an abandoned dispatch");
+    let j = resp.json().expect("json");
+    assert_eq!(logits_of(&j), vec![7.0, 8.0, 9.0, 10.0]);
+    drop(state);
+}
