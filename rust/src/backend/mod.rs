@@ -70,4 +70,14 @@ pub trait Backend {
         self.infer_batch_into(flat, batch, &mut out)?;
         Ok(out)
     }
+
+    /// Per-encoder-layer telemetry (elapsed time, pre/post token rows,
+    /// keep-decision provenance) of the most recent successful
+    /// `infer_batch_into` call. Backends that don't capture layer
+    /// timing report the empty default — the serving layer then simply
+    /// omits token headers and layer child spans. The record is `Copy`
+    /// and fixed-size, so reading it never allocates.
+    fn last_layer_spans(&self) -> crate::obs::LayerSpans {
+        crate::obs::LayerSpans::default()
+    }
 }

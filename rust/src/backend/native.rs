@@ -37,6 +37,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::backend::Backend;
 use crate::config::{model_by_name, ModelDims, PruningSetting};
 use crate::funcsim::{BatchScratch, ForwardScratch, FuncSim, Precision};
+use crate::obs::{LayerSpans, MAX_TRACE_LAYERS};
 use crate::runtime::Manifest;
 use crate::util::cli::Args;
 
@@ -57,6 +58,13 @@ pub const DEFAULT_BATCH_CAPACITY: usize = 64;
 pub struct TokenStats {
     images: AtomicU64,
     kept_tokens: AtomicU64,
+    /// Per-encoder-layer telemetry behind
+    /// `vitfpga_model_layer_kept_tokens{model,layer}`: images that
+    /// passed through each layer and the summed token rows *leaving*
+    /// it. Fixed slots (first [`MAX_TRACE_LAYERS`] layers) so the fused
+    /// hot path records without allocating.
+    layer_images: [AtomicU64; MAX_TRACE_LAYERS],
+    layer_kept: [AtomicU64; MAX_TRACE_LAYERS],
 }
 
 impl TokenStats {
@@ -65,6 +73,28 @@ impl TokenStats {
     pub fn record(&self, images: u64, kept_tokens: u64) {
         self.images.fetch_add(images, Ordering::Relaxed);
         self.kept_tokens.fetch_add(kept_tokens, Ordering::Relaxed);
+    }
+
+    /// Fold one layer of one fused forward: `images` in the batch,
+    /// `kept_rows` the packed token rows leaving the layer (aggregate
+    /// across the batch). Layers beyond the fixed slots are ignored.
+    pub fn record_layer(&self, layer: usize, images: u64, kept_rows: u64) {
+        if layer < MAX_TRACE_LAYERS {
+            self.layer_images[layer].fetch_add(images, Ordering::Relaxed);
+            self.layer_kept[layer].fetch_add(kept_rows, Ordering::Relaxed);
+        }
+    }
+
+    /// `(images, kept_rows)` totals for one layer slot — the summary's
+    /// `_count` / `_sum` pair. `(0, 0)` for never-touched layers.
+    pub fn layer_totals(&self, layer: usize) -> (u64, u64) {
+        if layer >= MAX_TRACE_LAYERS {
+            return (0, 0);
+        }
+        (
+            self.layer_images[layer].load(Ordering::Relaxed),
+            self.layer_kept[layer].load(Ordering::Relaxed),
+        )
     }
 
     /// Mean encoder-exit token count per image; `None` before any
@@ -94,6 +124,9 @@ pub struct NativeBackend {
     /// Shared kept-token counters (fused paths only); None when nothing
     /// is observing.
     token_stats: Option<Arc<TokenStats>>,
+    /// Per-layer spans of the most recent fused forward (`Copy`,
+    /// fixed-size) — surfaced through [`Backend::last_layer_spans`].
+    layer_spans: LayerSpans,
 }
 
 impl NativeBackend {
@@ -116,6 +149,7 @@ impl NativeBackend {
             scratches: Vec::new(),
             batch_scratch: None,
             token_stats: None,
+            layer_spans: LayerSpans::default(),
         }
     }
 
@@ -394,10 +428,14 @@ impl Backend for NativeBackend {
             if self.scratches.is_empty() {
                 self.scratches.push(self.sim.scratch());
             }
-            let rows = self.sim.forward_batch_counted_into(
-                flat, 1, &mut self.scratches[0], out, self.threads)?;
+            let rows = self.sim.forward_batch_counted_spans(
+                flat, 1, &mut self.scratches[0], out, self.threads,
+                Some(&mut self.layer_spans))?;
             if let Some(stats) = &self.token_stats {
                 stats.record(1, rows as u64);
+                for (l, s) in self.layer_spans.as_slice().iter().enumerate() {
+                    stats.record_layer(l, 1, s.post_rows as u64);
+                }
             }
             return Ok(());
         }
@@ -413,16 +451,26 @@ impl Backend for NativeBackend {
                 self.batch_scratch = Some(self.sim.batch_scratch(batch));
             }
             let bs = self.batch_scratch.as_mut().expect("just built");
-            let rows =
-                self.sim.forward_batch_counted_into(flat, batch, bs, out, self.threads)?;
+            let rows = self.sim.forward_batch_counted_spans(
+                flat, batch, bs, out, self.threads, Some(&mut self.layer_spans))?;
             if let Some(stats) = &self.token_stats {
                 stats.record(batch as u64, rows as u64);
+                for (l, s) in self.layer_spans.as_slice().iter().enumerate() {
+                    stats.record_layer(l, batch as u64, s.post_rows as u64);
+                }
             }
             return Ok(());
         }
 
-        // Spans path: the bench-only comparison baseline — no stats.
+        // Spans path: the bench-only comparison baseline — no stats and
+        // no layer telemetry (clear so a prior fused run's spans don't
+        // leak into this batch's trace).
+        self.layer_spans.clear();
         self.infer_spans_into(flat, batch, out)
+    }
+
+    fn last_layer_spans(&self) -> LayerSpans {
+        self.layer_spans
     }
 }
 

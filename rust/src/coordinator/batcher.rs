@@ -113,6 +113,8 @@ mod tests {
             model: super::super::ModelId::unnamed(),
             image: vec![0.0; 4],
             submitted: Instant::now(),
+            queue_us: 0,
+            batch_us: 0,
         }
     }
 
@@ -167,6 +169,8 @@ mod tests {
                 model: super::super::ModelId::unnamed(),
                 image: vec![0.0; 4],
                 submitted: arrived,
+                queue_us: 0,
+                batch_us: 0,
             });
         }
         assert_eq!(b.take_batch().len(), 2);

@@ -263,7 +263,14 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         match self.tx.send(Msg::Infer(
-            InferenceRequest { id, model: self.model.clone(), image, submitted: Instant::now() },
+            InferenceRequest {
+                id,
+                model: self.model.clone(),
+                image,
+                submitted: Instant::now(),
+                queue_us: 0,
+                batch_us: 0,
+            },
             rtx,
         )) {
             Ok(()) => Ok(rrx),
@@ -340,7 +347,10 @@ fn engine_loop<B: Backend>(
         };
 
         match msg {
-            Some(Msg::Infer(req, responder)) => {
+            Some(Msg::Infer(mut req, responder)) => {
+                // Admission stamp: channel wait + drain lag so far is the
+                // request's "queue" span.
+                req.queue_us = req.submitted.elapsed().as_micros() as u64;
                 pending.push((req.id, responder));
                 slots.add();
                 batcher.push(req);
@@ -361,7 +371,8 @@ fn engine_loop<B: Backend>(
         // collapse exactly when load is highest.
         loop {
             match rx.try_recv() {
-                Ok(Msg::Infer(req, responder)) => {
+                Ok(Msg::Infer(mut req, responder)) => {
+                    req.queue_us = req.submitted.elapsed().as_micros() as u64;
                     pending.push((req.id, responder));
                     slots.add();
                     batcher.push(req);
@@ -375,9 +386,16 @@ fn engine_loop<B: Backend>(
         }
 
         while batcher.ready() {
-            let batch_reqs = batcher.take_batch();
+            let mut batch_reqs = batcher.take_batch();
             let n = batch_reqs.len();
             debug_assert!(n * per_image > 0);
+            // Dispatch stamp: time since admission is the "batch" span
+            // (batcher dwell). Saturating — clock reads are monotonic
+            // but the two stamps bracket the same elapsed() source.
+            for r in &mut batch_reqs {
+                r.batch_us =
+                    (r.submitted.elapsed().as_micros() as u64).saturating_sub(r.queue_us);
+            }
             flat.clear();
             flat.reserve(n * per_image);
             for r in &batch_reqs {
@@ -386,22 +404,28 @@ fn engine_loop<B: Backend>(
             if logits_buf.len() < n * classes {
                 logits_buf.resize(n * classes, 0.0);
             }
+            let t_fwd = Instant::now();
             let result = backend.infer_batch_into(&flat, n, &mut logits_buf[..n * classes]);
+            let infer_us = t_fwd.elapsed().as_micros() as u64;
             metrics.record_batch(n);
             // Release each admission slot *before* its response is sent:
             // a submitter that has its answer must never observe its own
             // request still counted in the pool's queue depth.
             match result {
                 Ok(()) => {
+                    let layers = backend.last_layer_spans();
                     for (i, req) in batch_reqs.iter().enumerate() {
                         let slice = logits_buf[i * classes..(i + 1) * classes].to_vec();
-                        let resp = InferenceResponse::for_request(req, slice, n);
+                        let resp =
+                            InferenceResponse::for_request(req, slice, n, infer_us, layers);
                         metrics.record(resp.latency);
                         slots.complete();
                         respond(&mut pending, req.id, Ok(resp));
                     }
                 }
                 Err(e) => {
+                    crate::obs::log!(warn, "coordinator::engine",
+                                     "batch of {} failed on {}: {:#}", n, backend.name(), e);
                     for req in &batch_reqs {
                         slots.complete();
                         respond(&mut pending, req.id,

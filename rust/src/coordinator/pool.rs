@@ -331,11 +331,16 @@ impl BackendPool {
                 Err(img) => {
                     // The dead engine will never settle this slot.
                     self.loads[idx].fetch_sub(1, Ordering::AcqRel);
+                    crate::obs::log!(warn, "coordinator::pool",
+                                     "model {} replica {} engine is gone; failing over",
+                                     self.model, idx);
                     image = img;
                 }
             }
         }
         self.total_inflight.fetch_sub(1, Ordering::AcqRel);
+        crate::obs::log!(error, "coordinator::pool",
+                         "model {}: all {} replica engines are gone", self.model, n);
         Err(anyhow!("all {} replica engines are gone", n))
     }
 

@@ -1,5 +1,6 @@
 //! Request/response types of the serving coordinator.
 
+use crate::obs::LayerSpans;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -62,6 +63,14 @@ pub struct InferenceRequest {
     /// never re-stamped, so time spent in the channel or behind a
     /// partial drain counts against the wait bound.
     pub submitted: Instant,
+    /// µs from `submitted` to engine admission (channel wait + drain
+    /// lag). 0 at construction; the engine stamps it when the request
+    /// reaches the batcher — the trace's "queue" span.
+    pub queue_us: u64,
+    /// µs dwelling in the batcher until dispatch (measured from
+    /// admission). Stamped by the engine at dispatch — the trace's
+    /// "batch" span.
+    pub batch_us: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -75,13 +84,31 @@ pub struct InferenceResponse {
     pub latency: Duration,
     /// How many requests shared the executed batch.
     pub batch_size: usize,
+    /// Engine-stamped stage durations (µs): channel wait, batcher
+    /// dwell, and the backend forward of the serving batch (`infer_us`
+    /// is shared by every request fused into that batch).
+    pub queue_us: u64,
+    pub batch_us: u64,
+    pub infer_us: u64,
+    /// Per-encoder-layer telemetry of the serving forward —
+    /// batch-aggregate token rows, so single-request batches read as
+    /// per-image counts. Empty when the backend doesn't capture spans.
+    pub layers: LayerSpans,
 }
 
 impl InferenceResponse {
     /// Build the response for `req`: argmax, latency anchored to the
-    /// request's true arrival, model id carried over.
-    pub fn for_request(req: &InferenceRequest, logits: Vec<f32>, batch_size: usize) -> Self {
-        Self::from_logits(req.id, req.model.clone(), logits, req.submitted, batch_size)
+    /// request's true arrival, model id and engine stage stamps carried
+    /// over, forward telemetry attached.
+    pub fn for_request(req: &InferenceRequest, logits: Vec<f32>, batch_size: usize,
+                       infer_us: u64, layers: LayerSpans) -> Self {
+        let mut resp =
+            Self::from_logits(req.id, req.model.clone(), logits, req.submitted, batch_size);
+        resp.queue_us = req.queue_us;
+        resp.batch_us = req.batch_us;
+        resp.infer_us = infer_us;
+        resp.layers = layers;
+        resp
     }
 
     pub fn from_logits(id: u64, model: ModelId, logits: Vec<f32>, submitted: Instant,
@@ -99,6 +126,10 @@ impl InferenceResponse {
             predicted_class,
             latency: submitted.elapsed(),
             batch_size,
+            queue_us: 0,
+            batch_us: 0,
+            infer_us: 0,
+            layers: LayerSpans::default(),
         }
     }
 }

@@ -507,6 +507,28 @@ impl FuncSim {
     pub fn forward_batch_counted_into(&self, flat: &[f32], batch: usize,
                                       scratch: &mut BatchScratch,
                                       logits: &mut [f32], threads: usize) -> Result<usize> {
+        self.forward_batch_counted_spans(flat, batch, scratch, logits, threads, None)
+    }
+
+    /// [`FuncSim::forward_batch_counted_into`] that additionally
+    /// records one [`LayerSpan`](crate::obs::LayerSpan) per encoder
+    /// layer into `spans`: elapsed wall time plus the packed token rows
+    /// entering and leaving the layer (batch-aggregate, read straight
+    /// off the arena's row-offset table), tagged with whether the layer
+    /// pruned (TDM) and whether its keep count was input-adaptive.
+    ///
+    /// With `spans = None` this is exactly the untraced forward — no
+    /// clock reads, no extra work — and the computation itself is
+    /// identical either way (instrumentation only reads `offs` and the
+    /// clock), so logits are bit-identical with tracing on or off.
+    pub fn forward_batch_counted_spans(&self, flat: &[f32], batch: usize,
+                                       scratch: &mut BatchScratch,
+                                       logits: &mut [f32], threads: usize,
+                                       mut spans: Option<&mut crate::obs::LayerSpans>)
+                                       -> Result<usize> {
+        if let Some(s) = spans.as_deref_mut() {
+            s.clear();
+        }
         let d = self.st.dims.dim;
         let per = self.input_elems();
         let classes = self.st.dims.num_classes;
@@ -593,7 +615,21 @@ impl FuncSim {
         }
         for (l, enc) in self.encoders.iter().enumerate() {
             let has_tdm = self.st.tdm_layers.contains(&l) && self.st.r_t < 1.0;
-            self.encoder_batch_into(scratch, batch, enc, has_tdm, threads);
+            match spans.as_deref_mut() {
+                None => self.encoder_batch_into(scratch, batch, enc, has_tdm, threads),
+                Some(s) => {
+                    let pre_rows = scratch.offs[batch] as u32;
+                    let t0 = std::time::Instant::now();
+                    self.encoder_batch_into(scratch, batch, enc, has_tdm, threads);
+                    s.push(crate::obs::LayerSpan {
+                        dur_ns: t0.elapsed().as_nanos() as u64,
+                        pre_rows,
+                        post_rows: scratch.offs[batch] as u32,
+                        tdm: has_tdm,
+                        adaptive: has_tdm && self.adaptive_tdm,
+                    });
+                }
+            }
         }
 
         // Head on each image's CLS token (row offs[img] of the packed

@@ -32,6 +32,11 @@
 //!     `GET /healthz`, Prometheus `GET /metrics` with `model=` labels),
 //!     and an open-/closed-loop load generator (`vitfpga loadgen`,
 //!     including mixed-model `--model-mix` traffic);
+//!   * [`obs`] — observability: hierarchical request traces with
+//!     per-encoder-layer token telemetry (`Server-Timing` headers,
+//!     `GET /debug/traces` Chrome `trace_event` dumps), per-stage
+//!     Prometheus histograms, and the `VITFPGA_LOG`-filtered
+//!     leveled `obs::log!` macro;
 //!   * [`runtime`] — artifact manifest + VITW0001 weight readers
 //!     (always built) and the PJRT engine (`pjrt` feature only);
 //!   * [`complexity`], [`sim::resources`], [`baselines`] — the paper's
@@ -59,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod formats;
 pub mod funcsim;
+pub mod obs;
 pub mod registry;
 pub mod runtime;
 pub mod server;

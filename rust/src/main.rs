@@ -28,7 +28,8 @@
 //!                           requests route by name (default: the first).
 //!                           Works with and without --http
 //!   serve --http ADDR [--edge threaded|evented] [--request-timeout-ms MS]
-//!         [--duration-s S] [...same backend/pool/registry options]
+//!         [--duration-s S] [--trace-sample-rate N]
+//!         [...same backend/pool/registry options]
 //!                           expose the registry over HTTP/1.1 instead of
 //!                           driving synthetic load: POST /v1/infer and
 //!                           /v1/infer_batch (optional "model" field, JSON
@@ -41,7 +42,10 @@
 //!                           ADDR like 127.0.0.1:8080 (port 0 picks an
 //!                           ephemeral port). Stops on Enter / stdin EOF,
 //!                           or after --duration-s, with a graceful
-//!                           in-flight drain
+//!                           in-flight drain. --trace-sample-rate N traces
+//!                           1 in N requests into the /debug/traces ring
+//!                           (?trace=1 forces a trace per request); every
+//!                           2xx answer carries Server-Timing stage splits
 //!   loadgen --addr HOST:PORT [--qps Q] [--concurrency C] [--requests N]
 //!           [--batch B] [--wire json|binary] [--timeout-ms MS]
 //!           [--out FILE] [--model NAME | --model-mix NAME:W,NAME:W,...]
@@ -457,7 +461,10 @@ fn cmd_serve_http(args: &Args, addr: &str) -> Result<()> {
             if info.ready { "warm" } else { "lazy" }
         );
     }
-    let state = Arc::new(AppState::with_registry(reg, timeout));
+    // 0 disables rate sampling; `?trace=1` still traces on demand.
+    let trace_every = args.get_usize("trace-sample-rate", 0) as u64;
+    let state =
+        Arc::new(AppState::with_registry(reg, timeout).with_trace_sampling(trace_every));
     let handler_state = Arc::clone(&state);
     let mut server = HttpServer::start_with(
         addr,
@@ -472,6 +479,10 @@ fn cmd_serve_http(args: &Args, addr: &str) -> Result<()> {
     println!("  GET  /v1/models      registered variants + readiness");
     println!("  GET  /healthz        liveness + per-model shapes");
     println!("  GET  /metrics        Prometheus text exposition (model=\"...\" labels)");
+    println!("  GET  /debug/traces   Chrome trace_event dump of sampled requests");
+    if trace_every > 0 {
+        println!("tracing 1 in {} requests (--trace-sample-rate)", trace_every);
+    }
     match args.get_usize("duration-s", 0) {
         0 => {
             println!("press Enter (or close stdin) to stop");

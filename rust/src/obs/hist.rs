@@ -1,0 +1,216 @@
+//! Lock-free log2 latency histograms with torn-read-proof snapshots.
+//!
+//! Bucketing matches `server::loadgen::LatencyHistogram` exactly —
+//! bucket `i` holds samples in `[2^(i-1), 2^i)` microseconds, index
+//! `64 - us.leading_zeros()` clamped to the last (overflow) bucket —
+//! so client-side and server-side distributions line up bucket for
+//! bucket in analysis.
+//!
+//! Recording is three relaxed/release atomic adds and never allocates.
+//! [`AtomicHistogram::snapshot`] retries until it observes a state
+//! where `count == Σ buckets` with an unchanged `count` across the
+//! bucket pass; under pathological contention it falls back to deriving
+//! `count` from one bucket pass, so a rendered snapshot is *always*
+//! internally consistent (`_count == sum(buckets)`, cumulative buckets
+//! monotone) even if it lags the newest samples by a few records.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count, identical to loadgen's client-side histogram.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Log2 bucket index of a microsecond sample (0 µs lands in bucket 0,
+/// everything ≥ 2^30 µs in the final overflow bucket).
+pub fn bucket_index(us: u64) -> usize {
+    ((64 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Concurrent log2 histogram over microsecond samples.
+#[derive(Debug, Default)]
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram::default()
+    }
+
+    /// Record one sample. `count` is bumped last with Release ordering
+    /// so a snapshot that reads `count` first (Acquire) sees at least
+    /// that many bucket increments.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Release);
+    }
+
+    /// A consistent snapshot: retries until `count` is stable across
+    /// the bucket pass *and* equals the bucket sum. The bounded
+    /// fallback derives `count` from the buckets themselves, keeping
+    /// the exposition invariant (`_count == sum(buckets)`) under any
+    /// interleaving.
+    pub fn snapshot(&self) -> HistSnapshot {
+        for _ in 0..64 {
+            let c1 = self.count.load(Ordering::Acquire);
+            let buckets = self.load_buckets();
+            let sum_us = self.sum_us.load(Ordering::Acquire);
+            let c2 = self.count.load(Ordering::Acquire);
+            if c1 == c2 && buckets.iter().sum::<u64>() == c1 {
+                return HistSnapshot {
+                    buckets,
+                    sum_us,
+                    count: c1,
+                };
+            }
+        }
+        let buckets = self.load_buckets();
+        let sum_us = self.sum_us.load(Ordering::Acquire);
+        HistSnapshot {
+            count: buckets.iter().sum(),
+            buckets,
+            sum_us,
+        }
+    }
+
+    fn load_buckets(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        for (slot, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *slot = b.load(Ordering::Acquire);
+        }
+        out
+    }
+}
+
+/// One point-in-time view of an [`AtomicHistogram`], guaranteed
+/// internally consistent: `count == buckets.iter().sum()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Upper bound of bucket `i` in seconds (`2^i` µs). The final
+    /// bucket is rendered as `+Inf` by the Prometheus exposition.
+    pub fn upper_bound_s(i: usize) -> f64 {
+        (1u64 << i) as f64 / 1e6
+    }
+
+    /// Cumulative counts per bucket bound; the last entry equals
+    /// `count` by the snapshot invariant.
+    pub fn cumulative(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        let mut acc = 0u64;
+        for (slot, b) in out.iter_mut().zip(self.buckets.iter()) {
+            acc += b;
+            *slot = acc;
+        }
+        out
+    }
+}
+
+/// The six per-stage histograms behind `vitfpga_http_stage_seconds`:
+/// one per span of the request path (edge parse, admission/queue wait,
+/// batcher dwell, backend forward, response serialize, and end-to-end
+/// total). Fed only by 2xx inference responses.
+#[derive(Debug, Default)]
+pub struct StageHistograms {
+    pub parse: AtomicHistogram,
+    pub queue: AtomicHistogram,
+    pub batch: AtomicHistogram,
+    pub infer: AtomicHistogram,
+    pub resp: AtomicHistogram,
+    pub total: AtomicHistogram,
+}
+
+impl StageHistograms {
+    /// Record every stage of one request's [`StageTimes`](crate::obs::StageTimes).
+    pub fn record(&self, st: &crate::obs::StageTimes) {
+        self.parse.record_us(st.parse_us);
+        self.queue.record_us(st.queue_us);
+        self.batch.record_us(st.batch_us);
+        self.infer.record_us(st.infer_us);
+        self.resp.record_us(st.resp_us);
+        self.total.record_us(st.total_us);
+    }
+
+    /// `(stage_label, histogram)` pairs in exposition order.
+    pub fn iter(&self) -> [(&'static str, &AtomicHistogram); 6] {
+        [
+            ("parse", &self.parse),
+            ("queue", &self.queue),
+            ("batch", &self.batch),
+            ("infer", &self.infer),
+            ("resp", &self.resp),
+            ("total", &self.total),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_index_matches_loadgen_scheme() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_is_exact_when_quiescent() {
+        let h = AtomicHistogram::new();
+        for us in [0, 1, 7, 100, 5000, 5000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum_us, 10108);
+        assert_eq!(s.buckets.iter().sum::<u64>(), s.count);
+        assert_eq!(s.cumulative()[HIST_BUCKETS - 1], 6);
+    }
+
+    #[test]
+    fn snapshot_consistent_under_concurrent_recording() {
+        let h = Arc::new(AtomicHistogram::new());
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..5000u64 {
+                        h.record_us((i * 37 + w) % 4096);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..200 {
+            let s = h.snapshot();
+            assert_eq!(
+                s.count,
+                s.buckets.iter().sum::<u64>(),
+                "torn snapshot: count disagrees with bucket sum"
+            );
+            let cum = s.cumulative();
+            for i in 1..HIST_BUCKETS {
+                assert!(cum[i] >= cum[i - 1], "cumulative buckets not monotone");
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 20_000);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 20_000);
+    }
+}

@@ -1,0 +1,43 @@
+//! Observability: request tracing, per-stage histograms, and leveled
+//! logging for the serving stack.
+//!
+//! Three surfaces, all std-only (see DESIGN.md "Observability"):
+//!
+//! * **Per-request headers** — every 2xx `/v1/infer[_batch]` response
+//!   carries `Server-Timing` (parse/queue/batch/infer/resp/total, ms)
+//!   and `X-Vitfpga-Tokens-Pre`/`-Post`/`X-Vitfpga-Layers` token
+//!   telemetry, on both edges and both wire formats.
+//! * **Trace dump** — sampled requests (1-in-N via
+//!   `--trace-sample-rate`, or forced per request with `?trace=1`) are
+//!   assembled into [`Trace`] records in a bounded [`TraceRing`];
+//!   `GET /debug/traces` renders them as Chrome `trace_event` JSON
+//!   ([`chrome_trace_json`]) loadable in Perfetto.
+//! * **Prometheus** — [`StageHistograms`] backs the
+//!   `vitfpga_http_stage_seconds{stage,le}` families in `/metrics`
+//!   (log2 buckets matching loadgen's client histogram), alongside the
+//!   per-layer `vitfpga_model_layer_kept_tokens{model,layer}` summary
+//!   fed by `TokenStats`.
+//!
+//! Hot-path contract: when a request is not sampled, tracing cost is a
+//! few monotonic-clock reads and integer stores into `Copy`
+//! fixed-capacity structs ([`LayerSpans`], [`StageTimes`]) — no heap
+//! allocation ([`traces_assembled`] pins this in tests) and no change
+//! to computed results (schedule-fixed forwards stay bit-identical).
+//!
+//! Logging: [`macro@crate::vitfpga_log`], re-exported as `obs::log!`,
+//! filtered by `VITFPGA_LOG` (error/warn/info/debug, default warn).
+
+pub mod hist;
+pub mod log;
+pub mod trace;
+
+pub use hist::{bucket_index, AtomicHistogram, HistSnapshot, StageHistograms, HIST_BUCKETS};
+pub use log::{log_emit, log_enabled, log_lines_emitted, Level};
+pub use trace::{
+    chrome_trace_json, traces_assembled, LayerSpan, LayerSpans, StageTimes, Trace, TraceRing,
+    MAX_TRACE_LAYERS,
+};
+
+// `obs::log!(warn, "target", "...")` — module- and macro-namespace
+// entries named `log` coexist (same shape as std's `vec`/`vec!`).
+pub use crate::vitfpga_log as log;

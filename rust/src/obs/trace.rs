@@ -1,0 +1,425 @@
+//! Hierarchical request traces: fixed-size span records, a bounded
+//! ring of sampled traces, and a Chrome `trace_event` JSON dump.
+//!
+//! Span taxonomy (one trace per sampled HTTP inference request):
+//!
+//! ```text
+//! request (infer | infer_batch) ............ total
+//! ├── parse    edge header+body parse
+//! ├── queue    submit → engine admission (channel wait)
+//! ├── batch    batcher dwell until dispatch
+//! ├── infer    backend forward of the serving batch
+//! │   ├── layer0   pre/post token rows, tdm?, adaptive?
+//! │   ├── layer1
+//! │   └── ...
+//! └── resp     response-body serialize
+//! ```
+//!
+//! Everything on the hot path is `Copy` and fixed-capacity:
+//! [`LayerSpans`] is a stack array filled by the funcsim layer loop
+//! (two `Instant` reads and a handful of integer stores per layer), and
+//! a heap-holding [`Trace`] is only assembled when the request is
+//! actually sampled. [`traces_assembled`] counts those assemblies
+//! globally so tests can assert the untraced path builds none.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-trace cap on recorded encoder layers. Deeper models still
+/// trace; layers beyond the cap are simply not recorded.
+pub const MAX_TRACE_LAYERS: usize = 16;
+
+/// One encoder layer of one backend forward: elapsed time, token rows
+/// entering/leaving the layer (batch-aggregate across the fused ragged
+/// batch), and the keep-decision provenance — `tdm` marks a pruning
+/// layer, `adaptive` that its keep count came from the input-adaptive
+/// score mass rather than the fixed schedule.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerSpan {
+    pub dur_ns: u64,
+    pub pre_rows: u32,
+    pub post_rows: u32,
+    pub tdm: bool,
+    pub adaptive: bool,
+}
+
+/// Fixed-capacity layer-span record for one forward pass. `Copy` and
+/// allocation-free so backends can capture it unconditionally.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerSpans {
+    len: usize,
+    spans: [LayerSpan; MAX_TRACE_LAYERS],
+}
+
+impl LayerSpans {
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Append a span; silently drops layers beyond [`MAX_TRACE_LAYERS`].
+    pub fn push(&mut self, span: LayerSpan) {
+        if self.len < MAX_TRACE_LAYERS {
+            self.spans[self.len] = span;
+            self.len += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[LayerSpan] {
+        &self.spans[..self.len]
+    }
+}
+
+/// Durations (µs) of the five request stages plus the measured total.
+/// The stages cover disjoint sub-intervals of the request window, so
+/// their sum is ≤ `total_us` by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTimes {
+    pub parse_us: u64,
+    pub queue_us: u64,
+    pub batch_us: u64,
+    pub infer_us: u64,
+    pub resp_us: u64,
+    pub total_us: u64,
+}
+
+impl StageTimes {
+    /// Sum of the five component stages (excludes `total_us`).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.parse_us + self.queue_us + self.batch_us + self.infer_us + self.resp_us
+    }
+
+    /// `Server-Timing` header value: `name;dur=<ms>` per stage, µs
+    /// precision (three decimals).
+    pub fn server_timing(&self) -> String {
+        format!(
+            "parse;dur={:.3}, queue;dur={:.3}, batch;dur={:.3}, infer;dur={:.3}, \
+             resp;dur={:.3}, total;dur={:.3}",
+            self.parse_us as f64 / 1e3,
+            self.queue_us as f64 / 1e3,
+            self.batch_us as f64 / 1e3,
+            self.infer_us as f64 / 1e3,
+            self.resp_us as f64 / 1e3,
+            self.total_us as f64 / 1e3,
+        )
+    }
+}
+
+/// One sampled request trace. Assembled (and its `model` string
+/// allocated) only after the sampling decision says yes.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Ring sequence number, assigned on push (0-based, monotone).
+    pub seq: u64,
+    pub model: String,
+    /// `"infer"` or `"infer_batch"`.
+    pub route: &'static str,
+    /// Request receive time, µs since server start (the trace clock).
+    pub start_us: u64,
+    pub stages: StageTimes,
+    pub layers: LayerSpans,
+    pub batch_size: usize,
+}
+
+/// Traces assembled process-wide since start (pushed into any ring).
+/// The untraced hot path must leave this unchanged — asserted by the
+/// observability test battery.
+static TRACES_ASSEMBLED: AtomicU64 = AtomicU64::new(0);
+
+pub fn traces_assembled() -> u64 {
+    TRACES_ASSEMBLED.load(Ordering::Relaxed)
+}
+
+/// Fixed-capacity ring of recent traces: wrapping overwrites the
+/// oldest entry, the newest are always retained.
+#[derive(Debug)]
+pub struct TraceRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+}
+
+#[derive(Debug)]
+struct RingInner {
+    slots: Vec<Option<Trace>>,
+    /// Total pushes ever; next slot is `pushed % capacity`.
+    pushed: u64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(1);
+        TraceRing {
+            capacity,
+            inner: Mutex::new(RingInner {
+                slots: vec![None; capacity],
+                pushed: 0,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Store a trace, stamping its ring sequence number and evicting
+    /// the oldest entry when full.
+    pub fn push(&self, mut trace: Trace) {
+        TRACES_ASSEMBLED.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        trace.seq = g.pushed;
+        let idx = (g.pushed % self.capacity as u64) as usize;
+        g.slots[idx] = Some(trace);
+        g.pushed += 1;
+    }
+
+    /// Traces ever pushed (not just retained).
+    pub fn pushed(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).pushed
+    }
+
+    /// Retained trace count (`min(pushed, capacity)`).
+    pub fn len(&self) -> usize {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.pushed.min(self.capacity as u64) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clones of the retained traces, oldest first.
+    pub fn snapshot(&self) -> Vec<Trace> {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let cap = self.capacity as u64;
+        let start = g.pushed.saturating_sub(cap);
+        (start..g.pushed)
+            .filter_map(|seq| g.slots[(seq % cap) as usize].clone())
+            .collect()
+    }
+}
+
+/// Render traces as Chrome `trace_event` JSON — `"X"` complete events
+/// only, loadable directly in `chrome://tracing` or Perfetto. One
+/// process (`pid` 1), one synthetic thread lane per trace (`tid` =
+/// `seq + 1`) so concurrent requests render side by side. Stage
+/// children are laid out back to back inside the request span (inter-
+/// stage gaps collapsed); layer children nest inside `infer`.
+pub fn chrome_trace_json(traces: &[Trace]) -> String {
+    let mut out = String::with_capacity(256 + traces.len() * 512);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    for t in traces {
+        let tid = t.seq + 1;
+        let ts0 = t.start_us as f64;
+        push_event(
+            &mut out,
+            &mut first,
+            t.route,
+            "request",
+            tid,
+            ts0,
+            t.stages.total_us as f64,
+            &format!(
+                "\"model\":{},\"batch_size\":{},\"seq\":{}",
+                Json::Str(t.model.clone()),
+                t.batch_size,
+                t.seq
+            ),
+        );
+        let mut cursor = ts0;
+        for (name, dur_us) in [
+            ("parse", t.stages.parse_us),
+            ("queue", t.stages.queue_us),
+            ("batch", t.stages.batch_us),
+            ("infer", t.stages.infer_us),
+            ("resp", t.stages.resp_us),
+        ] {
+            push_event(&mut out, &mut first, name, "stage", tid, cursor, dur_us as f64, "");
+            if name == "infer" {
+                let mut lcur = cursor;
+                for (l, s) in t.layers.as_slice().iter().enumerate() {
+                    let dur = s.dur_ns as f64 / 1e3;
+                    push_event(
+                        &mut out,
+                        &mut first,
+                        &format!("layer{}", l),
+                        "layer",
+                        tid,
+                        lcur,
+                        dur,
+                        &format!(
+                            "\"pre_rows\":{},\"post_rows\":{},\"tdm\":{},\"adaptive\":{}",
+                            s.pre_rows, s.post_rows, s.tdm, s.adaptive
+                        ),
+                    );
+                    lcur += dur;
+                }
+            }
+            cursor += dur_us as f64;
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_event(
+    out: &mut String,
+    first: &mut bool,
+    name: &str,
+    cat: &str,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    args: &str,
+) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push_str(&format!(
+        "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3}",
+        Json::Str(name.to_string()),
+        cat,
+        tid,
+        ts_us,
+        dur_us
+    ));
+    if args.is_empty() {
+        out.push('}');
+    } else {
+        out.push_str(&format!(",\"args\":{{{}}}}}", args));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(model: &str, total_us: u64) -> Trace {
+        Trace {
+            seq: 0,
+            model: model.to_string(),
+            route: "infer",
+            start_us: 100,
+            stages: StageTimes {
+                parse_us: 5,
+                queue_us: 10,
+                batch_us: 15,
+                infer_us: 40,
+                resp_us: 5,
+                total_us,
+            },
+            layers: LayerSpans::default(),
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn layer_spans_cap_at_max() {
+        let mut ls = LayerSpans::default();
+        for i in 0..(MAX_TRACE_LAYERS + 4) {
+            ls.push(LayerSpan {
+                dur_ns: i as u64,
+                ..LayerSpan::default()
+            });
+        }
+        assert_eq!(ls.len(), MAX_TRACE_LAYERS);
+        assert_eq!(ls.as_slice().last().unwrap().dur_ns, (MAX_TRACE_LAYERS - 1) as u64);
+        ls.clear();
+        assert!(ls.is_empty());
+    }
+
+    #[test]
+    fn stage_sum_and_server_timing_format() {
+        let t = trace("m", 80);
+        assert_eq!(t.stages.stage_sum_us(), 75);
+        let st = t.stages.server_timing();
+        assert!(st.contains("parse;dur=0.005"));
+        assert!(st.contains("infer;dur=0.040"));
+        assert!(st.contains("total;dur=0.080"));
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let ring = TraceRing::new(4);
+        for i in 0..10 {
+            ring.push(trace(&format!("m{}", i), 80));
+        }
+        assert_eq!(ring.pushed(), 10);
+        assert_eq!(ring.len(), 4);
+        let snap = ring.snapshot();
+        let seqs: Vec<u64> = snap.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let models: Vec<&str> = snap.iter().map(|t| t.model.as_str()).collect();
+        assert_eq!(models, vec!["m6", "m7", "m8", "m9"]);
+    }
+
+    #[test]
+    fn chrome_json_parses_and_events_nest() {
+        let mut t = trace("tiny", 80);
+        t.layers.push(LayerSpan {
+            dur_ns: 20_000,
+            pre_rows: 16,
+            post_rows: 8,
+            tdm: true,
+            adaptive: true,
+        });
+        t.layers.push(LayerSpan {
+            dur_ns: 10_000,
+            pre_rows: 8,
+            post_rows: 8,
+            tdm: false,
+            adaptive: false,
+        });
+        let ring = TraceRing::new(8);
+        ring.push(t);
+        let json = chrome_trace_json(&ring.snapshot());
+        let doc = Json::parse(&json).expect("chrome trace JSON must parse");
+        let events = match doc.get("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            other => panic!("traceEvents missing or not an array: {:?}", other),
+        };
+        // 1 request + 5 stages + 2 layers.
+        assert_eq!(events.len(), 8);
+        let num = |e: &Json, k: &str| -> f64 {
+            match e.get(k) {
+                Some(Json::Num(n)) => *n,
+                other => panic!("field {} missing: {:?}", k, other),
+            }
+        };
+        let req = &events[0];
+        assert_eq!(req.get("ph").and_then(Json::as_str), Some("X"));
+        let (r0, r1) = (num(req, "ts"), num(req, "ts") + num(req, "dur"));
+        for e in &events {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            let (ts, dur) = (num(e, "ts"), num(e, "dur"));
+            assert!(ts >= r0 - 1e-6 && ts + dur <= r1 + 1e-6, "child escapes request span");
+        }
+        // Layer events carry the token counts.
+        let layer0 = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("layer0"))
+            .expect("layer0 event");
+        let args = layer0.get("args").expect("layer args");
+        assert!(matches!(args.get("pre_rows"), Some(Json::Num(n)) if *n == 16.0));
+        assert!(matches!(args.get("post_rows"), Some(Json::Num(n)) if *n == 8.0));
+    }
+
+    #[test]
+    fn assembled_counter_tracks_pushes() {
+        let before = traces_assembled();
+        let ring = TraceRing::new(2);
+        ring.push(trace("a", 10));
+        ring.push(trace("b", 10));
+        assert_eq!(traces_assembled() - before, 2);
+    }
+}

@@ -369,6 +369,9 @@ impl Registry {
             .as_ref()
             .expect("cold registry entries always carry a spec")
             .clone();
+        crate::obs::log!(info, "registry",
+                         "cold start: building pool for model {} ({})",
+                         name, spec.spec_string());
         let threads = entry.threads;
         let stats = Arc::clone(&entry.token_stats);
         let pool = BackendPool::start_named(

@@ -146,6 +146,13 @@ pub struct HttpRequest {
     pub body: Vec<u8>,
     /// True for `HTTP/1.0` requests (keep-alive becomes opt-in).
     pub http10: bool,
+    /// When the successful parse pass over this request began — the
+    /// edge-side anchor the routing layer measures `total` against.
+    pub received: Instant,
+    /// Duration of that successful header+body parse pass, µs (earlier
+    /// partial passes over an incomplete buffer are not counted) — the
+    /// trace's "parse" span.
+    pub parse_us: u64,
 }
 
 impl HttpRequest {
@@ -376,6 +383,7 @@ impl HttpServer {
             }
         };
 
+        crate::obs::log!(info, "server::http", "listening on {} ({:?} edge)", local, edge);
         Ok(HttpServer {
             addr: local,
             shared,
@@ -453,6 +461,9 @@ fn accept_loop(
                     // inline (the accept thread pays the tiny write),
                     // count it, and move on.
                     shared.transport.overflow_total.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::log!(debug, "server::http",
+                                     "connection cap {} hit; answering 503",
+                                     config.max_connections);
                     let _ = stream.set_nonblocking(false);
                     let mut stream = stream;
                     let _ = write_response(&mut stream, &overflow_response(), false);
@@ -473,6 +484,8 @@ fn accept_loop(
                             .fetch_sub(1, Ordering::Relaxed);
                     });
                 if spawned.is_err() {
+                    crate::obs::log!(warn, "server::http",
+                                     "connection worker spawn failed; dropping connection");
                     shared.connections.fetch_sub(1, Ordering::AcqRel);
                     shared.transport.open_connections.fetch_sub(1, Ordering::Relaxed);
                 }
@@ -632,6 +645,7 @@ fn deadline_msg(phase: NeedPhase) -> &'static str {
 /// both the blocking reader and the evented state machine can call it
 /// after every read.
 fn try_parse(buf: &[u8], config: &HttpConfig) -> Parsed {
+    let t0 = Instant::now();
     // Phase 1: the header block must end "\r\n\r\n" within the bound.
     let header_end = match find_header_end(buf) {
         Some(pos) => pos,
@@ -729,6 +743,8 @@ fn try_parse(buf: &[u8], config: &HttpConfig) -> Parsed {
             headers,
             body,
             http10,
+            received: t0,
+            parse_us: t0.elapsed().as_micros() as u64,
         },
         body_start + body_len,
     )
@@ -1109,6 +1125,8 @@ impl EvLoop {
                                 // Could not dispatch: answer 503 inline
                                 // and close (in_flight span ends when
                                 // the write completes).
+                                crate::obs::log!(warn, "server::http",
+                                                 "dispatch thread spawn failed; answering 503");
                                 let resp = HttpResponse::new(
                                     503,
                                     reject_body("request dispatch failed"),

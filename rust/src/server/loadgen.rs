@@ -38,6 +38,13 @@
 //! `reconnects` the server forced by closing keep-alive connections
 //! mid-run (most interesting open-loop, where overload shows up as
 //! churn rather than back-pressure).
+//!
+//! **Server-side splits** — every 2xx response's `Server-Timing`
+//! header is parsed into [`ServerTimingStats`], so the report breaks
+//! the client-observed latency into the server's own parse / queue /
+//! batch / infer / resp stages (text summary line and `srv_*_ms` JSON
+//! keys). Against a server that predates the header the section is
+//! simply absent.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -459,6 +466,76 @@ impl LatencyHistogram {
     }
 }
 
+/// Stage names the serving edge reports in its `Server-Timing`
+/// header, in pipeline order. `total` is the whole request wall time;
+/// the five stages are time-disjoint slices of it.
+pub const SERVER_STAGES: [&str; 6] = ["parse", "queue", "batch", "infer", "resp", "total"];
+
+/// Server-side stage breakdown aggregated from `Server-Timing`
+/// response headers (`parse;dur=0.012, queue;dur=0.251, ...` — RFC
+/// 8941-ish `name;dur=<ms>` entries, comma-separated). Splits the
+/// client-observed latency into where the *server* spent it: parse,
+/// admission/queue wait, batch formation, backend forward, response
+/// serialisation, plus the server-measured total.
+#[derive(Debug, Clone, Default)]
+pub struct ServerTimingStats {
+    samples: u64,
+    /// Per-stage duration sums in microseconds, index-aligned with
+    /// [`SERVER_STAGES`].
+    sums_us: [u64; 6],
+}
+
+impl ServerTimingStats {
+    /// Parse one `Server-Timing` header value and fold its known
+    /// stages in. Unknown metric names and malformed entries are
+    /// skipped; the header counts as a sample if any stage parsed.
+    pub fn record(&mut self, header: &str) {
+        let mut hit = false;
+        for entry in header.split(',') {
+            let mut parts = entry.trim().split(';');
+            let name = parts.next().unwrap_or("").trim();
+            let Some(i) = SERVER_STAGES.iter().position(|s| *s == name) else {
+                continue;
+            };
+            for attr in parts {
+                if let Some(v) = attr.trim().strip_prefix("dur=") {
+                    if let Ok(ms) = v.trim().parse::<f64>() {
+                        if ms.is_finite() && ms >= 0.0 {
+                            self.sums_us[i] += (ms * 1e3).round() as u64;
+                            hit = true;
+                        }
+                    }
+                }
+            }
+        }
+        if hit {
+            self.samples += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &ServerTimingStats) {
+        self.samples += other.samples;
+        for (a, b) in self.sums_us.iter_mut().zip(other.sums_us.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Headers that contributed at least one stage.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Mean duration of one named stage in milliseconds, `None` until
+    /// a sample has been recorded or for an unknown stage name.
+    pub fn mean_ms(&self, stage: &str) -> Option<f64> {
+        if self.samples == 0 {
+            return None;
+        }
+        let i = SERVER_STAGES.iter().position(|s| *s == stage)?;
+        Some(self.sums_us[i] as f64 / self.samples as f64 / 1e3)
+    }
+}
+
 /// Aggregated outcome of one load-generation run.
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
@@ -494,6 +571,10 @@ pub struct LoadgenReport {
     pub reconnects: u64,
     /// Reconnects per wall second.
     pub reconnect_rate_per_s: f64,
+    /// Server-side stage breakdown parsed from `Server-Timing`
+    /// headers on 2xx responses (zero samples against servers that
+    /// predate the header).
+    pub server_timing: ServerTimingStats,
 }
 
 impl LoadgenReport {
@@ -531,6 +612,14 @@ impl LoadgenReport {
         num("connections", self.connections as f64);
         num("reconnects", self.reconnects as f64);
         num("reconnect_rate_per_s", self.reconnect_rate_per_s);
+        if self.server_timing.samples() > 0 {
+            num("server_timing_samples", self.server_timing.samples() as f64);
+            for stage in SERVER_STAGES {
+                if let Some(ms) = self.server_timing.mean_ms(stage) {
+                    num(&format!("srv_{}_ms", stage), ms);
+                }
+            }
+        }
         if !self.per_model.is_empty() {
             let mut pm = std::collections::BTreeMap::new();
             for (name, ok) in &self.per_model {
@@ -577,6 +666,15 @@ impl std::fmt::Display for LoadgenReport {
             }
             writeln!(f)?;
         }
+        if self.server_timing.samples() > 0 {
+            write!(f, "server stages (mean ms, {} samples):", self.server_timing.samples())?;
+            for stage in SERVER_STAGES {
+                if let Some(ms) = self.server_timing.mean_ms(stage) {
+                    write!(f, " {}={:.3}", stage, ms)?;
+                }
+            }
+            writeln!(f)?;
+        }
         write!(f, "{}", self.histogram.render())
     }
 }
@@ -597,6 +695,8 @@ struct WorkerTally {
     ok_by_target: Vec<u64>,
     /// TCP connections this worker's client established.
     connections: u64,
+    /// Server-side stage splits parsed from `Server-Timing` headers.
+    server_timing: ServerTimingStats,
 }
 
 /// One traffic target: a (possibly unnamed) model plus its probed
@@ -802,6 +902,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                                     tally.ok_by_target[ti] += 1;
                                     tally.latencies_us.push(us);
                                     tally.histogram.record(us);
+                                    if let Some(h) = resp.header("server-timing") {
+                                        tally.server_timing.record(h);
+                                    }
                                 }
                                 429 => tally.shed += 1,
                                 504 => tally.deadline += 1,
@@ -836,6 +939,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         merged.latencies_us.extend_from_slice(&t.latencies_us);
         merged.histogram.merge(&t.histogram);
         merged.connections += t.connections;
+        merged.server_timing.merge(&t.server_timing);
         for (a, b) in merged.ok_by_target.iter_mut().zip(&t.ok_by_target) {
             *a += b;
         }
@@ -884,5 +988,53 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         } else {
             0.0
         },
+        server_timing: merged.server_timing,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_timing_parses_all_stages() {
+        let mut st = ServerTimingStats::default();
+        st.record(
+            "parse;dur=0.010, queue;dur=0.200, batch;dur=0.040, \
+             infer;dur=1.500, resp;dur=0.050, total;dur=1.900",
+        );
+        assert_eq!(st.samples(), 1);
+        assert!((st.mean_ms("parse").unwrap() - 0.010).abs() < 1e-6);
+        assert!((st.mean_ms("infer").unwrap() - 1.500).abs() < 1e-6);
+        assert!((st.mean_ms("total").unwrap() - 1.900).abs() < 1e-6);
+    }
+
+    #[test]
+    fn server_timing_skips_unknown_and_malformed() {
+        let mut st = ServerTimingStats::default();
+        st.record("cache;dur=3.0, cpu;desc=\"x\"");
+        assert_eq!(st.samples(), 0, "no known stages -> no sample");
+        st.record("infer;dur=abc, total;dur=2.000");
+        assert_eq!(st.samples(), 1, "one parseable stage still counts");
+        assert_eq!(st.mean_ms("infer"), Some(0.0));
+        assert!((st.mean_ms("total").unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn server_timing_merge_averages_across_workers() {
+        let (mut a, mut b) = (ServerTimingStats::default(), ServerTimingStats::default());
+        a.record("total;dur=1.000");
+        b.record("total;dur=3.000");
+        a.merge(&b);
+        assert_eq!(a.samples(), 2);
+        assert!((a.mean_ms("total").unwrap() - 2.0).abs() < 1e-6);
+        assert_eq!(a.mean_ms("nope"), None);
+    }
+
+    #[test]
+    fn server_timing_empty_reports_none() {
+        let st = ServerTimingStats::default();
+        assert_eq!(st.samples(), 0);
+        assert_eq!(st.mean_ms("total"), None);
+    }
 }

@@ -34,7 +34,10 @@
 //! * [`routes`] — semantics: the `/v1/*` API (JSON and the raw
 //!   little-endian f32 [`routes::BINARY_CONTENT_TYPE`] encoding),
 //!   typed-error -> status-code mapping (429 shed, 504 deadline, 503
-//!   dead engines), health and Prometheus metrics;
+//!   dead engines), health and Prometheus metrics, plus the
+//!   observability surfaces ([`crate::obs`]): `Server-Timing` stage
+//!   headers, `/debug/traces` Chrome-trace dumps, per-stage latency
+//!   histograms and per-layer kept-token counters in `/metrics`;
 //! * [`loadgen`] — the client: an open-/closed-loop load generator
 //!   (and the reusable [`loadgen::HttpClient`]) driving that API in
 //!   either encoding.
@@ -45,5 +48,7 @@ pub mod poll;
 pub mod routes;
 
 pub use http::{EdgeKind, HttpConfig, HttpRequest, HttpResponse, HttpServer, TransportStats};
-pub use loadgen::{HttpClient, LoadMode, LoadgenConfig, LoadgenReport, WireFormat};
-pub use routes::{route, AppState, HttpCounters, BINARY_CONTENT_TYPE};
+pub use loadgen::{
+    HttpClient, LoadMode, LoadgenConfig, LoadgenReport, ServerTimingStats, WireFormat,
+};
+pub use routes::{route, AppState, HttpCounters, BINARY_CONTENT_TYPE, DEFAULT_TRACE_CAPACITY};

@@ -11,6 +11,16 @@
 //! | GET    | `/v1/models`      | registered models, specs, readiness       |
 //! | GET    | `/healthz`        | liveness + per-model shape (loadgen probes)|
 //! | GET    | `/metrics`        | Prometheus text, per-model `model=` labels|
+//! | GET    | `/debug/traces`   | sampled request traces, Chrome JSON       |
+//!
+//! **Observability** (DESIGN.md "Observability"): every 2xx inference
+//! response carries a `Server-Timing` header with the request's stage
+//! breakdown (parse/queue/batch/infer/resp/total, ms) plus
+//! `X-Vitfpga-Tokens-Pre`/`-Post`/`X-Vitfpga-Layers` token telemetry;
+//! requests with `?trace=1` (or 1-in-N via
+//! [`AppState::with_trace_sampling`]) are additionally recorded as
+//! hierarchical traces with per-encoder-layer child spans and dumped by
+//! `GET /debug/traces` as Chrome `trace_event` JSON.
 //!
 //! `/v1/infer` and `/v1/infer_batch` accept an optional `"model"` field
 //! naming a registered variant; requests without one go to the
@@ -68,10 +78,18 @@ use std::time::Instant;
 use crate::coordinator::{
     BackendPool, DeadlineExceeded, InferenceResponse, Overloaded, PoolMetricsReport, PoolStats,
 };
+use crate::obs::{
+    chrome_trace_json, HistSnapshot, LayerSpans, StageHistograms, StageTimes, Trace, TraceRing,
+    HIST_BUCKETS, MAX_TRACE_LAYERS,
+};
 use crate::registry::{Registry, UnknownModel};
 use crate::util::json::Json;
 
 use super::http::{HttpRequest, HttpResponse, TransportStats};
+
+/// Sampled traces retained for `GET /debug/traces` (newest win once
+/// the ring wraps).
+pub const DEFAULT_TRACE_CAPACITY: usize = 256;
 
 /// Media type of the opt-in binary tensor encoding: raw little-endian
 /// f32 values, no framing beyond `Content-Length`.
@@ -139,6 +157,8 @@ pub struct HttpCounters {
     pub unknown_model_total: AtomicU64,
     /// 504 responses (a subset of `status_5xx`).
     pub deadline_total: AtomicU64,
+    /// `GET /debug/traces` requests.
+    pub traces_total: AtomicU64,
 }
 
 /// Edge-observed successful request latency for one model, kept as a
@@ -218,6 +238,16 @@ pub struct AppState {
     /// Per-model Retry-After latency scales (keys fixed at startup —
     /// the registry's model set is immutable once built).
     latency: std::collections::BTreeMap<String, LatencyScale>,
+    /// Per-stage latency histograms of 2xx inference responses — the
+    /// `vitfpga_http_stage_seconds` families on `/metrics`.
+    pub stages: StageHistograms,
+    /// Recent sampled request traces, dumped by `GET /debug/traces` as
+    /// Chrome `trace_event` JSON.
+    pub traces: TraceRing,
+    /// Sample 1 in `sample_every` inference requests into `traces`
+    /// (0 = off). `?trace=1` forces a sample regardless.
+    sample_every: u64,
+    sample_counter: AtomicU64,
     started: Instant,
 }
 
@@ -245,8 +275,21 @@ impl AppState {
             counters: HttpCounters::default(),
             transport: Arc::default(),
             latency,
+            stages: StageHistograms::default(),
+            traces: TraceRing::new(DEFAULT_TRACE_CAPACITY),
+            sample_every: 0,
+            sample_counter: AtomicU64::new(0),
             started: Instant::now(),
         }
+    }
+
+    /// Sample 1 in `every` inference requests into the trace ring
+    /// (`--trace-sample-rate`). 0 (the default) disables rate-based
+    /// sampling; a `?trace=1` query parameter still forces a sample
+    /// per request either way.
+    pub fn with_trace_sampling(mut self, every: u64) -> AppState {
+        self.sample_every = every;
+        self
     }
 
     /// The default model's pool (built if cold) — the handle tests and
@@ -282,9 +325,15 @@ pub fn route(state: &AppState, req: &HttpRequest) -> HttpResponse {
             c.metrics_total.fetch_add(1, Ordering::Relaxed);
             metrics(state)
         }
-        (_, "/v1/infer" | "/v1/infer_batch" | "/v1/models" | "/healthz" | "/metrics") => {
-            error_response(405, "method not allowed for this path")
+        ("GET", "/debug/traces") => {
+            c.traces_total.fetch_add(1, Ordering::Relaxed);
+            traces_dump(state)
         }
+        (
+            _,
+            "/v1/infer" | "/v1/infer_batch" | "/v1/models" | "/healthz" | "/metrics"
+            | "/debug/traces",
+        ) => error_response(405, "method not allowed for this path"),
         _ => error_response(404, "no such route"),
     };
     match resp.status {
@@ -541,7 +590,90 @@ fn binary_batch_response(
         .with_header("X-Vitfpga-Queue-Depth", &queue_depth.to_string())
 }
 
+/// Decide (and count) whether this inference request gets a trace.
+/// `?trace=1` forces one; otherwise the CLI's 1-in-N rate applies.
+/// Called once per inference request *before* any work so the rate
+/// counter sees shed/failed requests too.
+fn sampled(state: &AppState, req: &HttpRequest) -> bool {
+    if req.query_param("trace").as_deref() == Some("1") {
+        return true;
+    }
+    if state.sample_every == 0 {
+        return false;
+    }
+    state.sample_counter.fetch_add(1, Ordering::Relaxed) % state.sample_every == 0
+}
+
+/// Assemble one answered request's stage breakdown. `resp_us` is the
+/// caller-measured response-body encode time; `total` is re-read from
+/// the edge's receive anchor *after* that encode, so the five stages
+/// are disjoint sub-intervals of `total` and always sum to at most it.
+fn stage_times(req: &HttpRequest, resp: &InferenceResponse, resp_us: u64) -> StageTimes {
+    StageTimes {
+        parse_us: req.parse_us,
+        queue_us: resp.queue_us,
+        batch_us: resp.batch_us,
+        infer_us: resp.infer_us,
+        resp_us,
+        total_us: req.received.elapsed().as_micros() as u64,
+    }
+}
+
+/// Attach the `Server-Timing` stage breakdown to a 2xx response.
+fn with_timing(resp: HttpResponse, st: &StageTimes) -> HttpResponse {
+    resp.with_header("Server-Timing", &st.server_timing())
+}
+
+/// Attach encoder token telemetry headers: rows entering the first
+/// layer, rows leaving the last, and the layer count. Counts are
+/// batch-aggregate across the serving fused batch (divide by
+/// `X-Vitfpga-Batch-Size` for the per-image mean). Omitted when the
+/// backend captured no spans.
+fn with_token_headers(resp: HttpResponse, layers: &LayerSpans) -> HttpResponse {
+    match layers.as_slice() {
+        [] => resp,
+        spans => resp
+            .with_header("X-Vitfpga-Tokens-Pre", &spans[0].pre_rows.to_string())
+            .with_header(
+                "X-Vitfpga-Tokens-Post",
+                &spans[spans.len() - 1].post_rows.to_string(),
+            )
+            .with_header("X-Vitfpga-Layers", &spans.len().to_string()),
+    }
+}
+
+/// Build the [`Trace`] record for one sampled request.
+fn trace_of(
+    state: &AppState,
+    model: &str,
+    route: &'static str,
+    req: &HttpRequest,
+    st: &StageTimes,
+    layers: &LayerSpans,
+    batch_size: usize,
+) -> Trace {
+    Trace {
+        seq: 0, // assigned by the ring on push
+        model: model.to_string(),
+        route,
+        start_us: req
+            .received
+            .saturating_duration_since(state.started)
+            .as_micros() as u64,
+        stages: *st,
+        layers: *layers,
+        batch_size,
+    }
+}
+
+/// `GET /debug/traces`: the retained sampled traces as Chrome
+/// `trace_event` JSON (open in chrome://tracing or Perfetto).
+fn traces_dump(state: &AppState) -> HttpResponse {
+    HttpResponse::new(200, chrome_trace_json(&state.traces.snapshot()).into_bytes())
+}
+
 fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
+    let sample = sampled(state, req);
     // Request encoding is keyed on Content-Type (binary bodies carry
     // the model in ?model=), response encoding on Accept — the two
     // negotiate independently.
@@ -579,11 +711,20 @@ fn infer_one(state: &AppState, req: &HttpRequest) -> HttpResponse {
         Ok(resp) => {
             record_latency(state, &resp);
             let depth = pool.stats().queue_depth;
-            if accepts_binary(req) {
+            let t_resp = Instant::now();
+            let http = if accepts_binary(req) {
                 binary_infer_response(&model, &resp, depth)
             } else {
                 json_response(200, &response_json(&model, &resp, depth))
+            };
+            let st = stage_times(req, &resp, t_resp.elapsed().as_micros() as u64);
+            state.stages.record(&st);
+            if sample {
+                state
+                    .traces
+                    .push(trace_of(state, &model, "infer", req, &st, &resp.layers, resp.batch_size));
             }
+            with_timing(with_token_headers(http, &resp.layers), &st)
         }
         Err(e) => pool_error_response(state, &pool, &e),
     }
@@ -598,6 +739,7 @@ fn record_latency(state: &AppState, resp: &InferenceResponse) {
 }
 
 fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
+    let sample = sampled(state, req);
     // One model per batch request: the whole batch routes to one pool
     // (mixed-model batches would defeat the per-replica batcher).
     let (model, pool, images) = if binary_request(req) {
@@ -675,18 +817,52 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
             Err(e) => return pool_error_response(state, &pool, &e),
         }
     }
-    if accepts_binary(req) {
-        return binary_batch_response(&model, &responses, queue_depth);
-    }
-    let results: Vec<Json> = responses
+    let t_resp = Instant::now();
+    let http = if accepts_binary(req) {
+        binary_batch_response(&model, &responses, queue_depth)
+    } else {
+        let results: Vec<Json> = responses
+            .iter()
+            .map(|resp| response_json(&model, resp, queue_depth))
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(model.clone()));
+        m.insert("count".into(), Json::Num(results.len() as f64));
+        m.insert("results".into(), Json::Arr(results));
+        json_response(200, &Json::Obj(m))
+    };
+    let resp_us = t_resp.elapsed().as_micros() as u64;
+    // Header/trace carry the single *slowest* request's breakdown —
+    // its engine stages are time-disjoint within this HTTP request's
+    // window, so the Server-Timing sum stays ≤ the measured total
+    // (per-stage maxima across different requests would not).
+    let slowest = responses
         .iter()
-        .map(|resp| response_json(&model, resp, queue_depth))
-        .collect();
-    let mut m = BTreeMap::new();
-    m.insert("model".into(), Json::Str(model));
-    m.insert("count".into(), Json::Num(results.len() as f64));
-    m.insert("results".into(), Json::Arr(results));
-    json_response(200, &Json::Obj(m))
+        .max_by_key(|r| r.queue_us + r.batch_us + r.infer_us)
+        .expect("batch handler requires a non-empty image set");
+    let st = stage_times(req, slowest, resp_us);
+    // Histograms see every request's engine stages individually; the
+    // edge-side parse/resp/total spans are per HTTP request.
+    for r in &responses {
+        state.stages.queue.record_us(r.queue_us);
+        state.stages.batch.record_us(r.batch_us);
+        state.stages.infer.record_us(r.infer_us);
+    }
+    state.stages.parse.record_us(st.parse_us);
+    state.stages.resp.record_us(st.resp_us);
+    state.stages.total.record_us(st.total_us);
+    if sample {
+        state.traces.push(trace_of(
+            state,
+            &model,
+            "infer_batch",
+            req,
+            &st,
+            &slowest.layers,
+            slowest.batch_size,
+        ));
+    }
+    with_timing(with_token_headers(http, &slowest.layers), &st)
 }
 
 /// `GET /v1/models`: every registered variant, its spec, readiness and
@@ -1070,6 +1246,7 @@ fn metrics(state: &AppState) -> HttpResponse {
             ("route=\"models\"".to_string(), c.models_total.load(Ordering::Relaxed) as f64),
             ("route=\"healthz\"".to_string(), c.healthz_total.load(Ordering::Relaxed) as f64),
             ("route=\"metrics\"".to_string(), c.metrics_total.load(Ordering::Relaxed) as f64),
+            ("route=\"traces\"".to_string(), c.traces_total.load(Ordering::Relaxed) as f64),
         ],
     );
     prom_block(
@@ -1105,8 +1282,94 @@ fn metrics(state: &AppState) -> HttpResponse {
         c.deadline_total.load(Ordering::Relaxed) as f64,
     );
 
+    prom_stage_histograms(&mut out, &state.stages);
+    prom_layer_kept_tokens(&mut out, state);
+
     HttpResponse::new(200, out.into_bytes())
         .with_header("Content-Type", "text/plain; version=0.0.4")
+}
+
+/// The `vitfpga_http_stage_seconds{stage,le}` histogram families: one
+/// per request stage, log2 buckets identical to loadgen's client-side
+/// histogram (`le` = 2^i µs expressed in seconds, final bucket +Inf).
+/// Rendered from consistent [`HistSnapshot`]s, so within one scrape the
+/// cumulative buckets are monotone and the +Inf bucket equals `_count`.
+fn prom_stage_histograms(out: &mut String, stages: &StageHistograms) {
+    out.push_str(
+        "# HELP vitfpga_http_stage_seconds Per-stage latency of 2xx inference requests \
+         (parse/queue/batch/infer/resp spans + end-to-end total).\n\
+         # TYPE vitfpga_http_stage_seconds histogram\n",
+    );
+    for (stage, hist) in stages.iter() {
+        let snap = hist.snapshot();
+        let mut cum = 0u64;
+        for (i, b) in snap.buckets.iter().enumerate() {
+            cum += b;
+            if i == HIST_BUCKETS - 1 {
+                out.push_str(&format!(
+                    "vitfpga_http_stage_seconds_bucket{{stage=\"{}\",le=\"+Inf\"}} {}\n",
+                    stage, cum
+                ));
+            } else {
+                out.push_str(&format!(
+                    "vitfpga_http_stage_seconds_bucket{{stage=\"{}\",le=\"{}\"}} {}\n",
+                    stage,
+                    HistSnapshot::upper_bound_s(i),
+                    cum
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "vitfpga_http_stage_seconds_sum{{stage=\"{}\"}} {}\n",
+            stage,
+            snap.sum_us as f64 / 1e6
+        ));
+        out.push_str(&format!(
+            "vitfpga_http_stage_seconds_count{{stage=\"{}\"}} {}\n",
+            stage, snap.count
+        ));
+    }
+}
+
+/// The per-layer token summary `vitfpga_model_layer_kept_tokens
+/// {model,layer}`: `_sum` = token rows that left the layer (aggregate
+/// across all fused forwards), `_count` = images that passed through
+/// it — their ratio is the mean per-image kept-token count after that
+/// layer, the paper's dynamic-pruning signal per depth.
+fn prom_layer_kept_tokens(out: &mut String, state: &AppState) {
+    let mut rows: Vec<(String, u64, u64)> = Vec::new();
+    for name in state.registry.names() {
+        if let Some(ts) = state.registry.token_stats(name) {
+            for layer in 0..MAX_TRACE_LAYERS {
+                let (images, kept) = ts.layer_totals(layer);
+                if images > 0 {
+                    rows.push((
+                        format!("model=\"{}\",layer=\"{}\"", name, layer),
+                        kept,
+                        images,
+                    ));
+                }
+            }
+        }
+    }
+    if rows.is_empty() {
+        return;
+    }
+    out.push_str(
+        "# HELP vitfpga_model_layer_kept_tokens Token rows leaving each encoder layer \
+         (_sum) over images inferred through it (_count); fused paths only.\n\
+         # TYPE vitfpga_model_layer_kept_tokens summary\n",
+    );
+    for (labels, kept, images) in &rows {
+        out.push_str(&format!(
+            "vitfpga_model_layer_kept_tokens_sum{{{}}} {}\n",
+            labels, kept
+        ));
+        out.push_str(&format!(
+            "vitfpga_model_layer_kept_tokens_count{{{}}} {}\n",
+            labels, images
+        ));
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,627 @@
+//! Observability battery: end-to-end request tracing over real
+//! loopback sockets. Covers the `Server-Timing` stage breakdown on
+//! both transport edges and both wire formats (stage durations must
+//! sum to at most the measured total), the token telemetry headers,
+//! `?trace=1` / `--trace-sample-rate` sampling into the
+//! `/debug/traces` Chrome `trace_event` dump with one child span per
+//! encoder layer (pre/post token rows pinned against a direct
+//! datapath run and the registry's `TokenStats`), bit-identity of the
+//! traced vs untraced forward, the no-trace-assembly guarantee of the
+//! unsampled hot path, and `/metrics` per-stage histogram consistency
+//! (bucket monotonicity, `+Inf == _count`) including under concurrent
+//! scrape-while-serving load. Runs with the default feature set.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use vitfpga::backend::NativeBackend;
+use vitfpga::config::{PruningSetting, TEST_TINY};
+use vitfpga::coordinator::{BackendPool, BatchPolicy, PoolPolicy};
+use vitfpga::funcsim::{FuncSim, Precision};
+use vitfpga::obs::LayerSpans;
+use vitfpga::registry::{ModelSpec, Registry};
+use vitfpga::server::{
+    route, AppState, EdgeKind, HttpClient, HttpConfig, HttpRequest, HttpServer,
+    BINARY_CONTENT_TYPE,
+};
+use vitfpga::util::json::Json;
+use vitfpga::util::rng::Rng;
+
+const SEED: u64 = 42;
+const SETTING: (usize, f64, f64) = (8, 0.7, 0.7);
+/// One registered spec model (threads pinned to 1) — the cold-build
+/// path shares `TokenStats` with the registry, unlike prebuilt pools.
+const SPEC: &str = "test-tiny@b8_rb0.7_rt0.7@seed=5";
+const ADAPTIVE_SPEC: &str = "test-tiny@b8_rb0.7_rt0.7@adaptive@seed=5";
+
+fn batch_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }
+}
+
+fn native_pool() -> BackendPool {
+    let (b, rb, rt) = SETTING;
+    BackendPool::start(
+        move |_i| {
+            NativeBackend::synthetic(&TEST_TINY, &PruningSetting::new(b, rb, rt), SEED, Precision::F32)
+                .map(|nb| nb.with_threads(1))
+        },
+        PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 },
+    )
+    .expect("native pool start")
+}
+
+fn spec_registry(spec: &str) -> Registry {
+    let defaults = PoolPolicy { replicas: 1, batch: batch_policy(), queue_capacity: 64 };
+    Registry::builder(defaults)
+        .register("m", ModelSpec::parse(spec).expect("spec parses"), Some(1))
+        .expect("register m")
+        .finish()
+        .expect("one-model registry")
+}
+
+fn serve_state(
+    edge: EdgeKind,
+    registry: Registry,
+    trace_every: u64,
+) -> (HttpServer, Arc<AppState>) {
+    let state =
+        Arc::new(AppState::with_registry(registry, None).with_trace_sampling(trace_every));
+    let handler_state = Arc::clone(&state);
+    let server = HttpServer::start_with(
+        "127.0.0.1:0",
+        HttpConfig::default(),
+        edge,
+        Arc::clone(&state.transport),
+        move |req: &HttpRequest| route(&handler_state, req),
+    )
+    .expect("http server start");
+    (server, state)
+}
+
+fn client_for(server: &HttpServer) -> HttpClient {
+    HttpClient::connect(&server.local_addr().to_string(), Duration::from_secs(10))
+        .expect("client connect")
+}
+
+fn synthetic_image(per: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..per).map(|_| rng.normal()).collect()
+}
+
+fn image_body(img: &[f32]) -> Vec<u8> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "image".to_string(),
+        Json::Arr(img.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(m).to_string().into_bytes()
+}
+
+fn images_body(imgs: &[Vec<f32>]) -> Vec<u8> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "images".to_string(),
+        Json::Arr(
+            imgs.iter()
+                .map(|img| Json::Arr(img.iter().map(|&v| Json::Num(v as f64)).collect()))
+                .collect(),
+        ),
+    );
+    Json::Obj(m).to_string().into_bytes()
+}
+
+fn binary_image_bytes(img: &[f32]) -> Vec<u8> {
+    img.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// Parse a `Server-Timing` header into `stage -> dur ms`.
+fn timing_map(header: &str) -> BTreeMap<String, f64> {
+    header
+        .split(',')
+        .filter_map(|entry| {
+            let mut parts = entry.trim().split(';');
+            let name = parts.next()?.trim().to_string();
+            let dur = parts.find_map(|p| p.trim().strip_prefix("dur=")?.parse::<f64>().ok())?;
+            Some((name, dur))
+        })
+        .collect()
+}
+
+/// The acceptance invariant: every stage present, and the five
+/// component stages sum to at most the server-measured total.
+fn assert_timing_invariant(header: &str, context: &str) {
+    let t = timing_map(header);
+    for stage in ["parse", "queue", "batch", "infer", "resp", "total"] {
+        assert!(t.contains_key(stage), "{}: Server-Timing lacks {}: {}", context, stage, header);
+        assert!(t[stage] >= 0.0, "{}: negative {} in {}", context, stage, header);
+    }
+    let sum = t["parse"] + t["queue"] + t["batch"] + t["infer"] + t["resp"];
+    assert!(
+        sum <= t["total"] + 1e-3,
+        "{}: stage sum {:.3} ms exceeds total {:.3} ms ({})",
+        context,
+        sum,
+        t["total"],
+        header
+    );
+    assert!(t["infer"] > 0.0, "{}: a real forward takes nonzero time", context);
+}
+
+fn assert_token_headers(
+    resp: &vitfpga::server::loadgen::ClientResponse,
+    context: &str,
+) -> (u32, u32, usize) {
+    let pre: u32 = resp
+        .header("x-vitfpga-tokens-pre")
+        .unwrap_or_else(|| panic!("{}: missing X-Vitfpga-Tokens-Pre", context))
+        .parse()
+        .expect("pre parses");
+    let post: u32 = resp
+        .header("x-vitfpga-tokens-post")
+        .unwrap_or_else(|| panic!("{}: missing X-Vitfpga-Tokens-Post", context))
+        .parse()
+        .expect("post parses");
+    let layers: usize = resp
+        .header("x-vitfpga-layers")
+        .unwrap_or_else(|| panic!("{}: missing X-Vitfpga-Layers", context))
+        .parse()
+        .expect("layers parses");
+    assert_eq!(layers, TEST_TINY.num_layers, "{}: layer count", context);
+    assert!(pre >= post, "{}: token pruning cannot add rows ({} -> {})", context, pre, post);
+    assert!(post > 0, "{}: CLS token always survives", context);
+    (pre, post, layers)
+}
+
+// ---------------------------------------------------------------------------
+// Server-Timing on both edges x both wire formats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_timing_on_infer_all_edges_and_wires() {
+    for edge in [EdgeKind::Threaded, EdgeKind::Evented] {
+        let (server, state) = serve_state(edge, Registry::single(native_pool()), 0);
+        let per = state.default_pool().expect("pool").input_elems_per_image;
+        let img = synthetic_image(per, 7);
+        let mut client = client_for(&server);
+
+        let json = client.post("/v1/infer", &image_body(&img)).expect("json infer");
+        assert_eq!(json.status, 200, "body: {:?}", String::from_utf8_lossy(&json.body));
+        let ctx = format!("{:?}/json/infer", edge);
+        assert_timing_invariant(json.header("server-timing").expect("Server-Timing"), &ctx);
+        assert_token_headers(&json, &ctx);
+
+        let bin = client
+            .post_with(
+                "/v1/infer",
+                &binary_image_bytes(&img),
+                BINARY_CONTENT_TYPE,
+                Some(BINARY_CONTENT_TYPE),
+            )
+            .expect("binary infer");
+        assert_eq!(bin.status, 200, "body: {:?}", String::from_utf8_lossy(&bin.body));
+        let ctx = format!("{:?}/binary/infer", edge);
+        assert_timing_invariant(bin.header("server-timing").expect("Server-Timing"), &ctx);
+        let (pre_j, post_j, _) = assert_token_headers(&json, &ctx);
+        let (pre_b, post_b, _) = assert_token_headers(&bin, &ctx);
+        assert_eq!(
+            (pre_j, post_j),
+            (pre_b, post_b),
+            "{}: same image, same token counts across wire formats",
+            ctx
+        );
+    }
+}
+
+#[test]
+fn server_timing_on_infer_batch_all_edges_and_wires() {
+    for edge in [EdgeKind::Threaded, EdgeKind::Evented] {
+        let (server, state) = serve_state(edge, Registry::single(native_pool()), 0);
+        let per = state.default_pool().expect("pool").input_elems_per_image;
+        let imgs: Vec<Vec<f32>> = (0..3).map(|i| synthetic_image(per, 20 + i)).collect();
+        let mut client = client_for(&server);
+
+        let json = client
+            .post("/v1/infer_batch", &images_body(&imgs))
+            .expect("json batch");
+        assert_eq!(json.status, 200, "body: {:?}", String::from_utf8_lossy(&json.body));
+        let ctx = format!("{:?}/json/infer_batch", edge);
+        assert_timing_invariant(json.header("server-timing").expect("Server-Timing"), &ctx);
+        assert_token_headers(&json, &ctx);
+
+        let flat: Vec<u8> = imgs.iter().flat_map(|i| binary_image_bytes(i)).collect();
+        let bin = client
+            .post_with("/v1/infer_batch", &flat, BINARY_CONTENT_TYPE, Some(BINARY_CONTENT_TYPE))
+            .expect("binary batch");
+        assert_eq!(bin.status, 200, "body: {:?}", String::from_utf8_lossy(&bin.body));
+        let ctx = format!("{:?}/binary/infer_batch", edge);
+        assert_timing_invariant(bin.header("server-timing").expect("Server-Timing"), &ctx);
+        assert_token_headers(&bin, &ctx);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ?trace=1 -> /debug/traces, pinned against the datapath
+// ---------------------------------------------------------------------------
+
+/// Direct datapath reference run: the layer spans the backend should
+/// have captured for `img` at batch 1.
+fn reference_spans(spec: &str, img: &[f32]) -> LayerSpans {
+    let sim = FuncSim::synthesize_spec(&ModelSpec::parse(spec).expect("spec"))
+        .expect("reference sim");
+    let mut scratch = sim.batch_scratch(1);
+    let mut logits = vec![0.0f32; sim.num_classes()];
+    let mut spans = LayerSpans::default();
+    sim.forward_batch_counted_spans(img, 1, &mut scratch, &mut logits, 1, Some(&mut spans))
+        .expect("reference forward");
+    spans
+}
+
+fn trace_round_trip(spec: &str) {
+    let (server, state) = serve_state(EdgeKind::Threaded, spec_registry(spec), 0);
+    let mut client = client_for(&server);
+    let img = synthetic_image(TEST_TINY.image_size * TEST_TINY.image_size * 3, 33);
+
+    // Warm the pool (cold build), then snapshot the per-layer token
+    // counters so the traced request's delta is exact.
+    let warm = client.post("/v1/infer", &image_body(&img)).expect("warm request");
+    assert_eq!(warm.status, 200, "body: {:?}", String::from_utf8_lossy(&warm.body));
+    let stats = state.registry.token_stats("m").expect("registered model has stats");
+    let before: Vec<(u64, u64)> =
+        (0..TEST_TINY.num_layers).map(|l| stats.layer_totals(l)).collect();
+
+    // Traced request (binary wire — tracing is wire-agnostic).
+    let resp = client
+        .post_with(
+            "/v1/infer?trace=1",
+            &binary_image_bytes(&img),
+            BINARY_CONTENT_TYPE,
+            Some(BINARY_CONTENT_TYPE),
+        )
+        .expect("traced infer");
+    assert_eq!(resp.status, 200, "body: {:?}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(state.traces.pushed(), 1, "?trace=1 must record exactly one trace");
+
+    let want = reference_spans(spec, &img);
+    assert_eq!(want.len(), TEST_TINY.num_layers);
+
+    // Headers match the reference datapath run.
+    let (pre, post, _) = assert_token_headers(&resp, spec);
+    assert_eq!(pre, want.as_slice()[0].pre_rows, "Tokens-Pre pins to the datapath");
+    assert_eq!(
+        post,
+        want.as_slice()[want.len() - 1].post_rows,
+        "Tokens-Post pins to the datapath"
+    );
+
+    // The recorded trace carries one layer child per encoder layer with
+    // the exact keep decisions.
+    let traces = state.traces.snapshot();
+    assert_eq!(traces.len(), 1);
+    let got = traces[0].layers;
+    assert_eq!(got.len(), want.len(), "one span per encoder layer");
+    for (l, (g, w)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+        assert_eq!(g.pre_rows, w.pre_rows, "layer {} pre_rows", l);
+        assert_eq!(g.post_rows, w.post_rows, "layer {} post_rows", l);
+        assert_eq!(g.tdm, w.tdm, "layer {} tdm flag", l);
+        assert_eq!(g.adaptive, w.adaptive, "layer {} adaptive flag", l);
+        assert!(g.dur_ns > 0, "layer {} has a measured duration", l);
+    }
+    // test-tiny hosts one TDM (schedule index 2 of [2, 6, 9]).
+    assert!(got.as_slice()[2].tdm, "layer 2 is the TDM layer");
+    assert_eq!(
+        got.as_slice().iter().filter(|s| s.tdm).count(),
+        1,
+        "exactly one TDM layer in a 4-layer model"
+    );
+
+    // The registry's TokenStats advanced by exactly this one image.
+    for l in 0..TEST_TINY.num_layers {
+        let (images, kept) = stats.layer_totals(l);
+        assert_eq!(images - before[l].0, 1, "layer {} image count delta", l);
+        assert_eq!(
+            kept - before[l].1,
+            want.as_slice()[l].post_rows as u64,
+            "layer {} kept-row delta pins to the datapath",
+            l
+        );
+    }
+
+    // The Chrome dump parses, nests, and carries the same numbers.
+    let dump = client.get("/debug/traces").expect("traces dump");
+    assert_eq!(dump.status, 200);
+    let doc = dump.json().expect("trace dump is JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array")
+        .clone();
+    // 1 request + 5 stages + num_layers layer children.
+    assert_eq!(events.len(), 1 + 5 + TEST_TINY.num_layers);
+    for e in &events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "complete events only");
+    }
+    let req_ev = events
+        .iter()
+        .find(|e| e.get("cat").and_then(Json::as_str) == Some("request"))
+        .expect("request span");
+    assert_eq!(req_ev.get("name").and_then(Json::as_str), Some("infer"));
+    assert_eq!(
+        req_ev.at(&["args", "model"]).and_then(Json::as_str),
+        Some("m"),
+        "trace names the routed model"
+    );
+    for l in 0..TEST_TINY.num_layers {
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some(&format!("layer{}", l)))
+            .unwrap_or_else(|| panic!("layer{} event missing", l));
+        assert_eq!(
+            ev.at(&["args", "pre_rows"]).and_then(Json::as_f64),
+            Some(want.as_slice()[l].pre_rows as f64),
+            "layer {} pre_rows in the dump",
+            l
+        );
+        assert_eq!(
+            ev.at(&["args", "post_rows"]).and_then(Json::as_f64),
+            Some(want.as_slice()[l].post_rows as f64),
+            "layer {} post_rows in the dump",
+            l
+        );
+    }
+}
+
+#[test]
+fn trace_query_pins_layer_spans_schedule_fixed() {
+    trace_round_trip(SPEC);
+}
+
+#[test]
+fn trace_query_pins_layer_spans_adaptive() {
+    trace_round_trip(ADAPTIVE_SPEC);
+}
+
+#[test]
+fn adaptive_flag_marks_only_tdm_layers() {
+    let img = synthetic_image(TEST_TINY.image_size * TEST_TINY.image_size * 3, 44);
+    let fixed = reference_spans(SPEC, &img);
+    let adaptive = reference_spans(ADAPTIVE_SPEC, &img);
+    for (l, (f, a)) in fixed.as_slice().iter().zip(adaptive.as_slice()).enumerate() {
+        assert_eq!(f.tdm, a.tdm, "layer {}: TDM placement is spec-independent", l);
+        assert!(!f.adaptive, "layer {}: schedule-fixed spans never mark adaptive", l);
+        assert_eq!(
+            a.adaptive, a.tdm,
+            "layer {}: adaptive marks exactly the TDM layers of an @adaptive model",
+            l
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity: tracing must not perturb the forward
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_forward_is_bit_identical_to_untraced() {
+    let (b, rb, rt) = SETTING;
+    for adaptive in [false, true] {
+        let sim = FuncSim::synthesize(
+            &TEST_TINY,
+            &PruningSetting::new(b, rb, rt),
+            SEED,
+            Precision::F32,
+        )
+        .expect("sim")
+        .with_adaptive_tdm(adaptive);
+        let batch = 3;
+        let per = sim.input_elems();
+        let flat: Vec<f32> = (0..batch)
+            .flat_map(|i| synthetic_image(per, 60 + i as u64))
+            .collect();
+
+        let mut scratch_a = sim.batch_scratch(batch);
+        let mut logits_a = vec![0.0f32; batch * sim.num_classes()];
+        let rows_a = sim
+            .forward_batch_counted_into(&flat, batch, &mut scratch_a, &mut logits_a, 2)
+            .expect("untraced forward");
+
+        let mut scratch_b = sim.batch_scratch(batch);
+        let mut logits_b = vec![0.0f32; batch * sim.num_classes()];
+        let mut spans = LayerSpans::default();
+        let rows_b = sim
+            .forward_batch_counted_spans(
+                &flat,
+                batch,
+                &mut scratch_b,
+                &mut logits_b,
+                2,
+                Some(&mut spans),
+            )
+            .expect("traced forward");
+
+        assert_eq!(rows_a, rows_b, "adaptive={}: row counts diverge", adaptive);
+        for (i, (a, bb)) in logits_a.iter().zip(&logits_b).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                bb.to_bits(),
+                "adaptive={}: logit {} differs traced vs untraced",
+                adaptive,
+                i
+            );
+        }
+        assert_eq!(spans.len(), TEST_TINY.num_layers, "spans captured alongside");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sampling policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn untraced_requests_assemble_no_traces() {
+    let (server, state) = serve_state(EdgeKind::Threaded, Registry::single(native_pool()), 0);
+    let per = state.default_pool().expect("pool").input_elems_per_image;
+    let img = synthetic_image(per, 9);
+    let mut client = client_for(&server);
+    for _ in 0..5 {
+        let resp = client.post("/v1/infer", &image_body(&img)).expect("infer");
+        assert_eq!(resp.status, 200);
+    }
+    // The sampling-off hot path must assemble zero traces — the ring's
+    // push counter is the per-server span-assembly instrument.
+    assert_eq!(state.traces.pushed(), 0, "no sampling -> no trace assembly");
+    let doc = client.get("/debug/traces").expect("dump").json().expect("json");
+    assert_eq!(
+        doc.get("traceEvents").and_then(|e| e.as_arr()).map(|a| a.len()),
+        Some(0),
+        "dump of an untraced run is empty"
+    );
+    // Wrong method on the debug route.
+    assert_eq!(client.post("/debug/traces", b"{}").expect("405").status, 405);
+}
+
+#[test]
+fn rate_sampling_traces_one_in_n_and_query_forces() {
+    let (server, state) = serve_state(EdgeKind::Threaded, Registry::single(native_pool()), 2);
+    let per = state.default_pool().expect("pool").input_elems_per_image;
+    let img = synthetic_image(per, 13);
+    let mut client = client_for(&server);
+    for _ in 0..4 {
+        assert_eq!(client.post("/v1/infer", &image_body(&img)).expect("infer").status, 200);
+    }
+    assert_eq!(state.traces.pushed(), 2, "1-in-2 sampling over 4 requests");
+    for _ in 0..2 {
+        assert_eq!(
+            client.post("/v1/infer?trace=1", &image_body(&img)).expect("infer").status,
+            200
+        );
+    }
+    assert_eq!(state.traces.pushed(), 4, "?trace=1 forces a sample regardless of rate");
+}
+
+// ---------------------------------------------------------------------------
+// /metrics exposition
+// ---------------------------------------------------------------------------
+
+/// Parse every `vitfpga_http_stage_seconds_bucket{stage="<stage>",...}`
+/// sample for one stage, in exposition order, plus its `_count`.
+fn stage_buckets(scrape: &str, stage: &str) -> (Vec<f64>, f64) {
+    let bucket_prefix = format!("vitfpga_http_stage_seconds_bucket{{stage=\"{}\",", stage);
+    let count_prefix = format!("vitfpga_http_stage_seconds_count{{stage=\"{}\"}}", stage);
+    let buckets: Vec<f64> = scrape
+        .lines()
+        .filter(|l| l.starts_with(&bucket_prefix))
+        .map(|l| l.rsplit(' ').next().unwrap().parse().expect("bucket value"))
+        .collect();
+    let count = scrape
+        .lines()
+        .find(|l| l.starts_with(&count_prefix))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("missing {} in scrape", count_prefix));
+    (buckets, count)
+}
+
+fn assert_stage_histograms_consistent(scrape: &str) {
+    for stage in ["parse", "queue", "batch", "infer", "resp", "total"] {
+        let (buckets, count) = stage_buckets(scrape, stage);
+        assert!(!buckets.is_empty(), "stage {} has bucket samples", stage);
+        for w in buckets.windows(2) {
+            assert!(
+                w[1] >= w[0],
+                "stage {}: cumulative buckets must be monotone ({:?})",
+                stage,
+                buckets
+            );
+        }
+        assert_eq!(
+            *buckets.last().unwrap(),
+            count,
+            "stage {}: +Inf bucket equals _count",
+            stage
+        );
+    }
+}
+
+#[test]
+fn metrics_stage_histograms_and_layer_tokens() {
+    let (server, state) = serve_state(EdgeKind::Threaded, spec_registry(SPEC), 0);
+    let img = synthetic_image(TEST_TINY.image_size * TEST_TINY.image_size * 3, 17);
+    let mut client = client_for(&server);
+    let served = 3;
+    for _ in 0..served {
+        assert_eq!(client.post("/v1/infer", &image_body(&img)).expect("infer").status, 200);
+    }
+    let scrape = String::from_utf8(client.get("/metrics").expect("scrape").body).expect("UTF-8");
+    assert_stage_histograms_consistent(&scrape);
+    let (_, count) = stage_buckets(&scrape, "infer");
+    assert_eq!(count, served as f64, "every 2xx infer lands in the stage histogram");
+
+    // Per-layer kept-token summary, count == images served.
+    for layer in 0..TEST_TINY.num_layers {
+        let line = format!(
+            "vitfpga_model_layer_kept_tokens_count{{model=\"m\",layer=\"{}\"}}",
+            layer
+        );
+        let v: f64 = scrape
+            .lines()
+            .find(|l| l.starts_with(&line))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("missing {} in scrape:\n{}", line, scrape));
+        assert_eq!(v, served as f64, "layer {} image count", layer);
+        let sum_line = format!(
+            "vitfpga_model_layer_kept_tokens_sum{{model=\"m\",layer=\"{}\"}}",
+            layer
+        );
+        let s: f64 = scrape
+            .lines()
+            .find(|l| l.starts_with(&sum_line))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("missing {} in scrape", sum_line));
+        assert!(s > 0.0, "layer {} kept-token sum is positive", layer);
+    }
+    drop(state);
+}
+
+#[test]
+fn metrics_scrape_consistent_under_concurrent_load() {
+    let (server, state) = serve_state(EdgeKind::Threaded, Registry::single(native_pool()), 0);
+    let per = state.default_pool().expect("pool").input_elems_per_image;
+    let addr = server.local_addr().to_string();
+
+    let writers: Vec<_> = (0..3)
+        .map(|w| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client =
+                    HttpClient::connect(&addr, Duration::from_secs(10)).expect("client");
+                let img = synthetic_image(per, 70 + w as u64);
+                for _ in 0..6 {
+                    let resp = client.post("/v1/infer", &image_body(&img)).expect("infer");
+                    assert_eq!(resp.status, 200);
+                }
+            })
+        })
+        .collect();
+
+    // Scrape while the writers hammer; every snapshot must be
+    // internally consistent (monotone buckets, +Inf == _count).
+    let mut client = client_for(&server);
+    for _ in 0..10 {
+        let scrape =
+            String::from_utf8(client.get("/metrics").expect("scrape").body).expect("UTF-8");
+        if scrape.contains("vitfpga_http_stage_seconds_bucket") {
+            assert_stage_histograms_consistent(&scrape);
+        }
+    }
+    for w in writers {
+        w.join().expect("writer thread");
+    }
+    // Quiescent: the final scrape sees all 18 requests in every stage.
+    let scrape = String::from_utf8(client.get("/metrics").expect("scrape").body).expect("UTF-8");
+    assert_stage_histograms_consistent(&scrape);
+    let (_, count) = stage_buckets(&scrape, "total");
+    assert_eq!(count, 18.0, "all writer requests recorded after the join");
+}
