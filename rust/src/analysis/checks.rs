@@ -1,0 +1,779 @@
+//! The invariant checks behind `vitfpga lint`.
+//!
+//! Six check families, each guarding a contract this repo's previous
+//! PRs enforced by hand (see DESIGN.md "Static analysis" for the full
+//! taxonomy table):
+//!
+//! | code   | family            | invariant |
+//! |--------|-------------------|-----------|
+//! | LEX001 | lexical integrity | delimiters balanced, strings/comments terminated |
+//! | ANN00x | annotations       | `lint:` directives well-formed, hot regions matched |
+//! | UNS00x | unsafe audit      | every `unsafe` block/fn/impl carries a SAFETY comment |
+//! | HP00x  | panic-free hot path | no unwrap/expect/panic!/assert!/direct-index in hot files |
+//! | HA001  | hot-path allocation | no alloc constructs inside `hot` regions |
+//! | AT00x  | atomic ordering   | `Ordering::` uses documented; no bare SeqCst; no Relaxed CAS success |
+//! | LK00x  | lock hygiene      | no `.lock().unwrap()`; no channel send under a lock guard |
+//!
+//! Escape hatches are comment directives (never attributes, so the
+//! checked code compiles identically with or without the linter):
+//!
+//! * `lint: allow(name[, name...]: reason)` — suppress named checks on
+//!   the comment's own line (trailing form) or the next code line
+//!   (standalone form). The reason is mandatory.
+//! * `lint: allow-file(name[, name...]: reason)` — suppress for the
+//!   whole file; used where a check contradicts a file's documented
+//!   idiom (e.g. index loops mirroring hardware loop nests in
+//!   `funcsim/kernels.rs`).
+//! * `lint: hot` / `lint: endhot` — bracket an allocation-free region;
+//!   inside it the allocation lint and the panic-path lints apply
+//!   regardless of file.
+//!
+//! (In prose comments, always fence the directive in backticks as
+//! above — a comment whose text *starts* with `lint:` is parsed as a
+//! directive and flagged `ANN001` if malformed.)
+//!
+//! Everything here is token-level: the lexer guarantees that `unwrap`
+//! inside a string literal or a commented-out `panic!` can never
+//! trigger a finding. Checks that need structure (cfg(test) item spans,
+//! CAS argument positions, lock-guard lifetimes) recover just enough of
+//! it by delimiter counting, which the LEX001 check keeps honest.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{lex, TokKind, Token};
+use super::{FileOutcome, Finding, LintConfig};
+
+/// The allow-mnemonics the annotation grammar accepts, with the check
+/// each one silences.
+pub const ALLOW_NAMES: &[(&str, &str)] = &[
+    ("unwrap", "HP001"),
+    ("expect", "HP002"),
+    ("panic", "HP003"),
+    ("assert", "HP004"),
+    ("index", "HP005"),
+    ("alloc", "HA001"),
+    ("seqcst", "AT001"),
+    ("cas-relaxed", "AT002"),
+    ("ordering-doc", "AT003"),
+    ("lock-unwrap", "LK001"),
+    ("lock-send", "LK002"),
+    ("safety", "UNS001/UNS002/UNS003"),
+];
+
+fn canon(name: &str) -> Option<&'static str> {
+    ALLOW_NAMES.iter().map(|(n, _)| *n).find(|n| *n == name)
+}
+
+/// Line-span set with containment queries (cfg(test) items, hot regions).
+#[derive(Default)]
+struct Spans(Vec<(u32, u32)>);
+
+impl Spans {
+    fn contains(&self, line: u32) -> bool {
+        self.0.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+}
+
+struct Ctx<'a> {
+    file: &'a str,
+    file_allows: HashSet<&'static str>,
+    line_allows: HashMap<u32, Vec<&'static str>>,
+    findings: Vec<Finding>,
+    suppressed: usize,
+}
+
+impl<'a> Ctx<'a> {
+    /// Record a finding unless an allow directive covers (name, line).
+    fn emit(&mut self, code: &'static str, name: &'static str, line: u32, message: String) {
+        let allowed = self.file_allows.contains(name)
+            || self.line_allows.get(&line).is_some_and(|v| v.contains(&name));
+        if allowed {
+            self.suppressed += 1;
+        } else {
+            self.push(code, name, line, message);
+        }
+    }
+
+    /// Record an unsuppressible finding (LEX/ANN classes).
+    fn push(&mut self, code: &'static str, name: &'static str, line: u32, message: String) {
+        self.findings.push(Finding {
+            file: self.file.to_string(),
+            line,
+            code: code.to_string(),
+            name: name.to_string(),
+            message,
+        });
+    }
+}
+
+enum Directive {
+    Allow(Vec<&'static str>),
+    AllowFile(Vec<&'static str>),
+    Hot,
+    EndHot,
+}
+
+/// Parse the text after a comment's leading slashes as a directive.
+/// `None` = not a lint comment at all; `Some(Err)` = malformed (ANN001).
+fn parse_directive(text: &str) -> Option<Result<Directive, String>> {
+    let t = text.trim_start_matches('/').trim_start().trim_end();
+    let rest = t.strip_prefix("lint:")?.trim();
+    if rest == "hot" {
+        return Some(Ok(Directive::Hot));
+    }
+    if rest == "endhot" {
+        return Some(Ok(Directive::EndHot));
+    }
+    let (file_scope, inner) = if let Some(i) = rest.strip_prefix("allow-file(") {
+        (true, i)
+    } else if let Some(i) = rest.strip_prefix("allow(") {
+        (false, i)
+    } else {
+        return Some(Err(format!(
+            "unrecognized lint directive `{rest}` (expected allow(...), allow-file(...), hot, endhot)"
+        )));
+    };
+    let Some(inner) = inner.strip_suffix(')') else {
+        return Some(Err("allow directive is missing its closing `)`".into()));
+    };
+    let Some((names_part, reason)) = inner.split_once(':') else {
+        return Some(Err("allow directive needs `name: reason` — the reason is mandatory".into()));
+    };
+    if reason.trim().is_empty() {
+        return Some(Err("allow directive has an empty reason".into()));
+    }
+    let mut names = Vec::new();
+    for raw in names_part.split(',') {
+        let raw = raw.trim();
+        match canon(raw) {
+            Some(n) => names.push(n),
+            None => {
+                return Some(Err(format!(
+                    "unknown allow name `{raw}` (known: {})",
+                    ALLOW_NAMES.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                )))
+            }
+        }
+    }
+    Some(Ok(if file_scope { Directive::AllowFile(names) } else { Directive::Allow(names) }))
+}
+
+/// Find spans of items gated behind `#[cfg(test)]` / `#[test]` so the
+/// hot-path and concurrency lints skip test-only code. Matches those
+/// two attributes *exactly* — `#[cfg(not(test))]` is live code and is
+/// deliberately not excluded. The item extent runs from the attribute
+/// to the matching `}` of the item's first `{` (or its `;`).
+fn cfg_test_spans(ct: &[&Token]) -> Spans {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < ct.len() {
+        if !(ct[i].is_punct('#') && i + 1 < ct.len() && ct[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        // Collect the attribute body up to its matching `]`.
+        let mut j = i + 2;
+        let mut depth = 1i32;
+        let mut body: Vec<&str> = Vec::new();
+        while j < ct.len() && depth > 0 {
+            if ct[j].is_punct('[') {
+                depth += 1;
+            } else if ct[j].is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            body.push(ct[j].text.as_str());
+            j += 1;
+        }
+        let is_test_attr =
+            body == ["test"] || body == ["cfg", "(", "test", ")"];
+        if !is_test_attr {
+            i += 1;
+            continue;
+        }
+        let start_line = ct[i].line;
+        // Skip any further attributes, then span the item itself.
+        let mut k = j + 1;
+        while k + 1 < ct.len() && ct[k].is_punct('#') && ct[k + 1].is_punct('[') {
+            let mut d = 0i32;
+            while k < ct.len() {
+                if ct[k].is_punct('[') {
+                    d += 1;
+                } else if ct[k].is_punct(']') {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        let mut braces = 0i32;
+        let mut end_line = start_line;
+        while k < ct.len() {
+            let t = ct[k];
+            if braces == 0 && t.is_punct(';') {
+                end_line = t.line;
+                break;
+            }
+            if t.is_punct('{') {
+                braces += 1;
+            } else if t.is_punct('}') {
+                braces -= 1;
+                if braces == 0 {
+                    end_line = t.line;
+                    break;
+                }
+            }
+            k += 1;
+        }
+        spans.push((start_line, end_line.max(start_line)));
+        i = k.max(i + 1);
+    }
+    Spans(spans)
+}
+
+/// A live `MutexGuard`-style binding: name, brace depth it lives at,
+/// and the line it was acquired on.
+struct Guard {
+    name: String,
+    depth: i32,
+    line: u32,
+}
+
+pub(crate) fn check_file(file: &str, src: &str, cfg: &LintConfig) -> FileOutcome {
+    let lexed = lex(src);
+    let path = file.replace('\\', "/");
+    let is_hot_file = cfg.hot_file_suffixes.iter().any(|s| path.ends_with(s));
+    // Test trees (integration tests, benches, examples) get only the
+    // lexical, annotation and unsafe audits — panicking asserts are the
+    // *point* of a test.
+    let test_tree = path.split('/').any(|c| c == "tests" || c == "benches" || c == "examples");
+
+    let mut ctx = Ctx {
+        file,
+        file_allows: HashSet::new(),
+        line_allows: HashMap::new(),
+        findings: Vec::new(),
+        suppressed: 0,
+    };
+
+    for e in &lexed.errors {
+        ctx.push("LEX001", "", e.line, e.message.clone());
+    }
+
+    let ct: Vec<&Token> = lexed.tokens.iter().filter(|t| t.is_code()).collect();
+    let comments: Vec<(u32, String)> = lexed
+        .tokens
+        .iter()
+        .filter(|t| !t.is_code())
+        .map(|t| (t.line, t.text.to_ascii_lowercase()))
+        .collect();
+    let comment_near = |line: u32, back: u32, needle: &str| {
+        comments
+            .iter()
+            .any(|(l, low)| *l <= line && *l >= line.saturating_sub(back) && low.contains(needle))
+    };
+
+    // ---- annotation pass -------------------------------------------------
+    let code_lines: Vec<u32> = {
+        let mut v: Vec<u32> = ct.iter().map(|t| t.line).collect();
+        v.dedup();
+        v
+    };
+    let code_line_set: HashSet<u32> = code_lines.iter().copied().collect();
+    let mut hot_regions = Vec::new();
+    let mut hot_stack: Vec<u32> = Vec::new();
+    for t in lexed.tokens.iter().filter(|t| !t.is_code()) {
+        let Some(parsed) = parse_directive(&t.text) else { continue };
+        match parsed {
+            Err(msg) => ctx.push("ANN001", "", t.line, msg),
+            Ok(Directive::Hot) => hot_stack.push(t.line),
+            Ok(Directive::EndHot) => match hot_stack.pop() {
+                Some(start) => hot_regions.push((start, t.line)),
+                None => ctx.push("ANN002", "", t.line, "`endhot` without a matching `hot`".into()),
+            },
+            Ok(Directive::AllowFile(names)) => ctx.file_allows.extend(names),
+            Ok(Directive::Allow(names)) => {
+                // Trailing form covers its own line; standalone covers
+                // the next line holding code.
+                let target = if code_line_set.contains(&t.line) {
+                    Some(t.line)
+                } else {
+                    code_lines.iter().copied().find(|l| *l > t.line)
+                };
+                match target {
+                    Some(l) => ctx.line_allows.entry(l).or_default().extend(names),
+                    None => ctx.push(
+                        "ANN001",
+                        "",
+                        t.line,
+                        "allow directive is not followed by any code".into(),
+                    ),
+                }
+            }
+        }
+    }
+    for start in hot_stack {
+        ctx.push("ANN002", "", start, "`hot` region is never closed with `endhot`".into());
+    }
+    let hot_regions = Spans(hot_regions);
+
+    let test_spans = cfg_test_spans(&ct);
+
+    // ---- token scan ------------------------------------------------------
+    let mut brace_depth = 0i32;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut atomic_first_use: Option<u32> = None;
+
+    let pk = |i: usize| -> Option<&&Token> { ct.get(i) };
+    let is_p = |i: usize, c: char| pk(i).is_some_and(|t| t.is_punct(c));
+    let is_id = |i: usize, s: &str| pk(i).is_some_and(|t| t.is_ident(s));
+
+    for i in 0..ct.len() {
+        let t = ct[i];
+        let line = t.line;
+        let in_test = test_tree || test_spans.contains(line);
+        let hot_here = !in_test && (is_hot_file || hot_regions.contains(line));
+
+        match t.kind {
+            TokKind::Punct => {
+                let c = t.text.as_bytes()[0];
+                match c {
+                    b'{' => brace_depth += 1,
+                    b'}' => {
+                        brace_depth -= 1;
+                        guards.retain(|g| g.depth <= brace_depth);
+                    }
+                    b'[' => {
+                        // HP005: direct index. `[` after an expression
+                        // position (ident, `)` or `]`) is `expr[...]`;
+                        // after `!` (macros), `#` (attrs), `=`/`(`/`,`
+                        // (array literals, slice patterns) it is not.
+                        if hot_here
+                            && i > 0
+                            && (ct[i - 1].kind == TokKind::Ident
+                                || ct[i - 1].is_punct(')')
+                                || ct[i - 1].is_punct(']'))
+                        {
+                            ctx.emit(
+                                "HP005",
+                                "index",
+                                line,
+                                format!(
+                                    "direct index `{}[...]` on the hot path can panic; use get()/split helpers or annotate the bound",
+                                    ct[i - 1].text
+                                ),
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            TokKind::Ident => {
+                let s = t.text.as_str();
+                match s {
+                    // ---- unsafe audit (applies everywhere, tests included:
+                    // unsafe in a test deserves a SAFETY note too) ----
+                    "unsafe" => {
+                        if is_id(i + 1, "fn") {
+                            if !comment_near(line, 25, "safety") {
+                                ctx.emit(
+                                    "UNS002",
+                                    "safety",
+                                    line,
+                                    "unsafe fn without a `# Safety` doc section or SAFETY comment".into(),
+                                );
+                            }
+                        } else if is_id(i + 1, "impl") {
+                            if !comment_near(line, 3, "safety") {
+                                ctx.emit(
+                                    "UNS003",
+                                    "safety",
+                                    line,
+                                    "unsafe impl without a SAFETY comment justifying the trait contract".into(),
+                                );
+                            }
+                        } else if !comment_near(line, 3, "safety:") {
+                            ctx.emit(
+                                "UNS001",
+                                "safety",
+                                line,
+                                "unsafe block without a `SAFETY:` comment on or directly above it".into(),
+                            );
+                        }
+                    }
+                    // ---- panic-free hot path ----
+                    "unwrap" if hot_here && is_p(i + 1, '(') && i > 0 && ct[i - 1].is_punct('.') => {
+                        ctx.emit(
+                            "HP001",
+                            "unwrap",
+                            line,
+                            "`.unwrap()` on the hot path; return an error or use unwrap_or_*".into(),
+                        );
+                    }
+                    "expect" if hot_here && is_p(i + 1, '(') && i > 0 && ct[i - 1].is_punct('.') => {
+                        ctx.emit(
+                            "HP002",
+                            "expect",
+                            line,
+                            "`.expect()` on the hot path; return an error instead".into(),
+                        );
+                    }
+                    "panic" | "unreachable" | "todo" | "unimplemented"
+                        if hot_here && is_p(i + 1, '!') =>
+                    {
+                        ctx.emit(
+                            "HP003",
+                            "panic",
+                            line,
+                            format!("`{s}!` on the hot path; hot code must fail by value"),
+                        );
+                    }
+                    "assert" | "assert_eq" | "assert_ne" if hot_here && is_p(i + 1, '!') => {
+                        ctx.emit(
+                            "HP004",
+                            "assert",
+                            line,
+                            format!("`{s}!` on the hot path; use debug_assert or return an error"),
+                        );
+                    }
+                    // ---- hot-region allocation lint ----
+                    "vec" | "format" if is_p(i + 1, '!') && !in_test && hot_regions.contains(line) => {
+                        ctx.emit(
+                            "HA001",
+                            "alloc",
+                            line,
+                            format!("`{s}!` allocates inside a `hot` region; hoist it into the scratch arena"),
+                        );
+                    }
+                    "Vec" | "Box" | "String"
+                        if is_p(i + 1, ':')
+                            && is_p(i + 2, ':')
+                            && pk(i + 3).is_some_and(|t| {
+                                t.is_ident("new") || t.is_ident("with_capacity") || t.is_ident("from")
+                            })
+                            && !in_test
+                            && hot_regions.contains(line) =>
+                    {
+                        ctx.emit(
+                            "HA001",
+                            "alloc",
+                            line,
+                            format!("`{s}::{}` allocates inside a `hot` region", ct[i + 3].text),
+                        );
+                    }
+                    "to_vec" | "to_string" | "to_owned" | "clone" | "into_owned"
+                        if is_p(i + 1, '(')
+                            && i > 0
+                            && ct[i - 1].is_punct('.')
+                            && !in_test
+                            && hot_regions.contains(line) =>
+                    {
+                        ctx.emit(
+                            "HA001",
+                            "alloc",
+                            line,
+                            format!("`.{s}()` allocates inside a `hot` region"),
+                        );
+                    }
+                    // ---- atomic ordering ----
+                    "Ordering"
+                        if is_p(i + 1, ':')
+                            && is_p(i + 2, ':')
+                            && pk(i + 3).is_some_and(|t| {
+                                matches!(
+                                    t.text.as_str(),
+                                    "SeqCst" | "AcqRel" | "Acquire" | "Release" | "Relaxed"
+                                )
+                            })
+                            && !in_test =>
+                    {
+                        atomic_first_use.get_or_insert(line);
+                        if ct[i + 3].is_ident("SeqCst") && !comment_near(line, 3, "ordering:") {
+                            ctx.emit(
+                                "AT001",
+                                "seqcst",
+                                line,
+                                "bare `Ordering::SeqCst`; justify with a nearby `ordering:` comment or use the weakest sufficient ordering".into(),
+                            );
+                        }
+                    }
+                    // ---- CAS success ordering ----
+                    "compare_exchange" | "compare_exchange_weak" | "fetch_update"
+                        if is_p(i + 1, '(') && i > 0 && ct[i - 1].is_punct('.') && !in_test =>
+                    {
+                        let success_arg = if s == "fetch_update" { 0 } else { 2 };
+                        let mut depth = 0i32;
+                        let mut arg = 0usize;
+                        let mut j = i + 1;
+                        while j < ct.len() {
+                            let u = ct[j];
+                            if u.is_punct('(') || u.is_punct('[') || u.is_punct('{') {
+                                depth += 1;
+                            } else if u.is_punct(')') || u.is_punct(']') || u.is_punct('}') {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            } else if depth == 1 && u.is_punct(',') {
+                                arg += 1;
+                            } else if arg == success_arg && u.is_ident("Relaxed") {
+                                ctx.emit(
+                                    "AT002",
+                                    "cas-relaxed",
+                                    u.line,
+                                    format!(
+                                        "`Relaxed` success ordering on `{s}`; the winning CAS usually publishes data and needs Release (annotate if it provably does not)"
+                                    ),
+                                );
+                                break;
+                            }
+                            j += 1;
+                        }
+                    }
+                    // ---- lock hygiene ----
+                    "lock" if is_p(i + 1, '(') && i > 0 && ct[i - 1].is_punct('.') => {
+                        if is_p(i + 2, ')')
+                            && is_p(i + 3, '.')
+                            && is_id(i + 4, "unwrap")
+                            && !in_test
+                        {
+                            ctx.emit(
+                                "LK001",
+                                "lock-unwrap",
+                                line,
+                                "`.lock().unwrap()` propagates poison; use `.unwrap_or_else(|e| e.into_inner())`".into(),
+                            );
+                        }
+                        // Track `let <name> = ....lock()...` guard bindings
+                        // so LK002 can see sends under a live guard.
+                        if !in_test {
+                            let mut j = i as isize - 2;
+                            let mut let_pos = None;
+                            while j >= 0 {
+                                let u = ct[j as usize];
+                                if u.is_punct(';') || u.is_punct('{') || u.is_punct('}') {
+                                    break;
+                                }
+                                if u.is_ident("let") {
+                                    let_pos = Some(j as usize);
+                                    break;
+                                }
+                                j -= 1;
+                            }
+                            if let Some(lp) = let_pos {
+                                // Binding name: last ident before the `=`.
+                                let mut name = None;
+                                for u in &ct[lp + 1..i] {
+                                    if u.is_punct('=') {
+                                        break;
+                                    }
+                                    if u.kind == TokKind::Ident && !u.is_ident("mut") {
+                                        name = Some(u.text.clone());
+                                    }
+                                }
+                                if let Some(name) = name {
+                                    guards.push(Guard { name, depth: brace_depth, line });
+                                }
+                            }
+                        }
+                    }
+                    "drop" if is_p(i + 1, '(')
+                        && pk(i + 2).is_some_and(|t| t.kind == TokKind::Ident)
+                        && is_p(i + 3, ')') =>
+                    {
+                        let name = &ct[i + 2].text;
+                        guards.retain(|g| g.name != *name);
+                    }
+                    "send" | "try_send"
+                        if is_p(i + 1, '(') && i > 0 && ct[i - 1].is_punct('.') && !in_test =>
+                    {
+                        if let Some(g) = guards.last() {
+                            ctx.emit(
+                                "LK002",
+                                "lock-send",
+                                line,
+                                format!(
+                                    "channel `.{s}()` while holding lock guard `{}` (acquired line {}); drop the guard first",
+                                    g.name, g.line
+                                ),
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ---- per-file atomic contract ---------------------------------------
+    if let Some(first) = atomic_first_use {
+        let documented = comments.iter().any(|(_, low)| low.contains("ordering:"));
+        if !documented {
+            ctx.emit(
+                "AT003",
+                "ordering-doc",
+                first,
+                "file uses atomic `Ordering` but has no `ordering:` contract comment documenting the acquire/release pairings".into(),
+            );
+        }
+    }
+
+    FileOutcome { findings: ctx.findings, suppressed: ctx.suppressed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(file: &str, src: &str) -> FileOutcome {
+        check_file(file, src, &LintConfig::default())
+    }
+
+    fn codes(o: &FileOutcome) -> Vec<&str> {
+        o.findings.iter().map(|f| f.code.as_str()).collect()
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "\
+// ordering: test file contract.
+#[cfg(test)]
+mod tests {
+    fn f(v: &std::sync::Mutex<i32>) { let _ = v.lock().unwrap(); }
+}
+";
+        let o = run("src/server/poll.rs", src);
+        assert!(codes(&o).is_empty(), "{:?}", o.findings);
+    }
+
+    #[test]
+    fn cfg_not_test_is_live_code() {
+        let src = "#[cfg(not(test))]\nfn f(v: &[f32]) -> f32 { v[0] }\n";
+        let o = run("src/funcsim/kernels.rs", src);
+        assert_eq!(codes(&o), vec!["HP005"]);
+    }
+
+    #[test]
+    fn allow_file_suppresses_and_counts() {
+        let src = "// lint: allow-file(index: mirrors the hardware loop nest)\nfn f(v: &[f32]) -> f32 { v[0] }\n";
+        let o = run("src/funcsim/kernels.rs", src);
+        assert!(o.findings.is_empty(), "{:?}", o.findings);
+        assert_eq!(o.suppressed, 1);
+    }
+
+    #[test]
+    fn trailing_and_standalone_allows() {
+        let trailing =
+            "fn f(v: &[f32]) -> f32 { v[0] } // lint: allow(index: len checked by caller)\n";
+        assert!(run("src/server/http.rs", trailing).findings.is_empty());
+        let standalone =
+            "// lint: allow(index: len checked by caller)\nfn f(v: &[f32]) -> f32 { v[0] }\n";
+        assert!(run("src/server/http.rs", standalone).findings.is_empty());
+    }
+
+    #[test]
+    fn allow_requires_reason_and_known_name() {
+        let o = run("src/x.rs", "// lint: allow(index)\nfn f() {}\n");
+        assert_eq!(codes(&o), vec!["ANN001"]);
+        let o = run("src/x.rs", "// lint: allow(frobnicate: because)\nfn f() {}\n");
+        assert_eq!(codes(&o), vec!["ANN001"]);
+    }
+
+    #[test]
+    fn hot_region_alloc_and_unmatched() {
+        let src = "\
+fn f(n: usize) {
+    // lint: hot
+    let v = vec![0u8; n];
+    let s = x.to_vec();
+    // lint: endhot
+    let after = vec![1];
+}
+";
+        let o = run("src/obs/mod.rs", src);
+        assert_eq!(codes(&o), vec!["HA001", "HA001"]);
+        let o = run("src/obs/mod.rs", "fn f() {}\n// lint: hot\n");
+        assert_eq!(codes(&o), vec!["ANN002"]);
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let o = run("src/a.rs", "fn f() { unsafe { g() } }\n");
+        assert_eq!(codes(&o), vec!["UNS001"]);
+        let ok = run("src/a.rs", "fn f() {\n    // SAFETY: g has no preconditions.\n    unsafe { g() }\n}\n");
+        assert!(ok.findings.is_empty(), "{:?}", ok.findings);
+        let o = run("src/a.rs", "unsafe fn f() {}\n");
+        assert_eq!(codes(&o), vec!["UNS002"]);
+        let o = run("src/a.rs", "unsafe impl Send for X {}\n");
+        assert_eq!(codes(&o), vec!["UNS003"]);
+    }
+
+    #[test]
+    fn atomics_need_a_contract_comment() {
+        let src = "fn f(a: &AtomicU64) { a.store(1, Ordering::Relaxed); }\n";
+        let o = run("src/obs/x.rs", src);
+        assert_eq!(codes(&o), vec!["AT003"]);
+        let src = "// ordering: counter is a monotonic tally, Relaxed everywhere.\nfn f(a: &AtomicU64) { a.store(1, Ordering::Relaxed); }\n";
+        assert!(run("src/obs/x.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn relaxed_cas_success_is_flagged() {
+        let src = "// ordering: documented.\nfn f(a: &AtomicU64) { let _ = a.compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed); }\n";
+        let o = run("src/x.rs", src);
+        assert_eq!(codes(&o), vec!["AT002"]);
+        let src = "// ordering: documented.\nfn f(a: &AtomicU64) { let _ = a.compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire); }\n";
+        assert!(run("src/x.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_and_send_under_guard() {
+        let o = run("src/x.rs", "fn f(m: &Mutex<i32>) { let _ = m.lock().unwrap(); }\n");
+        assert_eq!(codes(&o), vec!["LK001"]);
+        let src = "\
+fn f(m: &Mutex<i32>, tx: &Sender<i32>) {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    tx.send(*g).ok();
+}
+";
+        let o = run("src/x.rs", src);
+        assert_eq!(codes(&o), vec!["LK002"]);
+        let dropped = "\
+fn f(m: &Mutex<i32>, tx: &Sender<i32>) {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    let v = *g;
+    drop(g);
+    tx.send(v).ok();
+}
+";
+        assert!(run("src/x.rs", dropped).findings.is_empty());
+        let scoped = "\
+fn f(m: &Mutex<i32>, tx: &Sender<i32>) {
+    let v = { let g = m.lock().unwrap_or_else(|e| e.into_inner()); *g };
+    tx.send(v).ok();
+}
+";
+        assert!(run("src/x.rs", scoped).findings.is_empty());
+    }
+
+    #[test]
+    fn hot_file_panics_flagged_but_debug_assert_ok() {
+        let src = "fn f(v: &[f32]) { assert!(v.len() > 1); debug_assert!(v.len() > 1); }\n";
+        let o = run("src/funcsim/kernels.rs", src);
+        assert_eq!(codes(&o), vec!["HP004"]);
+        // Same file path under tests/ is a test tree: nothing flagged.
+        assert!(run("tests/kernels.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn strings_never_trigger_checks() {
+        let src = "fn f() -> &'static str { \"call .unwrap() and panic! via v[0]\" }\n";
+        assert!(run("src/funcsim/kernels.rs", src).findings.is_empty());
+    }
+}

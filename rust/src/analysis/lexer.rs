@@ -1,0 +1,571 @@
+//! Token-level Rust lexer for the self-hosted invariant checker.
+//!
+//! `vitfpga lint` reasons about the repo's own sources, so it needs a
+//! lexer that is *accurate about what is code*: every check downstream
+//! (unsafe audit, panic-free hot path, atomic-ordering pairing, lock
+//! hygiene) keys off identifier/punctuation sequences, and a naive
+//! substring scan would trip over `"unwrap"` inside a string literal or
+//! a `{` inside a comment. This lexer handles the full set of Rust
+//! surface forms that matter for that accuracy:
+//!
+//! * line (`//`, `///`, `//!`) and **nested** block comments;
+//! * string literals with escapes, **raw strings** (`r"…"`,
+//!   `r#"…"#` with any hash count), byte strings (`b"…"`, `br#"…"#`);
+//! * char literals vs **lifetimes** (`'a'` vs `&'a str`), byte chars;
+//! * raw identifiers (`r#fn`), numbers (including `1e-6`, `0x1f`,
+//!   `1_000`), and single-character punctuation tokens.
+//!
+//! It is *not* a parser: tokens carry only kind, text and line. That is
+//! exactly enough for the checks in [`super::checks`] and for the
+//! lexical-integrity check itself — balanced `()[]{}` per file, the
+//! manual "delimiter sweep" every previous PR ran by hand, automated
+//! here as [`LexError`]s.
+//!
+//! Comments are kept as tokens (the checks read `// SAFETY:` comments,
+//! `// ordering:` contracts and `// lint:` annotations out of them);
+//! callers that only want code tokens filter on [`Token::is_code`].
+
+/// Lexical class of one token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (raw identifiers keep their `r#` prefix).
+    Ident,
+    /// One punctuation character (`::` arrives as two `:` tokens).
+    Punct,
+    /// String literal of any flavour (escaped, raw, byte, raw byte).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`) — *not* a char literal.
+    Lifetime,
+    /// Numeric literal (integer or float, any base, with suffixes).
+    Num,
+    /// `//`-to-end-of-line comment, text includes the slashes.
+    LineComment,
+    /// `/* … */` comment (nesting folded into one token).
+    BlockComment,
+}
+
+/// One lexed token: kind, verbatim text, and the 1-based line where it
+/// starts.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// True for tokens the language would execute (not comments).
+    pub fn is_code(&self) -> bool {
+        !matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+
+    /// Convenience: is this exactly the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+
+    /// Convenience: is this exactly the identifier `s`?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// A lexical-integrity violation: unbalanced delimiter, unterminated
+/// string or comment. These become `LEX001` findings.
+#[derive(Debug, Clone)]
+pub struct LexError {
+    pub line: u32,
+    pub message: String,
+}
+
+/// The full lex of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub errors: Vec<LexError>,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Lex `src` into tokens plus lexical-integrity errors. Never panics on
+/// malformed input: unterminated forms consume to EOF and report a
+/// [`LexError`]; every byte is visited exactly once.
+pub fn lex(src: &str) -> Lexed {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Lexed {
+        // Delimiter stack for the balance check: (open char, line).
+        let mut delims: Vec<(u8, u32)> = Vec::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(self.i),
+                b'\'' => self.char_or_lifetime(),
+                b'r' | b'b' if self.literal_prefix() => {}
+                _ if is_ident_start(c) => self.ident(),
+                _ if c.is_ascii_digit() => self.number(),
+                b'(' | b'[' | b'{' => {
+                    delims.push((c, self.line));
+                    self.punct(c);
+                }
+                b')' | b']' | b'}' => {
+                    let want = match c {
+                        b')' => b'(',
+                        b']' => b'[',
+                        _ => b'{',
+                    };
+                    match delims.last().copied() {
+                        Some((open, _)) if open == want => {
+                            delims.pop();
+                        }
+                        Some((open, line)) => {
+                            self.err(format!(
+                                "closing '{}' does not match '{}' opened on line {}",
+                                c as char, open as char, line
+                            ));
+                            delims.pop();
+                        }
+                        None => {
+                            self.err(format!("unmatched closing '{}'", c as char));
+                        }
+                    }
+                    self.punct(c);
+                }
+                _ => self.punct(c),
+            }
+        }
+        for (open, line) in delims {
+            self.out.errors.push(LexError {
+                line,
+                message: format!("'{}' opened here is never closed", open as char),
+            });
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn err(&mut self, message: String) {
+        self.out.errors.push(LexError { line: self.line, message });
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32) {
+        self.out.tokens.push(Token {
+            kind,
+            text: String::from_utf8_lossy(&self.b[start..self.i]).into_owned(),
+            line,
+        });
+    }
+
+    fn punct(&mut self, _c: u8) {
+        let (start, line) = (self.i, self.line);
+        self.i += 1;
+        self.push(TokKind::Punct, start, line);
+    }
+
+    fn line_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        self.push(TokKind::LineComment, start, line);
+    }
+
+    fn block_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        self.i += 2; // consume "/*"
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+        if depth > 0 {
+            self.out.errors.push(LexError {
+                line,
+                message: "block comment is never closed".into(),
+            });
+        }
+        self.push(TokKind::BlockComment, start, line);
+    }
+
+    /// Escaped (non-raw) string starting at the current `"`. `start` is
+    /// where the token began (may include a `b` prefix).
+    fn string(&mut self, start: usize) {
+        let line = self.line;
+        self.i += 1; // opening quote
+        loop {
+            match self.b.get(self.i) {
+                None => {
+                    self.out.errors.push(LexError {
+                        line,
+                        message: "string literal is never closed".into(),
+                    });
+                    break;
+                }
+                Some(b'"') => {
+                    self.i += 1;
+                    break;
+                }
+                Some(b'\\') => {
+                    // Skip the escaped byte; `\u{…}` braces then scan as
+                    // ordinary string bytes, which is fine — they cannot
+                    // contain an unescaped quote.
+                    self.i += 1;
+                    if self.peek(0) == Some(b'\n') {
+                        self.line += 1;
+                    }
+                    self.i += 1;
+                }
+                Some(b'\n') => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+        self.push(TokKind::Str, start, line);
+    }
+
+    /// Raw string body: the opening `"` is current; `hashes` is the
+    /// number of `#` before it. Consumes to `"` + hashes.
+    fn raw_string(&mut self, start: usize, hashes: usize) {
+        let line = self.line;
+        self.i += 1; // opening quote
+        loop {
+            match self.b.get(self.i) {
+                None => {
+                    self.out.errors.push(LexError {
+                        line,
+                        message: "raw string literal is never closed".into(),
+                    });
+                    break;
+                }
+                Some(b'\n') => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                Some(b'"') => {
+                    let close = &self.b[self.i + 1..];
+                    if close.len() >= hashes && close[..hashes].iter().all(|&h| h == b'#') {
+                        self.i += 1 + hashes;
+                        break;
+                    }
+                    self.i += 1;
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+        self.push(TokKind::Str, start, line);
+    }
+
+    /// Handle the `r` / `b` literal prefixes. Returns true when a
+    /// literal (or raw identifier) was consumed; false means "ordinary
+    /// identifier starting with r/b" and the caller falls through.
+    fn literal_prefix(&mut self) -> bool {
+        let start = self.i;
+        let c = self.b[self.i];
+        if c == b'b' {
+            match self.peek(1) {
+                Some(b'"') => {
+                    self.i += 1;
+                    self.string(start);
+                    return true;
+                }
+                Some(b'\'') => {
+                    self.i += 1;
+                    self.char_literal(start);
+                    return true;
+                }
+                Some(b'r') => {
+                    // br"…" / br#"…"#
+                    let mut j = 2;
+                    while self.peek(j) == Some(b'#') {
+                        j += 1;
+                    }
+                    if self.peek(j) == Some(b'"') {
+                        let hashes = j - 2;
+                        self.i += j;
+                        self.raw_string(start, hashes);
+                        return true;
+                    }
+                    return false;
+                }
+                _ => return false,
+            }
+        }
+        // c == b'r': raw string r"…" / r#"…"#, or raw identifier r#ident.
+        let mut j = 1;
+        while self.peek(j) == Some(b'#') {
+            j += 1;
+        }
+        if self.peek(j) == Some(b'"') {
+            let hashes = j - 1;
+            self.i += j;
+            self.raw_string(start, hashes);
+            return true;
+        }
+        if j == 2 && self.peek(2).is_some_and(is_ident_start) {
+            // Raw identifier: consume r# + ident, token keeps the prefix
+            // so `r#fn` can never be mistaken for the keyword.
+            let line = self.line;
+            self.i += 2;
+            while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+                self.i += 1;
+            }
+            self.push(TokKind::Ident, start, line);
+            return true;
+        }
+        false
+    }
+
+    /// Char literal body: current byte is the opening `'` (start may
+    /// include a `b` prefix). Consumes through the closing `'`.
+    fn char_literal(&mut self, start: usize) {
+        let line = self.line;
+        self.i += 1; // opening quote
+        if self.peek(0) == Some(b'\\') {
+            self.i += 2; // skip the escape introducer + escaped byte
+            // \u{…} / \x41: scan to the closing quote.
+            while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                if self.b[self.i] == b'\n' {
+                    self.line += 1;
+                }
+                self.i += 1;
+            }
+        } else {
+            // One (possibly multi-byte) character.
+            while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                self.i += 1;
+            }
+        }
+        if self.peek(0) == Some(b'\'') {
+            self.i += 1;
+        } else {
+            self.out.errors.push(LexError {
+                line,
+                message: "char literal is never closed".into(),
+            });
+        }
+        self.push(TokKind::Char, start, line);
+    }
+
+    /// `'` — either a char literal or a lifetime. Disambiguation: after
+    /// the quote, an identifier run followed by another `'` is a char
+    /// literal (`'a'`); an identifier run followed by anything else is
+    /// a lifetime (`'a`, `'static`); a backslash is always a char
+    /// escape.
+    fn char_or_lifetime(&mut self) {
+        let start = self.i;
+        if self.peek(1) == Some(b'\\') {
+            self.char_literal(start);
+            return;
+        }
+        if self.peek(1).is_some_and(is_ident_start) {
+            // Scan the identifier run and look at what follows it.
+            let mut j = 2;
+            while self.peek(j).is_some_and(is_ident_cont) {
+                j += 1;
+            }
+            if self.peek(j) == Some(b'\'') {
+                self.char_literal(start);
+            } else {
+                let line = self.line;
+                self.i += j;
+                self.push(TokKind::Lifetime, start, line);
+            }
+            return;
+        }
+        // Non-identifier char like '.' or '\n' byte forms.
+        self.char_literal(start);
+    }
+
+    fn ident(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+            self.i += 1;
+        }
+        self.push(TokKind::Ident, start, line);
+    }
+
+    fn number(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == b'_' {
+                // `1e-6` / `2E+9`: the sign belongs to the number.
+                let is_exp = (c == b'e' || c == b'E')
+                    && matches!(self.peek(1), Some(b'+') | Some(b'-'))
+                    && self.peek(2).is_some_and(|d| d.is_ascii_digit())
+                    // Hex digits make `e` ambiguous; exponents only
+                    // apply to decimal floats, which never start 0x.
+                    && !self.b[start..self.i].starts_with(b"0x");
+                self.i += 1;
+                if is_exp {
+                    self.i += 1; // the sign
+                }
+            } else if c == b'.' {
+                // Float dot, but never eat `..` (range) or `1.method()`.
+                match self.peek(1) {
+                    Some(d) if !d.is_ascii_digit() => break,
+                    _ => self.i += 1,
+                }
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Num, start, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        let l = lex(src);
+        assert!(l.errors.is_empty(), "unexpected lex errors: {:?}", l.errors);
+        l.tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let t = kinds("let x = foo.bar(1_000, 0x1f, 1e-6);");
+        let idents: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "x", "foo", "bar"]);
+        let nums: Vec<&str> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1_000", "0x1f", "1e-6"]);
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        // Brackets and quotes inside a raw string must not reach the
+        // delimiter balance or token stream.
+        let l = lex(r####"let s = r#"{ ( [ " un}balanced "#; f();"####);
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Str && t.text.contains("un}balanced")));
+        assert!(l.tokens.iter().any(|t| t.is_ident("f")));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let l = lex(r####"let a = b"{{"; let c = br#"]]"#; let d = b'x';"####);
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        let strs = l.tokens.iter().filter(|t| t.kind == TokKind::Str).count();
+        assert_eq!(strs, 2);
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Char && t.text == "b'x'"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* outer { /* inner } */ still-outer ) */ b");
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        assert!(l.tokens.iter().any(|t| t.is_ident("a")));
+        assert!(l.tokens.iter().any(|t| t.is_ident("b")));
+        assert_eq!(l.tokens.iter().filter(|t| t.kind == TokKind::BlockComment).count(), 1);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'x' } // 'static too");
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        let lifetimes = l.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        assert_eq!(lifetimes, 2, "'a twice");
+        assert!(l.tokens.iter().any(|t| t.kind == TokKind::Char && t.text == "'x'"));
+    }
+
+    #[test]
+    fn char_escapes_and_unicode() {
+        let l = lex(r"let a = '\n'; let b = '\u{1F600}'; let c = '\'';");
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        assert_eq!(l.tokens.iter().filter(|t| t.kind == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn raw_identifiers_keep_prefix() {
+        let l = lex("let r#fn = 1; let r = 2; let rx = 3;");
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        assert!(l.tokens.iter().any(|t| t.is_ident("r#fn")));
+        assert!(l.tokens.iter().any(|t| t.is_ident("r")));
+        assert!(l.tokens.iter().any(|t| t.is_ident("rx")));
+    }
+
+    #[test]
+    fn unbalanced_delimiters_are_reported() {
+        let l = lex("fn f() { let v = vec![1, 2; }");
+        assert!(
+            l.errors.iter().any(|e| e.message.contains("does not match")
+                || e.message.contains("never closed")),
+            "expected an imbalance error, got {:?}",
+            l.errors
+        );
+        // A stray closer, on the correct line.
+        let l = lex("fn g() {}\n}\n");
+        assert_eq!(l.errors.len(), 1);
+        assert_eq!(l.errors[0].line, 2);
+        assert!(l.errors[0].message.contains("unmatched closing"));
+    }
+
+    #[test]
+    fn strings_hide_delimiters_and_comment_markers() {
+        let l = lex("let s = \"} // not a comment {\"; g();");
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        assert!(l.tokens.iter().any(|t| t.is_ident("g")));
+        assert_eq!(l.tokens.iter().filter(|t| !t.is_code()).count(), 0);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let l = lex("/* a\nb\nc */\nfn f() {\n    \"x\ny\";\n}\n");
+        assert!(l.errors.is_empty(), "{:?}", l.errors);
+        let f = l.tokens.iter().find(|t| t.is_ident("fn")).expect("fn token");
+        assert_eq!(f.line, 4);
+        let close = l.tokens.iter().rfind(|t| t.is_punct('}')).expect("close brace");
+        assert_eq!(close.line, 7);
+    }
+}

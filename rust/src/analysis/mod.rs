@@ -1,0 +1,209 @@
+//! Self-hosted static analyzer: `vitfpga lint`.
+//!
+//! The repo's correctness story rests on contracts no compiler checks:
+//! the fused kernels must stay bit-identical to the serial reference
+//! without panicking mid-batch, the epoll shim's `unsafe` must stay
+//! audited, atomics must document their acquire/release pairings, and
+//! nothing may allocate inside the kernel inner loops. Until this PR
+//! those contracts were enforced by a manual review sweep described at
+//! the end of every CHANGES.md entry. This module is that sweep as a
+//! program: a std-only lexer + token-level checker over the repo's own
+//! sources, run locally via `vitfpga lint [--json] [PATHS…]` and as a
+//! blocking CI job.
+//!
+//! Structure:
+//!
+//! * [`lexer`] — full-fidelity Rust lexer (nested block comments, raw
+//!   strings, lifetimes vs chars) plus the delimiter-balance check;
+//! * [`checks`] — the six invariant families (finding codes LEX / ANN /
+//!   UNS / HP / HA / AT / LK) and the `lint:` annotation grammar;
+//! * this file — file discovery, per-file dispatch, text/JSON reports.
+//!
+//! The checker is deliberately *repo-aware rather than general*: hot
+//! files are named by path suffix in [`LintConfig`], and the rules
+//! encode this codebase's idioms (scratch arenas, poison-recovering
+//! locks, `debug_assert` on the hot path). See DESIGN.md § "Static
+//! analysis" for the taxonomy and escape-hatch grammar.
+
+pub mod checks;
+pub mod lexer;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lint finding: where, which check, and the allow-mnemonic that
+/// would suppress it (empty for unsuppressible LEX/ANN findings).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub code: String,
+    pub name: String,
+    pub message: String,
+}
+
+/// Checker configuration. `hot_file_suffixes` designates the panic-free
+/// hot-path modules by path suffix (matched against `/`-normalized
+/// paths, so labels work from any checkout root).
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    pub hot_file_suffixes: Vec<&'static str>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            hot_file_suffixes: vec![
+                "funcsim/kernels.rs",
+                "funcsim/datapath.rs",
+                "server/poll.rs",
+                "server/http.rs",
+            ],
+        }
+    }
+}
+
+/// Result of linting one source buffer.
+#[derive(Debug, Default)]
+pub struct FileOutcome {
+    pub findings: Vec<Finding>,
+    /// Findings silenced by `lint: allow` / `allow-file` directives.
+    pub suppressed: usize,
+}
+
+/// Lint a single source buffer under `file` as its display/matching
+/// path. This is the whole analyzer behind one call — the fixture
+/// battery in `tests/lint.rs` drives it directly.
+pub fn lint_source(file: &str, src: &str, cfg: &LintConfig) -> FileOutcome {
+    checks::check_file(file, src, cfg)
+}
+
+/// Aggregated lint run over a file set.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files: usize,
+    pub suppressed: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("file".into(), Json::Str(f.file.clone()));
+                o.insert("line".into(), Json::Num(f.line as f64));
+                o.insert("code".into(), Json::Str(f.code.clone()));
+                o.insert("name".into(), Json::Str(f.name.clone()));
+                o.insert("message".into(), Json::Str(f.message.clone()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("files".into(), Json::Num(self.files as f64));
+        o.insert("suppressed".into(), Json::Num(self.suppressed as f64));
+        o.insert("findings".into(), Json::Arr(findings));
+        o.insert("clean".into(), Json::Bool(self.clean()));
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for x in &self.findings {
+            if x.name.is_empty() {
+                writeln!(f, "{}:{}: {} {}", x.file, x.line, x.code, x.message)?;
+            } else {
+                writeln!(f, "{}:{}: {}({}) {}", x.file, x.line, x.code, x.name, x.message)?;
+            }
+        }
+        writeln!(
+            f,
+            "lint: {} file(s), {} finding(s), {} suppressed by annotations",
+            self.files,
+            self.findings.len(),
+            self.suppressed
+        )
+    }
+}
+
+/// Lint the given files/directories (recursing into directories). With
+/// an empty list, discover the standard roots relative to the current
+/// directory: `rust/src`, `rust/tests`, `rust/benches` (or `src`,
+/// `tests`, `benches` when invoked from inside `rust/`).
+pub fn run(paths: &[PathBuf], cfg: &LintConfig) -> Result<Report> {
+    let roots: Vec<PathBuf> = if paths.is_empty() {
+        let candidates = ["rust/src", "rust/tests", "rust/benches", "src", "tests", "benches"];
+        let found: Vec<PathBuf> = candidates
+            .iter()
+            .map(PathBuf::from)
+            .filter(|p| p.is_dir())
+            .collect();
+        if found.is_empty() {
+            bail!("lint: no source roots found (looked for rust/src, src); pass paths explicitly");
+        }
+        found
+    } else {
+        paths.to_vec()
+    };
+
+    let mut files = Vec::new();
+    for root in &roots {
+        if root.is_dir() {
+            collect_rs(root, &mut files)
+                .with_context(|| format!("walking {}", root.display()))?;
+        } else if root.is_file() {
+            files.push(root.clone());
+        } else {
+            bail!("lint: no such file or directory: {}", root.display());
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut report = Report::default();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let label = path.to_string_lossy().replace('\\', "/");
+        let out = lint_source(&label, &src, cfg);
+        report.files += 1;
+        report.suppressed += out.suppressed;
+        report.findings.extend(out.findings);
+    }
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.code.as_str()).cmp(&(b.file.as_str(), b.line, b.code.as_str()))
+    });
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

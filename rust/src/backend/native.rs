@@ -67,6 +67,9 @@ pub struct TokenStats {
     layer_kept: [AtomicU64; MAX_TRACE_LAYERS],
 }
 
+// ordering: every TokenStats counter is an independent monotonic tally
+// feeding /metrics gauges; Relaxed everywhere — no cross-counter
+// invariant is published, and scrapes tolerate torn cross-field views.
 impl TokenStats {
     /// Fold one fused forward into the counters: `images` inferred,
     /// `kept_tokens` total encoder-exit rows across them.

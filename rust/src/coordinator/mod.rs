@@ -56,6 +56,10 @@ pub(crate) struct EngineShared {
     pub(crate) total_inflight: Arc<AtomicUsize>,
 }
 
+// ordering: the in-flight gauges pair AcqRel RMWs (submit/release) with
+// Acquire loads in the dispatcher, so an observed decrement implies the
+// completion writes before it; data handoff itself rides the channels,
+// the gauges only steer admission and least-loaded choice.
 impl EngineShared {
     fn release(&self, n: usize) {
         if n > 0 {

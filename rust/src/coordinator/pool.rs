@@ -271,6 +271,10 @@ impl BackendPool {
         self.replicas.len()
     }
 
+    // ordering: total_inflight and loads pair AcqRel RMWs with Acquire
+    // loads — the CAS admission bound and the least-loaded scan must
+    // observe prior releases; rr (rotation hint) and shed (tally) are
+    // Relaxed because nothing is published through their values.
     /// Least-loaded replica, ties broken by a rotating start index (the
     /// online counterpart of `sim::load_balance::balanced_order`'s even
     /// offline assignment).

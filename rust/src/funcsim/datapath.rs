@@ -42,6 +42,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::formats::quant::quantize_activations;
+// lint: allow-file(index: the serial datapath is the bit-exactness reference and mirrors the hardware loop nests one token at a time; all offsets derive from the `offs` prefix-sum tables validated at construction)
+
 use crate::formats::{BlockSparseMatrix, Int16Matrix, Int16Panels, Int16Quant, StageRequant};
 use crate::funcsim::bitonic;
 use crate::funcsim::kernels::{self, AttnLane, ColumnSchedule};

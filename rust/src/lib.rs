@@ -56,6 +56,7 @@
 //! See DESIGN.md for the L3 architecture and the experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod analysis;
 pub mod backend;
 pub mod baselines;
 pub mod bench_harness;

@@ -60,6 +60,13 @@
 //!   funcsim --variant NAME [--artifacts DIR] [--int16]
 //!                           functional datapath run (cross-checked
 //!                           against PJRT when built with --features pjrt)
+//!   lint [--json] [PATHS…]  self-hosted static analyzer: lexical
+//!                           integrity, unsafe audit, panic-free hot
+//!                           path, hot-region allocation, atomic
+//!                           ordering, lock hygiene. With no PATHS it
+//!                           checks rust/src + rust/tests + rust/benches
+//!                           relative to the cwd. Exits nonzero on any
+//!                           finding (DESIGN.md § Static analysis)
 //!   sweep                   Table VI sweep (alias: table --id 6)
 //!   resources               Table IV resource model
 //!
@@ -97,7 +104,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: vitfpga <table|fig|simulate|infer|serve|loadgen|funcsim|sweep|resources> [options]\n\
+    "usage: vitfpga <table|fig|simulate|infer|serve|loadgen|funcsim|lint|sweep|resources> [options]\n\
      see rust/src/main.rs header for per-command options"
 }
 
@@ -122,6 +129,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args)?,
         "loadgen" => cmd_loadgen(&args)?,
         "funcsim" => cmd_funcsim(&args)?,
+        "lint" => cmd_lint(&args)?,
         _ => bail!("{}", usage()),
     }
     Ok(())
@@ -130,6 +138,21 @@ fn run() -> Result<()> {
 fn parse_setting(label: &str) -> Result<PruningSetting> {
     // format: b16_rb0.5_rt0.7 (shared parser in config.rs)
     PruningSetting::parse_label(label).map_err(|e| anyhow::anyhow!("--setting: {}", e))
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use vitfpga::analysis::{self, LintConfig};
+    let paths: Vec<PathBuf> = args.positional[1..].iter().map(PathBuf::from).collect();
+    let report = analysis::run(&paths, &LintConfig::default())?;
+    if args.has_flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report);
+    }
+    if !report.clean() {
+        bail!("lint: {} finding(s)", report.findings.len());
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -33,6 +33,10 @@ pub struct AtomicHistogram {
     count: AtomicU64,
 }
 
+// ordering: bucket and sum increments are Relaxed; `count` is bumped
+// last with Release, pairing with the snapshot loop's Acquire loads — a
+// snapshot whose two `count` reads agree has observed every increment
+// between them (retry-validated consistency, no lock on the hot path).
 impl AtomicHistogram {
     pub fn new() -> AtomicHistogram {
         AtomicHistogram::default()

@@ -76,6 +76,8 @@ fn start() -> Instant {
 
 /// Lines actually written since start — the observability tests' hook
 /// for asserting filtering without capturing stderr.
+// ordering: Relaxed — a monotonic emitted-lines tally read by tests; no
+// other memory is published through it (stderr writes order themselves).
 static EMITTED: AtomicU64 = AtomicU64::new(0);
 
 /// Log lines emitted (post-filter) so far.

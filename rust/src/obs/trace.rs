@@ -132,6 +132,8 @@ pub struct Trace {
 /// Traces assembled process-wide since start (pushed into any ring).
 /// The untraced hot path must leave this unchanged — asserted by the
 /// observability test battery.
+// ordering: Relaxed — a monotonic process-wide tally; trace contents
+// are published by the ring Mutex, never through this counter.
 static TRACES_ASSEMBLED: AtomicU64 = AtomicU64::new(0);
 
 pub fn traces_assembled() -> u64 {

@@ -59,7 +59,7 @@ impl LoadedVariant {
 }
 
 fn bytemuck_cast(v: &[f32]) -> &[u8] {
-    // Safe: f32 has no invalid bit patterns and alignment of u8 is 1.
+    // SAFETY: f32 has no invalid bit patterns and alignment of u8 is 1.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 

@@ -213,6 +213,7 @@ fn percent_decode(s: &str) -> String {
     let mut out: Vec<u8> = Vec::with_capacity(bytes.len());
     let mut i = 0;
     while i < bytes.len() {
+        // lint: allow(index: loop condition pins i < bytes.len())
         match bytes[i] {
             b'+' => {
                 out.push(b' ');
@@ -220,6 +221,7 @@ fn percent_decode(s: &str) -> String {
             }
             b'%' if i + 2 < bytes.len() => {
                 let hex = |b: u8| (b as char).to_digit(16);
+                // lint: allow(index: match arm guard pins i + 2 < bytes.len())
                 match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
                     (Some(hi), Some(lo)) => {
                         out.push((hi * 16 + lo) as u8);
@@ -295,6 +297,12 @@ enum ParseOutcome {
 /// Counters shared between the accept path, the workers/loop and
 /// `shutdown()`. All relaxed-ish orderings are fine: these gate drain
 /// waits and caps, not data handoffs.
+// ordering: `shutdown` is store(Release)/load(Acquire) so workers that
+// see the flag also see everything the initiator wrote before raising
+// it; `connections`/`in_flight` gauges pair AcqRel RMWs with Acquire
+// loads (the drain loops must observe handler completions); the
+// transport byte/connection tallies are Relaxed — independent monotonic
+// counters for /metrics with nothing published through them.
 struct Shared {
     shutdown: AtomicBool,
     /// Live served connections.
@@ -601,6 +609,7 @@ fn read_request(
                     if read_deadline.is_none() {
                         read_deadline = Some(Instant::now() + config.read_deadline);
                     }
+                    // lint: allow(index: n is the read() return, <= chunk.len())
                     buf.extend_from_slice(&chunk[..n]);
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
@@ -658,6 +667,7 @@ fn try_parse(buf: &[u8], config: &HttpConfig) -> Parsed {
     };
 
     // Phase 2: parse the header block.
+    // lint: allow(index: header_end came from find_header_end over buf)
     let head = match std::str::from_utf8(&buf[..header_end]) {
         Ok(s) => s,
         Err(_) => return Parsed::Reject(400, "header block is not valid UTF-8"),
@@ -735,6 +745,7 @@ fn try_parse(buf: &[u8], config: &HttpConfig) -> Parsed {
     if buf.len() < body_start + body_len {
         return Parsed::NeedMore(NeedPhase::Body);
     }
+    // lint: allow(index: the NeedMore guard above pins buf.len() >= body_start + body_len)
     let body = buf[body_start..body_start + body_len].to_vec();
     Parsed::Request(
         HttpRequest {
@@ -1156,6 +1167,7 @@ impl EvLoop {
                                     conn.read_deadline =
                                         Some(Instant::now() + config.read_deadline);
                                 }
+                                // lint: allow(index: n is the read() return, <= chunk.len())
                                 conn.buf.extend_from_slice(&chunk[..n]);
                                 reads += 1;
                             }
@@ -1213,6 +1225,7 @@ impl EvLoop {
                     set_interest(poller, conn, token, Interest::Read);
                     break Step::StartRead;
                 }
+                // lint: allow(index: out_pos only advances by write() returns, <= out.len())
                 match conn.stream.write(&conn.out[conn.out_pos..]) {
                     Ok(0) => break Step::Close,
                     Ok(n) => {

@@ -239,11 +239,16 @@ impl HttpClient {
             s.set_write_timeout(Some(self.timeout))
                 .context("setting client write timeout")?;
             let _ = s.set_nodelay(true);
-            self.stream = Some(s);
             self.leftover.clear();
             self.connects += 1;
+            self.stream = Some(s);
         }
-        let stream = self.stream.as_mut().expect("stream just ensured");
+        let stream = match self.stream.as_mut() {
+            Some(s) => s,
+            // Unreachable after the ensure above; fail the request as a
+            // typed error rather than panicking the worker thread.
+            None => bail!("client connection missing after connect"),
+        };
 
         let mut head = format!(
             "{} {} HTTP/1.1\r\nHost: {}\r\nConnection: keep-alive\r\n",

@@ -342,6 +342,7 @@ mod epoll {
                 }
                 break ret as usize;
             };
+            // lint: allow(index: n is the kernel's return value, <= events.len() by the epoll_wait contract)
             for ev in &self.events[..n] {
                 let bits = ev.events;
                 let hangup = bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0;

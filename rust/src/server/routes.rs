@@ -191,6 +191,10 @@ impl Default for LatencyScale {
     }
 }
 
+// ordering: the EWMA cell is a self-contained f64-bits register — the
+// CAS publishes only the value itself and readers recompute from what
+// they load, so Relaxed suffices on every side; the HTTP tallies
+// elsewhere in this file are Relaxed monotonic /metrics counters.
 impl LatencyScale {
     /// Fold one observed latency (µs) into the moving average. A
     /// compare-exchange loop, no lock: the shed path reading this must
@@ -206,6 +210,7 @@ impl LatencyScale {
             match self.ewma_us.compare_exchange_weak(
                 cur,
                 next.to_bits(),
+                // lint: allow(cas-relaxed: the swap publishes only its own f64 bits; no other memory hangs off it, see the ordering contract above)
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
@@ -836,10 +841,13 @@ fn infer_batch(state: &AppState, req: &HttpRequest) -> HttpResponse {
     // its engine stages are time-disjoint within this HTTP request's
     // window, so the Server-Timing sum stays ≤ the measured total
     // (per-stage maxima across different requests would not).
-    let slowest = responses
-        .iter()
-        .max_by_key(|r| r.queue_us + r.batch_us + r.infer_us)
-        .expect("batch handler requires a non-empty image set");
+    let Some(slowest) = responses.iter().max_by_key(|r| r.queue_us + r.batch_us + r.infer_us)
+    else {
+        // Empty image sets are rejected at parse time; if that guard
+        // ever regresses, degrade to a plain 500 instead of panicking
+        // the connection worker.
+        return error_response(500, "batch produced no responses");
+    };
     let st = stage_times(req, slowest, resp_us);
     // Histograms see every request's engine stages individually; the
     // edge-side parse/resp/total spans are per HTTP request.
@@ -954,10 +962,12 @@ fn healthz(state: &AppState) -> HttpResponse {
 
     // Top-level fields describe the default model — the shape probe
     // single-model clients (and `loadgen` without --model) rely on.
-    let info = state
-        .registry
-        .describe(&default)
-        .expect("default model is always registered");
+    let Some(info) = state.registry.describe(&default) else {
+        // The registry constructor guarantees the default is registered;
+        // answer 500 rather than panicking the worker if that invariant
+        // ever breaks.
+        return error_response(500, "default model is not registered");
+    };
     let all_dead = info.ready && default_dead >= info.replicas;
     let mut m = BTreeMap::new();
     m.insert(

@@ -1,0 +1,278 @@
+//! Battery for the self-hosted static analyzer (`vitfpga lint`).
+//!
+//! Three layers:
+//!
+//! 1. **Fixture battery** — one known-bad snippet per invariant family,
+//!    asserting the exact finding code each produces, plus the annotated
+//!    twin asserting the escape hatch works. This is what pins "exits
+//!    nonzero on each violation class".
+//! 2. **Lexer edge cases at the analyzer level** — raw strings, nested
+//!    comments, byte strings and lifetimes flowing through the full
+//!    check pipeline (the lexer's own unit tests cover tokenization;
+//!    here we assert no *findings* leak out of tricky surface forms).
+//! 3. **Live-tree self-check** — the analyzer runs over this repo's
+//!    actual `src/`, `tests/` and `benches/` and must come back with
+//!    zero findings. This is the bit-exactness of the lint itself: the
+//!    tree the CI job checks is the tree these tests pin.
+
+use std::path::PathBuf;
+
+use vitfpga::analysis::{lint_source, run, FileOutcome, LintConfig};
+
+fn lint(file: &str, src: &str) -> FileOutcome {
+    lint_source(file, src, &LintConfig::default())
+}
+
+fn codes(o: &FileOutcome) -> Vec<String> {
+    o.findings.iter().map(|f| f.code.clone()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Fixture battery: each invariant family fires, and its escape hatch
+//    silences it.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lex_unbalanced_delimiters_fire_lex001() {
+    let o = lint("src/x.rs", "fn f() { let v = (1, 2; }\n");
+    assert!(codes(&o).contains(&"LEX001".to_string()), "{:?}", o.findings);
+    let o = lint("src/x.rs", "fn f() {}\n]\n");
+    assert_eq!(codes(&o), vec!["LEX001"]);
+    // Unterminated block comment and string.
+    assert_eq!(codes(&lint("src/x.rs", "/* never closed\n")), vec!["LEX001"]);
+    assert!(codes(&lint("src/x.rs", "fn f() { let s = \"oops; }\n"))
+        .contains(&"LEX001".to_string()));
+}
+
+#[test]
+fn unsafe_without_safety_fires_uns_family() {
+    assert_eq!(codes(&lint("src/x.rs", "fn f() { unsafe { g() } }\n")), vec!["UNS001"]);
+    assert_eq!(codes(&lint("src/x.rs", "unsafe fn f() {}\n")), vec!["UNS002"]);
+    assert_eq!(codes(&lint("src/x.rs", "unsafe impl Send for X {}\n")), vec!["UNS003"]);
+    // Documented forms pass.
+    let ok = "\
+// SAFETY: g upholds its contract here.
+fn f() { unsafe { g() } }
+/// # Safety
+/// Caller must pin the buffer.
+unsafe fn h() {}
+// SAFETY: X owns its pointer exclusively.
+unsafe impl Send for X {}
+";
+    assert!(codes(&lint("src/x.rs", ok)).is_empty());
+}
+
+#[test]
+fn hot_path_panics_fire_hp_family() {
+    let hot = "src/funcsim/kernels.rs"; // designated hot file
+    assert_eq!(codes(&lint(hot, "fn f(x: Option<i32>) -> i32 { x.unwrap() }\n")), vec!["HP001"]);
+    assert_eq!(
+        codes(&lint(hot, "fn f(x: Option<i32>) -> i32 { x.expect(\"set\") }\n")),
+        vec!["HP002"]
+    );
+    assert_eq!(codes(&lint(hot, "fn f() { panic!(\"boom\") }\n")), vec!["HP003"]);
+    assert_eq!(codes(&lint(hot, "fn f() { unreachable!() }\n")), vec!["HP003"]);
+    assert_eq!(codes(&lint(hot, "fn f(n: usize) { assert!(n > 0); }\n")), vec!["HP004"]);
+    assert_eq!(codes(&lint(hot, "fn f(v: &[f32]) -> f32 { v[0] }\n")), vec!["HP005"]);
+    // The same code in a non-hot module is not flagged...
+    assert!(codes(&lint("src/bench_harness.rs", "fn f(v: &[f32]) -> f32 { v[0] }\n")).is_empty());
+    // ...nor under #[cfg(test)] in the hot file itself.
+    let tests = "#[cfg(test)]\nmod tests {\n    fn f(v: &[f32]) -> f32 { v[0].max(v.len() as f32) }\n    #[test]\n    fn t() { assert!(f(&[1.0]) > 0.0); }\n}\n";
+    assert!(codes(&lint(hot, tests)).is_empty(), "{:?}", lint(hot, tests).findings);
+    // debug_assert is the sanctioned hot-path form.
+    assert!(codes(&lint(hot, "fn f(n: usize) { debug_assert!(n > 0); }\n")).is_empty());
+}
+
+#[test]
+fn hot_region_allocation_fires_ha001() {
+    let src = "\
+fn f(n: usize, xs: &[u8]) -> usize {
+    // lint: hot
+    let v = vec![0u8; n];
+    let w = xs.to_vec();
+    let s = format!(\"{}\", n);
+    let b = Box::new(n);
+    // lint: endhot
+    let after = Vec::new();
+    v.len() + w.len() + s.len() + *b + after.len()
+}
+";
+    let o = lint("src/obs/mod.rs", src);
+    assert_eq!(codes(&o), vec!["HA001", "HA001", "HA001", "HA001"], "{:?}", o.findings);
+    // Box::new is matched via the Vec/Box/String::new family.
+    let o = lint("src/obs/mod.rs", "fn f() {\n    // lint: hot\n    let s = String::new();\n    // lint: endhot\n}\n");
+    assert_eq!(codes(&o), vec!["HA001"]);
+}
+
+#[test]
+fn atomic_ordering_fires_at_family() {
+    // SeqCst without a justifying comment nearby (the file-level
+    // contract comment sits more than 3 lines away, so it satisfies
+    // AT003 but not AT001's proximity requirement).
+    let src = "\
+// ordering: contract lives here, far from the use site.
+fn f(a: &AtomicU64) {
+    let x = 1;
+    let _ = x;
+    a.store(1, Ordering::SeqCst);
+}
+";
+    assert_eq!(codes(&lint("src/x.rs", src)), vec!["AT001"]);
+    // Relaxed success ordering on a CAS.
+    let src = "// ordering: contract present.\nfn f(a: &AtomicU64) { let _ = a.compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed); }\n";
+    assert_eq!(codes(&lint("src/x.rs", src)), vec!["AT002"]);
+    // fetch_update's first argument is its success ordering.
+    let src = "// ordering: contract present.\nfn f(a: &AtomicU64) { let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v + 1)); }\n";
+    assert_eq!(codes(&lint("src/x.rs", src)), vec!["AT002"]);
+    // Atomics with no ordering contract comment anywhere in the file.
+    let src = "fn f(a: &AtomicU64) { a.store(1, Ordering::Release); }\n";
+    assert_eq!(codes(&lint("src/x.rs", src)), vec!["AT003"]);
+    // Properly paired + documented file is clean.
+    let src = "\
+// ordering: flag is store(Release)/load(Acquire); the CAS uses
+// AcqRel success so the winner publishes its queue slot.
+fn f(a: &AtomicU64) {
+    a.store(1, Ordering::Release);
+    let _ = a.load(Ordering::Acquire);
+    let _ = a.compare_exchange(1, 2, Ordering::AcqRel, Ordering::Acquire);
+}
+";
+    assert!(codes(&lint("src/x.rs", src)).is_empty());
+}
+
+#[test]
+fn lock_hygiene_fires_lk_family() {
+    let src = "fn f(m: &Mutex<i32>) -> i32 { *m.lock().unwrap() }\n";
+    assert_eq!(codes(&lint("src/x.rs", src)), vec!["LK001"]);
+    // Poison-recovering form is the sanctioned one.
+    let src = "fn f(m: &Mutex<i32>) -> i32 { *m.lock().unwrap_or_else(|e| e.into_inner()) }\n";
+    assert!(codes(&lint("src/x.rs", src)).is_empty());
+    // Channel send while a guard is live.
+    let src = "\
+fn f(m: &Mutex<i32>, tx: &Sender<i32>) {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    tx.send(*g).ok();
+}
+";
+    assert_eq!(codes(&lint("src/x.rs", src)), vec!["LK002"]);
+    // Dropping the guard first is clean.
+    let src = "\
+fn f(m: &Mutex<i32>, tx: &Sender<i32>) {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    let v = *g;
+    drop(g);
+    tx.send(v).ok();
+}
+";
+    assert!(codes(&lint("src/x.rs", src)).is_empty());
+}
+
+#[test]
+fn annotations_require_reasons_and_match() {
+    // allow without a reason is malformed.
+    assert_eq!(codes(&lint("src/x.rs", "// lint: allow(index)\nfn f() {}\n")), vec!["ANN001"]);
+    // Unknown mnemonic.
+    assert_eq!(
+        codes(&lint("src/x.rs", "// lint: allow(everything: please)\nfn f() {}\n")),
+        vec!["ANN001"]
+    );
+    // Unmatched hot region.
+    assert_eq!(codes(&lint("src/x.rs", "fn f() {}\n// lint: hot\n")), vec!["ANN002"]);
+    assert_eq!(codes(&lint("src/x.rs", "// lint: endhot\nfn f() {}\n")), vec!["ANN002"]);
+    // A valid trailing allow both silences the finding and counts it.
+    let o = lint(
+        "src/server/http.rs",
+        "fn f(v: &[f32]) -> f32 { v[0] } // lint: allow(index: caller pins len >= 1)\n",
+    );
+    assert!(o.findings.is_empty(), "{:?}", o.findings);
+    assert_eq!(o.suppressed, 1);
+    // allow-file scopes to the whole file and stacks multiple names.
+    let src = "\
+// lint: allow-file(index, assert: kernel entry contracts, hardware-mirroring loops)
+fn f(v: &[f32], n: usize) -> f32 { assert!(n > 0); v[n - 1] }
+";
+    let o = lint("src/funcsim/kernels.rs", src);
+    assert!(o.findings.is_empty(), "{:?}", o.findings);
+    assert_eq!(o.suppressed, 2);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Lexer edge cases through the full pipeline: no phantom findings.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tricky_surface_forms_produce_no_findings() {
+    let hot = "src/funcsim/kernels.rs";
+    // Raw strings hiding panics, quotes and braces.
+    let src = r####"
+fn f() -> &'static str {
+    r#"contains .unwrap() and panic!("x") and v[0] and { ( ["#
+}
+"####;
+    assert!(codes(&lint(hot, src)).is_empty());
+    // Nested block comments hiding an unsafe block and an assert.
+    let src = "/* outer /* unsafe { } assert!(x) */ still comment */\nfn f() {}\n";
+    assert!(codes(&lint(hot, src)).is_empty());
+    // Lifetimes are not char literals; char literals close properly.
+    let src = "fn f<'a>(x: &'a [u8]) -> char { let c = 'x'; let _ = b'\\n'; c }\n";
+    assert!(codes(&lint(hot, src)).is_empty());
+    // Byte strings and raw byte strings hide their contents.
+    let src = "fn f() -> (&'static [u8], &'static [u8]) { (b\"unwrap()[0]\", br#\"assert!{(\"#) }\n";
+    assert!(codes(&lint(hot, src)).is_empty());
+    // A commented-out lock().unwrap() is invisible.
+    let src = "fn f() {\n    // let g = m.lock().unwrap();\n}\n";
+    assert!(codes(&lint("src/x.rs", src)).is_empty());
+}
+
+#[test]
+fn string_contents_never_reach_checks() {
+    let src = "fn f() -> &'static str { \"Ordering::SeqCst .lock().unwrap() unsafe {\" }\n";
+    assert!(codes(&lint("src/x.rs", src)).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// 3. Live-tree self-check: the analyzer over its own repository.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn live_tree_is_clean() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let roots: Vec<PathBuf> = ["src", "tests", "benches"]
+        .iter()
+        .map(|d| manifest.join(d))
+        .filter(|p| p.is_dir())
+        .collect();
+    assert!(!roots.is_empty(), "no source roots under {}", manifest.display());
+    let report = run(&roots, &LintConfig::default()).expect("lint run");
+    assert!(report.files > 50, "expected the full tree, scanned {}", report.files);
+    let rendered = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: {}({}) {}", f.file, f.line, f.code, f.name, f.message))
+        .collect::<Vec<_>>()
+        .join("\n");
+    assert!(
+        report.clean(),
+        "the repo tree must lint clean; {} finding(s):\n{}",
+        report.findings.len(),
+        rendered
+    );
+    // The escape hatches are in active, bounded use — if this number
+    // balloons, the annotations have stopped being exceptional.
+    assert!(report.suppressed > 0, "expected some annotated suppressions");
+}
+
+#[test]
+fn json_report_shape() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let report = run(&[manifest.join("src").join("analysis")], &LintConfig::default())
+        .expect("lint run");
+    let j = report.to_json();
+    assert_eq!(j.get("clean").and_then(|v| v.as_bool()), Some(true));
+    assert!(j.get("files").and_then(|v| v.as_usize()).unwrap_or(0) >= 3);
+    assert!(j.get("findings").and_then(|v| v.as_arr()).is_some());
+    // Round-trips through the repo's own JSON parser.
+    let text = j.to_string_pretty();
+    let back = vitfpga::util::json::Json::parse(&text).expect("valid JSON");
+    assert_eq!(back.get("clean").and_then(|v| v.as_bool()), Some(true));
+}
